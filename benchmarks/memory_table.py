@@ -1,0 +1,35 @@
+"""Paper §3.4 memory accounting: the 4 MB claim, vs dataset size.
+
+ACE state = L·2^K counters (+ projection seeds); everything else about the
+data is forgotten.  We print the exact bytes for the paper's settings and
+for each benchmark dataset the ratio dataset_bytes / sketch_bytes.
+"""
+from __future__ import annotations
+
+from repro.core import AceConfig
+from repro.core.srp import SrpConfig, projection_memory_bytes, \
+    seeds_memory_bytes
+from repro.data.synthetic import PAPER_STATS
+
+
+def run(csv_rows: list[str]) -> None:
+    print("\n# Memory accounting (paper §3.4)")
+    print("config,counter_bytes,proj_seed_bytes,total_mb")
+    for dtype, label in (("int16", "short(paper)"), ("int32", "int32")):
+        cfg = AceConfig(dim=36, num_bits=15, num_tables=50,
+                        counter_dtype=dtype)
+        cb = cfg.memory_bytes()
+        sb = seeds_memory_bytes(cfg.srp)
+        total = (cb + sb) / 2**20
+        print(f"K15_L50_{label},{cb},{sb},{total:.2f}")
+        csv_rows.append(f"memory_K15L50_{dtype}_mb,0,{total:.3f}")
+
+    print("\ndataset,n,d,data_mb,sketch_mb,ratio")
+    cfg16 = AceConfig(dim=1, num_bits=15, num_tables=50,
+                      counter_dtype="int16")
+    sk_mb = cfg16.memory_bytes() / 2**20
+    for name, (n, _, d) in PAPER_STATS.items():
+        data_mb = n * d * 4 / 2**20
+        print(f"{name},{n},{d},{data_mb:.1f},{sk_mb:.2f},"
+              f"{data_mb / sk_mb:.1f}x")
+        csv_rows.append(f"memory_ratio_{name},0,{data_mb / sk_mb:.2f}")

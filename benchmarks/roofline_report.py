@@ -1,0 +1,24 @@
+"""Roofline benchmark: reads dryrun_results/*.json, prints the per-cell
+three-term table (§Roofline of EXPERIMENTS.md is generated from this)."""
+from __future__ import annotations
+
+import os
+
+RESULTS_DIR = os.environ.get("REPRO_DRYRUN_DIR", "dryrun_results")
+
+
+def run(csv_rows: list[str]) -> None:
+    from repro.dist.roofline import build_all, format_table
+    if not os.path.isdir(RESULTS_DIR):
+        print(f"(no dry-run artifacts in {RESULTS_DIR!r}; run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first)")
+        return
+    rows = build_all(RESULTS_DIR)
+    print(format_table(rows))
+    for r in rows:
+        csv_rows.append(
+            f"roofline_{r.arch}_{r.shape}_{r.mesh},0,"
+            f"{r.bound_s:.6f}")
+        csv_rows.append(
+            f"useful_ratio_{r.arch}_{r.shape}_{r.mesh},0,"
+            f"{r.useful_ratio:.4f}")

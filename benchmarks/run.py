@@ -1,0 +1,72 @@
+"""Benchmark driver — one module per paper table/figure (+ roofline report).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints human-readable sections followed by a machine-readable CSV block
+(``name,us_per_call,derived``).  The roofline benchmark is emitted by
+``benchmarks.roofline_report`` (reads dry-run artifacts; see launch/dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller n for CI-speed runs")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale n for ACE (597k rows on KDD)")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark module by name")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_discriminative, fig3_5_variance,
+                            memory_table, table3_5_comparison, throughput)
+    try:
+        from benchmarks import roofline_report
+    except ImportError:
+        roofline_report = None
+
+    csv_rows: list[str] = []
+    ace_n = None if args.full else (4_000 if args.quick else 60_000)
+    base_n = 2_000 if args.quick else 12_000
+    var_n = 2_000 if args.quick else 20_000
+
+    benches = {
+        "fig1": lambda: fig1_discriminative.run(csv_rows),
+        "fig3_5": lambda: fig3_5_variance.run(
+            csv_rows, n_per_dataset=var_n,
+            n_seeds=1 if args.quick else 3),
+        "table3_5": lambda: table3_5_comparison.run(
+            csv_rows, ace_n=ace_n, baseline_n=base_n),
+        "memory": lambda: memory_table.run(csv_rows),
+        "throughput": lambda: throughput.run(csv_rows),
+    }
+    if roofline_report is not None:
+        benches["roofline"] = lambda: roofline_report.run(csv_rows)
+
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"\n{'=' * 66}\n== bench: {name}\n{'=' * 66}")
+        try:
+            fn()
+        except Exception as e:  # keep the suite going; record the failure
+            print(f"!! bench {name} failed: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            csv_rows.append(f"{name}_FAILED,0,0")
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]")
+
+    print("\n# ===== CSV =====")
+    print("name,us_per_call,derived")
+    for row in csv_rows:
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

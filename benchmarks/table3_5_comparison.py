@@ -1,0 +1,96 @@
+"""Paper Tables 3/4/5: the 12-algorithm comparison on the three benchmarks.
+
+For each dataset we report, per algorithm:
+  outliers reported / correctly reported / missed / execution seconds /
+  speedup of ACE over it — the exact columns of the paper's tables.
+
+Method (paper §5.3): score every point; flag score < μ − σ.
+
+Scale notes (honest accounting on a 1-core CPU container):
+* ACE runs at the FULL dataset size (its cost is O(n·d·KL) hashing — this
+  is the paper's point).
+* The kNN-graph baselines are O(n²·d); at KDD size (597k) that is ~10⁴
+  seconds here, so they run on a subsample (default 12k) and we ALSO report
+  `extrap_s` = measured · (n_full/n_sub)² — the quadratic-scaling estimate
+  at full size (conservative for the paper's ELKI, which uses index
+  structures; our speedup claims quote the MEASURED subsample time as the
+  baseline denominator, which *understates* ACE's advantage).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import ALL_BASELINES, run_baseline
+from repro.core import AceConfig, AceEstimator
+from repro.core import sketch as sk
+from repro.data.synthetic import make_paper_dataset
+
+PAPER_K = {"shuttle": 5, "aloi": 5, "kddcup99_http": 10}   # paper Table 2
+
+
+def _report(scores: np.ndarray, y: np.ndarray):
+    mu, sd = scores.mean(), scores.std()
+    flagged = scores < (mu - sd)
+    reported = int(flagged.sum())
+    correct = int((flagged & (y == 1)).sum())
+    missed = int(y.sum()) - correct
+    return reported, correct, missed
+
+
+def run(csv_rows: list[str], ace_n: int | None = None,
+        baseline_n: int = 12_000, datasets=("shuttle", "aloi",
+                                            "kddcup99_http")) -> None:
+    for ds_name in datasets:
+        ds_full = make_paper_dataset(ds_name, n=ace_n)
+        k = PAPER_K[ds_name]
+
+        # ---- ACE at full scale (K=15, L=50 fixed across datasets) -------
+        cfg = AceConfig(dim=ds_full.dim, num_bits=15, num_tables=50, seed=0)
+        X = jnp.asarray(ds_full.x)
+        t0 = time.perf_counter()
+        est = AceEstimator(cfg)
+        est.update(X)  # one-shot batched insert (streaming-equivalent)
+        scores = np.asarray(est.score(X))
+        jnp.zeros(()).block_until_ready()
+        ace_s = time.perf_counter() - t0
+        rep, cor, mis = _report(scores, ds_full.y)
+        print(f"\n# Table [{ds_name}] n={ds_full.n} d={ds_full.dim} "
+              f"anomalies={int(ds_full.y.sum())} (baselines at "
+              f"n={min(baseline_n, ds_full.n)})")
+        print("method,reported,correct,missed,seconds,speedup_vs_ace,"
+              "extrap_full_s")
+        print(f"ace,{rep},{cor},{mis},{ace_s:.3f},1.0,{ace_s:.3f}")
+        csv_rows.append(f"table_{ds_name}_ace_recall,0,"
+                        f"{cor / max(int(ds_full.y.sum()), 1):.4f}")
+
+        # ---- the 11 baselines on the subsample ---------------------------
+        nsub = min(baseline_n, ds_full.n)
+        sub = make_paper_dataset(ds_name, n=nsub)
+        ysub = sub.y
+        scale = (ds_full.n / nsub) ** 2
+        graph = inner = None
+        # ACE on the same subsample for a like-for-like time ratio
+        t0 = time.perf_counter()
+        est_s = AceEstimator(AceConfig(dim=sub.dim, num_bits=15,
+                                       num_tables=50, seed=0))
+        est_s.update(jnp.asarray(sub.x))
+        _ = np.asarray(est_s.score(jnp.asarray(sub.x)))
+        ace_sub_s = time.perf_counter() - t0
+
+        for name in ALL_BASELINES:
+            s, sec, graph, inner = run_baseline(name, sub.x, k=k,
+                                                graph=graph, inner=inner)
+            rep, cor, mis = _report(s, ysub)
+            speed = sec / ace_sub_s
+            extrap = sec * (scale if name != "fastvoa"
+                            else ds_full.n / nsub)
+            print(f"{name},{rep},{cor},{mis},{sec:.3f},{speed:.1f},"
+                  f"{extrap:.1f}")
+            csv_rows.append(
+                f"table_{ds_name}_{name}_speedup,{sec * 1e6:.0f},"
+                f"{speed:.2f}")
+        csv_rows.append(
+            f"table_{ds_name}_ace_subsample_s,{ace_sub_s * 1e6:.0f},1.0")

@@ -1,0 +1,75 @@
+"""ACE throughput microbenchmarks (insert / query / fused-score paths).
+
+Times the jnp reference path and the Pallas kernels (interpret mode on this
+CPU container — kernel-body semantics, not TPU speed; TPU timing comes from
+the §Roofline model).  Also times the SRHT O(d log d) hash fast path vs the
+dense matmul hash at growing d, validating the paper-§2.2 crossover.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AceConfig
+from repro.core import sketch as sk
+from repro.core.srht import SrhtParams, srht_hash_buckets
+from repro.core.srp import hash_buckets
+
+
+def _time(fn, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out
+
+
+def run(csv_rows: list[str]) -> None:
+    B, d = 4096, 36
+    cfg = AceConfig(dim=d, num_bits=15, num_tables=50, seed=0)
+    w = sk.make_params(cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(B, d)), jnp.float32)
+    state = sk.insert(sk.init(cfg), w, x, cfg)
+
+    ins = jax.jit(lambda s_, x_: sk.insert(s_, w, x_, cfg))
+    qry = jax.jit(lambda s_, q_: sk.score(s_, w, q_, cfg))
+    t_ins, _ = _time(ins, state, x)
+    t_qry, _ = _time(qry, state, x)
+    print("\n# ACE throughput (XLA-CPU, batch=4096, paper K=15 L=50)")
+    print(f"insert: {t_ins * 1e6:.0f} us/batch "
+          f"({B / t_ins / 1e6:.2f} M items/s)")
+    print(f"query : {t_qry * 1e6:.0f} us/batch "
+          f"({B / t_qry / 1e6:.2f} M items/s)")
+    csv_rows.append(f"throughput_insert_items_per_s,{t_ins * 1e6:.0f},"
+                    f"{B / t_ins:.0f}")
+    csv_rows.append(f"throughput_query_items_per_s,{t_qry * 1e6:.0f},"
+                    f"{B / t_qry:.0f}")
+
+    # Pallas kernels in interpret mode (semantics check; CPU-speed only)
+    from repro.kernels.srp_hash import srp_hash
+    from repro.kernels.ace_score_fused import ace_score_fused
+    t_h, _ = _time(lambda: srp_hash(x, w, cfg.srp), iters=3)
+    t_f, _ = _time(lambda: ace_score_fused(state.counts, x, w, cfg.srp),
+                   iters=3)
+    print(f"pallas srp_hash (interpret): {t_h * 1e6:.0f} us/batch")
+    print(f"pallas fused score (interpret): {t_f * 1e6:.0f} us/batch")
+    csv_rows.append(f"throughput_pallas_hash_interp,{t_h * 1e6:.0f},0")
+
+    # SRHT vs dense hashing crossover over dimensionality
+    print("\n# hash path: dense matmul vs SRHT (us per 1024-batch)")
+    print("d,dense_us,srht_us")
+    for dd in (64, 512, 4096):
+        c2 = AceConfig(dim=dd, num_bits=15, num_tables=50, seed=1)
+        w2 = sk.make_params(c2)
+        x2 = jnp.asarray(
+            np.random.default_rng(1).normal(size=(1024, dd)), jnp.float32)
+        params = SrhtParams(c2.srp)
+        td, _ = _time(jax.jit(lambda a: hash_buckets(a, w2, c2.srp)), x2)
+        ts, _ = _time(jax.jit(lambda a: srht_hash_buckets(a, params)), x2)
+        print(f"{dd},{td * 1e6:.0f},{ts * 1e6:.0f}")
+        csv_rows.append(f"throughput_srht_speedup_d{dd},{ts * 1e6:.0f},"
+                        f"{td / ts:.2f}")

@@ -1,0 +1,70 @@
+"""Generate the §Dry-run and §Roofline markdown tables from
+dryrun_results/*.json (EXPERIMENTS.md embeds the output).
+
+    PYTHONPATH=src python scripts/gen_experiments_tables.py [dir]
+"""
+import json
+import os
+import sys
+
+
+def human(x):
+    if x is None:
+        return "-"
+    for unit, div in (("P", 1e15), ("T", 1e12), ("G", 1e9), ("M", 1e6)):
+        if abs(x) >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results"
+    cells = []
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                cells.append(json.load(f))
+
+    print("### §Dry-run: per-cell compile results\n")
+    print("| arch | shape | mesh | ok | compile_s | HLO flops/dev "
+          "(corrected) | HLO bytes/dev | collective B/dev | temp GB "
+          "(CPU-measured) | policy |")
+    print("|" + "---|" * 10)
+    for c in cells:
+        if not c["ok"]:
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | FAIL | "
+                  f"{c['seconds']} | - | - | - | - | - |")
+            continue
+        corr = c.get("corrected") or {}
+        pol = c.get("policy") or {}
+        ps = f"{pol.get('optimizer','-')}/mb{pol.get('microbatches','-')}"
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | OK | "
+              f"{c['seconds']} | {human(corr.get('flops', c['flops']))} | "
+              f"{human(corr.get('bytes_accessed', c['bytes_accessed']))} | "
+              f"{human((corr.get('collectives') or {}).get('total_bytes'))}"
+              f" | {(c['memory']['temp'] or 0) / 2**30:.1f} | {ps} |")
+
+    from repro.models.registry import LONG_CONTEXT_SKIP
+    print("\nSkipped cells (long_500k, pure-full-attention rule):")
+    for a, why in LONG_CONTEXT_SKIP.items():
+        print(f"* `{a} × long_500k` — SKIP({why})")
+
+    print("\n### §Roofline: three-term model (TPU v5e: 197 TF/s bf16, "
+          "819 GB/s HBM, 50 GB/s/link ICI)\n")
+    from repro.dist.roofline import build_all, format_table
+    rows = build_all(d)
+    print(format_table(rows))
+    print("\nPer-cell dominant-term notes:")
+    seen = set()
+    for r in rows:
+        key = (r.arch, r.shape)
+        if r.mesh != "16x16" or key in seen:
+            continue
+        seen.add(key)
+        print(f"* {r.arch} × {r.shape}: {r.dominant}-bound "
+              f"(c={r.compute_s:.4f}s m={r.memory_s:.4f}s "
+              f"n={r.collective_s:.4f}s) — {r.note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+"""Recompute the `corrected` probe block of existing dryrun_results/*.json
+(after the probe-fidelity fix: chunked attention stays ON, statically
+unrolled).  Usage: PYTHONPATH=src python scripts/repatch_probes.py [dir]"""
+
+import json
+import sys
+
+import jax
+
+from repro.launch.dryrun import probe_costs
+from repro.launch.mesh import make_production_mesh, rules_for
+from repro.models.common import set_rules
+from repro.models.registry import Arch
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results"
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(d, name)
+        with open(path) as f:
+            cell = json.load(f)
+        if not cell.get("ok"):
+            continue
+        if cell.get("corrected", {}).get("probe_fixed"):
+            print(f"[skip] {name}")
+            continue
+        mp = cell["mesh"] == "2x16x16"
+        mesh = make_production_mesh(multi_pod=mp)
+        long_ctx = cell["shape"] == "long_500k"
+        rules = rules_for(mesh, long_context=long_ctx)
+        set_rules(rules)
+        arch = Arch(cell["arch"])
+        n_sb = arch.cfg.num_layers // max(len(arch.cfg.block_pattern), 1)
+        try:
+            corr = probe_costs(cell["arch"], cell["shape"], mesh, rules,
+                               long_ctx, n_sb)
+            corr["probe_fixed"] = True
+            cell["corrected"] = corr
+            cell["probe_error"] = None
+        except Exception as e:  # noqa: BLE001
+            cell["probe_error"] = f"{type(e).__name__}: {e}"
+            print(f"[probe FAIL] {name}: {cell['probe_error'][:120]}")
+        with open(path, "w") as f:
+            json.dump(cell, f, indent=1)
+        print(f"[repatched] {name}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

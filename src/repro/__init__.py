@@ -1,0 +1,8 @@
+"""repro — ACE (Arrays of locality-sensitive Count Estimators) as a
+first-class feature of a multi-pod JAX training/serving framework.
+
+Paper: Luo & Shrivastava, "Arrays of (locality-sensitive) Count Estimators
+(ACE): High-Speed Anomaly Detection via Cache Lookups", 2017 (cs.DB).
+See DESIGN.md / EXPERIMENTS.md at the repo root.
+"""
+__version__ = "1.0.0"

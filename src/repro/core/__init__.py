@@ -1,0 +1,10 @@
+"""ACE core: the paper's contribution as a composable JAX module."""
+from repro.core.sketch import (  # noqa: F401
+    AceConfig, AceState, init, make_params, insert, delete, score,
+    is_anomaly, mean_mu, sigma_welford, sigma_cubic_proxy, merge,
+    insert_buckets, delete_buckets, lookup, histogram,
+)
+from repro.core.srp import SrpConfig, hash_buckets, collision_probability  # noqa: F401
+from repro.core.estimators import (  # noqa: F401
+    AceEstimator, exact_score, rse_score, collision_probs,
+)

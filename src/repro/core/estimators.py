@@ -1,0 +1,138 @@
+"""Estimators of S(q, D) = Σ_i p(q, x_i)^K and their theoretical variances.
+
+Three estimators, matching the paper's §3.3:
+
+* ``exact_score``   — the O(n·d) oracle (ground truth for MSE experiments).
+* ``AceEstimator``  — Algorithm 1 (wraps ``repro.core.sketch``).
+* ``rse_score``     — the random-sampling estimator RSE (Eq. 10, Theorem 2).
+
+plus closed-form variance terms from Theorems 1 and 2 for the analytical
+comparison plots.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.srp import collision_probability
+
+
+def collision_probs(q: jax.Array, data: jax.Array) -> jax.Array:
+    """p_i = p(q, x_i) for all x_i.  q: (d,) or (B, d); data: (n, d).
+
+    Returns (n,) or (B, n).
+    """
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    dn = data / (jnp.linalg.norm(data, axis=-1, keepdims=True) + 1e-12)
+    cos = jnp.clip(qn @ dn.T, -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / jnp.pi
+
+
+@partial(jax.jit, static_argnames=("K",))
+def exact_score(q: jax.Array, data: jax.Array, K: int) -> jax.Array:
+    """S(q, D) = Σ_i p_i^K — the exact (expensive) statistic, paper Eq. 3."""
+    return jnp.sum(collision_probs(q, data) ** K, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("K", "num_samples"))
+def rse_score(q: jax.Array, data: jax.Array, K: int, num_samples: int,
+              key: jax.Array) -> jax.Array:
+    """Random-sampling estimator (paper Eq. 10): (n/L)·Σ_{x∈S} p(q,x)^K.
+
+    Uniform sampling WITHOUT replacement to match Theorem 2's analysis.
+    """
+    n = data.shape[0]
+    idx = jax.random.permutation(key, n)[:num_samples]
+    sample = data[idx]
+    p = collision_probs(q, sample) ** K
+    return (n / num_samples) * jnp.sum(p, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Theoretical variances (for analysis plots / sanity tests).
+# --------------------------------------------------------------------------
+
+def ace_variance_leading(p: jax.Array, K: int, L: int) -> jax.Array:
+    """Leading (diagonal) term of Theorem 1:  (1/L)·Σ p^K (1 − p^K).
+
+    The covariance term is data-dependent (and almost always negative for
+    real data — paper's argument); this is the upper-ish bound used in the
+    paper's comparison.
+    """
+    pk = p**K
+    return jnp.sum(pk * (1.0 - pk), axis=-1) / L
+
+
+def rse_variance(p: jax.Array, K: int, L: int, n: int) -> jax.Array:
+    """Theorem 2:  Var(RSE) = (n/L − 1)·Σ p^{2K}."""
+    pk = p**K
+    return (n / L - 1.0) * jnp.sum(pk * pk, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Convenience bundle used by benchmarks: build, fill, score.
+# --------------------------------------------------------------------------
+
+class AceEstimator:
+    """Stateful convenience wrapper over the functional sketch API.
+
+    Usage:
+        est = AceEstimator(AceConfig(dim=d))
+        est.fit(X)                  # or stream .update(batch) calls
+        s = est.score(Q)            # Ŝ(q, D)
+        flags = est.predict(Q)      # score < μ − α·σ
+    """
+
+    def __init__(self, cfg: sk.AceConfig, use_kernels: bool = False):
+        self.cfg = cfg
+        self.w = sk.make_params(cfg)
+        self.state = sk.init(cfg)
+        self.use_kernels = use_kernels
+        if use_kernels:
+            from repro.kernels import ops as kops  # lazy; optional dep path
+            self._kops = kops
+
+    def update(self, x: jax.Array) -> "AceEstimator":
+        if self.use_kernels:
+            buckets = self._kops.srp_hash(x, self.w, self.cfg.srp)
+            self.state = self._kops.ace_update(self.state, buckets, self.cfg)
+        else:
+            self.state = sk.insert(self.state, self.w, x, self.cfg)
+        return self
+
+    def fit(self, x: jax.Array, batch: int = 4096) -> "AceEstimator":
+        n = x.shape[0]
+        for i in range(0, n, batch):
+            self.update(x[i : i + batch])
+        return self
+
+    def remove(self, x: jax.Array) -> "AceEstimator":
+        self.state = sk.delete(self.state, self.w, x, self.cfg)
+        return self
+
+    def score(self, q: jax.Array) -> jax.Array:
+        if self.use_kernels:
+            return self._kops.ace_score(self.state, q, self.w, self.cfg)
+        return sk.score(self.state, self.w, q, self.cfg)
+
+    def predict(self, q: jax.Array, alpha: float = 1.0,
+                sigma: float | None = None) -> jax.Array:
+        """Anomaly decision.  If ``sigma`` is given (absolute-score σ, e.g.
+        the exact full-pass σ of the paper's §5.3 evaluation), use it on raw
+        scores; else use the streaming Welford σ of RATES (score/n)."""
+        s = self.score(q)
+        if sigma is not None:
+            return s < sk.mean_mu(self.state) - alpha * sigma
+        n = jnp.maximum(self.state.n, 1.0)
+        return s / n < sk.mean_rate(self.state) \
+            - alpha * sk.sigma_welford(self.state)
+
+    @property
+    def mu(self) -> jax.Array:
+        return sk.mean_mu(self.state)
+
+    def memory_bytes(self) -> int:
+        return self.cfg.memory_bytes()

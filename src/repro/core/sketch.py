@@ -1,0 +1,286 @@
+"""The ACE sketch: L count arrays of size 2^K + streaming statistics.
+
+Paper Algorithm 1, made batch-parallel and SPMD-friendly:
+
+* state  = counts (L, 2^K) integer array + n (items inserted) — nothing else;
+  no data points are ever stored (the paper's core memory claim).
+* insert = scatter-add of the batch bucket histogram (order-invariant).
+* score  = mean over L of counts[j, H_j(q)]  (Theorem 1: unbiased for S(q,D)).
+* mean   = closed form  μ = Σ_j Σ_b A_j[b]² / (n·L)
+
+The closed form is derived from the paper's Eq. 11: inserting into a bucket
+with count c changes Σ_b A²  by (c+1)² − c² = 2c+1, matching the paper's
+incremental term (2A+1)/L exactly — so maintaining Σ‖A‖² tracks n·L·μ with
+*no sequential dependency*.  ``tests/test_ace_core.py`` property-tests the
+two formulations against each other, including deletes (Eq. 12).
+
+Because counts are additive, sketches over disjoint data shards merge by
+elementwise addition — this is the whole multi-pod story (see
+``repro.core.distributed``): each data shard sketches locally, a psum merges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.srp import SrpConfig, hash_buckets, make_projections
+
+
+class AceState(NamedTuple):
+    """Dynamic sketch state (a pytree — jit/scan/psum friendly).
+
+    counts: (L, 2^K) integer counters.
+    n:      () float32 — number of items currently represented.  float so the
+            pytree is uniform under optimizers/donation; exact up to 2^24.
+    welford_mean / welford_m2: () float32 — streaming mean/M2 of *insert-time*
+            scores (for the σ estimate in the streaming threshold policy; the
+            exact μ never uses these).
+    """
+
+    counts: jax.Array
+    n: jax.Array
+    welford_mean: jax.Array   # streaming mean of RATES score/n (stationary)
+    welford_m2: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AceConfig:
+    """Static ACE configuration (hashable; safe as a jit static arg)."""
+
+    dim: int
+    num_bits: int = 15          # K
+    num_tables: int = 50        # L
+    seed: int = 0
+    counter_dtype: str = "int32"  # "int16" reproduces the paper's 2x saving
+    welford_min_n: float = 0.0  # skip σ-stream updates below this n (the
+                                # cold-start rates score/n are off-scale and
+                                # would inflate σ forever)
+
+    @property
+    def srp(self) -> SrpConfig:
+        return SrpConfig(dim=self.dim, num_bits=self.num_bits,
+                         num_tables=self.num_tables, seed=self.seed)
+
+    @property
+    def num_buckets(self) -> int:
+        return 1 << self.num_bits
+
+    def memory_bytes(self) -> int:
+        """The paper's headline number: L × 2^K × sizeof(counter)."""
+        itemsize = jnp.dtype(self.counter_dtype).itemsize
+        return self.num_tables * self.num_buckets * itemsize
+
+
+def init(cfg: AceConfig) -> AceState:
+    return AceState(
+        counts=jnp.zeros((cfg.num_tables, cfg.num_buckets),
+                         dtype=jnp.dtype(cfg.counter_dtype)),
+        n=jnp.zeros((), jnp.float32),
+        welford_mean=jnp.zeros((), jnp.float32),
+        welford_m2=jnp.zeros((), jnp.float32),
+    )
+
+
+def make_params(cfg: AceConfig, dtype=jnp.float32) -> jax.Array:
+    """The SRP projection matrix W (d, KL_padded)."""
+    return make_projections(cfg.srp, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bucket-level primitives (input: precomputed bucket ids (B, L)).
+# These are what the Pallas kernels accelerate; everything here is the
+# reference path and stays pure-jnp.
+# ---------------------------------------------------------------------------
+
+def lookup(state: AceState, buckets: jax.Array) -> jax.Array:
+    """counts[j, buckets[., j]] averaged over j.  (B, L) -> (B,) float32.
+
+    This is Ŝ(q, D) of Algorithm 1 (query phase).
+    """
+    L = state.counts.shape[0]
+    rows = jnp.arange(L, dtype=jnp.int32)
+    gathered = state.counts[rows[None, :], buckets]          # (B, L)
+    return jnp.mean(gathered.astype(jnp.float32), axis=-1)
+
+
+def histogram(buckets: jax.Array, cfg: AceConfig) -> jax.Array:
+    """Batch bucket histogram: (B, L) ids -> (L, 2^K) counts of this batch."""
+    L = cfg.num_tables
+    B = buckets.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
+    zero = jnp.zeros((L, cfg.num_buckets), dtype=jnp.dtype(cfg.counter_dtype))
+    return zero.at[rows, buckets].add(1)
+
+
+def insert_buckets(state: AceState, buckets: jax.Array,
+                   cfg: AceConfig) -> AceState:
+    """Insert a batch.  Order-invariant; exact for any batch size.
+
+    Welford stats are updated with the *post-insert* score of each item
+    (its own count included), matching Algorithm 1 line 12's convention of
+    scoring x against D ∪ {x}.
+    """
+    L = cfg.num_tables
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+    new_counts = state.counts.at[rows, buckets].add(1)
+
+    # Post-insert scores of the batch items (vs the fully updated arrays).
+    gathered = new_counts[rows, buckets].astype(jnp.float32)   # (B, L)
+    scores = jnp.mean(gathered, axis=-1)                       # (B,)
+
+    # Welford over collision RATES score/n, not raw scores: raw insert-time
+    # scores grow ~linearly with n (item i scores ≈ O(i)), which inflates σ
+    # with ramp variance and makes μ−ασ thresholds useless.  Rates are
+    # stationary for a stationary stream.
+    b = jnp.asarray(scores.shape[0], jnp.float32)
+    n = state.n
+    tot = n + b
+    rates = scores / jnp.maximum(tot, 1.0)
+    mean_b = jnp.mean(rates)
+    m2_b = jnp.sum((rates - mean_b) ** 2)
+    delta = mean_b - state.welford_mean
+    # cold-start gate: early rates are off-scale; folding them in would
+    # inflate σ permanently (Welford never forgets)
+    gate = (n >= cfg.welford_min_n).astype(jnp.float32)
+    eff_n = jnp.where(gate > 0, n, 0.0)
+    new_mean = jnp.where(
+        gate > 0,
+        state.welford_mean + delta * b / jnp.maximum(tot, 1.0),
+        mean_b)
+    new_m2 = jnp.where(
+        gate > 0,
+        state.welford_m2 + m2_b + delta**2 * eff_n * b
+        / jnp.maximum(tot, 1.0),
+        m2_b)
+
+    return AceState(counts=new_counts, n=tot,
+                    welford_mean=new_mean, welford_m2=new_m2)
+
+
+def delete_buckets(state: AceState, buckets: jax.Array,
+                   cfg: AceConfig) -> AceState:
+    """Remove previously inserted items (paper §3.4.1, Eq. 12).
+
+    Welford stats are *not* un-merged (not possible in one pass); the exact μ
+    (``mean_mu``) is unaffected since it is a pure function of counts.
+    """
+    rows = jnp.broadcast_to(
+        jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
+    new_counts = state.counts.at[rows, buckets].add(-1)
+    return state._replace(counts=new_counts,
+                          n=state.n - jnp.asarray(buckets.shape[0], jnp.float32))
+
+
+def merge(a: AceState, b: AceState) -> AceState:
+    """Merge two sketches over disjoint data (counts add — CRDT style).
+
+    Exact for counts/n; Welford streams merge by Chan's parallel rule.
+    """
+    delta = b.welford_mean - a.welford_mean
+    tot = a.n + b.n
+    safe = jnp.maximum(tot, 1.0)
+    return AceState(
+        counts=a.counts + b.counts,
+        n=tot,
+        welford_mean=a.welford_mean + delta * b.n / safe,
+        welford_m2=a.welford_m2 + b.welford_m2 + delta**2 * a.n * b.n / safe,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Statistics of the sketch.
+# ---------------------------------------------------------------------------
+
+def mean_mu(state: AceState) -> jax.Array:
+    """Exact dataset mean score  μ = Σ‖A_j‖² / (n·L)  (≡ paper Eq. 11 stream).
+
+    Proof sketch: Algorithm 1 maintains n·μ = Σ_i Ŝ(x_i, D); item i in bucket
+    b of array j contributes A_j[b]/L once per array, and bucket b holds
+    A_j[b] items, so Σ_i A_j[H_j(x_i)] = Σ_b A_j[b]².
+    """
+    L = state.counts.shape[0]
+    c = state.counts.astype(jnp.float32)
+    denom = jnp.maximum(state.n, 1.0) * L
+    return jnp.sum(c * c) / denom
+
+
+def mu_sequential_increment(state: AceState, buckets_one: jax.Array,
+                            cfg: AceConfig):
+    """One step of the paper's literal Eq. 11 (sequential, for testing).
+
+    Returns (new_state, new_mu) for a SINGLE item with bucket ids (L,).
+    """
+    L = cfg.num_tables
+    rows = jnp.arange(L, dtype=jnp.int32)
+    old_mu = mean_mu(state)
+    n = state.n
+    new_counts = state.counts.at[rows, buckets_one].add(1)
+    incr = jnp.sum(
+        (2.0 * new_counts[rows, buckets_one].astype(jnp.float32) - 1.0) / L)
+    new_mu = (n * old_mu + incr) / (n + 1.0)
+    new_state = state._replace(counts=new_counts, n=n + 1.0)
+    return new_state, new_mu
+
+
+def mean_rate(state: AceState) -> jax.Array:
+    """Exact mean collision RATE  μ/n  (scale-free across stream growth)."""
+    return mean_mu(state) / jnp.maximum(state.n, 1.0)
+
+
+def sigma_welford(state: AceState) -> jax.Array:
+    """Streaming σ of collision RATES (score/n) from insert-time stream."""
+    return jnp.sqrt(state.welford_m2 / jnp.maximum(state.n - 1.0, 1.0))
+
+
+def sigma_cubic_proxy(state: AceState) -> jax.Array:
+    """Per-array second-moment proxy:  E_i[A²] per array = Σ_b A³ / n.
+
+    Var_proxy = mean_j Σ_b A_j[b]³/n − μ²  upper-bounds the true score
+    variance when arrays are independent (Jensen); exposed as a diagnostics
+    alternative to the Welford stream.
+    """
+    c = state.counts.astype(jnp.float32)
+    n = jnp.maximum(state.n, 1.0)
+    second = jnp.mean(jnp.sum(c**3, axis=1)) / n
+    var = jnp.maximum(second - mean_mu(state) ** 2, 0.0)
+    return jnp.sqrt(var)
+
+
+# ---------------------------------------------------------------------------
+# Vector-level convenience API (hashing included).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def insert(state: AceState, w: jax.Array, x: jax.Array,
+           cfg: AceConfig) -> AceState:
+    """Insert raw vectors x (B, d)."""
+    return insert_buckets(state, hash_buckets(x, w, cfg.srp), cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def delete(state: AceState, w: jax.Array, x: jax.Array,
+           cfg: AceConfig) -> AceState:
+    return delete_buckets(state, hash_buckets(x, w, cfg.srp), cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def score(state: AceState, w: jax.Array, q: jax.Array,
+          cfg: AceConfig) -> jax.Array:
+    """Ŝ(q, D) for raw queries q (B, d) -> (B,)."""
+    return lookup(state, hash_buckets(q, w, cfg.srp))
+
+
+@partial(jax.jit, static_argnames=("cfg", "alpha"))
+def is_anomaly(state: AceState, w: jax.Array, q: jax.Array,
+               cfg: AceConfig, alpha: float = 1.0) -> jax.Array:
+    """Decision rule of Algorithm 1 line 22 with the paper's experimental
+    μ − α·σ threshold, applied in RATE space (score/n vs μ/n − α·σ_rate) so
+    the streaming σ is stationary."""
+    r = score(state, w, q, cfg) / jnp.maximum(state.n, 1.0)
+    thresh = mean_rate(state) - alpha * sigma_welford(state)
+    return r < thresh

@@ -1,0 +1,91 @@
+"""Fast SRP via the Subsampled Randomized Hadamard Transform (SRHT).
+
+Paper §2.2 cites the Fast-JL transform for computing m random-projection
+hashes in O(d log d + m) instead of O(d·m).  The classic construction is
+
+    P x = sqrt(d/m) · R · H · D · x
+
+where D is a random ±1 diagonal, H the Walsh–Hadamard transform, and R a
+random row sampler.  Signs of (R H D x) are SRP-distributed to a very good
+approximation (rows of H·D are ±1/√d vectors, near-Gaussian after D mixing;
+Ailon & Chazelle 2006).  We use one extra independent D+H round to decorrelate
+rows when m approaches d.
+
+On TPU the FWHT is log2(d) reshape+butterfly steps on the VPU — no MXU use at
+all, so for high-d inputs this frees the MXU entirely (beyond-paper win for
+the data-pipeline filter where d = d_model can be 12288).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.srp import SrpConfig, pack_buckets
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Walsh–Hadamard transform along the last axis (length must be 2^k).
+
+    Implemented as log2(n) butterfly stages via reshape — each stage is a
+    single fused add/sub, O(n) work, O(n log n) total.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT length must be a power of two, got {n}"
+    orig_shape = x.shape
+    h = 1
+    while h < n:
+        x = x.reshape(*orig_shape[:-1], n // (2 * h), 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        x = x.reshape(*orig_shape)
+        h *= 2
+    return x
+
+
+class SrhtParams:
+    """Static (numpy) SRHT parameters — signs and row sample, derived from seed."""
+
+    def __init__(self, cfg: SrpConfig):
+        self.cfg = cfg
+        d_pad = _next_pow2(max(cfg.dim, 2))
+        rng = np.random.default_rng(cfg.seed + 0x5A5A)
+        self.d_pad = d_pad
+        self.signs1 = jnp.asarray(rng.choice([-1.0, 1.0], size=(d_pad,)), jnp.float32)
+        self.signs2 = jnp.asarray(rng.choice([-1.0, 1.0], size=(d_pad,)), jnp.float32)
+        m = cfg.num_projections
+        # Sample rows with replacement across possibly > d_pad projections.
+        self.rows = jnp.asarray(rng.integers(0, d_pad, size=(m,)), jnp.int32)
+
+
+def srht_bits(x: jax.Array, params: SrhtParams) -> jax.Array:
+    """(..., d) -> (..., K*L) sign bits via two H·D rounds + row sampling."""
+    cfg = params.cfg
+    pad = params.d_pad - cfg.dim
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    y = fwht(xp * params.signs1)
+    y = fwht(y * params.signs2)
+    proj = jnp.take(y, params.rows, axis=-1)
+    return (proj >= 0).astype(jnp.int32)
+
+
+def srht_hash_buckets(x: jax.Array, params: SrhtParams) -> jax.Array:
+    """(..., d) -> (..., L) bucket ids, SRHT fast path."""
+    return pack_buckets(srht_bits(x, params), params.cfg)
+
+
+def flops_dense(cfg: SrpConfig, batch: int) -> int:
+    """FLOPs of the dense SRP matmul path."""
+    return 2 * batch * cfg.dim * cfg.padded_projections
+
+
+def flops_srht(cfg: SrpConfig, batch: int) -> int:
+    """FLOPs of the SRHT path: 2 FWHTs + sign flips + gather."""
+    d_pad = _next_pow2(max(cfg.dim, 2))
+    log2d = d_pad.bit_length() - 1
+    return batch * (2 * d_pad * log2d + 2 * d_pad + cfg.num_projections)

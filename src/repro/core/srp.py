@@ -1,0 +1,130 @@
+"""Signed Random Projections (SRP) — the LSH family used by ACE.
+
+The paper (§2.1) uses the Goemans–Williamson / Charikar family
+
+    h_w(x) = sign(w^T x),   w ~ N(0, I_d)
+
+with collision probability  Pr[h_w(x) = h_w(y)] = 1 − θ(x, y)/π.
+
+ACE needs K·L independent SRP bits per input, grouped into L meta-hashes of
+K bits each; the K bits are packed into an integer bucket id in [0, 2^K).
+
+TPU adaptation: all K·L projections are one (B, d) @ (d, K·L) matmul (MXU),
+followed by a sign + bit-pack epilogue (VPU).  ``K*L`` is padded up to a
+multiple of 128 internally so the matmul is lane-aligned; pad lanes are
+discarded before packing.  The Pallas kernel in ``repro.kernels.srp_hash``
+implements the same contract with explicit VMEM tiling; this module is the
+reference / small-scale path and the parameter factory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 128  # TPU vector lane width; MXU is 128x128.
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class SrpConfig:
+    """Static configuration of an SRP meta-hash bank.
+
+    Attributes:
+      dim:  input dimensionality d.
+      num_bits: K — bits per meta-hash (bucket space is 2^K).
+      num_tables: L — number of independent meta-hashes / count arrays.
+      seed: PRNG seed for the projection matrix.
+      pad_lanes: if True, the projection matrix is materialised with K*L
+        rounded up to a multiple of 128 (extra columns are ignored at pack
+        time).  The paper uses K=15, L=50 -> 750 projections; we compute 768.
+    """
+
+    dim: int
+    num_bits: int = 15
+    num_tables: int = 50
+    seed: int = 0
+    pad_lanes: bool = True
+
+    @property
+    def num_projections(self) -> int:
+        return self.num_bits * self.num_tables
+
+    @property
+    def padded_projections(self) -> int:
+        if not self.pad_lanes:
+            return self.num_projections
+        return _round_up(self.num_projections, LANE)
+
+    @property
+    def num_buckets(self) -> int:
+        return 1 << self.num_bits
+
+
+def make_projections(cfg: SrpConfig, dtype=jnp.float32) -> jax.Array:
+    """Sample the (d, K*L_padded) Gaussian projection matrix.
+
+    The first K*L columns are the live projections (column j*K + k is bit k of
+    meta-hash j); trailing pad columns are only there for lane alignment.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    w = jax.random.normal(key, (cfg.dim, cfg.padded_projections), dtype=dtype)
+    return w
+
+
+def srp_bits(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """Raw sign bits.  x: (..., d) -> (..., K*L) int32 in {0, 1}.
+
+    sign(0) is defined as +1 (bit 1) so the map is deterministic; with
+    Gaussian projections the event has measure zero for real data anyway.
+    """
+    proj = jnp.einsum("...d,dp->...p", x, w.astype(x.dtype))
+    bits = (proj >= 0).astype(jnp.int32)
+    return bits[..., : cfg.num_projections]
+
+
+def pack_buckets(bits: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """Pack K-bit groups into bucket ids.  (..., K*L) -> (..., L) int32.
+
+    Bit k of meta-hash j is column j*K + k; packing is big-endian on k
+    (first bit = MSB) — any fixed convention works, it only has to match the
+    kernel and stay stable across versions (sketch state is persisted).
+    """
+    K, L = cfg.num_bits, cfg.num_tables
+    grouped = bits.reshape(*bits.shape[:-1], L, K)
+    weights = (1 << jnp.arange(K - 1, -1, -1, dtype=jnp.int32))
+    return jnp.sum(grouped * weights, axis=-1, dtype=jnp.int32)
+
+
+def hash_buckets(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """Full SRP meta-hash: (..., d) -> (..., L) bucket ids in [0, 2^K)."""
+    return pack_buckets(srp_bits(x, w, cfg), cfg)
+
+
+def collision_probability(q: jax.Array, x: jax.Array) -> jax.Array:
+    """p(q, x) = 1 − θ/π for SRP (paper Eq. 1).  Broadcasts over leading dims."""
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+    cos = jnp.clip(jnp.sum(qn * xn, axis=-1), -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / jnp.pi
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def hash_buckets_jit(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
+    return hash_buckets(x, w, cfg)
+
+
+def projection_memory_bytes(cfg: SrpConfig, dtype_bytes: int = 4) -> int:
+    """Memory to store the projections (paper §3.4: ~6d KB for K=15,L=50)."""
+    return cfg.dim * cfg.padded_projections * dtype_bytes
+
+
+def seeds_memory_bytes(cfg: SrpConfig) -> int:
+    """Paper's alternative: store K*L integer seeds, regenerate rows on the fly."""
+    return cfg.num_projections * 4

@@ -1,0 +1,153 @@
+"""Deterministic, checkpointable data pipeline with the ACE anomaly filter.
+
+The paper's original deployment surface: a high-rate stream where each
+record must be scored in O(K·L) against a 4 MB sketch BEFORE it reaches the
+expensive consumer (here: the training loss).
+
+* Determinism & restart: batches are a pure function of (seed, step) — the
+  iterator state IS the step counter, so checkpoint/restart and elastic
+  re-sharding reproduce the exact stream (fault-tolerance substrate).
+* Filtering: per-sequence feature = mean token embedding (or the stub
+  frame/patch embedding mean), bias-augmented; scored against the running
+  sketch; sequences below μ − α·σ get loss-mask 0 (skip) but still advance
+  the stream.  The sketch updates ONLINE with non-anomalous items only.
+* Poisoning injection (for tests/examples): ``corrupt_every`` swaps a batch
+  with far-out-of-cone garbage, which the filter must catch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    corrupt_every: int = 0        # 0 = clean stream
+    n_docs: int = 4096            # synthetic corpus size
+
+
+def synth_batch(cfg: StreamConfig, step: int) -> dict[str, np.ndarray]:
+    """Markov-ish synthetic LM batch, pure function of (seed, step)."""
+    rng = np.random.default_rng(cfg.seed * 1_000_003 + step)
+    B, S, V = cfg.global_batch, cfg.seq_len, cfg.vocab_size
+    # low-entropy structured stream: random walk over the vocab
+    start = rng.integers(0, V, (B, 1))
+    steps = rng.integers(-3, 4, (B, S - 1))
+    toks = np.concatenate([start, start + np.cumsum(steps, axis=1)], axis=1)
+    toks = np.mod(toks, V).astype(np.int32)
+    batch = {"tokens": toks, "labels": toks,
+             "mask": np.ones((B, S), np.float32)}
+    if cfg.corrupt_every and step % cfg.corrupt_every == cfg.corrupt_every - 1:
+        # poisoned batch: uniform garbage tokens (very different embedding
+        # statistics from the random-walk stream)
+        batch["tokens"] = rng.integers(0, V, (B, S)).astype(np.int32)
+        batch["labels"] = batch["tokens"]
+        batch["_poisoned"] = np.ones((), np.bool_)
+    return batch
+
+
+class DataStream:
+    """Stateless-iterator facade: state == step (checkpoint-friendly)."""
+
+    def __init__(self, cfg: StreamConfig, start_step: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self):
+        b = synth_batch(self.cfg, self.step)
+        self.step += 1
+        return b
+
+    def state_dict(self):
+        return {"step": self.step}
+
+    def load_state_dict(self, s):
+        self.step = int(s["step"])
+
+
+# ---------------------------------------------------------------------------
+# ACE data filter (jit-compatible; compiled into train_step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AceDataFilter:
+    d_model: int
+    num_bits: int = 13
+    num_tables: int = 32
+    alpha: float = 4.0
+    warmup_items: float = 512.0
+    bias_const: float = 0.25
+
+    @property
+    def ace_cfg(self) -> AceConfig:
+        return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
+                         num_tables=self.num_tables, seed=29,
+                         welford_min_n=self.warmup_items / 2)
+
+    def init(self):
+        return sk.init(self.ace_cfg), sk.make_params(self.ace_cfg)
+
+    def features(self, embeds: jax.Array) -> jax.Array:
+        """(B, S, D) token/patch/frame embeddings -> (B, D+1) features.
+
+        Unit-normalised mean embedding + a bias coordinate: direction drift
+        is what the angular SRP sees; the bias re-encodes magnitude at a
+        controlled weight."""
+        f = jnp.mean(embeds.astype(jnp.float32), axis=1)
+        f = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-9)
+        bias = jnp.full((f.shape[0], 1), self.bias_const, jnp.float32)
+        return jnp.concatenate([f, bias], axis=-1)
+
+    def __call__(self, state, w, embeds, mask):
+        """Score + filter + update.  Returns (new_state, new_mask, frac_kept).
+
+        mask: (B, S) loss mask; anomalous sequences are zeroed out.
+        """
+        cfg = self.ace_cfg
+        feat = self.features(embeds)                       # (B, d+1)
+        scores = sk.score(state, w, feat, cfg)
+        rates = scores / jnp.maximum(state.n, 1.0)
+        mu_rate = sk.mean_rate(state)
+        sigma = sk.sigma_welford(state)
+        armed = state.n >= self.warmup_items
+        anom = jnp.logical_and(armed,
+                               rates < mu_rate - self.alpha * sigma)
+        keep = jnp.logical_not(anom)
+        # update sketch with kept items only: scatter-add the keep flag as
+        # the increment (0 for anomalous rows) — no sentinel index games.
+        buckets = sk.hash_buckets(feat, w, cfg.srp)
+        B, L = buckets.shape
+        rows = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
+        inc = jnp.broadcast_to(
+            keep[:, None], (B, L)).astype(state.counts.dtype)
+        new_counts = state.counts.at[rows, buckets].add(inc)
+        b = jnp.sum(keep.astype(jnp.float32))
+        n = state.n
+        tot = n + b
+        kept_rates = jnp.where(keep, scores / jnp.maximum(tot, 1.0), 0.0)
+        mean_b = jnp.sum(kept_rates) / jnp.maximum(b, 1.0)
+        m2_b = jnp.sum(jnp.where(keep,
+                                 (kept_rates - mean_b) ** 2, 0.0))
+        delta = mean_b - state.welford_mean
+        safe = jnp.maximum(tot, 1.0)
+        new_state = sk.AceState(
+            counts=new_counts, n=tot,
+            welford_mean=state.welford_mean + delta * b / safe,
+            welford_m2=state.welford_m2 + m2_b + delta ** 2 * n * b / safe)
+        new_mask = mask * keep[:, None].astype(mask.dtype)
+        return new_state, new_mask, jnp.mean(keep.astype(jnp.float32))

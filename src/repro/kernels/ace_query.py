@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: ACE query — gather counts[j, H_j(q)] per table.
+
+Counts (L, 2^K) are VMEM-resident; queries stream in as (B, L) bucket ids;
+output is the gathered (B, L) float32 count matrix (the ops wrapper takes the
+mean over the live L columns — kept separate so diagnostics can see per-table
+counts, e.g. for the variance analysis of Theorem 1).
+
+Two lowering strategies, chosen by ``mode``:
+
+* ``"vector"`` (default): per table j, a lane-gather ``jnp.take(row, ids)``
+  — one vectorised gather per table, 50 total.  Lowers to Mosaic's dynamic
+  gather on current toolchains; always correct under interpret mode.
+* ``"scalar"``: fully scalar fori_loop RMW (guaranteed-lowerable baseline,
+  mirrors ace_update's loop).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel_vector(buckets_ref, counts_ref, out_ref, *, L: int):
+    for j in range(L):  # static unroll over tables
+        row = counts_ref[j, :]
+        ids = buckets_ref[:, j]
+        out_ref[:, j] = jnp.take(row, ids, axis=0).astype(jnp.float32)
+
+
+def _kernel_scalar(buckets_ref, counts_ref, out_ref, *, B: int, L: int):
+    def body(t, _):
+        b = t // L
+        j = t % L
+        idx = buckets_ref[b, j]
+        c = counts_ref[j, pl.dslice(idx, 1)]
+        out_ref[b, pl.dslice(j, 1)] = c.astype(jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, B * L, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "mode", "bm"))
+def ace_query(counts: jax.Array, buckets: jax.Array,
+              interpret: bool = True, mode: str = "vector",
+              bm: int = 1024) -> jax.Array:
+    """counts (L, 2^K), buckets (B, L) -> gathered (B, L) float32."""
+    L, nbuckets = counts.shape
+    B = buckets.shape[0]
+    assert buckets.shape == (B, L)
+    bm_ = min(bm, B)
+    Bp = ((B + bm_ - 1) // bm_) * bm_
+    bp = jnp.pad(buckets, ((0, Bp - B), (0, 0)))
+
+    if mode == "vector":
+        kern = functools.partial(_kernel_vector, L=L)
+    elif mode == "scalar":
+        kern = functools.partial(_kernel_scalar, B=bm_, L=L)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    out = pl.pallas_call(
+        kern,
+        grid=(Bp // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, L), lambda i: (i, 0)),
+            pl.BlockSpec((L, nbuckets), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, L), jnp.float32),
+        interpret=interpret,
+    )(bp, counts)
+    return out[:B]

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: ACE count-array update (streaming insert).
+
+The counts (L, 2^K) stay resident in VMEM (3.2 MB int16 / 6.4 MB int32 at
+the paper's K=15, L=50 — the TPU translation of the paper's "fits in L3
+cache") and are updated **in place** via input/output aliasing; only the
+(B, L) bucket ids stream in from HBM.
+
+TPUs have no fast random scatter, so the per-item `A[H(x)]++` of Algorithm 1
+becomes a sequential scalar read-modify-write loop over the (B, L) ids on
+the scalar core — which is exactly what the paper's CPU inner loop does,
+and is collision-safe by construction.  The loop is O(B·L) scalar ops
+against a (B·d·K·L)-FLOP hash matmul, i.e. ~d·K/1 ≳ 10³× cheaper — the
+update is never the bottleneck (validated in §Roofline of EXPERIMENTS.md).
+
+A vectorised histogram variant (one-hot compare-accumulate over bucket
+tiles) is provided for small K in ``repro.kernels.ops.histogram_small_k``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(buckets_ref, counts_in_ref, counts_out_ref, *, B: int, L: int):
+    # Aliased: counts_out_ref is the same buffer as counts_in_ref.
+    def body(t, _):
+        b = t // L
+        j = t % L
+        idx = buckets_ref[b, j]
+        c = counts_out_ref[j, pl.dslice(idx, 1)]
+        counts_out_ref[j, pl.dslice(idx, 1)] = c + jnp.ones_like(c)
+        return 0
+
+    # Touch the input alias so the dataflow is explicit under interpret mode.
+    counts_out_ref[0, 0] = counts_in_ref[0, 0]
+    jax.lax.fori_loop(0, B * L, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "donate"))
+def ace_update(counts: jax.Array, buckets: jax.Array,
+               interpret: bool = True, donate: bool = True) -> jax.Array:
+    """counts (L, 2^K) int; buckets (B, L) int32 -> updated counts.
+
+    In-place on TPU via input_output_aliases (the counts buffer is donated).
+    """
+    L, nbuckets = counts.shape
+    B = buckets.shape[0]
+    assert buckets.shape == (B, L)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, B=B, L=L),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((B, L), lambda i: (0, 0)),
+            pl.BlockSpec((L, nbuckets), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((L, nbuckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, nbuckets), counts.dtype),
+        input_output_aliases={1: 0} if donate else {},
+        interpret=interpret,
+    )(buckets, counts)

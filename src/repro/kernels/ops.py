@@ -1,0 +1,63 @@
+"""jit'd public wrappers over the Pallas kernels, with backend dispatch.
+
+On this CPU container the kernels run under ``interpret=True`` (the kernel
+body executes as traced JAX on CPU — bit-exact contract validation); on a
+TPU runtime set ``repro.kernels.ops.INTERPRET = False`` (or the
+REPRO_PALLAS_INTERPRET=0 env var) for the Mosaic lowering.
+
+Also exposes the sketch-level convenience ops used by AceEstimator
+(``use_kernels=True``) and the serving guardrail.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import AceConfig, AceState
+from repro.core.srp import SrpConfig
+from repro.kernels import ace_query as _q
+from repro.kernels import ace_score_fused as _f
+from repro.kernels import ace_update as _u
+from repro.kernels import srp_hash as _h
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """(B, d) -> (B, L) bucket ids via the Pallas kernel."""
+    return _h.srp_hash(x, w, cfg, interpret=INTERPRET)
+
+
+def ace_update(state: AceState, buckets: jax.Array,
+               cfg: AceConfig) -> AceState:
+    """Kernel-path insert (counts only; Welford stream via gathered counts)."""
+    new_counts = _u.ace_update(state.counts, buckets, interpret=INTERPRET)
+    gathered = _q.ace_query(new_counts, buckets, interpret=INTERPRET)
+    scores = jnp.mean(gathered, axis=-1)
+    b = jnp.asarray(scores.shape[0], jnp.float32)
+    n = state.n
+    tot = n + b
+    rates = scores / jnp.maximum(tot, 1.0)   # rate stream (see sketch.py)
+    mean_b = jnp.mean(rates)
+    m2_b = jnp.sum((rates - mean_b) ** 2)
+    delta = mean_b - state.welford_mean
+    safe = jnp.maximum(tot, 1.0)
+    return AceState(
+        counts=new_counts, n=tot,
+        welford_mean=state.welford_mean + delta * b / safe,
+        welford_m2=state.welford_m2 + m2_b + delta**2 * n * b / safe)
+
+
+def ace_query(state: AceState, buckets: jax.Array) -> jax.Array:
+    """(B, L) bucket ids -> (B,) scores via the Pallas gather kernel."""
+    return jnp.mean(_q.ace_query(state.counts, buckets, interpret=INTERPRET),
+                    axis=-1)
+
+
+def ace_score(state: AceState, q: jax.Array, w: jax.Array,
+              cfg: AceConfig) -> jax.Array:
+    """Fused hash+lookup+mean scoring of raw query vectors."""
+    return _f.ace_score_fused(state.counts, q, w, cfg.srp,
+                              interpret=INTERPRET)

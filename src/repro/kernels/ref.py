@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel's contract exactly (same shapes/dtypes,
+same bit-packing convention).  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.srp import SrpConfig, hash_buckets
+
+
+def srp_hash_ref(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """(B, d), (d, P) -> (B, L) int32 bucket ids."""
+    return hash_buckets(x, w, cfg)
+
+
+def ace_update_ref(counts: jax.Array, buckets: jax.Array) -> jax.Array:
+    """counts (L, 2^K) += histogram of buckets (B, L)."""
+    L = counts.shape[0]
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+    return counts.at[rows, buckets].add(1)
+
+
+def ace_query_ref(counts: jax.Array, buckets: jax.Array) -> jax.Array:
+    """gathered counts: (B, L) float32 with col j = counts[j, buckets[:, j]]."""
+    L = counts.shape[0]
+    rows = jnp.arange(L, dtype=jnp.int32)
+    return counts[rows[None, :], buckets].astype(jnp.float32)
+
+
+def ace_score_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
+                  cfg: SrpConfig) -> jax.Array:
+    """Fused hash+lookup+mean: (B, d) queries -> (B,) scores."""
+    buckets = hash_buckets(q, w, cfg)
+    return jnp.mean(ace_query_ref(counts, buckets), axis=-1)

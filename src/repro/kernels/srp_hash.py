@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: SRP meta-hash — matmul + sign + bit-pack.
+
+The compute hot-spot of ACE (paper §3.4: hashing dominates; lookups are
+O(L)).  One kernel does:
+
+    proj   = x @ W                  (MXU, accumulated over d tiles in VMEM)
+    bits   = proj >= 0              (VPU)
+    bucket = bits @ PACK            (MXU; PACK encodes the 2^k weights,
+                                     zero columns mask the lane padding)
+
+Grid: (B/bm, d/bk).  The accumulator (bm, P) lives in VMEM scratch across
+the d-tile loop; sign+pack run once on the last d step, writing (bm, Lp)
+int32 bucket ids.  All dims are padded by the ops wrapper so BlockSpecs are
+exact; P = round_up(K·L, 128) keeps the MXU lane-aligned (paper uses
+K·L = 750; we compute 768 and mask 18 lanes in PACK).
+
+VMEM budget at defaults (bm=256, bk=512, P=768, f32):
+  x 0.5 MB + W 1.5 MB + acc 0.75 MB + pack 0.4 MB + out 0.13 MB ≈ 3.3 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.srp import SrpConfig
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def make_pack_matrix(cfg: SrpConfig, lp: int) -> np.ndarray:
+    """(P, Lp) f32: PACK[j*K + k, j] = 2^(K-1-k) for j < L, else 0."""
+    K, L, P = cfg.num_bits, cfg.num_tables, cfg.padded_projections
+    pack = np.zeros((P, lp), np.float32)
+    for j in range(L):
+        for k in range(K):
+            pack[j * K + k, j] = float(1 << (K - 1 - k))
+    return pack
+
+
+def _kernel(x_ref, w_ref, pack_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        bits = (acc_ref[...] >= 0.0).astype(jnp.float32)
+        bucket = jnp.dot(bits, pack_ref[...],
+                         preferred_element_type=jnp.float32)
+        out_ref[...] = bucket.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
+def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig,
+             bm: int = 256, bk: int = 512,
+             interpret: bool = True) -> jax.Array:
+    """(B, d) @ (d, P) -> (B, L) int32 bucket ids in [0, 2^K).
+
+    ``interpret=True`` runs the kernel body on CPU (this container); on a TPU
+    runtime pass interpret=False for the Mosaic lowering.
+    """
+    B, d = x.shape
+    P = cfg.padded_projections
+    assert w.shape == (d, P), (w.shape, (d, P))
+    L = cfg.num_tables
+    lp = _round_up(L, 128)
+
+    bm_ = min(bm, _round_up(B, 8))
+    bk_ = min(bk, _round_up(d, 128))
+    Bp, dp = _round_up(B, bm_), _round_up(d, bk_)
+    xp = jnp.pad(x, ((0, Bp - B), (0, dp - d)))
+    wp = jnp.pad(w, ((0, dp - d), (0, 0)))
+    pack = jnp.asarray(make_pack_matrix(cfg, lp))
+    nb, nk = Bp // bm_, dp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(nb, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, k: (i, k)),
+            pl.BlockSpec((bk_, P), lambda i, k: (k, 0)),
+            pl.BlockSpec((P, lp), lambda i, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, lp), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, lp), jnp.int32),
+        scratch_shapes=[
+            # (bm, P) f32 accumulator in VMEM, persistent across the k loop.
+            pltpu.VMEM((bm_, P), jnp.float32)
+        ],
+        interpret=interpret,
+    )(xp, wp, pack)
+    return out[:B, :L]

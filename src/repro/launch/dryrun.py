@@ -1,0 +1,412 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes; extract memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmo_1b \
+        --shape train_4k [--multi-pod | --both-meshes] [--all] [--out DIR]
+
+Per cell:
+  1. build the 16×16 ("data","model") mesh — or 2×16×16 ("pod","data",
+     "model") for the multi-pod pass,
+  2. install logical sharding rules (long-context cells switch the KV cache
+     to sequence sharding — context parallelism),
+  3. apply the cell policy: optimizer (adafactor ≥ 40B params else adamw),
+     grad-accumulation microbatches sized to the activation budget,
+     bf16 params for serving cells,
+  4. jit-lower the step (train_step / prefill / decode) from
+     ShapeDtypeStructs — zero allocation — and ``.compile()``; sharding
+     mismatches / compile-OOM / unsupported collectives fail HERE,
+  5. record compiled.memory_analysis(), cost_analysis(), and the
+     collective-bytes breakdown (repro.dist.hlo_analysis) to
+     <out>/<arch>__<shape>__<mesh>.json for §Dry-run / §Roofline.
+"""
+
+import argparse
+import dataclasses
+import gc
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.hlo_analysis import (collective_bytes_by_kind,
+                                     while_loop_trip_counts)
+from repro.launch.mesh import (fsdp_tree, make_production_mesh, rules_for,
+                               sanitize_pspec, sharding_tree_for)
+from repro.models import transformer as tf
+from repro.models import whisper as wh
+from repro.models.common import logical_to_pspec, set_rules
+from repro.models.registry import (SHAPES, Arch, all_cells, is_whisper,
+                                   wh_abstract)
+from repro.train.optim import make_optimizer
+from repro.train.train_loop import TrainConfig, init_train_state, \
+    make_train_step
+
+ACTIVATION_BUDGET = 3.5e9     # bytes/device of saved layer-boundary carries
+BIG_MODEL_PARAMS = 4e10       # adafactor beyond this (no fp32 moment pair)
+
+
+def _is_logical_axes(x):
+    return (isinstance(x, tuple)
+            and all(isinstance(e, (str, type(None))) for e in x))
+
+
+def _param_logical(arch: Arch):
+    if is_whisper(arch.cfg):
+        return wh_abstract(arch.cfg)
+    return tf.abstract_params(arch.cfg)
+
+
+def _param_pspecs(arch: Arch, rules):
+    _, logical = _param_logical(arch)
+    return jax.tree.map(lambda ax: logical_to_pspec(ax, rules), logical,
+                        is_leaf=_is_logical_axes)
+
+
+def _reconcile(spec, shapes):
+    """Align a spec tree (may have extra dict keys) with a shapes tree."""
+    if shapes is None:
+        return None
+    if isinstance(shapes, dict):
+        return {k: _reconcile(spec[k], v) for k, v in shapes.items()}
+    if hasattr(shapes, "_fields"):      # NamedTuple
+        return type(shapes)(*(_reconcile(getattr(spec, f), getattr(shapes, f))
+                              for f in shapes._fields))
+    if isinstance(shapes, (list, tuple)):
+        return type(shapes)(_reconcile(s, v) for s, v in zip(spec, shapes))
+    return spec
+
+
+def _replicated_like(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+@dataclasses.dataclass
+class CellPolicy:
+    optimizer: str
+    microbatches: int
+    serve_bf16: bool = True
+
+
+def _per_token_recompute_bytes(cfg, seq_len: int, model_shards: int = 16):
+    """Peak live bytes/token while ONE superblock recomputes in backward.
+
+    Rough per-layer-kind model (f32 residuals where the math is f32):
+      attn/swa : score rows (S or window) × heads_local × 4 + qkv/mlp temps
+      mamba    : the (delta, B, C, xc) xs streams in f32
+      rwkv     : the (r, k, v, w) streams in f32
+      moe adds : dispatch/combine + (E, C, D) expert slots per token
+    """
+    total = 0.0
+    for pos, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "swa"):
+            span = min(seq_len, cfg.sliding_window or seq_len) \
+                if kind == "swa" else seq_len
+            h_local = max(cfg.num_heads // model_shards, 1)
+            total += span * 4.0 * h_local / 8.0   # chunked/flash factor
+            total += 10 * cfg.d_model * 2
+        elif kind == "mamba":
+            d_inner = cfg.mamba_expand * cfg.d_model
+            total += (2 * d_inner + 2 * cfg.mamba_d_state) * 4
+            total += 6 * cfg.d_model * 2
+        elif kind == "rwkv":
+            total += 16 * cfg.d_model * 4
+        if cfg.moe_num_experts and \
+                pos % cfg.moe_layer_period == cfg.moe_layer_period - 1 \
+                and kind != "rwkv":
+            cf, K, E = cfg.moe_capacity_factor, cfg.moe_top_k, \
+                cfg.moe_num_experts
+            ff_local = max(cfg.d_ff // model_shards, 1)
+            total += cf * K * (2 * cfg.d_model + ff_local) * 2  # slots
+            total += E * cf * K * 4                             # disp/comb
+    return total
+
+
+def cell_policy(arch: Arch, shape, mesh) -> CellPolicy:
+    cfg = arch.cfg
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.kind != "train":
+        return CellPolicy(optimizer="adamw", microbatches=1)
+    n_params = arch.param_count()
+    opt = "adafactor" if n_params > BIG_MODEL_PARAMS else "adamw"
+    b_local = max(shape.global_batch // dp, 1)
+    n_sb = (cfg.num_layers + cfg.encoder_layers) \
+        // max(len(cfg.block_pattern), 1)
+    tokens_local = b_local * shape.seq_len
+    # carries (whole step) + one superblock's recompute working set (per mb)
+    per_tok = (2 * cfg.d_model * max(n_sb, 1)
+               + _per_token_recompute_bytes(cfg, shape.seq_len))
+    mb = 1
+    while tokens_local * per_tok / mb > ACTIVATION_BUDGET and mb < b_local:
+        mb *= 2
+    while b_local % mb != 0:
+        mb *= 2
+    mb = min(mb, b_local)
+    return CellPolicy(optimizer=opt, microbatches=mb)
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    error: str | None = None
+    memory: dict | None = None
+    flops: float | None = None
+    bytes_accessed: float | None = None
+    collectives: dict | None = None
+    params: int | None = None
+    active_params: int | None = None
+    policy: dict | None = None
+    trip_counts: list | None = None
+    # scan-corrected totals from the depth-1/depth-2 probe extrapolation
+    # (cost_analysis counts while bodies ONCE; probes at unrolled depths 1
+    #  and 2 give body = f(2)−f(1), outside = f(1)−body, total = out+R·body)
+    corrected: dict | None = None
+    probe_error: str | None = None
+
+
+def _lower_cell(arch: Arch, shape, mesh, rules, long_ctx: bool,
+                policy: CellPolicy):
+    cfg = arch.cfg
+    pshapes, _ = _param_logical(arch)
+    param_ps = _param_pspecs(arch, rules)
+    # FSDP: params (and, via state_pspecs, optimizer moments) additionally
+    # shard over "data"; GSPMD inserts per-layer all-gather/reduce-scatter.
+    param_ps = fsdp_tree(param_ps, pshapes, mesh, axis="data")
+    param_sh = sharding_tree_for(mesh, param_ps, pshapes)
+    in_specs = arch.input_specs(shape)
+
+    def batch_spec(name, leaf):
+        if long_ctx:
+            return P()
+        batch = rules.get("batch")
+        if name == "positions":
+            return P(None, batch)
+        return P(batch) if len(leaf.shape) >= 1 else P()
+
+    batch_sh = {k: NamedSharding(mesh,
+                                 sanitize_pspec(batch_spec(k, v),
+                                                tuple(v.shape), mesh))
+                for k, v in in_specs.items()}
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(
+            optimizer=policy.optimizer,
+            microbatches=policy.microbatches,
+            use_data_filter=cfg.input_mode == "tokens" and not is_whisper(cfg),
+            use_grad_monitor=True, remat=True)
+        state_shapes = jax.eval_shape(
+            lambda k: init_train_state(arch, tcfg, k), jax.random.PRNGKey(0))
+        opt = make_optimizer(tcfg.optimizer)
+        spec_tree = type(state_shapes)(
+            params=param_ps,
+            opt_state=_reconcile(opt.state_pspecs(param_ps),
+                                 state_shapes.opt_state),
+            step=P(),
+            monitor=_replicated_like(state_shapes.monitor),
+            monitor_w=P() if state_shapes.monitor_w is not None else None,
+            filter_state=_replicated_like(state_shapes.filter_state),
+            filter_w=P() if state_shapes.filter_w is not None else None,
+            ef=_replicated_like(state_shapes.ef),
+            rng=P())
+        state_sh = sharding_tree_for(mesh, spec_tree, state_shapes)
+        # ZeRO-2: per-microbatch grads constrained to the FSDP param specs
+        # (sanitised against the param shapes) -> reduce-scatter not AR.
+        grad_ps = jax.tree.map(
+            lambda sh: sh.spec, param_sh,
+            is_leaf=lambda x: hasattr(x, "spec"))
+        step = make_train_step(arch, tcfg, grad_pspecs=grad_ps)
+        return jax.jit(step, in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh, None),
+                       donate_argnums=(0,)).lower(state_shapes, in_specs)
+
+    if shape.kind == "prefill":
+        fn = (lambda p, b: arch.prefill(p, b))
+        return jax.jit(fn, in_shardings=(param_sh, batch_sh)).lower(
+            pshapes, in_specs)
+
+    # decode
+    cache_shapes = arch.cache_specs(shape)
+    if is_whisper(cfg):
+        from repro.models.attention import KVCache
+        kv_ax = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        kv = logical_to_pspec(kv_ax, rules)
+        cache_ps = wh.WhisperCache(self_kv=KVCache(kv, kv),
+                                   cross_k=kv, cross_v=kv)
+    else:
+        cache_ps = tf.cache_pspecs(cfg, long_context=long_ctx, rules=rules)
+    cache_sh = sharding_tree_for(mesh, cache_ps, cache_shapes)
+    pos_spec = arch.decode_pos_spec(shape)
+    pos_sh = NamedSharding(mesh, P())
+    fn = (lambda p, b, c, pos: arch.decode_step(p, b, c, pos))
+    return jax.jit(fn, in_shardings=(param_sh, batch_sh, cache_sh, pos_sh),
+                   donate_argnums=(2,)).lower(
+        pshapes, in_specs, cache_shapes, pos_spec)
+
+
+def _probe_arch(arch_name: str, shape, serve: bool, depth_mult: int) -> Arch:
+    """Depth-{1,2} fully-unrolled variant for exact cost analysis."""
+    a = Arch(arch_name)
+    plen = len(a.cfg.block_pattern)
+    repl = dict(
+        num_layers=plen * depth_mult,
+        scan_unroll=max(depth_mult, 1),
+        unroll_q_chunks=True,              # exact chunked-attention costs
+        time_chunk=max(shape.seq_len, 1),  # single recurrence chunk
+    )
+    if a.cfg.encoder_layers:
+        repl["encoder_layers"] = depth_mult
+    if serve:
+        repl["param_dtype"] = "bfloat16"
+    a.cfg = dataclasses.replace(a.cfg, **repl)
+    return a
+
+
+def probe_costs(arch_name: str, shape_name: str, mesh, rules,
+                long_ctx: bool, n_superblocks: int) -> dict:
+    """Extrapolated exact totals: {flops, bytes_accessed, collectives}."""
+    shape = SHAPES[shape_name]
+    serve = shape.kind != "train"
+    results = []
+    for depth in (1, 2):
+        arch = _probe_arch(arch_name, shape, serve, depth)
+        policy = CellPolicy(optimizer="adamw", microbatches=1)
+        with jax.set_mesh(mesh):
+            lowered = _lower_cell(arch, shape, mesh, rules, long_ctx, policy)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes_by_kind(compiled.as_text())
+        results.append({"flops": float(cost.get("flops", 0.0)),
+                        "bytes": float(cost.get("bytes accessed", 0.0)),
+                        "coll": coll})
+    f1, f2 = results
+
+    def extrap(v1, v2):
+        body = max(v2 - v1, 0.0)
+        outside = max(v1 - body, 0.0)
+        return outside + n_superblocks * body
+
+    coll_kinds = set(f1["coll"]) | set(f2["coll"])
+    coll_kinds.discard("total_bytes")
+    coll = {}
+    for k in coll_kinds:
+        b1 = f1["coll"].get(k, {}).get("bytes", 0)
+        b2 = f2["coll"].get(k, {}).get("bytes", 0)
+        coll[k] = {"bytes": extrap(b1, b2),
+                   "count": int(extrap(
+                       f1["coll"].get(k, {}).get("count", 0),
+                       f2["coll"].get(k, {}).get("count", 0)))}
+    coll["total_bytes"] = sum(v["bytes"] for v in coll.values())
+    return {
+        "flops": extrap(f1["flops"], f2["flops"]),
+        "bytes_accessed": extrap(f1["bytes"], f2["bytes"]),
+        "collectives": coll,
+        "probe_depth1": f1, "probe_depth2": f2,
+    }
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool) -> CellResult:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    shape = SHAPES[shape_name]
+    arch = Arch(arch_name)
+    if shape.kind != "train":
+        # serving runs in bf16 weights (production inference convention)
+        arch.cfg = dataclasses.replace(arch.cfg, param_dtype="bfloat16")
+    long_ctx = shape_name == "long_500k"
+    rules = rules_for(mesh, long_context=long_ctx)
+    set_rules(rules)
+    policy = cell_policy(arch, shape, mesh)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            lowered = _lower_cell(arch, shape, mesh, rules, long_ctx, policy)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_by_kind(hlo)
+            trips = while_loop_trip_counts(hlo)
+            del hlo
+        res = CellResult(
+            arch=arch_name, shape=shape_name, mesh=mesh_name, ok=True,
+            seconds=round(time.time() - t0, 1),
+            memory={
+                "temp": getattr(mem, "temp_size_in_bytes", None),
+                "args": getattr(mem, "argument_size_in_bytes", None),
+                "output": getattr(mem, "output_size_in_bytes", None),
+                "alias": getattr(mem, "alias_size_in_bytes", None),
+                "peak_estimate": (getattr(mem, "temp_size_in_bytes", 0)
+                                  + getattr(mem, "argument_size_in_bytes", 0)
+                                  - getattr(mem, "alias_size_in_bytes", 0)),
+            },
+            flops=float(cost.get("flops", -1.0)),
+            bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+            collectives=coll,
+            params=arch.param_count(),
+            active_params=arch.active_param_count(),
+            policy=dataclasses.asdict(policy),
+            trip_counts=trips,
+        )
+        try:
+            n_sb = (arch.cfg.num_layers
+                    // max(len(arch.cfg.block_pattern), 1))
+            res.corrected = probe_costs(arch_name, shape_name, mesh, rules,
+                                        long_ctx, n_sb)
+        except Exception as e:  # noqa: BLE001
+            res.probe_error = f"{type(e).__name__}: {e}"
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        res = CellResult(arch=arch_name, shape=shape_name, mesh=mesh_name,
+                         ok=False, seconds=round(time.time() - t0, 1),
+                         error=f"{type(e).__name__}: {e}\n"
+                               f"{traceback.format_exc(limit=6)}")
+    gc.collect()
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch_name}__{shape_name}__{'2x16x16' if mp else '16x16'}"
+            path = f"{args.out}/{tag}.json"
+            if os.path.exists(path) and not args.force:
+                print(f"[skip existing] {tag}", flush=True)
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            res = run_cell(arch_name, shape_name, mp)
+            with open(path, "w") as f:
+                json.dump(dataclasses.asdict(res), f, indent=1)
+            status = ("OK" if res.ok
+                      else "FAIL: " + res.error.splitlines()[0])
+            print(f"[dryrun] {tag}: {status} ({res.seconds}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Training launcher: --arch <id> on a data×model mesh (or 1 device).
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --reduced \
+        --steps 100 [--devices 8 --mesh 4x2] [--ckpt DIR]
+
+On this CPU container use --devices to request fake host devices (set
+BEFORE jax initialises).  On a real TPU slice, omit --devices and the
+runtime topology is used.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 = data x model")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--no-filter", action="store_true")
+    ap.add_argument("--no-monitor", action="store_true")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    from repro.data.pipeline import DataStream, StreamConfig
+    from repro.models.common import set_rules
+    from repro.models.registry import Arch
+    from repro.train.train_loop import TrainConfig, train
+
+    arch = Arch(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(
+        optimizer=args.optimizer, peak_lr=args.lr,
+        warmup_steps=max(args.steps // 20, 1), total_steps=args.steps,
+        microbatches=args.microbatches,
+        use_data_filter=not args.no_filter and arch.cfg.input_mode == "tokens",
+        use_grad_monitor=not args.no_monitor,
+        ckpt_dir=args.ckpt, ckpt_interval=max(args.steps // 5, 10))
+    scfg = StreamConfig(vocab_size=arch.cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch)
+
+    ctx = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        set_rules({"batch": ("data",), "heads": "model",
+                   "kv_heads": "model", "ff": "model", "vocab": "model"})
+        ctx = jax.set_mesh(mesh)
+        ctx.__enter__()
+    try:
+        state, hist = train(arch, tcfg, DataStream(scfg),
+                            num_steps=args.steps, log_every=10)
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+    print(f"done: step={int(state.step)} "
+          f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

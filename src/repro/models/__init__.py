@@ -1,0 +1,3 @@
+"""Model zoo: config-driven implementations of the 10 assigned archs."""
+from repro.models.common import ModelConfig, set_rules, get_rules  # noqa: F401
+from repro.models.registry import Arch, SHAPES, all_cells, LONG_CONTEXT_SKIP  # noqa: F401

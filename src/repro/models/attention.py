@@ -1,0 +1,269 @@
+"""GQA attention with every assigned-zoo variation:
+
+* grouped KV heads (all archs), optional QKV bias (qwen2),
+* sliding-window masking (mixtral, gemma2 local layers),
+* attention-logit softcapping (gemma2),
+* RoPE / M-RoPE / no-PE (whisper uses absolute sinusoidal at embed time),
+* bidirectional mode (whisper encoder), cross-attention (whisper decoder),
+* decode mode against a KV cache (one new token, arbitrary cache length).
+
+Shapes: x (B, S, D);  q (B, S, H, Dh);  kv (B, S, Hk, Dh);  Hk | H.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (KeyGen, ModelConfig, apply_mrope,
+                                 apply_rope, dense_init, shard, softcap)
+
+
+def init_attention(cfg: ModelConfig, kg: KeyGen, cross: bool = False):
+    D, H, Hk, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": dense_init(kg(), (D, H, Dh), cfg.pdtype),
+        "wk": dense_init(kg(), (D, Hk, Dh), cfg.pdtype),
+        "wv": dense_init(kg(), (D, Hk, Dh), cfg.pdtype),
+        "wo": dense_init(kg(), (H, Dh, D), cfg.pdtype),
+    }
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), cfg.pdtype)
+        p["bk"] = jnp.zeros((Hk, Dh), cfg.pdtype)
+        p["bv"] = jnp.zeros((Hk, Dh), cfg.pdtype)
+        s["bq"] = ("heads", "head_dim")
+        s["bk"] = ("kv_heads", "head_dim")
+        s["bv"] = ("kv_heads", "head_dim")
+    return p, s
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hk, Dh)
+    v: jax.Array          # (B, S_max, Hk, Dh)
+
+
+def _project_qkv(p, x, xkv, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return q, k, v
+
+
+def make_rope_tables(positions, cfg: ModelConfig, dim: int):
+    """Precompute (cos, sin) (B, S, dim/2) ONCE per forward — computing them
+    per layer gets stacked across the superblock scan by loop hoisting.
+
+    positions: (B, S) int32, or (3, B, S) for M-RoPE.
+    """
+    from repro.models.common import rope_freqs
+    half = dim // 2
+    inv = rope_freqs(cfg, dim)                               # (half,)
+    if cfg.mrope_sections is not None:
+        sec = cfg.mrope_sections
+        sect_id = jnp.repeat(jnp.arange(3), jnp.asarray(sec),
+                             total_repeat_length=half)       # (half,)
+        pos = jnp.take(positions, sect_id, axis=0)           # (half, B, S)
+        pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)   # (B, S, half)
+    else:
+        pos = positions.astype(jnp.float32)[..., None]       # (B, S, 1)
+    ang = pos * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_tables(x, cos, sin):
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out
+
+
+def _pe(q, k, positions, kv_positions, cfg: ModelConfig, use_rope: bool,
+        rope_tables=None, kv_rope_tables=None):
+    if not use_rope:
+        return q, k
+    if rope_tables is None:
+        rope_tables = make_rope_tables(positions, cfg, q.shape[-1])
+    if kv_rope_tables is None:
+        kv_rope_tables = rope_tables if kv_positions is positions \
+            else make_rope_tables(kv_positions, cfg, k.shape[-1])
+    q = _apply_tables(q, *rope_tables).astype(q.dtype)
+    k = _apply_tables(k, *kv_rope_tables).astype(k.dtype)
+    return q, k
+
+
+def _scores_mask(scores, q_pos, k_pos, causal: bool, window: int | None,
+                 k_valid=None):
+    """scores (B, H, Sq, Sk); q_pos (B, Sq), k_pos (B, Sk) absolute."""
+    neg = jnp.finfo(scores.dtype).min
+    mask = jnp.ones((), bool)
+    dq = q_pos[:, None, :, None]
+    dk = k_pos[:, None, None, :]
+    if causal:
+        mask = dk <= dq
+    if window is not None:
+        mask = jnp.logical_and(mask, dk > dq - window)
+    if k_valid is not None:
+        mask = jnp.logical_and(mask, k_valid[:, None, None, :])
+    return jnp.where(mask, scores, neg)
+
+
+CHUNK_THRESHOLD = 8192   # q-chunk the score matrix beyond this Sq
+Q_CHUNK = 512
+
+
+def _attend_dense(q, k, v, cfg: ModelConfig, q_pos, k_pos, causal, window,
+                  k_valid=None):
+    """GQA via KV-head REPET (k/v broadcast to H heads), NOT q-grouping.
+
+    Grouping q as (B,S,Hk,rep,Dh) reshapes the model-sharded H dim into
+    (Hk, rep); whenever the mesh's model size does not divide Hk, GSPMD
+    must fully replicate the tensor (multi-GB "involuntary full
+    rematerialization" gathers in every layer — §Perf iteration B2).
+    Repeating kv keeps every einsum's head dim = H, which shards cleanly;
+    head h = hk·rep + r pairs with kv head hk, exactly the grouped maths.
+    XLA fuses the broadcast into the matmul, so no materialised copy.
+    """
+    B, Sq, H, Dh = q.shape
+    Hk = k.shape[2]
+    rep = H // Hk
+    scale = cfg.query_scale if cfg.query_scale is not None \
+        else 1.0 / math.sqrt(Dh)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = _scores_mask(scores, q_pos, k_pos, causal, window, k_valid)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+    return out
+
+
+def _attend(q, k, v, cfg: ModelConfig, q_pos, k_pos, causal, window,
+            k_valid=None):
+    """Dispatch: dense scores for short Sq; q-chunked (flash-style memory
+    bound: O(B·H·chunk·Sk) live scores) for long prefills."""
+    B, Sq, H, Dh = q.shape
+    if Sq <= cfg.q_chunk_threshold or Sq % Q_CHUNK != 0:
+        return _attend_dense(q, k, v, cfg, q_pos, k_pos, causal, window,
+                             k_valid)
+
+    nc = Sq // Q_CHUNK
+
+    def one_chunk(i):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * Q_CHUNK,
+                                                    Q_CHUNK, axis=1)
+        return _attend_dense(sl(q), k, v, cfg, sl(q_pos), k_pos, causal,
+                             window, k_valid)
+
+    if cfg.unroll_q_chunks:
+        # static unroll: every chunk appears in HLO — exact cost_analysis
+        # accounting for the dry-run probes (lax.map bodies count once)
+        outs = [one_chunk(jnp.asarray(i)) for i in range(nc)]
+        return jnp.concatenate(outs, axis=1)
+
+    chunks = jax.lax.map(one_chunk, jnp.arange(nc))   # (nc, B, cq, H, Dh)
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, Sq, H, Dh)
+    return out
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, layer_kind: str = "attn",
+              causal: bool = True, use_rope: bool = True,
+              xkv=None, kv_positions=None, k_valid=None, rope_tables=None):
+    """Full (training / prefill / encoder / cross) attention.
+
+    xkv: memory stream for cross-attention (defaults to x).
+    ``positions`` drive the PE (may be (3,B,S) for M-RoPE); MASKING always
+    uses plain slot indices, which for M-RoPE differ from the t-positions.
+    Returns (B, S, D) plus the (k, v) tensors for cache construction.
+    """
+    xkv = x if xkv is None else xkv
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(p, x, xkv, cfg)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    q, k = _pe(q, k, positions, kv_positions, cfg, use_rope,
+               rope_tables=rope_tables)
+
+    B, Sq = x.shape[0], x.shape[1]
+    Sk = xkv.shape[1]
+    mask_q = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    mask_k = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    window = cfg.sliding_window if layer_kind == "swa" else None
+    out = _attend(q, k, v, cfg, mask_q, mask_k, causal, window, k_valid)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", "embed"), KVCache(k, v)
+
+
+def decode_attention(p, x, cache: KVCache, pos: jax.Array,
+                     cfg: ModelConfig, *, layer_kind: str = "attn",
+                     use_rope: bool = True):
+    """One-token decode against a cache.
+
+    x: (B, 1, D); pos: (B,) int32 absolute position of the new token (for
+    M-RoPE: (3, B)).  Cache slots ≥ pos are invalid (k_valid mask).
+
+    RING-BUFFER mode (§Perf iteration B4): for sliding-window layers, a
+    cache with S_max ≤ window is treated as a ring — the new token writes
+    slot pos % S_max, and each slot's ABSOLUTE position is reconstructed
+    for masking.  An SWA layer only ever attends to the last `window`
+    tokens, so ring(window) ≡ full cache exactly, at window/seq_len the
+    memory (8× for mixtral decode_32k).
+
+    Returns (out (B,1,D), updated cache).
+    """
+    B = x.shape[0]
+    S_max = cache.k.shape[1]
+    if cfg.mrope_sections is not None:
+        positions = pos[:, :, None]            # (3, B, 1)
+        scalar_pos = pos[0]                     # text stream drives slots
+    else:
+        positions = pos[:, None]                # (B, 1)
+        scalar_pos = pos
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)
+    q, k_new = _pe(q, k_new, positions, positions, cfg, use_rope)
+
+    ring = (layer_kind == "swa" and cfg.sliding_window is not None
+            and S_max <= cfg.sliding_window)
+    slot = scalar_pos % S_max if ring else scalar_pos
+
+    # write the new kv at its slot (one-hot blend per batch row)
+    def write(buf, new):
+        oh = jax.nn.one_hot(slot, S_max, dtype=buf.dtype)    # (B, S)
+        return buf * (1 - oh[:, :, None, None]) + \
+            new.astype(buf.dtype) * oh[:, :, None, None]
+
+    k = write(cache.k, k_new)
+    v = write(cache.v, v_new)
+
+    idx = jnp.arange(S_max, dtype=jnp.int32)[None, :]        # (1, S_max)
+    if ring:
+        # absolute position held by each ring slot after this write:
+        # abs = pos − ((pos − slot_idx) mod S_max)  ∈ (pos − S_max, pos]
+        k_pos = scalar_pos[:, None] - \
+            jnp.mod(scalar_pos[:, None] - idx, S_max)
+        k_valid = k_pos >= 0                                  # unwritten<0
+        window = None       # ring residency already enforces the window
+    else:
+        k_pos = jnp.broadcast_to(idx, (B, S_max))
+        k_valid = k_pos <= scalar_pos[:, None]
+        window = cfg.sliding_window if layer_kind == "swa" else None
+    out = _attend(q, k.astype(x.dtype), v.astype(x.dtype), cfg,
+                  scalar_pos[:, None], k_pos, causal=False, window=window,
+                  k_valid=k_valid)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, KVCache(k, v)

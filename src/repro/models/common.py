@@ -1,0 +1,303 @@
+"""Model-zoo substrate: config schema, logical-axis sharding, shared layers.
+
+Design notes
+------------
+* Pure-functional: params are plain dict pytrees; every init function
+  returns ``(params, pspecs)`` where ``pspecs`` mirrors params with
+  ``PartitionSpec`` leaves derived from LOGICAL axis names via a rules
+  table — the MaxText pattern, so one model definition serves any mesh.
+* Layers are grouped into repeated "super-blocks" and scanned
+  (``jax.lax.scan``) so the HLO size is independent of depth — essential
+  for compiling 88-layer models on this container, and standard practice
+  at scale.
+* Mixed precision: params live in float32 (or bf16 for dry-runs), activations
+  are computed in ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding rules
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary used across the zoo:
+#   batch, seq, embed, heads, kv_heads, head_dim, ff, vocab,
+#   experts, capacity, conv, state
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": None,
+    "capacity": ("pod", "data"),
+    "conv": None,
+    "state": None,
+    "layers": None,   # stacked scan dim — never sharded
+}
+
+_ACTIVE_RULES: dict[str, Any] = dict(DEFAULT_RULES)
+
+
+def set_rules(rules: dict[str, Any]) -> None:
+    """Install the active logical→mesh rules (launcher calls this)."""
+    _ACTIVE_RULES.clear()
+    _ACTIVE_RULES.update(DEFAULT_RULES)
+    _ACTIVE_RULES.update(rules)
+
+
+def get_rules() -> dict[str, Any]:
+    return dict(_ACTIVE_RULES)
+
+
+def logical_to_pspec(axes: tuple[str | None, ...],
+                     rules: dict[str, Any] | None = None) -> P:
+    """('layers','embed','ff') -> PartitionSpec(None, None, 'model')."""
+    rules = rules if rules is not None else _ACTIVE_RULES
+    out = []
+    for a in axes:
+        out.append(None if a is None else rules.get(a))
+    # trim trailing Nones for cleanliness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, logical_to_pspec(axes))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (unit tests on 1 device)
+
+
+# ---------------------------------------------------------------------------
+# Config schema — one dataclass covers the whole assigned zoo.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # layer pattern: one entry per layer in the super-block, e.g.
+    # ("attn",) dense; ("swa", "attn") gemma2; ("mamba",)*7+("attn",) jamba.
+    block_pattern: tuple[str, ...] = ("attn",)
+
+    # attention variations
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int | None = None          # for "swa" layers
+    attn_logit_softcap: float | None = None
+    final_logit_softcap: float | None = None
+    query_scale: float | None = None           # None -> 1/sqrt(head_dim)
+    mrope_sections: tuple[int, int, int] | None = None  # qwen2-vl M-RoPE
+
+    # norm / embedding
+    norm_type: str = "rmsnorm"                 # rmsnorm | layernorm | nonparam_ln
+    norm_eps: float = 1e-5
+    scale_embeddings: bool = False             # gemma2: x *= sqrt(d_model)
+    embed_norm: bool = False                   # rwkv ln0 (post-embedding LN)
+    tie_embeddings: bool = False
+    post_block_norm: bool = False              # gemma2 sandwich norms
+
+    # MLP / MoE
+    mlp_type: str = "swiglu"                   # swiglu | relu2 (rwkv)
+    moe_num_experts: int | None = None
+    moe_top_k: int = 2
+    moe_layer_period: int = 1                  # jamba: MoE every 2nd layer
+    moe_capacity_factor: float = 1.25
+
+    # mamba (jamba)
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_lora_rank: int = 64
+    rwkv_decay_lora_rank: int = 64
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 1500                    # whisper frame count (stub)
+
+    # input mode: "tokens" (LM) or "embeds" (vlm/audio frontend stubs)
+    input_mode: str = "tokens"
+
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+
+    # --- lowering/cost knobs (semantics-neutral; see launch/dryrun.py) ---
+    scan_unroll: int = 1          # lax.scan unroll for the superblock scan
+    time_chunk: int = 256         # mamba/rwkv recurrence chunk (remat unit)
+    q_chunk_threshold: int = 8192  # q-chunk attention beyond this Sq
+    unroll_q_chunks: bool = False  # python-unroll the q-chunk loop (exact
+                                   # HLO cost counting in dry-run probes)
+
+    @property
+    def num_superblocks(self) -> int:
+        assert self.num_layers % len(self.block_pattern) == 0, (
+            self.name, self.num_layers, self.block_pattern)
+        return self.num_layers // len(self.block_pattern)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline numbers)."""
+        n = count_params_tree(None, self)  # placeholder: computed elsewhere
+        return n
+
+
+def count_params_tree(params, cfg) -> int:
+    if params is None:
+        return 0
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+class KeyGen:
+    """Splittable key stream so init code reads linearly."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, kg: KeyGen):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), cfg.pdtype)}, \
+               {"scale": ("embed",)}
+    if cfg.norm_type == "layernorm":      # rwkv / whisper
+        return ({"scale": jnp.ones((cfg.d_model,), cfg.pdtype),
+                 "bias": jnp.zeros((cfg.d_model,), cfg.pdtype)},
+                {"scale": ("embed",), "bias": ("embed",)})
+    # olmo: non-parametric layernorm — no params at all
+    return {}, {}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(x32 * x32, -1, keepdims=True) + cfg.norm_eps)
+        out = x32 / rms * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        out = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        if cfg.norm_type == "layernorm":
+            out = out * p["scale"].astype(jnp.float32) \
+                + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, dim: int) -> jax.Array:
+    half = dim // 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32)
+                                     / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32 -> same shape, rotated.
+
+    Rotate-half convention (LLaMA/Mistral/Qwen style).
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(cfg, d)                                   # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv       # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array,
+                cfg: ModelConfig) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.  positions3: (3, B, S) for (t, h, w).
+
+    The head_dim/2 frequency slots are split into three contiguous sections
+    (cfg.mrope_sections, summing to head_dim/2); each section takes its
+    angle from the corresponding positional stream.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    sec = cfg.mrope_sections
+    assert sec is not None and sum(sec) == half, (sec, half)
+    inv = rope_freqs(cfg, d)                                  # (half,)
+    # build a per-slot position by selecting the stream for its section
+    sect_id = jnp.repeat(jnp.arange(3), jnp.asarray(sec),
+                         total_repeat_length=half)            # (half,)
+    # (B, S, half): gather positions per slot
+    pos = jnp.take(positions3, sect_id, axis=0)               # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)        # (B, S, half)
+    ang = pos * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    half = dim // 2
+    pos = np.arange(seq)[:, None]
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = pos * freq[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=1), jnp.float32)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,179 @@
+"""Mamba (selective SSM) block — Jamba's sequence mixer (arXiv:2403.19887).
+
+Selective state space: per token, input-dependent (Δ, B, C) select what the
+state keeps;  h_t = exp(Δ_t·A)·h_{t-1} + Δ_t·B_t·x_t,  y_t = C_t·h_t + D·x_t.
+
+Two execution paths sharing parameters:
+* ``mamba_scan``: full-sequence training/prefill via ``jax.lax.scan`` over
+  time (HLO size O(1) in seq — the priority on this container; a chunked
+  parallel scan is a recorded §Perf candidate for real-TPU throughput).
+* ``mamba_step``: O(1) decode update carrying (conv window, ssm state).
+
+Jamba uses inner RMSNorm on the SSM branch (their stabilization trick) —
+included.  d_inner = expand·d_model; heads are channel-wise (Mamba-1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, ModelConfig, dense_init, shard
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, d_inner) trailing window
+    ssm: jax.Array     # (B, d_inner, d_state)
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(cfg.d_model // 16, 1)
+    return d_inner, dt_rank, cfg.mamba_d_state, cfg.mamba_d_conv
+
+
+def init_mamba(cfg: ModelConfig, kg: KeyGen):
+    D = cfg.d_model
+    d_inner, dt_rank, N, Kc = _dims(cfg)
+    p = {
+        "in_proj": dense_init(kg(), (D, 2 * d_inner), cfg.pdtype),
+        "conv_w": dense_init(kg(), (Kc, d_inner), cfg.pdtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), cfg.pdtype),
+        "x_proj": dense_init(kg(), (d_inner, dt_rank + 2 * N), cfg.pdtype),
+        "dt_proj_w": dense_init(kg(), (dt_rank, d_inner), cfg.pdtype),
+        "dt_proj_b": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.full((d_inner,), 0.01))), cfg.pdtype),
+        # A init: -[1..N] per channel (S4D-real), stored as log
+        "A_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+            (d_inner, N)).astype(cfg.pdtype),
+        "D": jnp.ones((d_inner,), cfg.pdtype),
+        "norm_scale": jnp.ones((d_inner,), cfg.pdtype),   # jamba inner norm
+        "out_proj": dense_init(kg(), (d_inner, D), cfg.pdtype),
+    }
+    s = {
+        "in_proj": ("embed", "ff"),
+        "conv_w": ("conv", "ff"),
+        "conv_b": ("ff",),
+        "x_proj": ("ff", None),
+        "dt_proj_w": (None, "ff"),
+        "dt_proj_b": ("ff",),
+        "A_log": ("ff", "state"),
+        "D": ("ff",),
+        "norm_scale": ("ff",),
+        "out_proj": ("ff", "embed"),
+    }
+    return p, s
+
+
+def _ssm_inputs(p, xz, cfg: ModelConfig):
+    """Shared front half: split, activation; returns (x_conv_in, z)."""
+    d_inner, *_ = _dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z
+
+
+def _selective_params(p, x, cfg: ModelConfig):
+    """x: (..., d_inner) -> (delta, B, C). delta (..., d_inner); B/C (..., N)."""
+    d_inner, dt_rank, N, _ = _dims(cfg)
+    proj = jnp.einsum("...i,ir->...r", x, p["x_proj"].astype(x.dtype))
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("...r,ri->...i", dt, p["dt_proj_w"].astype(x.dtype))
+        + p["dt_proj_b"].astype(x.dtype))
+    return delta, Bm, Cm
+
+
+def _inner_norm(p, y, cfg: ModelConfig):
+    y32 = y.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(y32 * y32, -1, keepdims=True) + cfg.norm_eps)
+    return (y32 / rms * p["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_scan(p, xin, cfg: ModelConfig, time_chunk: int | None = None):
+    """Full-sequence pass.  xin: (B, S, D) -> (B, S, D), final MambaState.
+
+    Memory discipline: the recurrence runs as an outer scan over TIME
+    CHUNKS with a checkpointed inner scan, and dA/dBx (B, i, N) tensors are
+    formed per-step INSIDE the scan.  AD therefore saves only the
+    chunk-boundary states (S/chunk × B·i·N) instead of every step's —
+    without this, one 4k-seq jamba layer would save ~2 GB of hidden states.
+    """
+    B, S, D = xin.shape
+    d_inner, dt_rank, N, Kc = _dims(cfg)
+    xz = jnp.einsum("bsd,di->bsi", xin, p["in_proj"].astype(xin.dtype))
+    x, z = _ssm_inputs(p, xz, cfg)
+
+    # causal depthwise conv over time (window Kc)
+    xpad = jnp.pad(x, ((0, 0), (Kc - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i:i + S, :] * p["conv_w"][i].astype(x.dtype)
+               for i in range(Kc)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(conv)
+    xc = shard(xc, "batch", "seq", "ff")
+
+    delta, Bm, Cm = _selective_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (d_inner, N)
+
+    ck = min(time_chunk or cfg.time_chunk, S)
+    assert S % ck == 0, (S, ck)
+    nch = S // ck
+
+    def tm(t):  # (B, S, F) -> (nch, ck, B, F) time-major chunks
+        return jnp.moveaxis(t, 1, 0).reshape(nch, ck, B, t.shape[-1])
+
+    xs = (tm(delta.astype(jnp.float32)), tm(Bm.astype(jnp.float32)),
+          tm(Cm.astype(jnp.float32)), tm(xc.astype(jnp.float32)))
+
+    def step(h, xt):
+        d_t, b_t, c_t, x_t = xt                                # (B, ·)
+        dA = jnp.exp(d_t[..., None] * A)                       # (B, i, N)
+        dBx = (d_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y_t = jnp.einsum("bin,bn->bi", h, c_t)
+        return h, y_t
+
+    @jax.checkpoint
+    def chunk_fn(h, xs_chunk):
+        return jax.lax.scan(step, h, xs_chunk)
+
+    h0 = jnp.zeros((B, d_inner, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_fn, h0, xs)                # (nch,ck,B,i)
+    y = jnp.moveaxis(ys.reshape(S, B, d_inner), 0, 1).astype(xin.dtype)
+    y = y + xc * p["D"].astype(xin.dtype)
+    y = _inner_norm(p, y, cfg) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(xin.dtype))
+
+    state = MambaState(conv=x[:, S - (Kc - 1):, :], ssm=h_last)
+    return shard(out, "batch", "seq", "embed"), state
+
+
+def mamba_step(p, xin, state: MambaState, cfg: ModelConfig):
+    """Decode: xin (B, 1, D) -> (B, 1, D), new state.  O(1) in context."""
+    B = xin.shape[0]
+    d_inner, dt_rank, N, Kc = _dims(cfg)
+    xz = jnp.einsum("bsd,di->bsi", xin, p["in_proj"].astype(xin.dtype))
+    x, z = _ssm_inputs(p, xz, cfg)                 # (B, 1, i)
+
+    window = jnp.concatenate([state.conv.astype(x.dtype), x], axis=1)
+    conv = jnp.einsum("bki,ki->bi", window, p["conv_w"].astype(x.dtype)) \
+        + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(conv)[:, None, :]             # (B, 1, i)
+
+    delta, Bm, Cm = _selective_params(p, xc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(delta.astype(jnp.float32)[..., None] * A)[:, 0]   # (B,i,N)
+    dBx = ((delta * xc).astype(jnp.float32)[..., None]
+           * Bm.astype(jnp.float32)[..., None, :])[:, 0]
+    h = dA * state.ssm + dBx
+    y = jnp.einsum("bin,bn->bi", h, Cm[:, 0].astype(jnp.float32))
+    y = y[:, None, :].astype(xin.dtype) + xc * p["D"].astype(xin.dtype)
+    y = _inner_norm(p, y, cfg) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(xin.dtype))
+    return out, MambaState(conv=window[:, 1:, :], ssm=h)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    d_inner, _, N, Kc = _dims(cfg)
+    return MambaState(conv=jnp.zeros((batch, Kc - 1, d_inner), dtype),
+                      ssm=jnp.zeros((batch, d_inner, N), jnp.float32))

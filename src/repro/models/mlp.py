@@ -1,0 +1,126 @@
+"""MLP blocks: SwiGLU (dense), relu² (rwkv channel-mix handled in rwkv6.py),
+and GShard-style top-k MoE (mixtral, jamba).
+
+MoE sharding story (see DESIGN.md §4): router + dispatch are computed on
+data-sharded tokens; dispatched activations (E, C, D) carry the capacity
+axis on ("pod","data") and expert FFN hidden on "model" (EP×TP).  The
+dispatch/combine einsums thus induce the all-to-all under SPMD — the
+collective that §Roofline attributes to MoE cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, ModelConfig, dense_init, shard
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, kg: KeyGen):
+    D, F = cfg.d_model, cfg.d_ff
+    p = {
+        "w_gate": dense_init(kg(), (D, F), cfg.pdtype),
+        "w_up": dense_init(kg(), (D, F), cfg.pdtype),
+        "w_down": dense_init(kg(), (F, D), cfg.pdtype),
+    }
+    s = {
+        "w_gate": ("embed", "ff"),
+        "w_up": ("embed", "ff"),
+        "w_down": ("ff", "embed"),
+    }
+    return p, s
+
+
+def mlp(p, x, cfg: ModelConfig):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE (mixtral / jamba): top-k routing + capacity-bounded dispatch einsums
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, kg: KeyGen):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    p = {
+        "router": dense_init(kg(), (D, E), cfg.pdtype),
+        "w_gate": dense_init(kg(), (E, D, F), cfg.pdtype),
+        "w_up": dense_init(kg(), (E, D, F), cfg.pdtype),
+        "w_down": dense_init(kg(), (E, F, D), cfg.pdtype),
+    }
+    s = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", "ff"),
+        "w_up": ("experts", "embed", "ff"),
+        "w_down": ("experts", "ff", "embed"),
+    }
+    return p, s
+
+
+def moe(p, x, cfg: ModelConfig, capacity_factor: float | None = None,
+        group_size: int = 4096):
+    """x: (B, S, D) -> (B, S, D), plus aux losses dict.
+
+    GROUPED GShard dispatch: tokens are split into groups of ≤ group_size
+    contiguous tokens, each with its own capacity buffer, so the one-hot
+    dispatch/combine tensors are (G, Tg, E, Cg) — O(T·E·Cg) with Cg fixed,
+    instead of the O(T²·E) a single global capacity would cost.  Groups
+    shard over the batch axes; expert FFN hidden shards over "model"
+    (dense-dispatch + TP; a2a-based EP is a recorded §Perf candidate).
+
+    top-k gate probs are softmaxed over the selected logits (mixtral
+    convention); tokens over a group's capacity are dropped.
+    """
+    B, S, D = x.shape
+    E, K = cfg.moe_num_experts, cfg.moe_top_k
+    cf = capacity_factor or cfg.moe_capacity_factor
+    T = B * S
+    Tg = min(group_size, T)
+    assert T % Tg == 0, (T, Tg)
+    G = T // Tg
+    C = max(int(cf * Tg * K / E), 1)
+    xt = x.reshape(G, Tg, D)
+    xt = shard(xt, "batch", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    top_val, top_idx = jax.lax.top_k(logits, K)              # (G, Tg, K)
+    gates = jax.nn.softmax(top_val, axis=-1)
+
+    # position of each (token, k) inside its expert's per-group buffer
+    expert_onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.int32)  # (G,Tg,K,E)
+    flat = expert_onehot.reshape(G, Tg * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        G, Tg, K, E)
+    pos = jnp.sum(pos_in_expert * expert_onehot, axis=-1)    # (G, Tg, K)
+    keep = pos < C                                           # capacity drop
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=x.dtype)
+    disp = jnp.einsum("gtke,gtkc->gtec",
+                      expert_onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec",
+                      expert_onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), gates).astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp, xt)              # (G, E, C, D)
+    xe = shard(xe, "batch", "experts", None, "embed")
+    g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "experts", None, "ff")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", comb, ye).reshape(B, S, D)
+
+    # load-balance aux loss (Switch/GShard): E * Σ_e f_e · p_e
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=(0, 1))          # (E,)
+    ce = jnp.mean(expert_onehot[:, :, 0, :].astype(jnp.float32),
+                  axis=(0, 1))                                      # top-1
+    aux = {"moe_load_balance": E * jnp.sum(me * ce),
+           "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return shard(out, "batch", "seq", "embed"), aux

@@ -1,0 +1,210 @@
+"""Arch registry: --arch name -> (config, model fns, input specs).
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
+model input of a (train | prefill | decode) step — the dry-run contract:
+weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, get_config, list_archs
+from repro.models import transformer as tf
+from repro.models import whisper as wh
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs for which long_500k is skipped (pure full attention — DESIGN.md)
+LONG_CONTEXT_SKIP = {
+    "mistral_large_123b": "pure full attention (no SWA in 2407 config)",
+    "olmo_1b": "pure full attention",
+    "qwen2_1_5b": "pure full attention",
+    "qwen2_vl_7b": "pure full attention",
+    "whisper_tiny": "full-attention decoder; 500k beyond positional design",
+}
+
+
+def is_whisper(cfg: ModelConfig) -> bool:
+    return cfg.encoder_layers > 0
+
+
+class Arch:
+    """Bundles config + step functions for one architecture."""
+
+    def __init__(self, name: str, reduced: bool = False):
+        self.name = ALIASES.get(name, name)
+        self.cfg = get_config(name, reduced=reduced)
+
+    # ---- model fns --------------------------------------------------------
+    @property
+    def mod(self):
+        return wh if is_whisper(self.cfg) else tf
+
+    def init_params(self, key):
+        return self.mod.init_params(self.cfg, key)
+
+    def forward(self, params, batch, remat=True):
+        return self.mod.forward(params, batch, self.cfg, remat=remat)
+
+    def loss(self, params, batch, remat=True, remat_policy="full"):
+        if is_whisper(self.cfg):
+            return self.mod.next_token_loss(params, batch, self.cfg,
+                                            remat=remat)
+        return self.mod.next_token_loss(params, batch, self.cfg,
+                                        remat=remat,
+                                        remat_policy=remat_policy)
+
+    def prefill(self, params, batch, s_max=None):
+        return self.mod.prefill(params, batch, self.cfg, s_max=s_max)
+
+    def decode_step(self, params, batch, cache, pos):
+        return self.mod.decode_step(params, batch, cache, pos, self.cfg)
+
+    # ---- shape cells ------------------------------------------------------
+    def supports(self, shape_name: str) -> bool:
+        if shape_name == "long_500k" and self.name in LONG_CONTEXT_SKIP:
+            return False
+        return True
+
+    def skip_reason(self, shape_name: str) -> str | None:
+        if shape_name == "long_500k":
+            return LONG_CONTEXT_SKIP.get(self.name)
+        return None
+
+    # ---- dry-run input specs ---------------------------------------------
+    def input_specs(self, shape: ShapeSpec, batch_override: int | None = None
+                    ) -> dict[str, Any]:
+        cfg = self.cfg
+        B = batch_override or shape.global_batch
+        S = shape.seq_len
+        i32 = jnp.int32
+        f = cfg.adtype
+
+        def tok(shape_):
+            return jax.ShapeDtypeStruct(shape_, i32)
+
+        if is_whisper(cfg):
+            enc = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), f)
+            if shape.kind == "train":
+                return {"embeds": enc, "tokens": tok((B, S)),
+                        "labels": tok((B, S))}
+            if shape.kind == "prefill":
+                return {"embeds": enc, "tokens": tok((B, S))}
+            return {"tokens": tok((B, 1))}
+
+        if cfg.input_mode == "embeds":   # qwen2-vl backbone
+            emb = jax.ShapeDtypeStruct((B, S, cfg.d_model), f)
+            pos = jax.ShapeDtypeStruct((3, B, S), i32) \
+                if cfg.mrope_sections else None
+            out = {"embeds": emb}
+            if pos is not None:
+                out["positions"] = pos
+            if shape.kind == "train":
+                out["labels"] = tok((B, S))
+            if shape.kind == "decode":
+                out = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model), f)}
+                if cfg.mrope_sections:
+                    out["positions"] = jax.ShapeDtypeStruct((3, B, 1), i32)
+            return out
+
+        if shape.kind == "decode":
+            return {"tokens": tok((B, 1))}
+        out = {"tokens": tok((B, S))}
+        if shape.kind == "train":
+            out["labels"] = tok((B, S))
+        return out
+
+    def decode_pos_spec(self, shape: ShapeSpec,
+                        batch_override: int | None = None):
+        B = batch_override or shape.global_batch
+        if self.cfg.mrope_sections is not None:
+            return jax.ShapeDtypeStruct((3, B), jnp.int32)
+        return jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    def cache_specs(self, shape: ShapeSpec, batch_override: int | None = None):
+        """Abstract cache for decode dry-runs (ShapeDtypeStruct pytree)."""
+        B = batch_override or shape.global_batch
+        fn = (lambda: wh_cache_abstract(self.cfg, B, shape.seq_len)) \
+            if is_whisper(self.cfg) else \
+            (lambda: jax.eval_shape(
+                lambda: tf.init_cache(self.cfg, B, shape.seq_len)))
+        return fn()
+
+    # ---- analytics ---------------------------------------------------------
+    def param_count(self) -> int:
+        shapes, _ = (wh_abstract(self.cfg) if is_whisper(self.cfg)
+                     else tf.abstract_params(self.cfg))
+        import numpy as np
+        return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+    def active_param_count(self) -> int:
+        """MoE-aware active params per token (for 6·N_active·D)."""
+        total = self.param_count()
+        cfg = self.cfg
+        if not cfg.moe_num_experts:
+            return total
+        shapes = (wh_abstract(cfg) if is_whisper(cfg)
+                  else tf.abstract_params(cfg))[0]
+        import numpy as np
+        expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            if "mlp" in keys and len(leaf.shape) == 3:   # (E, ., .) experts
+                expert += int(np.prod(leaf.shape))
+        inactive = expert * (1 - cfg.moe_top_k / cfg.moe_num_experts)
+        return int(total - inactive)
+
+
+def wh_abstract(cfg: ModelConfig):
+    box = {}
+
+    def capture(key):
+        p, s = wh.init_params(cfg, key)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return shapes, box["s"]
+
+
+def wh_cache_abstract(cfg: ModelConfig, B: int, s_max: int):
+    L, H, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    f = cfg.adtype
+    from repro.models.attention import KVCache
+    return wh.WhisperCache(
+        self_kv=KVCache(
+            k=jax.ShapeDtypeStruct((L, B, s_max, H, Dh), f),
+            v=jax.ShapeDtypeStruct((L, B, s_max, H, Dh), f)),
+        cross_k=jax.ShapeDtypeStruct((L, B, cfg.encoder_seq, H, Dh), f),
+        cross_v=jax.ShapeDtypeStruct((L, B, cfg.encoder_seq, H, Dh), f))
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch × shape) cell of the assignment (40 total)."""
+    out = []
+    for arch_name in list_archs():
+        a = Arch(arch_name)
+        for sname, sspec in SHAPES.items():
+            if a.supports(sname) or include_skipped:
+                out.append((arch_name, sname))
+    return out

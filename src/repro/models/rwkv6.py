@@ -1,0 +1,222 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus squared-relu channel mixing.
+
+Per head (head_dim = 64): state S ∈ R^{Dh×Dh},
+    S_t = diag(w_t)·S_{t−1} + k_tᵀ v_t
+    y_t = r_t·(S_{t−1} + diag(u)·k_tᵀ v_t)
+with w_t = exp(−exp(decay_t)) data-dependent per channel (the Finch change
+vs RWKV-5), and the 5-way data-dependent token-shift (ddlerp) producing the
+r/k/v/w/g streams through a small LoRA.
+
+Like the Mamba block: ``rwkv_scan`` (lax.scan over time, O(1) HLO) for
+train/prefill and ``rwkv_step`` (O(1) state update) for decode — this is
+what makes rwkv6-7b a long_500k-capable arch in the assignment.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, ModelConfig, dense_init, shard
+
+TM_RANK = 32  # token-shift LoRA rank (RWKV6 TIME_MIX_EXTRA_DIM)
+
+
+class RwkvState(NamedTuple):
+    x_prev_att: jax.Array   # (B, D) last token fed to time mixing
+    x_prev_ffn: jax.Array   # (B, D) last token fed to channel mixing
+    wkv: jax.Array          # (B, H, Dh, Dh) per-head state, f32
+
+
+def _dims(cfg: ModelConfig):
+    Dh = cfg.rwkv_head_dim
+    H = cfg.d_model // Dh
+    return H, Dh
+
+
+def init_rwkv_time(cfg: ModelConfig, kg: KeyGen):
+    D = cfg.d_model
+    H, Dh = _dims(cfg)
+    R = cfg.rwkv_decay_lora_rank
+    p = {
+        "mu_x": jnp.full((D,), 0.5, cfg.pdtype),
+        "mu_rkvwg": jnp.full((5, D), 0.5, cfg.pdtype),
+        "tm_w1": dense_init(kg(), (D, 5 * TM_RANK), cfg.pdtype),
+        "tm_w2": dense_init(kg(), (5, TM_RANK, D), cfg.pdtype),
+        "decay_base": jnp.zeros((D,), cfg.pdtype),
+        "dd_w1": dense_init(kg(), (D, R), cfg.pdtype),
+        "dd_w2": dense_init(kg(), (R, D), cfg.pdtype),
+        "bonus_u": dense_init(kg(), (H, Dh), cfg.pdtype),
+        "wr": dense_init(kg(), (D, D), cfg.pdtype),
+        "wk": dense_init(kg(), (D, D), cfg.pdtype),
+        "wv": dense_init(kg(), (D, D), cfg.pdtype),
+        "wg": dense_init(kg(), (D, D), cfg.pdtype),
+        # zero-init output proj (official RWKV): residual branch silent at
+        # init — tames the otherwise violent curvature of wkv+groupnorm.
+        "wo": jnp.zeros((D, D), cfg.pdtype),
+        "ln_scale": jnp.ones((D,), cfg.pdtype),
+        "ln_bias": jnp.zeros((D,), cfg.pdtype),
+    }
+    s = {
+        "mu_x": ("embed",), "mu_rkvwg": (None, "embed"),
+        "tm_w1": ("embed", None), "tm_w2": (None, None, "embed"),
+        "decay_base": ("embed",),
+        "dd_w1": ("embed", None), "dd_w2": (None, "embed"),
+        "bonus_u": ("heads", "head_dim"),
+        "wr": ("embed", "ff"), "wk": ("embed", "ff"),
+        "wv": ("embed", "ff"), "wg": ("embed", "ff"),
+        "wo": ("ff", "embed"),
+        "ln_scale": ("embed",), "ln_bias": ("embed",),
+    }
+    return p, s
+
+
+def init_rwkv_channel(cfg: ModelConfig, kg: KeyGen):
+    D, F = cfg.d_model, cfg.d_ff
+    p = {
+        "mu_k": jnp.full((D,), 0.5, cfg.pdtype),
+        "mu_r": jnp.full((D,), 0.5, cfg.pdtype),
+        "wk": dense_init(kg(), (D, F), cfg.pdtype),
+        "wv": jnp.zeros((F, D), cfg.pdtype),   # zero-init (official RWKV)
+        "wr": dense_init(kg(), (D, D), cfg.pdtype),
+    }
+    s = {"mu_k": ("embed",), "mu_r": ("embed",),
+         "wk": ("embed", "ff"), "wv": ("ff", "embed"),
+         "wr": ("embed", "ff")}
+    return p, s
+
+
+def _ddlerp(p, x, sx):
+    """Data-dependent 5-way token shift.  x, sx: (B, S, D).
+
+    Returns (xr, xk, xv, xw, xg), each (B, S, D).
+    """
+    xxx = x + sx * p["mu_x"].astype(x.dtype)
+    lora = jnp.einsum("bsd,dr->bsr", xxx, p["tm_w1"].astype(x.dtype))
+    lora = jnp.tanh(lora)
+    B, S, _ = lora.shape
+    lora = lora.reshape(B, S, 5, TM_RANK)
+    mix = jnp.einsum("bsfr,frd->fbsd", lora, p["tm_w2"].astype(x.dtype))
+    mu = p["mu_rkvwg"].astype(x.dtype)                       # (5, D)
+    outs = x[None] + sx[None] * (mu[:, None, None, :] + mix)  # (5, B, S, D)
+    return outs[0], outs[1], outs[2], outs[3], outs[4]
+
+
+def _streams(p, x, x_prev, cfg: ModelConfig):
+    """Compute r/k/v/g/decay streams.  x (B,S,D); x_prev (B,D) seed."""
+    H, Dh = _dims(cfg)
+    B, S, D = x.shape
+    xp = jnp.concatenate([x_prev[:, None, :].astype(x.dtype),
+                          x[:, :-1, :]], axis=1)
+    sx = xp - x
+    xr, xk, xv, xw, xg = _ddlerp(p, x, sx)
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    dd = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw), p["dd_w1"].astype(x.dtype))
+    decay = p["decay_base"].astype(x.dtype) + \
+        jnp.einsum("bsr,rd->bsd", dd, p["dd_w2"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32)))          # (B,S,D) in (0,1)
+    hd = (B, S, H, Dh)
+    return (r.reshape(hd), k.reshape(hd), v.reshape(hd), g,
+            w.reshape(hd))
+
+
+def _out_norm(p, y, g, x_dtype, cfg: ModelConfig):
+    """Per-head groupnorm, gate, out projection.  y: (B, S, H, Dh)."""
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, -1, keepdims=True)
+    var = jnp.var(y32, -1, keepdims=True)
+    yn = (y32 - mu) * jax.lax.rsqrt(var + 64e-5)
+    B, S, H, Dh = y.shape
+    yn = yn.reshape(B, S, H * Dh)
+    yn = yn * p["ln_scale"].astype(jnp.float32) \
+        + p["ln_bias"].astype(jnp.float32)
+    out = yn.astype(x_dtype) * g
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x_dtype))
+
+
+def rwkv_time_scan(p, x, x_prev, wkv0, cfg: ModelConfig,
+                   time_chunk: int | None = None):
+    """Time mixing over a full sequence.
+
+    x: (B, S, D); x_prev: (B, D); wkv0: (B, H, Dh, Dh) f32.
+    Returns (out (B,S,D), new x_prev, new wkv state).
+
+    Chunked scan (checkpointed outer over chunks): AD saves only the
+    chunk-boundary wkv states — per-step saving would cost S·B·H·Dh² f32.
+    """
+    B, S, D = x.shape
+    r, k, v, g, w = _streams(p, x, x_prev, cfg)
+    u = p["bonus_u"].astype(jnp.float32)                      # (H, Dh)
+
+    ck = min(time_chunk or cfg.time_chunk, S)
+    assert S % ck == 0, (S, ck)
+    nch = S // ck
+    H, Dh = r.shape[2], r.shape[3]
+
+    def tm(t):  # (B, S, H, Dh) -> (nch, ck, B, H, Dh)
+        return jnp.moveaxis(t.astype(jnp.float32), 1, 0).reshape(
+            nch, ck, B, H, Dh)
+
+    xs = (tm(r), tm(k), tm(v), tm(w))
+
+    def step(S_, xt):
+        r_t, k_t, v_t, w_t = xt
+        kv = k_t[:, :, :, None] * v_t[:, :, None, :]          # (B,H,Dh,Dh)
+        y = jnp.einsum("bhk,bhkd->bhd", r_t,
+                       S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., None] * S_ + kv
+        return S_, y
+
+    @jax.checkpoint
+    def chunk_fn(S_, xs_chunk):
+        return jax.lax.scan(step, S_, xs_chunk)
+
+    S_last, ys = jax.lax.scan(chunk_fn, wkv0, xs)             # (nch,ck,B,H,Dh)
+    y = jnp.moveaxis(ys.reshape(S, B, H, Dh), 0, 1)
+    out = _out_norm(p, y, g, x.dtype, cfg)
+    return shard(out, "batch", "seq", "embed"), x[:, -1, :], S_last
+
+
+def rwkv_channel(p, x, x_prev, cfg: ModelConfig):
+    """Channel mixing (squared-relu FFN with token shift).
+
+    Returns (out, new x_prev)."""
+    xp = jnp.concatenate([x_prev[:, None, :].astype(x.dtype),
+                          x[:, :-1, :]], axis=1)
+    sx = xp - x
+    xk = x + sx * p["mu_k"].astype(x.dtype)
+    xr = x + sx * p["mu_r"].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = shard(kk, "batch", "seq", "ff")
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return rr * vv, x[:, -1, :]
+
+
+def rwkv_time_step(p, x, state: RwkvState, cfg: ModelConfig):
+    """Decode: x (B, 1, D) -> (out (B,1,D), updated (x_prev, wkv))."""
+    B = x.shape[0]
+    r, k, v, g, w = _streams(p, x, state.x_prev_att, cfg)
+    u = p["bonus_u"].astype(jnp.float32)
+    kv = k.astype(jnp.float32)[:, 0, :, :, None] \
+        * v.astype(jnp.float32)[:, 0, :, None, :]
+    y = jnp.einsum("bhk,bhkd->bhd", r.astype(jnp.float32)[:, 0],
+                   state.wkv + u[None, :, :, None] * kv)
+    new_wkv = w[:, 0][..., None] * state.wkv + kv
+    out = _out_norm(p, y[:, None], g, x.dtype, cfg)
+    return out, x[:, 0, :], new_wkv
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RwkvState:
+    H, Dh = _dims(cfg)
+    return RwkvState(
+        x_prev_att=jnp.zeros((batch, cfg.d_model), dtype),
+        x_prev_ffn=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, H, Dh, Dh), jnp.float32))

@@ -1,0 +1,440 @@
+"""Decoder-LM assembly for the whole assigned zoo (dense / MoE / hybrid /
+SSM / VLM-backbone) — one config-driven implementation.
+
+Depth is organised as ``num_superblocks`` repetitions of
+``cfg.block_pattern`` (e.g. ("swa","attn") for gemma2, ("mamba",)*7+
+("attn",) for jamba-ish hybrids); repetitions are stacked on a leading axis
+and executed with ``jax.lax.scan`` so HLO size is depth-independent.
+
+Three entry points, all pure:
+    forward(params, batch)            -> logits            (training)
+    prefill(params, batch)            -> logits, cache     (serving)
+    decode_step(params, tok, cache)   -> logits, cache     (serving)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import mlp as mlp_mod
+from repro.models import rwkv6 as rw
+from repro.models.common import (KeyGen, ModelConfig, apply_norm, dense_init,
+                                 init_norm, logical_to_pspec, shard, softcap)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_has_moe(cfg: ModelConfig, pos_in_pattern: int) -> bool:
+    if cfg.moe_num_experts is None:
+        return False
+    return pos_in_pattern % cfg.moe_layer_period == cfg.moe_layer_period - 1
+
+
+def _init_layer(cfg: ModelConfig, kind: str, use_moe: bool, key):
+    kg = KeyGen(key)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["norm1"], s["norm1"] = init_norm(cfg, kg)
+
+    if kind in ("attn", "swa"):
+        p["mixer"], s["mixer"] = attn.init_attention(cfg, kg)
+    elif kind == "mamba":
+        p["mixer"], s["mixer"] = mb.init_mamba(cfg, kg)
+    elif kind == "rwkv":
+        p["mixer"], s["mixer"] = rw.init_rwkv_time(cfg, kg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+
+    p["norm2"], s["norm2"] = init_norm(cfg, kg)
+    if kind == "rwkv":
+        p["mlp"], s["mlp"] = rw.init_rwkv_channel(cfg, kg)
+    elif use_moe:
+        p["mlp"], s["mlp"] = mlp_mod.init_moe(cfg, kg)
+    else:
+        p["mlp"], s["mlp"] = mlp_mod.init_mlp(cfg, kg)
+
+    if cfg.post_block_norm:   # gemma2 sandwich norms
+        p["post_norm1"], s["post_norm1"] = init_norm(cfg, kg)
+        p["post_norm2"], s["post_norm2"] = init_norm(cfg, kg)
+    return p, s
+
+
+def init_params(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Returns (params, pspecs); block params are stacked over superblocks."""
+    kg = KeyGen(key)
+    params: dict[str, Any] = {}
+    pspecs: dict[str, Any] = {}
+
+    if cfg.input_mode == "tokens":
+        # GPT-2-style 0.02 std: keeps tied-head logits O(1) at init.
+        params["embed"] = dense_init(kg(), (cfg.vocab_size, cfg.d_model),
+                                     cfg.pdtype, scale=0.02)
+        pspecs["embed"] = ("vocab", "embed")
+
+    R = cfg.num_superblocks
+    blocks_p, blocks_s = [], []
+    for pos, kind in enumerate(cfg.block_pattern):
+        use_moe = _layer_has_moe(cfg, pos) and kind != "rwkv"
+        keys = jax.random.split(kg(), R)
+        init_fn = functools.partial(_init_layer, cfg, kind, use_moe)
+        stacked, spec = jax.vmap(lambda k: init_fn(k)[0])(keys), \
+            _init_layer(cfg, kind, use_moe, keys[0])[1]
+        blocks_p.append(stacked)
+        blocks_s.append(jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), spec,
+            is_leaf=lambda x: isinstance(x, tuple)))
+    params["blocks"] = blocks_p
+    pspecs["blocks"] = blocks_s
+
+    params["final_norm"], pspecs["final_norm"] = init_norm(cfg, kg)
+    if cfg.embed_norm:
+        params["embed_norm"], pspecs["embed_norm"] = init_norm(cfg, kg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kg(), (cfg.d_model, cfg.vocab_size),
+                                       cfg.pdtype)
+        pspecs["lm_head"] = ("embed", "vocab")
+    return params, pspecs
+
+
+@functools.lru_cache(maxsize=None)
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct pytree, logical-axes pytree) — no allocation.
+
+    The logical-axes tree is captured through an eval_shape side channel
+    (it is pure Python metadata, unaffected by tracing).
+    """
+    box = {}
+
+    def capture(key):
+        p, s = init_params(cfg, key)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(capture, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def param_pspecs(cfg: ModelConfig, rules=None):
+    """PartitionSpec pytree (same structure as params)."""
+    _, logical = abstract_params(cfg)
+    return jax.tree.map(lambda ax: logical_to_pspec(ax, rules), logical,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, (str, type(None)))
+                                for e in x))
+
+
+# ---------------------------------------------------------------------------
+# Layer application (shared by full-seq and decode paths)
+# ---------------------------------------------------------------------------
+
+def _apply_layer_full(p, x, kind, use_moe, cfg: ModelConfig, positions,
+                      rope_tables=None):
+    """Full-sequence layer.  Returns (x, aux, cache_entry)."""
+    aux = {}
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "swa"):
+        out, kv = attn.attention(p["mixer"], h, cfg, positions=positions,
+                                 layer_kind=kind, rope_tables=rope_tables)
+        cache = kv
+    elif kind == "mamba":
+        out, st = mb.mamba_scan(p["mixer"], h, cfg)
+        cache = st
+    elif kind == "rwkv":
+        B = x.shape[0]
+        st0 = rw.init_rwkv_state(cfg, B, x.dtype)
+        out, xp, wkv = rw.rwkv_time_scan(p["mixer"], h, st0.x_prev_att,
+                                         st0.wkv, cfg)
+        cache = (xp, wkv)
+    if cfg.post_block_norm:
+        out = apply_norm(p["post_norm1"], out, cfg)
+    x = x + out
+
+    h = apply_norm(p["norm2"], x, cfg)
+    if kind == "rwkv":
+        out, xp_f = rw.rwkv_channel(p["mlp"], h, jnp.zeros_like(h[:, 0]),
+                                    cfg)
+        cache = cache + (xp_f,)
+    elif use_moe:
+        out, aux = mlp_mod.moe(p["mlp"], h, cfg)
+    else:
+        out = mlp_mod.mlp(p["mlp"], h, cfg)
+    if cfg.post_block_norm:
+        out = apply_norm(p["post_norm2"], out, cfg)
+    x = x + out
+    return x, aux, cache
+
+
+def _apply_layer_decode(p, x, kind, use_moe, cfg: ModelConfig, pos, cache):
+    """One-token layer.  Returns (x, new_cache_entry)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "swa"):
+        out, new_cache = attn.decode_attention(p["mixer"], h, cache, pos,
+                                               cfg, layer_kind=kind)
+    elif kind == "mamba":
+        out, new_cache = mb.mamba_step(p["mixer"], h, cache, cfg)
+    elif kind == "rwkv":
+        xp_att, wkv, xp_ffn = cache
+        out, new_xp, new_wkv = rw.rwkv_time_step(
+            p["mixer"], h, rw.RwkvState(xp_att, xp_ffn, wkv), cfg)
+        new_cache = (new_xp, new_wkv, xp_ffn)
+    if cfg.post_block_norm:
+        out = apply_norm(p["post_norm1"], out, cfg)
+    x = x + out
+
+    h = apply_norm(p["norm2"], x, cfg)
+    if kind == "rwkv":
+        xp_att2, wkv2, xp_ffn = new_cache
+        out, new_xpf = rw.rwkv_channel(p["mlp"], h, xp_ffn.astype(h.dtype),
+                                       cfg)
+        new_cache = (xp_att2, wkv2, new_xpf.astype(xp_ffn.dtype))
+    elif use_moe:
+        # decode: capacity E/K ⇒ C = T, mathematically zero token drops
+        out, _ = mlp_mod.moe(p["mlp"], h, cfg,
+                             capacity_factor=float(cfg.moe_num_experts)
+                             / cfg.moe_top_k)
+    else:
+        out = mlp_mod.mlp(p["mlp"], h, cfg)
+    if cfg.post_block_norm:
+        out = apply_norm(p["post_norm2"], out, cfg)
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x.astype(cfg.adtype)
+    else:
+        x = batch["embeds"].astype(cfg.adtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+    if cfg.embed_norm:
+        x = apply_norm(params["embed_norm"], x, cfg)   # rwkv ln0
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _positions_for(batch, cfg: ModelConfig, S: int, B: int):
+    if cfg.mrope_sections is not None:
+        return batch["positions"]            # (3, B, S) provided by pipeline
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training) — scan over superblocks
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg: ModelConfig, remat: bool = True,
+            remat_policy: str = "full"):
+    """batch: {"tokens": (B,S)} or {"embeds": (B,S,D)} (+"positions" for
+    M-RoPE).  Returns (logits (B,S,V), aux dict).
+
+    remat_policy: "full" (save only layer boundaries — min memory) or
+    "dots" (jax.checkpoint_policies.checkpoint_dots — save matmul outputs,
+    skip their recompute in backward; §Perf iteration C1)."""
+    x = embed_inputs(params, batch, cfg)
+    B, S = x.shape[0], x.shape[1]
+    positions = _positions_for(batch, cfg, S, B)
+    rope = attn.make_rope_tables(positions, cfg, cfg.head_dim) \
+        if cfg.block_pattern != ("rwkv",) else None
+
+    def superblock(carry, layer_p):
+        # barrier: stops XLA hoisting the per-iteration FSDP all-gather /
+        # bf16 cast of the whole stacked weights out of the loop (which
+        # would materialise every layer's gathered weights at once).
+        layer_p = jax.lax.optimization_barrier(layer_p)
+        x, aux_acc = carry
+        for pos, kind in enumerate(cfg.block_pattern):
+            use_moe = _layer_has_moe(cfg, pos) and kind != "rwkv"
+            x, aux, _ = _apply_layer_full(layer_p[pos], x, kind, use_moe,
+                                          cfg, positions, rope_tables=rope)
+            if aux:
+                aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()}
+        return (x, aux_acc), None
+
+    # prevent_cse=False is the documented choice for remat-inside-scan:
+    # the default CSE barriers make XLA materialise duplicate (f32+bf16)
+    # copies of the saved carry stack.
+    if remat:
+        policy = None if remat_policy == "full" \
+            else jax.checkpoint_policies.checkpoint_dots
+        body = jax.checkpoint(superblock, prevent_cse=False, policy=policy)
+    else:
+        body = superblock
+    aux0 = {"moe_load_balance": jnp.zeros((), jnp.float32),
+            "moe_drop_frac": jnp.zeros((), jnp.float32)} \
+        if cfg.moe_num_experts else {}
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), params["blocks"],
+                               unroll=cfg.scan_unroll)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_head(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    """Cache pytree: list per pattern position, stacked over superblocks."""
+    R = cfg.num_superblocks
+    Hk, Dh = cfg.num_kv_heads, cfg.head_dim
+    cdt = cfg.adtype
+    out = []
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "swa"):
+            c = attn.KVCache(
+                k=jnp.zeros((R, batch, s_max, Hk, Dh), cdt),
+                v=jnp.zeros((R, batch, s_max, Hk, Dh), cdt))
+        elif kind == "mamba":
+            st = mb.init_mamba_state(cfg, batch, cdt)
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a[None],
+                                                        (R,) + a.shape), st)
+        elif kind == "rwkv":
+            st = rw.init_rwkv_state(cfg, batch, cdt)
+            c = (jnp.zeros((R,) + st.x_prev_att.shape, cdt),
+                 jnp.zeros((R,) + st.wkv.shape, jnp.float32),
+                 jnp.zeros((R,) + st.x_prev_ffn.shape, cdt))
+        out.append(c)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, long_context: bool = False, rules=None):
+    """PartitionSpecs for the cache: batch on (pod,data) normally; for
+    batch=1 long-context, the attention cache shards SEQUENCE on data
+    (context parallelism)."""
+    def kv_axes():
+        if long_context:
+            return ("layers", None, "cache_seq", "kv_heads", "head_dim")
+        return ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+
+    out = []
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "swa"):
+            out.append(attn.KVCache(
+                k=logical_to_pspec(kv_axes(), rules),
+                v=logical_to_pspec(kv_axes(), rules)))
+        elif kind == "mamba":
+            out.append(mb.MambaState(
+                conv=logical_to_pspec(("layers", "batch", None, "ff"), rules),
+                ssm=logical_to_pspec(("layers", "batch", "ff", None), rules)))
+        elif kind == "rwkv":
+            out.append((
+                logical_to_pspec(("layers", "batch", "embed"), rules),
+                logical_to_pspec(("layers", "batch", "heads", None, None),
+                                 rules),
+                logical_to_pspec(("layers", "batch", "embed"), rules)))
+    return out
+
+
+def prefill(params, batch, cfg: ModelConfig, s_max: int | None = None):
+    """Full-context pass building the cache.  Returns (logits, cache)."""
+    x = embed_inputs(params, batch, cfg)
+    B, S = x.shape[0], x.shape[1]
+    s_max = s_max or S
+    positions = _positions_for(batch, cfg, S, B)
+    rope = attn.make_rope_tables(positions, cfg, cfg.head_dim) \
+        if cfg.block_pattern != ("rwkv",) else None
+
+    def superblock(x, layer_p):
+        layer_p = jax.lax.optimization_barrier(layer_p)
+        caches = []
+        for pos, kind in enumerate(cfg.block_pattern):
+            use_moe = _layer_has_moe(cfg, pos) and kind != "rwkv"
+            x, _, cache = _apply_layer_full(layer_p[pos], x, kind, use_moe,
+                                            cfg, positions,
+                                            rope_tables=rope)
+            caches.append(cache)
+        return x, caches
+
+    x, caches = jax.lax.scan(superblock, x, params["blocks"],
+                             unroll=cfg.scan_unroll)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_head(params, x[:, -1:, :], cfg)
+
+    # pad KV caches out to s_max slots
+    if s_max > S:
+        def pad_kv(c):
+            if isinstance(c, attn.KVCache):
+                pad = ((0, 0), (0, 0), (0, s_max - S), (0, 0), (0, 0))
+                return attn.KVCache(jnp.pad(c.k, pad), jnp.pad(c.v, pad))
+            return c
+        caches = [pad_kv(c) if isinstance(c, attn.KVCache) else c
+                  for c in caches]
+    return logits, caches
+
+
+def decode_step(params, batch, cache, pos, cfg: ModelConfig):
+    """One token for the whole batch.
+
+    batch: {"tokens": (B, 1)} or {"embeds": (B, 1, D)};
+    pos: (B,) int32 (or (3, B) for M-RoPE).  Returns (logits, new cache).
+    """
+    x = embed_inputs(params, batch, cfg)
+
+    def superblock(x, scanned):
+        layer_p, layer_c = scanned
+        layer_p = jax.lax.optimization_barrier(layer_p)
+        new_caches = []
+        for p_idx, kind in enumerate(cfg.block_pattern):
+            use_moe = _layer_has_moe(cfg, p_idx) and kind != "rwkv"
+            x, nc = _apply_layer_decode(layer_p[p_idx], x, kind, use_moe,
+                                        cfg, pos, layer_c[p_idx])
+            new_caches.append(nc)
+        return x, new_caches
+
+    x, new_cache = jax.lax.scan(superblock, x,
+                                (params["blocks"], cache),
+                                unroll=cfg.scan_unroll)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_head(params, x, cfg), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def next_token_loss(params, batch, cfg: ModelConfig, remat: bool = True,
+                    remat_policy: str = "full"):
+    """Causal LM loss with shift; returns (loss, aux)."""
+    logits, aux = forward(params, batch, cfg, remat=remat,
+                          remat_policy=remat_policy)
+    if cfg.input_mode == "tokens":
+        targets = batch["labels"]
+    else:
+        targets = batch["labels"]
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    targets = targets[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None],
+                              axis=-1)[..., 0]
+    mask = batch.get("mask")
+    nll = logz - tgt
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        loss = jnp.mean(nll)
+    if cfg.moe_num_experts:
+        loss = loss + 0.01 * aux.get("moe_load_balance", 0.0) \
+            / cfg.num_layers
+    aux["nll"] = loss
+    return loss, aux

@@ -1,0 +1,121 @@
+"""Batched serving engine: prefill + decode with KV caches, greedy/sampled
+generation, and the ACE request guardrail (OOD requests rejected in O(K·L)
+before touching the model — the paper's query phase as an admission filter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig
+from repro.models.registry import Arch, is_whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardrailConfig:
+    d_model: int
+    num_bits: int = 13
+    num_tables: int = 32
+    alpha: float = 4.0
+    warmup_items: float = 256.0
+    bias_const: float = 0.25
+
+
+class Guardrail:
+    """ACE admission filter over request embeddings (stateful host wrapper)."""
+
+    def __init__(self, gcfg: GuardrailConfig):
+        self.gcfg = gcfg
+        self.ace_cfg = AceConfig(dim=gcfg.d_model + 1,
+                                 num_bits=gcfg.num_bits,
+                                 num_tables=gcfg.num_tables, seed=41,
+                                 welford_min_n=gcfg.warmup_items / 2)
+        self.state = sk.init(self.ace_cfg)
+        self.w = sk.make_params(self.ace_cfg)
+
+    def _features(self, embeds: jax.Array) -> jax.Array:
+        """Unit-normalised mean embedding + bias coordinate.
+
+        Normalising first makes the (angular) SRP see DIRECTION drift at
+        full resolution; the bias coordinate then re-encodes relative
+        magnitude at a controlled weight (bias_const)."""
+        f = jnp.mean(embeds.astype(jnp.float32), axis=1)
+        f = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-9)
+        bias = jnp.full((f.shape[0], 1), self.gcfg.bias_const, jnp.float32)
+        return jnp.concatenate([f, bias], axis=-1)
+
+    def admit(self, embeds: jax.Array) -> np.ndarray:
+        """(B, S, D) request embeddings -> (B,) bool admitted; admits update
+        the sketch (the serving distribution drifts with traffic — the
+        paper's dynamic-update property)."""
+        feat = self._features(embeds)
+        scores = sk.score(self.state, self.w, feat, self.ace_cfg)
+        rates = scores / max(float(self.state.n), 1.0)
+        mu_rate = sk.mean_rate(self.state)
+        sigma = sk.sigma_welford(self.state)
+        armed = float(self.state.n) >= self.gcfg.warmup_items
+        if armed:
+            admit = np.asarray(rates >= mu_rate - self.gcfg.alpha * sigma)
+        else:
+            admit = np.ones(feat.shape[0], bool)
+        kept = jnp.asarray(np.where(admit)[0], jnp.int32)
+        if kept.size:
+            self.state = sk.insert_buckets(
+                self.state, sk.hash_buckets(feat[kept], self.w,
+                                            self.ace_cfg.srp),
+                self.ace_cfg)
+        return admit
+
+
+class ServeEngine:
+    """Greedy generation over a fixed batch (the paper-kind e2e driver)."""
+
+    def __init__(self, arch: Arch, s_max: int = 256,
+                 guardrail: Guardrail | None = None):
+        self.arch = arch
+        self.s_max = s_max
+        self.guardrail = guardrail
+        self._prefill = jax.jit(
+            lambda p, b: arch.prefill(p, b, s_max=s_max))
+        self._decode = jax.jit(arch.decode_step)
+
+    def generate(self, params, batch, num_new_tokens: int,
+                 prompt_len: int) -> np.ndarray:
+        """Greedy decode.  Returns (B, num_new_tokens) int32."""
+        cfg = self.arch.cfg
+        if self.guardrail is not None and "embeds" not in batch:
+            embeds = jnp.take(params["embed"], batch["tokens"], axis=0)
+            admit = self.guardrail.admit(embeds)
+        logits, cache = self._prefill(params, batch)
+        B = logits.shape[0]
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out = [np.asarray(tok)]
+        for i in range(1, num_new_tokens):
+            pos = jnp.full((B,), prompt_len + i - 1, jnp.int32)
+            if cfg.mrope_sections is not None:
+                pos = jnp.broadcast_to(pos[None], (3, B))
+            step_batch = {"tokens": tok[:, None]}
+            logits, cache = self._decode(params, step_batch, cache, pos)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)
+
+
+def decode_throughput(arch: Arch, params, cache, batch, pos,
+                      iters: int = 8) -> float:
+    """tokens/sec of the jitted decode step (host-timed)."""
+    step = jax.jit(arch.decode_step)
+    logits, cache = step(params, batch, cache, pos)   # compile
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        logits, cache = step(params, batch, cache, pos)
+    jax.block_until_ready(logits)
+    dt = (time.perf_counter() - t0) / iters
+    return batch[next(iter(batch))].shape[0] / dt

@@ -1,0 +1,72 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick for the 1000+-node regime).
+
+int8 stochastic-rounding quantisation with per-leaf scale + error feedback
+(residual carried in the optimizer state).  The cross-pod gradient
+all-reduce then moves 1/4 the bytes; the within-pod reduce stays full
+precision.  Error feedback keeps the scheme convergent (Karimireddy et al.,
+2019) — the quantisation error is added back into the next step's gradient.
+
+The compressed collective is expressed as quantise → psum → dequantise so
+XLA emits an int8 all-reduce on the "pod" axis (see train_loop usage).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EfState(NamedTuple):
+    residual: dict   # pytree matching grads, fp32
+
+
+def init_error_feedback(grads_shape_tree) -> EfState:
+    return EfState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape_tree))
+
+
+def quantise_int8(x: jax.Array, key) -> tuple[jax.Array, jax.Array]:
+    """Stochastic-rounding int8 with a per-tensor scale."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    scaled = x32 / scale
+    noise = jax.random.uniform(key, x.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantise_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_with_ef(grads, ef: EfState, key):
+    """Returns (quantised pytree, scales pytree, new EfState).
+
+    The residual (what int8 couldn't represent) feeds back next step.
+    """
+    leaves, tdef = jax.tree.flatten(grads)
+    res = tdef.flatten_up_to(ef.residual)
+    keys = jax.random.split(key, len(leaves))
+    qs, scales, new_res = [], [], []
+    for g, r, k in zip(leaves, res, keys):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantise_int8(corrected, k)
+        deq = dequantise_int8(q, s)
+        qs.append(q)
+        scales.append(s)
+        new_res.append(corrected - deq)
+    return (tdef.unflatten(qs), tdef.unflatten(scales),
+            EfState(residual=tdef.unflatten(new_res)))
+
+
+def decompress_grads(qs, scales):
+    return jax.tree.map(dequantise_int8, qs, scales)
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(int8+scales) / bytes(fp32)."""
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    n_leaves = len(jax.tree.leaves(grads))
+    return (total * 1 + n_leaves * 4) / (total * 4)

@@ -1,0 +1,138 @@
+"""Fault tolerance: the ACE gradient monitor + rollback/skip policy +
+straggler/preemption handling notes-as-code.
+
+This is where the paper's technique becomes a FIRST-CLASS framework
+feature: the per-step gradient-statistics vector (per-block gradient norms,
+bias-augmented — see below) is streamed into an ACE sketch.  A healthy run
+concentrates in a cone of that feature space; a corrupted step (flipped
+bits from a bad host, a poisoned batch, an optimizer blow-up) lands outside
+it and its ACE score collapses below μ − α·σ — O(K·L) work and 4 MB of
+state, per the paper's headline claims, vs storing gradient history.
+
+Policy on anomaly: SKIP the step (don't apply the update) and count it;
+``rollback_needed`` trips after ``max_consecutive`` anomalies, signalling
+the driver to restore the last checkpoint (repro.train.checkpoint).
+
+Straggler mitigation (documented design, exercised in tests via the
+timeout hook): SPMD training is synchronous, so a straggler is detected as
+a step-time SLO breach on the host; the driver responds by (1) excluding
+the slow host at the next restart boundary (elastic re-mesh via the
+checkpoint path — topology is never baked into the checkpoint), or
+(2) proactive restart from the latest checkpoint.  Both reuse exactly the
+restore path tested in tests/test_train.py.
+
+NOTE on SRP: gradient-norm features are nonnegative with magnitude
+structure, and SRP is scale-invariant, so features are bias-augmented
+(x ↦ [x, c]) making magnitude anomalies angular — see
+repro/data/synthetic.bias_augment and DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig, AceState
+
+
+class MonitorState(NamedTuple):
+    ace: AceState
+    anomalies: jax.Array          # () f32 — total anomalous steps
+    consecutive: jax.Array        # () f32 — current anomalous run length
+    warmup_left: jax.Array        # () f32 — steps before decisions arm
+
+
+@dataclasses.dataclass(frozen=True)
+class GradMonitor:
+    """ACE-based training-step anomaly detector (pure; jit-compatible)."""
+
+    feature_dim: int
+    num_bits: int = 12
+    num_tables: int = 32
+    alpha: float = 4.0            # μ/n − α·σ_rate decision threshold
+    warmup: int = 20              # steps before decisions arm
+    bias_const: float = 1.0
+    max_consecutive: int = 3
+
+    @property
+    def ace_cfg(self) -> AceConfig:
+        return AceConfig(dim=self.feature_dim + 1, num_bits=self.num_bits,
+                         num_tables=self.num_tables, seed=17,
+                         welford_min_n=float(self.warmup))
+
+    def init(self) -> tuple[MonitorState, jax.Array]:
+        cfg = self.ace_cfg
+        return MonitorState(
+            ace=sk.init(cfg),
+            anomalies=jnp.zeros((), jnp.float32),
+            consecutive=jnp.zeros((), jnp.float32),
+            warmup_left=jnp.asarray(float(self.warmup), jnp.float32),
+        ), sk.make_params(cfg)
+
+    def features(self, grads, loss: jax.Array) -> jax.Array:
+        """Per-leaf gradient log-norms + loss, padded to feature_dim, then
+        bias-augmented.  Cheap: one reduction per leaf."""
+        norms = [jnp.log1p(jnp.linalg.norm(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads)]
+        vec = jnp.stack(norms[: self.feature_dim - 1] if len(norms)
+                        >= self.feature_dim else norms)
+        pad = self.feature_dim - 1 - vec.shape[0]
+        if pad > 0:
+            vec = jnp.concatenate([vec, jnp.zeros((pad,), jnp.float32)])
+        vec = jnp.concatenate(
+            [vec, jnp.log1p(jnp.abs(loss.astype(jnp.float32)))[None]])
+        return jnp.concatenate(
+            [vec, jnp.asarray([self.bias_const], jnp.float32)])
+
+    def step(self, state: MonitorState, w: jax.Array, grads,
+             loss: jax.Array):
+        """Score this step's features, update the sketch, decide.
+
+        Returns (new_state, is_anomaly (bool), score).
+        """
+        cfg = self.ace_cfg
+        feat = self.features(grads, loss)[None, :]          # (1, d+1)
+        score = sk.score(state.ace, w, feat, cfg)[0]
+        # rate space: stationary stream -> meaningful σ (see sketch.py)
+        rate = score / jnp.maximum(state.ace.n, 1.0)
+        mu_rate = sk.mean_rate(state.ace)
+        sigma = sk.sigma_welford(state.ace)
+        armed = state.warmup_left <= 0.0
+        is_anom = jnp.logical_and(armed,
+                                  rate < mu_rate - self.alpha * sigma)
+
+        # anomalous steps are NOT inserted — they must not poison the sketch
+        new_ace = jax.lax.cond(
+            is_anom, lambda: state.ace,
+            lambda: sk.insert(state.ace, w, feat, cfg))
+        new_state = MonitorState(
+            ace=new_ace,
+            anomalies=state.anomalies + is_anom.astype(jnp.float32),
+            consecutive=jnp.where(is_anom, state.consecutive + 1.0, 0.0),
+            warmup_left=jnp.maximum(state.warmup_left - 1.0, 0.0),
+        )
+        return new_state, is_anom, score
+
+    def rollback_needed(self, state: MonitorState) -> jax.Array:
+        return state.consecutive >= self.max_consecutive
+
+
+@dataclasses.dataclass
+class StepTimer:
+    """Host-side straggler detector: flags steps breaching the SLO."""
+    slo_seconds: float
+    _last: float = dataclasses.field(default_factory=time.perf_counter)
+    breaches: int = 0
+
+    def tick(self) -> bool:
+        now = time.perf_counter()
+        dt = now - self._last
+        self._last = now
+        if dt > self.slo_seconds:
+            self.breaches += 1
+            return True
+        return False

@@ -1,0 +1,214 @@
+"""Optimizers from scratch (no optax in this environment — and the
+assignment requires the substrate be built, not assumed).
+
+All optimizers share the contract:
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state, step, lr)
+
+States are pytrees (checkpointable); updates are jit-safe.  Master weights
+stay in the params' own dtype (fp32 recommended); moments are fp32.
+
+Implemented: SGD(+momentum), AdamW (decoupled decay), Adafactor (factored
+second moments — the memory-saver for 100B+ runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        norm
+
+
+# ---------------------------------------------------------------------------
+# SGD
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Sgd:
+    momentum: float = 0.9
+    nesterov: bool = False
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return {}
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def state_pspecs(self, param_pspecs):
+        """PartitionSpecs for the optimizer state, given the params'."""
+        if self.momentum == 0.0:
+            return {}
+        return {"m": param_pspecs}
+
+    def update(self, params, grads, state, step, lr):
+        del step
+        if self.momentum == 0.0:
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, state
+        new_m = jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            state["m"], grads)
+        upd = new_m if not self.nesterov else jax.tree.map(
+            lambda m, g: self.momentum * m + g.astype(jnp.float32),
+            new_m, grads)
+        new_p = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype),
+            params, upd)
+        return new_p, {"m": new_m}
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def state_pspecs(self, param_pspecs):
+        """Moments shard exactly like their parameters (ZeRO-free TP/DP)."""
+        return {"m": param_pspecs, "v": param_pspecs}
+
+    def update(self, params, grads, state, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m / c1
+            vhat = v / c2
+            p32 = p.astype(jnp.float32)
+            step_ = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p32
+            return (p32 - lr * step_).astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moment, no first moment.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    decay_pow: float = 0.8        # beta2_t = 1 - t^-0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params):
+        def per_leaf(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(per_leaf, params,
+                                      is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def state_pspecs(self, param_pspecs):
+        """Factored rows/cols inherit the matching prefix of the param spec.
+
+        Needs the param SHAPES to know which leaves are factored, so the
+        caller passes pspecs aligned with the params tree; here we derive
+        vr/vc specs structurally from each param's pspec length.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        def per_leaf(ps):
+            entries = tuple(ps)
+            # vr drops the last dim's entry; vc drops the second-to-last.
+            vr = P(*entries[:-1]) if len(entries) >= 1 else P()
+            vc = P(*(entries[:-2] + entries[-1:])) if len(entries) >= 2 \
+                else P()
+            return {"vr": vr, "vc": vc, "v": P(*entries)}
+
+        # NOTE: includes all three keys; the dryrun reconciles against the
+        # abstract state structure (which has either {vr,vc} or {v}).
+        return {"slots": jax.tree.map(
+            per_leaf, param_pspecs,
+            is_leaf=lambda x: isinstance(x, P))}
+
+    def update(self, params, grads, state, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-self.decay_pow)
+
+        def upd(p, g, slot):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if self._factored(p.shape):
+                vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, -1)
+                vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, -2)
+                denom = jnp.sqrt(
+                    vr[..., :, None] * vc[..., None, :]
+                    / (jnp.mean(vr, -1, keepdims=True)[..., None] + 1e-30))
+                u = g / (denom + 1e-30)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * slot["v"] + (1 - beta2) * g2
+                u = g / (jnp.sqrt(v) + 1e-30)
+                new_slot = {"v": v}
+            # update clipping (RMS <= threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            p32 = p.astype(jnp.float32)
+            if self.weight_decay:
+                u = u + self.weight_decay * p32
+            return (p32 - lr * u).astype(p.dtype), new_slot
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["slots"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        return tdef.unflatten([o[0] for o in out]), \
+            {"slots": tdef.unflatten([o[1] for o in out])}
+
+
+def make_optimizer(name: str, **kw):
+    return {"sgd": Sgd, "adamw": AdamW, "adafactor": Adafactor}[name](**kw)
+
+
+def optimizer_memory_bytes(name: str, param_count: int,
+                           param_bytes: int = 4) -> int:
+    """Analytic optimizer-state footprint (DESIGN.md capacity planning)."""
+    per = {"sgd": 4, "adamw": 8, "adafactor": 0.1}[name]
+    return int(param_count * (param_bytes + per))

@@ -1,0 +1,44 @@
+"""LR schedules (pure functions of step — jit-safe scalars)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CosineSchedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    final_frac: float = 0.1
+
+    def __call__(self, step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = self.peak_lr * s / max(self.warmup_steps, 1)
+        prog = jnp.clip((s - self.warmup_steps)
+                        / max(self.total_steps - self.warmup_steps, 1),
+                        0.0, 1.0)
+        cos = self.final_frac + (1 - self.final_frac) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < self.warmup_steps, warm, self.peak_lr * cos)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantSchedule:
+    lr: float = 1e-3
+
+    def __call__(self, step):
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RsqrtSchedule:
+    peak_lr: float = 1e-2
+    warmup_steps: int = 1000
+
+    def __call__(self, step):
+        s = jnp.asarray(step, jnp.float32) + 1.0
+        w = float(self.warmup_steps)
+        return self.peak_lr * jnp.minimum(s / w, jnp.sqrt(w / s))

@@ -1,0 +1,244 @@
+"""The training step/loop: grad-accum microbatching, remat, mixed precision,
+ACE data filter + ACE gradient monitor compiled into the step, optional
+int8 error-feedback gradient compression, checkpoint/restart.
+
+Everything dynamic lives in one TrainState pytree so the step is a pure
+(state, batch) -> (state, metrics) function — jit/pjit-able, and the dry-run
+lowers exactly what production would run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.data.pipeline import AceDataFilter, DataStream, StreamConfig
+from repro.models.registry import Arch, is_whisper
+from repro.train import checkpoint as ckpt_lib
+from repro.train.compression import (EfState, compress_grads_with_ef,
+                                     decompress_grads, init_error_feedback)
+from repro.train.fault import GradMonitor, MonitorState, StepTimer
+from repro.train.optim import clip_by_global_norm, global_norm, \
+    make_optimizer
+from repro.train.schedule import ConstantSchedule, CosineSchedule
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    grad_clip: float = 1.0
+    microbatches: int = 1            # grad accumulation
+    remat: bool = True
+    remat_policy: str = "full"   # "dots": save matmul outs (C1)
+    use_data_filter: bool = True     # ACE filter on sequence embeddings
+    use_grad_monitor: bool = True    # ACE monitor on gradient stats
+    grad_compression: bool = False   # int8 + error feedback
+    monitor_feature_dim: int = 32
+    ckpt_dir: str | None = None
+    ckpt_interval: int = 200
+    seed: int = 0
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    monitor: MonitorState | None
+    monitor_w: jax.Array | None
+    filter_state: Any | None
+    filter_w: jax.Array | None
+    ef: EfState | None
+    rng: jax.Array
+
+
+def init_train_state(arch: Arch, tcfg: TrainConfig, key) -> TrainState:
+    params, _ = arch.init_params(key)
+    opt = make_optimizer(tcfg.optimizer)
+    opt_state = opt.init(params)
+    mon = mon_w = fs = fw = ef = None
+    if tcfg.use_grad_monitor:
+        gm = GradMonitor(feature_dim=tcfg.monitor_feature_dim)
+        mon, mon_w = gm.init()
+    if tcfg.use_data_filter:
+        filt = AceDataFilter(d_model=arch.cfg.d_model)
+        fs, fw = filt.init()
+    if tcfg.grad_compression:
+        ef = init_error_feedback(params)
+    return TrainState(params=params, opt_state=opt_state,
+                      step=jnp.zeros((), jnp.int32),
+                      monitor=mon, monitor_w=mon_w,
+                      filter_state=fs, filter_w=fw, ef=ef,
+                      rng=jax.random.PRNGKey(tcfg.seed))
+
+
+def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None):
+    """Builds the pure train step.  (state, batch) -> (state, metrics).
+
+    grad_pspecs: optional PartitionSpec pytree (params structure).  When
+    given, every microbatch's gradients are constrained to the params'
+    (FSDP) sharding INSIDE the accumulation loop, so XLA emits per-layer
+    reduce-scatters instead of full-size all-reduces — ZeRO-2 gradient
+    sharding (§Perf iteration B1)."""
+    cfg = arch.cfg
+    opt = make_optimizer(tcfg.optimizer)
+    sched = CosineSchedule(peak_lr=tcfg.peak_lr,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+    gm = GradMonitor(feature_dim=tcfg.monitor_feature_dim) \
+        if tcfg.use_grad_monitor else None
+    filt = AceDataFilter(d_model=cfg.d_model) \
+        if tcfg.use_data_filter else None
+
+    def embeddings_of(params, batch):
+        if "embeds" in batch:
+            return batch["embeds"]
+        # the ACE filter only needs the sequence-mean embedding; subsample
+        # ≤256 tokens/seq and gather in compute dtype — a full-batch fp32
+        # (B, S, D) gather would dominate step memory for 12k-dim models.
+        toks = batch["tokens"]
+        stride = max(toks.shape[1] // 256, 1)
+        return jnp.take(params["embed"].astype(cfg.adtype),
+                        toks[:, ::stride], axis=0)
+
+    def loss_fn(params, batch):
+        return arch.loss(params, batch, remat=tcfg.remat,
+                         remat_policy=tcfg.remat_policy)
+
+    def train_step(state: TrainState, batch):
+        metrics = {}
+        params = state.params
+
+        # ---- ACE data filter: score sequence embeddings, mask anomalies
+        filter_state = state.filter_state
+        if filt is not None:
+            mask = batch.get("mask",
+                             jnp.ones(batch["labels"].shape, jnp.float32))
+            embeds = embeddings_of(params, batch)
+            filter_state, new_mask, kept = filt(
+                state.filter_state, state.filter_w, embeds, mask)
+            batch = dict(batch, mask=new_mask)
+            metrics["filter_keep_frac"] = kept
+
+        # ---- grads (with optional microbatch accumulation)
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def split(x, batch_axis=0):
+                if batch_axis == 0:
+                    return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+                # M-RoPE positions: (3, B, S) — batch on axis 1
+                lead = x.shape[:batch_axis]
+                rest = x.shape[batch_axis + 1:]
+                x = x.reshape(lead + (mb, x.shape[batch_axis] // mb) + rest)
+                return jnp.moveaxis(x, batch_axis, 0)
+
+            mbatch = {k: split(v, 1 if k == "positions" else 0)
+                      for k, v in batch.items()
+                      if hasattr(v, "shape") and v.ndim >= 1}
+
+            def acc_fn(carry, mb_batch):
+                (loss, aux), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb_batch)
+                if grad_pspecs is not None:
+                    g = jax.tree.map(
+                        jax.lax.with_sharding_constraint, g, grad_pspecs)
+                carry = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / mb,
+                    carry, (loss, g))
+                return carry, aux
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), auxs = jax.lax.scan(acc_fn, zero, mbatch)
+            aux = jax.tree.map(lambda a: a[-1], auxs)
+        else:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+
+        # ---- optional int8 error-feedback compression (models the
+        # cross-pod collective; see repro/train/compression.py)
+        ef = state.ef
+        rng = state.rng
+        if tcfg.grad_compression:
+            rng, sub = jax.random.split(rng)
+            q, scales, ef = compress_grads_with_ef(grads, ef, sub)
+            grads = decompress_grads(q, scales)
+
+        # ---- ACE gradient monitor: skip anomalous updates
+        monitor = state.monitor
+        lr = sched(state.step)
+        metrics["lr"] = lr
+        new_params, new_opt = opt.update(params, grads, state.opt_state,
+                                         state.step, lr)
+        if gm is not None:
+            monitor, is_anom, score = gm.step(state.monitor, state.monitor_w,
+                                              grads, loss)
+            metrics["grad_anomaly"] = is_anom.astype(jnp.float32)
+            metrics["grad_score"] = score
+            new_params, new_opt = jax.tree.map(
+                lambda new, old: jnp.where(is_anom, old, new),
+                (new_params, new_opt), (state.params, state.opt_state))
+
+        new_state = TrainState(
+            params=new_params, opt_state=new_opt,
+            step=state.step + 1,
+            monitor=monitor, monitor_w=state.monitor_w,
+            filter_state=filter_state, filter_w=state.filter_w,
+            ef=ef, rng=rng)
+        return new_state, metrics
+
+    return train_step
+
+
+def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
+          num_steps: int, log_every: int = 10,
+          state: TrainState | None = None):
+    """Host driver: jit, checkpoint/restart, straggler timer, logging.
+
+    Returns (final state, list of metric dicts)."""
+    step_fn = jax.jit(make_train_step(arch, tcfg))
+    if state is None:
+        state = init_train_state(arch, tcfg, jax.random.PRNGKey(tcfg.seed))
+
+    mgr = None
+    if tcfg.ckpt_dir:
+        mgr = ckpt_lib.CheckpointManager(tcfg.ckpt_dir,
+                                         interval=tcfg.ckpt_interval)
+        restored, manifest = mgr.restore_latest(state)
+        if restored is not None:
+            state = restored
+            stream.load_state_dict({"step": manifest["extra"]["data_step"]})
+
+    timer = StepTimer(slo_seconds=120.0)
+    history = []
+    for _ in range(num_steps):
+        batch = next(stream)
+        jbatch = {k: jnp.asarray(v) for k, v in batch.items()
+                  if not k.startswith("_")}
+        state, metrics = step_fn(state, jbatch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["straggler_breach"] = float(timer.tick())
+        history.append(metrics)
+        step = int(state.step)
+        if mgr is not None:
+            mgr.maybe_save(step, state,
+                           extra={"data_step": stream.state_dict()["step"]})
+        if log_every and step % log_every == 0:
+            print(f"step {step}: loss={metrics['loss']:.4f} "
+                  f"gnorm={metrics['grad_norm']:.3f} "
+                  f"keep={metrics.get('filter_keep_frac', 1.0):.3f} "
+                  f"anom={metrics.get('grad_anomaly', 0.0):.0f}")
+    return state, history

@@ -1,0 +1,306 @@
+"""Core ACE invariants: unbiasedness, the closed-form mean identity,
+dynamic updates/deletes, merge associativity, threshold policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AceConfig, AceEstimator, exact_score, rse_score,
+                        collision_probs)
+from repro.core import sketch as sk
+from repro.core.srp import (SrpConfig, collision_probability, hash_buckets,
+                            make_projections, pack_buckets, srp_bits)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(n=400, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SRP
+# ---------------------------------------------------------------------------
+
+class TestSrp:
+    def test_collision_probability_matches_theory(self):
+        """Empirical SRP collision rate ≈ 1 − θ/π (paper Eq. 1)."""
+        d = 32
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        cfg = SrpConfig(dim=d, num_bits=1, num_tables=4096, seed=7)
+        w = make_projections(cfg)
+        bx = srp_bits(x[None], w, cfg)[0]
+        by = srp_bits(y[None], w, cfg)[0]
+        emp = float(jnp.mean((bx == by).astype(jnp.float32)))
+        theory = float(collision_probability(x, y))
+        assert abs(emp - theory) < 0.03
+
+    def test_bucket_range(self):
+        cfg = SrpConfig(dim=8, num_bits=6, num_tables=9, seed=1)
+        w = make_projections(cfg)
+        b = hash_buckets(_data(100, 8), w, cfg)
+        assert b.shape == (100, 9)
+        assert int(b.min()) >= 0 and int(b.max()) < 64
+
+    def test_pack_is_bijective_on_bits(self):
+        cfg = SrpConfig(dim=4, num_bits=3, num_tables=2, seed=0)
+        bits = jnp.asarray(
+            [[1, 0, 1, 0, 1, 1]], jnp.int32)  # tables: [101, 011]
+        assert pack_buckets(bits, cfg).tolist() == [[5, 3]]
+
+    def test_identical_points_always_collide(self):
+        cfg = SrpConfig(dim=16, num_bits=15, num_tables=50, seed=3)
+        w = make_projections(cfg)
+        x = _data(5, 16)
+        b1 = hash_buckets(x, w, cfg)
+        b2 = hash_buckets(x, w, cfg)
+        assert bool(jnp.all(b1 == b2))
+
+    def test_scale_invariance(self):
+        """SRP depends only on direction: h(cx) == h(x) for c > 0."""
+        cfg = SrpConfig(dim=16, num_bits=10, num_tables=20, seed=3)
+        w = make_projections(cfg)
+        x = _data(50, 16)
+        assert bool(jnp.all(hash_buckets(x, w, cfg) ==
+                            hash_buckets(3.7 * x, w, cfg)))
+
+
+# ---------------------------------------------------------------------------
+# Sketch invariants
+# ---------------------------------------------------------------------------
+
+class TestSketch:
+    CFG = AceConfig(dim=12, num_bits=8, num_tables=16, seed=11)
+
+    def test_insert_counts_sum(self):
+        """Each insert adds exactly L to the total count mass."""
+        cfg = self.CFG
+        st_ = sk.insert(sk.init(cfg), sk.make_params(cfg), _data(37), cfg)
+        assert int(st_.counts.sum()) == 37 * cfg.num_tables
+        assert float(st_.n) == 37
+
+    def test_closed_form_mu_equals_sequential_eq11(self):
+        """μ = Σ‖A‖²/(nL)  ≡  the paper's streaming Eq. 11."""
+        cfg = self.CFG
+        w = sk.make_params(cfg)
+        x = _data(60)
+        bks = hash_buckets(x, w, cfg.srp)
+        st_ = sk.init(cfg)
+        mu_seq = None
+        for i in range(60):
+            st_, mu_seq = sk.mu_sequential_increment(st_, bks[i], cfg)
+        st_batch = sk.insert_buckets(sk.init(cfg), bks, cfg)
+        assert np.isclose(float(mu_seq), float(sk.mean_mu(st_batch)),
+                          rtol=1e-5)
+
+    def test_mu_order_invariance(self):
+        cfg = self.CFG
+        w = sk.make_params(cfg)
+        x = _data(64)
+        s1 = sk.insert(sk.init(cfg), w, x, cfg)
+        perm = np.random.default_rng(0).permutation(64)
+        s2 = sk.insert(sk.init(cfg), w, x[perm], cfg)
+        assert bool(jnp.all(s1.counts == s2.counts))
+        assert np.isclose(float(sk.mean_mu(s1)), float(sk.mean_mu(s2)))
+
+    def test_delete_inverts_insert(self):
+        """Paper §3.4.1 / Eq. 12: delete is the exact inverse on counts+μ."""
+        cfg = self.CFG
+        w = sk.make_params(cfg)
+        base, extra = _data(50, seed=1), _data(10, seed=2)
+        s0 = sk.insert(sk.init(cfg), w, base, cfg)
+        s1 = sk.insert(s0, w, extra, cfg)
+        s2 = sk.delete(s1, w, extra, cfg)
+        assert bool(jnp.all(s2.counts == s0.counts))
+        assert float(s2.n) == float(s0.n)
+        assert np.isclose(float(sk.mean_mu(s2)), float(sk.mean_mu(s0)))
+
+    def test_merge_equals_bulk_insert(self):
+        """CRDT merge: sketch(A) ⊕ sketch(B) == sketch(A ∪ B) on counts/μ."""
+        cfg = self.CFG
+        w = sk.make_params(cfg)
+        a, b = _data(40, seed=3), _data(24, seed=4)
+        sa = sk.insert(sk.init(cfg), w, a, cfg)
+        sb = sk.insert(sk.init(cfg), w, b, cfg)
+        sm = sk.merge(sa, sb)
+        sfull = sk.insert(sk.insert(sk.init(cfg), w, a, cfg), w, b, cfg)
+        assert bool(jnp.all(sm.counts == sfull.counts))
+        assert float(sm.n) == float(sfull.n)
+        assert np.isclose(float(sk.mean_mu(sm)), float(sk.mean_mu(sfull)))
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 80), seed=st.integers(0, 10_000))
+    def test_mu_closed_form_property(self, n, seed):
+        """Hypothesis: closed-form μ equals mean of all items' scores."""
+        cfg = AceConfig(dim=6, num_bits=6, num_tables=8, seed=seed % 17)
+        w = sk.make_params(cfg)
+        x = _data(n, 6, seed=seed)
+        st_ = sk.insert(sk.init(cfg), w, x, cfg)
+        scores = sk.score(st_, w, x, cfg)
+        assert np.isclose(float(sk.mean_mu(st_)), float(scores.mean()),
+                          rtol=1e-4)
+
+    def test_welford_sigma_positive_and_finite(self):
+        cfg = self.CFG
+        est = AceEstimator(cfg).fit(_data(200))
+        sig = float(sk.sigma_welford(est.state))
+        assert np.isfinite(sig) and sig >= 0
+        assert np.isfinite(float(sk.sigma_cubic_proxy(est.state)))
+
+
+# ---------------------------------------------------------------------------
+# Estimator statistics (Theorems 1 & 2)
+# ---------------------------------------------------------------------------
+
+class TestEstimators:
+    def test_ace_unbiasedness(self):
+        """Mean of Ŝ over independent hash seeds ≈ S(q, D)  (Theorem 1)."""
+        d, n, K, L = 10, 300, 6, 16
+        X = _data(n, d, seed=5)
+        q = X[7]
+        s_true = float(exact_score(q, X, K))
+        ests = []
+        for seed in range(24):
+            cfg = AceConfig(dim=d, num_bits=K, num_tables=L, seed=seed)
+            ests.append(float(AceEstimator(cfg).fit(X).score(q[None])[0]))
+        se = np.std(ests) / np.sqrt(len(ests))
+        assert abs(np.mean(ests) - s_true) < 4 * se + 0.05 * s_true
+
+    def test_rse_unbiasedness(self):
+        d, n, K, L = 10, 300, 6, 32
+        X = _data(n, d, seed=6)
+        q = X[3]
+        s_true = float(exact_score(q, X, K))
+        vals = [float(rse_score(q[None], X, K, L, jax.random.PRNGKey(s))[0])
+                for s in range(64)]
+        se = np.std(vals) / np.sqrt(len(vals))
+        assert abs(np.mean(vals) - s_true) < 4 * se + 0.05 * s_true
+
+    def test_ace_beats_rse_variance(self):
+        """The paper's headline estimator claim (Fig. 3–5), on gaussian data."""
+        d, n, K, L = 10, 400, 8, 16
+        X = _data(n, d, seed=7)
+        Q = X[:16]
+        s_true = np.asarray(exact_score(Q, X, K))
+        ace_err, rse_err = [], []
+        for seed in range(12):
+            cfg = AceConfig(dim=d, num_bits=K, num_tables=L, seed=seed)
+            e = AceEstimator(cfg).fit(X)
+            ace_err.append(np.mean((np.asarray(e.score(Q)) - s_true) ** 2))
+            r = np.asarray(rse_score(Q, X, K, L, jax.random.PRNGKey(seed)))
+            rse_err.append(np.mean((r - s_true) ** 2))
+        assert np.mean(ace_err) < np.mean(rse_err)
+
+    def test_outliers_score_lower(self):
+        """Discriminative power (paper Fig. 1): outliers ≪ inliers ≈ μ.
+
+        SRP is an ANGULAR hash, so anomalies must be angularly separated —
+        inliers live in a cone around +μ, outliers around −μ (the paper's
+        benchmark features are nonnegative, so offsets are angular there).
+        """
+        rng = np.random.default_rng(8)
+        d = 16
+        mu = 4.0 * np.ones(d) / np.sqrt(d)
+        inliers = jnp.asarray(rng.normal(size=(1000, d)) + mu, jnp.float32)
+        outliers = jnp.asarray(0.3 * rng.normal(size=(20, d)) - 3 * mu,
+                               jnp.float32)
+        cfg = AceConfig(dim=d, num_bits=12, num_tables=32, seed=0)
+        est = AceEstimator(cfg).fit(inliers)
+        s_in = float(est.score(inliers[:100]).mean())
+        s_out = float(est.score(outliers).mean())
+        assert s_out < 0.5 * s_in
+
+    def test_predict_flags_planted_outliers(self):
+        rng = np.random.default_rng(9)
+        d = 16
+        mu = 4.0 * np.ones(d) / np.sqrt(d)
+        inl = jnp.asarray(rng.normal(size=(2000, d)) + mu, jnp.float32)
+        out = jnp.asarray(0.3 * rng.normal(size=(30, d)) - 3 * mu, jnp.float32)
+        cfg = AceConfig(dim=d, num_bits=13, num_tables=32, seed=1)
+        est = AceEstimator(cfg).fit(inl)
+        flags_out = np.asarray(est.predict(out, alpha=1.0))
+        flags_in = np.asarray(est.predict(inl[:200], alpha=1.0))
+        assert flags_out.mean() > 0.9          # nearly all outliers caught
+        assert flags_in.mean() < 0.45          # inlier FP rate bounded
+
+    def test_collision_probs_bounds(self):
+        X = _data(50, 8, seed=10)
+        p = np.asarray(collision_probs(X[0], X))
+        assert (p >= 0).all() and (p <= 1).all()
+        assert np.isclose(p[0], 1.0, atol=1e-5)  # self-similarity
+
+
+# ---------------------------------------------------------------------------
+# Privacy (§4)
+# ---------------------------------------------------------------------------
+
+class TestPrivacy:
+    def test_private_hash_shape_and_determinism_given_key(self):
+        from repro.core.privacy import private_hash_buckets, gaussian_sigma
+        cfg = SrpConfig(dim=8, num_bits=6, num_tables=10, seed=0)
+        w = make_projections(cfg)
+        x = _data(20, 8)
+        key = jax.random.PRNGKey(0)
+        sig = gaussian_sigma(1.0, 1e-5, 1.0)
+        b1 = private_hash_buckets(x, w, cfg, key, sig)
+        b2 = private_hash_buckets(x, w, cfg, key, sig)
+        assert b1.shape == (20, 10) and bool(jnp.all(b1 == b2))
+
+    def test_noise_zero_matches_plain_srp(self):
+        from repro.core.privacy import private_hash_buckets
+        cfg = SrpConfig(dim=8, num_bits=6, num_tables=10, seed=0)
+        w = make_projections(cfg)
+        x = _data(20, 8)
+        b = private_hash_buckets(x, w, cfg, jax.random.PRNGKey(0), 0.0)
+        assert bool(jnp.all(b == hash_buckets(x, w, cfg)))
+
+    def test_utility_degrades_gracefully(self):
+        """Small noise: most buckets unchanged; huge noise: mostly changed."""
+        from repro.core.privacy import private_srp_bits
+        cfg = SrpConfig(dim=32, num_bits=8, num_tables=16, seed=0)
+        w = make_projections(cfg)
+        x = _data(100, 32)
+        plain = srp_bits(x, w, cfg)
+        lo = private_srp_bits(x, w, cfg, jax.random.PRNGKey(1), 0.01)
+        hi = private_srp_bits(x, w, cfg, jax.random.PRNGKey(1), 1e3)
+        agree_lo = float(jnp.mean((plain == lo).astype(jnp.float32)))
+        agree_hi = float(jnp.mean((plain == hi).astype(jnp.float32)))
+        assert agree_lo > 0.95
+        assert 0.4 < agree_hi < 0.6
+
+
+# ---------------------------------------------------------------------------
+# SRHT fast path
+# ---------------------------------------------------------------------------
+
+class TestSrht:
+    def test_fwht_orthogonality(self):
+        from repro.core.srht import fwht
+        x = _data(4, 64, seed=11)
+        y = fwht(fwht(x)) / 64.0   # H H^T = n I
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-4)
+
+    def test_srht_collision_rate_tracks_similarity(self):
+        """SRHT bits behave like SRP: collision rate ≈ 1 − θ/π."""
+        from repro.core.srht import SrhtParams, srht_bits
+        d = 64
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        eps = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        y = x + 0.3 * eps
+        cfg = SrpConfig(dim=d, num_bits=1, num_tables=4096, seed=13)
+        params = SrhtParams(cfg)
+        bx = srht_bits(x[None], params)[0]
+        by = srht_bits(y[None], params)[0]
+        emp = float(jnp.mean((bx == by).astype(jnp.float32)))
+        theory = float(collision_probability(x, y))
+        assert abs(emp - theory) < 0.06
+
+    def test_srht_flops_beat_dense_for_high_d(self):
+        from repro.core.srht import flops_dense, flops_srht
+        cfg = SrpConfig(dim=4096, num_bits=15, num_tables=50)
+        assert flops_srht(cfg, 1) < flops_dense(cfg, 1) / 5

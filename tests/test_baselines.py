@@ -1,0 +1,165 @@
+"""Baseline correctness: small-case oracles + discriminative sanity checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import ALL_BASELINES, run_baseline
+from repro.baselines.knn_graph import knn_graph, pairwise_within_neighborhood
+from repro.baselines import neighbors as nb
+from repro.data.synthetic import make_paper_dataset, PAPER_STATS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _clustered_with_outliers(n=400, d=8, n_out=12, seed=0):
+    """Inlier blob + SCATTERED far outliers (one per random direction).
+
+    Scattered, not micro-clustered: a tight outlier clump has small kNN
+    distances and high mutual indegree, so local-density methods correctly
+    call it dense (the classic 'masking' effect) — that would test the
+    data, not the implementations.
+    """
+    rng = np.random.default_rng(seed)
+    mu = 4.0 * np.ones(d) / np.sqrt(d)
+    inl = rng.normal(size=(n - n_out, d)) + mu
+    dirs = rng.normal(size=(n_out, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    out = mu + dirs * rng.uniform(12.0, 20.0, size=(n_out, 1))
+    x = np.vstack([inl, out]).astype(np.float32)
+    y = np.concatenate([np.zeros(n - n_out), np.ones(n_out)]).astype(np.int8)
+    return x, y
+
+
+class TestKnnGraph:
+    def test_exact_vs_numpy(self):
+        x, _ = _clustered_with_outliers(n=120)
+        d_np = np.linalg.norm(x[:, None] - x[None, :], axis=-1)
+        np.fill_diagonal(d_np, np.inf)
+        want_idx = np.argsort(d_np, axis=1)[:, :5]
+        dists, idx = knn_graph(x, 5, chunk=37)
+        want_d = np.take_along_axis(d_np, want_idx, 1)
+        # f32 expansion-trick precision: |err| ~ ||x||²·eps ≈ 1e-3
+        np.testing.assert_allclose(dists, want_d, rtol=1e-3, atol=2e-3)
+        # indices may differ on exact ties; distances must match
+        got_d = np.take_along_axis(d_np, idx.astype(int), 1)
+        np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+
+    def test_chunking_invariance(self):
+        x, _ = _clustered_with_outliers(n=150)
+        d1, i1 = knn_graph(x, 7, chunk=150)
+        d2, i2 = knn_graph(x, 7, chunk=31)
+        np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=2e-3)
+
+    def test_inner_pairwise_shape_and_symmetry(self):
+        x, _ = _clustered_with_outliers(n=60)
+        _, idx = knn_graph(x, 4)
+        inner = np.asarray(pairwise_within_neighborhood(x, idx))
+        assert inner.shape == (60, 5, 5)
+        np.testing.assert_allclose(inner, inner.transpose(0, 2, 1),
+                                   rtol=1e-5, atol=1e-5)
+        assert np.allclose(np.diagonal(inner, axis1=1, axis2=2), 0.0,
+                           atol=1e-5)
+
+
+class TestLofOracle:
+    def test_lof_matches_handcomputed(self):
+        """LOF on a tiny fixed configuration vs a literal implementation."""
+        x = np.array([[0., 0.], [0., 1.], [1., 0.], [1., 1.],
+                      [10., 10.]], np.float32)
+        k = 2
+        dists, idx = knn_graph(x, k)
+        got = -np.asarray(nb.lof_score(dists, idx))   # un-negate
+        # literal LOF
+        d_np = np.linalg.norm(x[:, None] - x[None, :], axis=-1)
+        np.fill_diagonal(d_np, np.inf)
+        nn = np.argsort(d_np, 1)[:, :k]
+        kdist = np.sort(d_np, 1)[:, k - 1]
+        reach = np.maximum(kdist[nn], np.take_along_axis(d_np, nn, 1))
+        lrd = 1.0 / reach.mean(1)
+        lof = np.array([lrd[nn[i]].mean() / lrd[i] for i in range(len(x))])
+        np.testing.assert_allclose(got, lof, rtol=1e-4)
+        assert got[-1] == got.max()     # the far point is the outlier
+
+
+@pytest.mark.parametrize("name",
+                         [b for b in ALL_BASELINES if b != "fastvoa"])
+def test_baseline_runs_and_discriminates(name):
+    """Every kNN-family baseline: finite scores, and planted far outliers
+    rank in the anomalous tail."""
+    x, y = _clustered_with_outliers(n=300, d=8, n_out=10, seed=3)
+    s, sec, _, _ = run_baseline(name, x, k=5)
+    assert np.isfinite(s).all()
+    order = np.argsort(s)                     # ascending = most anomalous
+    top = set(order[:60].tolist())
+    hits = sum(1 for i in np.where(y == 1)[0] if i in top)
+    assert hits >= 6, f"{name}: only {hits}/10 outliers in tail"
+
+
+class TestFastVOA:
+    """FastVOA's per-point scores at the paper's S1=320/S2=2 are dominated
+    by AMS estimator noise (its weak accuracy in the paper's Tables 3–5
+    reflects this), so we validate the implementation at MOMENT level."""
+
+    def _tiny(self, n=8, d=4, seed=1):
+        rng = np.random.default_rng(seed)
+        return rng.normal(size=(n, d)).astype(np.float32)
+
+    def _exact_moments(self, X):
+        n = len(X)
+        m1 = np.zeros(n)
+        m2 = np.zeros(n)
+        for p in range(n):
+            rel = np.delete(X, p, 0) - X[p]
+            rel /= np.linalg.norm(rel, axis=1, keepdims=True) + 1e-12
+            cos = np.clip(rel @ rel.T, -1, 1)
+            ang = np.arccos(cos) / np.pi
+            iu = np.triu_indices(n - 1, 1)
+            m1[p] = ang[iu].mean()
+            m2[p] = (ang[iu] ** 2).mean()
+        return m1, m2
+
+    def test_moa1_unbiased_and_concentrated(self):
+        import jax as _jax
+        from repro.baselines.fastvoa import _one_projection
+        X = self._tiny(n=20, d=5)
+        m1, _ = self._exact_moments(X)
+        t = 1500
+        keys = _jax.random.split(_jax.random.PRNGKey(0), t)
+        signs = jnp.ones((1, 20), jnp.float32)
+        acc = np.zeros(20)
+        for i in range(t):
+            f1, _ = _one_projection(jnp.asarray(X), keys[i], signs)
+            acc += np.asarray(f1)
+        pairs = 19 * 18 / 2
+        est = acc / t / pairs
+        np.testing.assert_allclose(est, m1, rtol=0.08)
+
+    def test_voa_unbiased_small_case(self):
+        """Full-score VOA ≈ exact VOA on a tiny set with generous sampling."""
+        from repro.baselines.fastvoa import fastvoa_score
+        X = self._tiny(n=10, d=4)
+        m1, m2 = self._exact_moments(X)
+        voa = m2 - m1**2
+        est = np.stack([
+            np.asarray(fastvoa_score(X, t=600, s2=24, seed=s))
+            for s in range(8)]).mean(0)
+        # Correlation across points + bounded absolute error.  The MOA2
+        # AMS estimate is χ²-heavy-tailed (rel-SD ≈ √2 per stream), so the
+        # bounds are set from its verified variance, not tighter.
+        assert np.corrcoef(voa, est)[0, 1] > 0.4
+        assert np.abs(est - voa).mean() < 0.08
+
+    def test_runs_at_paper_params(self):
+        x, _ = _clustered_with_outliers(n=200, d=8, n_out=6)
+        s, sec, _, _ = run_baseline("fastvoa", x, k=5, fastvoa_t=320)
+        assert s.shape == (200,) and np.isfinite(s).all()
+
+
+def test_paper_dataset_stats():
+    for name, (n, n_anom, d) in PAPER_STATS.items():
+        ds = make_paper_dataset(name, n=2000)
+        assert ds.x.shape == (2000, d)
+        assert ds.y.sum() == ds.n_anomalies
+        assert abs(ds.n_anomalies / 2000 - n_anom / n) < 0.02
+        assert (ds.x >= 0).all()              # nonnegative features

@@ -1,0 +1,169 @@
+"""Distribution tests on 8 FAKE devices via subprocess (the main test
+process must keep seeing 1 device — see launch/dryrun.py's contract).
+
+Covers: sharded ACE sketch exactness (psum merge == bulk build), sharded
+train-step lowering on a debug mesh, elastic checkpoint reshard, pipeline
+parallelism vs sequential reference, and the dry-run entry itself on one
+small cell.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+class TestShardedSketch:
+    def test_shardmap_update_matches_bulk(self):
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core import sketch as sk
+            from repro.core.distributed import make_shardmap_update
+            from repro.core.sketch import AceConfig
+
+            cfg = AceConfig(dim=8, num_bits=6, num_tables=10, seed=0)
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            w = sk.make_params(cfg)
+            x = jnp.asarray(
+                np.random.default_rng(0).normal(size=(64, 8)), jnp.float32)
+            upd = make_shardmap_update(mesh, cfg, data_axes=("data",))
+            with jax.set_mesh(mesh):
+                state = jax.device_put(
+                    sk.init(cfg),
+                    jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 sk.init(cfg)))
+                xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+                out = upd(state, xs, w)
+            ref = sk.insert(sk.init(cfg), w, x, cfg)
+            assert bool(jnp.all(out.counts == ref.counts)), "counts differ"
+            assert abs(float(out.n) - float(ref.n)) < 1e-5
+            print("SHARDED_OK", float(sk.mean_mu(out)),
+                  float(sk.mean_mu(ref)))
+        """)
+        assert "SHARDED_OK" in out
+
+    def test_spmd_train_step_on_debug_mesh(self):
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.models.registry import Arch
+            from repro.models.common import set_rules
+            from repro.train.train_loop import (TrainConfig,
+                                                init_train_state,
+                                                make_train_step)
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            set_rules({"batch": ("data",), "heads": "model",
+                       "kv_heads": "model", "ff": "model",
+                       "vocab": "model"})
+            a = Arch("olmo_1b", reduced=True)
+            tcfg = TrainConfig(use_data_filter=True, use_grad_monitor=True,
+                               microbatches=2, warmup_steps=1,
+                               peak_lr=1e-3)
+            with jax.set_mesh(mesh):
+                state = init_train_state(a, tcfg, jax.random.PRNGKey(0))
+                step = jax.jit(make_train_step(a, tcfg))
+                rng = np.random.default_rng(0)
+                batch = {"tokens": jnp.asarray(
+                             rng.integers(0, 512, (8, 16)), jnp.int32),
+                         "labels": jnp.asarray(
+                             rng.integers(0, 512, (8, 16)), jnp.int32)}
+                batch = {k: jax.device_put(
+                             v, NamedSharding(mesh, P("data")))
+                         for k, v in batch.items()}
+                losses = []
+                for _ in range(4):
+                    state, metrics = step(state, batch)
+                    losses.append(float(metrics["loss"]))
+            assert all(np.isfinite(l) for l in losses)
+            assert losses[-1] < losses[0]   # lr warms up after step 0
+            print("SPMD_TRAIN_OK", losses[0], losses[-1])
+        """)
+        assert "SPMD_TRAIN_OK" in out
+
+    def test_elastic_checkpoint_reshard(self, tmp_path):
+        # save on a 1x1 layout (here), restore onto 4x2 in the subprocess
+        import jax, jax.numpy as jnp
+        from repro.train import checkpoint as ck
+        tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+        ck.save(str(tmp_path), 3, tree)
+        out = run_py(f"""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.train import checkpoint as ck
+            mesh = jax.make_mesh((4, 2), ("data", "model"))
+            like = {{"w": jnp.zeros((8, 4), jnp.float32)}}
+            sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
+            tree, man = ck.restore({str(tmp_path)!r}, 3, like, sh)
+            assert tree["w"].sharding == sh["w"]
+            np.testing.assert_array_equal(
+                np.asarray(tree["w"]),
+                np.arange(32, dtype=np.float32).reshape(8, 4))
+            print("RESHARD_OK", man["step"])
+        """)
+        assert "RESHARD_OK" in out
+
+
+class TestPipelineParallel:
+    def test_gpipe_matches_sequential(self):
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.dist.pipeline import pipeline_apply, bubble_fraction
+            S, M, mb, D = 4, 8, 2, 16
+            mesh = jax.make_mesh((S,), ("pipe",))
+            rng = np.random.default_rng(0)
+            params = {"w": jnp.asarray(rng.normal(size=(S, D, D)) * 0.3,
+                                       jnp.float32)}
+            x = jnp.asarray(rng.normal(size=(M, mb, D)), jnp.float32)
+
+            def layer_fn(p, h):
+                return jnp.tanh(h @ p["w"])
+
+            out = pipeline_apply(layer_fn, params, x, mesh=mesh,
+                                 num_stages=S, num_microbatches=M)
+            # sequential reference: apply the 4 stages in order
+            ref = x
+            for s in range(S):
+                ref = jnp.tanh(ref @ params["w"][s])
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+            assert abs(bubble_fraction(4, 8) - 3 / 11) < 1e-9
+            print("PIPE_OK")
+        """, devices=4)
+        assert "PIPE_OK" in out
+
+
+class TestDryrunEntry:
+    def test_dryrun_small_cell_both_meshes(self, tmp_path):
+        """The dry-run module itself, on the cheapest cell, both meshes.
+        (The full 40-cell sweep artifacts live in dryrun_results/.)"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", "whisper_tiny", "--shape", "train_4k",
+             "--both-meshes", "--out", str(tmp_path)],
+            capture_output=True, text=True, timeout=900, env=env,
+            cwd=REPO)
+        assert out.returncode == 0, out.stderr[-2000:]
+        for mesh in ("16x16", "2x16x16"):
+            with open(tmp_path / f"whisper_tiny__train_4k__{mesh}.json") as f:
+                res = json.load(f)
+            assert res["ok"], res["error"]
+            assert res["collectives"]["total_bytes"] > 0

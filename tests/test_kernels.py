@@ -1,0 +1,164 @@
+"""Per-kernel validation: shape/dtype sweeps, hypothesis property tests,
+assert_allclose against the pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketch import AceConfig
+from repro.core.srp import SrpConfig, hash_buckets, make_projections
+from repro.kernels import ref as R
+from repro.kernels import ops
+from repro.kernels.ace_query import ace_query
+from repro.kernels.ace_score_fused import ace_score_fused
+from repro.kernels.ace_update import ace_update
+from repro.kernels.srp_hash import srp_hash
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _x(B, d, seed=0, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(B, d)), dtype)
+
+
+SHAPES = [
+    # (B, d, K, L) — deliberately awkward: non-multiples of 8/128, L>B, tiny.
+    (16, 32, 8, 10),
+    (100, 300, 15, 50),   # paper's K, L
+    (7, 9, 4, 3),
+    (1, 257, 10, 20),
+    (33, 128, 12, 50),
+    (256, 64, 6, 7),
+]
+
+
+class TestSrpHashKernel:
+    @pytest.mark.parametrize("B,d,K,L", SHAPES)
+    def test_matches_ref(self, B, d, K, L):
+        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=B + d)
+        w = make_projections(cfg)
+        x = _x(B, d, seed=d)
+        got = srp_hash(x, w, cfg)
+        want = R.srp_hash_ref(x, w, cfg)
+        assert got.shape == (B, L) and got.dtype == jnp.int32
+        assert bool(jnp.all(got == want))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        cfg = SrpConfig(dim=64, num_bits=8, num_tables=10, seed=0)
+        w = make_projections(cfg, dtype=dtype)
+        x = _x(40, 64, dtype=dtype)
+        got = srp_hash(x, w, cfg)
+        want = R.srp_hash_ref(x, w, cfg)
+        # bf16 sign flips only where |proj| underflows; require > 99% agree
+        agree = float(jnp.mean((got == want).astype(jnp.float32)))
+        assert agree > 0.99
+
+    @settings(max_examples=15, deadline=None)
+    @given(B=st.integers(1, 70), d=st.integers(2, 200),
+           K=st.integers(1, 15), L=st.integers(1, 50))
+    def test_property_sweep(self, B, d, K, L):
+        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=1)
+        w = make_projections(cfg)
+        x = _x(B, d, seed=B * d % 97)
+        assert bool(jnp.all(srp_hash(x, w, cfg) == R.srp_hash_ref(x, w, cfg)))
+
+    @pytest.mark.parametrize("bm,bk", [(8, 128), (64, 256), (256, 512)])
+    def test_block_shape_invariance(self, bm, bk):
+        """Result must not depend on the tiling choice."""
+        cfg = SrpConfig(dim=200, num_bits=10, num_tables=30, seed=2)
+        w = make_projections(cfg)
+        x = _x(90, 200)
+        assert bool(jnp.all(srp_hash(x, w, cfg, bm=bm, bk=bk) ==
+                            R.srp_hash_ref(x, w, cfg)))
+
+
+class TestAceUpdateKernel:
+    @pytest.mark.parametrize("B,d,K,L", SHAPES)
+    def test_matches_ref(self, B, d, K, L):
+        rng = np.random.default_rng(B)
+        counts = jnp.asarray(rng.integers(0, 7, size=(L, 1 << K)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 1 << K, size=(B, L)), jnp.int32)
+        got = ace_update(counts, buckets)
+        want = R.ace_update_ref(counts, buckets)
+        assert bool(jnp.all(got == want))
+
+    def test_duplicate_buckets_accumulate(self):
+        """Collision-safety: many items in one bucket must all count."""
+        L, K, B = 4, 6, 32
+        counts = jnp.zeros((L, 1 << K), jnp.int32)
+        buckets = jnp.full((B, L), 5, jnp.int32)
+        got = ace_update(counts, buckets)
+        assert int(got[0, 5]) == B and int(got.sum()) == B * L
+
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.int16])
+    def test_counter_dtypes(self, dtype):
+        rng = np.random.default_rng(3)
+        counts = jnp.zeros((8, 256), dtype)
+        buckets = jnp.asarray(rng.integers(0, 256, size=(50, 8)), jnp.int32)
+        got = ace_update(counts, buckets)
+        want = R.ace_update_ref(counts, buckets)
+        assert got.dtype == dtype and bool(jnp.all(got == want))
+
+
+class TestAceQueryKernel:
+    @pytest.mark.parametrize("B,d,K,L", SHAPES)
+    @pytest.mark.parametrize("mode", ["vector", "scalar"])
+    def test_matches_ref(self, B, d, K, L, mode):
+        rng = np.random.default_rng(B + 1)
+        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 1 << K, size=(B, L)), jnp.int32)
+        got = ace_query(counts, buckets, mode=mode)
+        want = R.ace_query_ref(counts, buckets)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_batch_tiling_invariance(self):
+        rng = np.random.default_rng(5)
+        counts = jnp.asarray(rng.integers(0, 9, size=(10, 256)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 256, size=(130, 10)), jnp.int32)
+        a = ace_query(counts, buckets, bm=32)
+        b = ace_query(counts, buckets, bm=1024)
+        assert bool(jnp.all(a == b))
+
+
+class TestFusedScoreKernel:
+    @pytest.mark.parametrize("B,d,K,L", SHAPES)
+    def test_matches_ref(self, B, d, K, L):
+        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=B)
+        w = make_projections(cfg)
+        x = _x(B, d, seed=7)
+        rng = np.random.default_rng(9)
+        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)), jnp.int32)
+        got = ace_score_fused(counts, x, w, cfg)
+        want = R.ace_score_ref(counts, x, w, cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_fused_equals_two_kernel_path(self):
+        cfg = SrpConfig(dim=100, num_bits=10, num_tables=25, seed=4)
+        w = make_projections(cfg)
+        x = _x(77, 100)
+        rng = np.random.default_rng(11)
+        counts = jnp.asarray(rng.integers(0, 9, size=(25, 1024)), jnp.int32)
+        fused = ace_score_fused(counts, x, w, cfg)
+        two = jnp.mean(ace_query(counts, srp_hash(x, w, cfg)), axis=-1)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
+                                   rtol=1e-6)
+
+
+class TestOpsDispatch:
+    def test_ops_roundtrip_matches_sketch(self):
+        """Kernel-path insert+score equals the pure-jnp sketch path."""
+        from repro.core import sketch as sk
+        cfg = AceConfig(dim=20, num_bits=8, num_tables=12, seed=6)
+        w = sk.make_params(cfg)
+        x = _x(64, 20)
+        st_k = ops.ace_update(sk.init(cfg),
+                              ops.srp_hash(x, w, cfg.srp), cfg)
+        st_j = sk.insert(sk.init(cfg), w, x, cfg)
+        assert bool(jnp.all(st_k.counts == st_j.counts))
+        q = _x(16, 20, seed=1)
+        np.testing.assert_allclose(
+            np.asarray(ops.ace_score(st_k, q, w, cfg)),
+            np.asarray(sk.score(st_j, w, q, cfg)), rtol=1e-6)

@@ -1,0 +1,273 @@
+"""Training-substrate tests: optimizers, schedules, checkpointing (elastic),
+compression, ACE gradient monitor, ACE data filter, end-to-end loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import AceDataFilter, DataStream, StreamConfig, \
+    synth_batch
+from repro.models.registry import Arch
+from repro.train import checkpoint as ck
+from repro.train.compression import (compress_grads_with_ef,
+                                     decompress_grads, init_error_feedback)
+from repro.train.fault import GradMonitor
+from repro.train.optim import AdamW, Adafactor, Sgd, clip_by_global_norm, \
+    make_optimizer
+from repro.train.schedule import ConstantSchedule, CosineSchedule
+from repro.train.train_loop import TrainConfig, init_train_state, \
+    make_train_step, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quad_problem(seed=0, n=64, d=8):
+    """Least squares: params {'w','b'}; loss convex -> optimizers must
+    converge."""
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w_true = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y = X @ w_true + 0.5
+
+    def loss_fn(params):
+        pred = X @ params["w"] + params["b"]
+        return jnp.mean((pred - y) ** 2)
+
+    params = {"w": jnp.zeros((d,), jnp.float32),
+              "b": jnp.zeros((), jnp.float32)}
+    return loss_fn, params
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("adamw", 0.05),
+                                         ("adafactor", 0.5)])
+    def test_converges_on_quadratic(self, name, lr):
+        loss_fn, params = _quad_problem()
+        opt = make_optimizer(name) if name != "adamw" \
+            else AdamW(weight_decay=0.0)
+        state = opt.init(params)
+        l0 = float(loss_fn(params))
+        # adafactor takes ~unit-RMS steps of size lr (no momentum), so a
+        # constant lr limit-cycles at loss ∝ lr²; anneal as in practice.
+        steps = 600 if name == "adafactor" else 200
+        for step in range(steps):
+            lr_t = lr / np.sqrt(step + 1) if name == "adafactor" else lr
+            g = jax.grad(loss_fn)(params)
+            params, state = opt.update(params, g, state,
+                                       jnp.asarray(step), lr_t)
+        l1 = float(loss_fn(params))
+        assert l1 < 0.05 * l0, (name, l0, l1)
+
+    def test_adamw_decoupled_decay(self):
+        """With zero grads, weights shrink by exactly lr*wd each step."""
+        opt = AdamW(weight_decay=0.1)
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = opt.init(params)
+        g = {"w": jnp.zeros((4,), jnp.float32)}
+        new, _ = opt.update(params, g, state, jnp.asarray(0), 0.01)
+        np.testing.assert_allclose(np.asarray(new["w"]),
+                                   1.0 - 0.01 * 0.1, rtol=1e-5)
+
+    def test_adafactor_memory_is_factored(self):
+        opt = Adafactor()
+        params = {"w": jnp.ones((64, 32), jnp.float32)}
+        state = opt.init(params)
+        slot = state["slots"]["w"]
+        assert slot["vr"].shape == (64,) and slot["vc"].shape == (32,)
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        total = float(jnp.sqrt(sum(jnp.sum(x**2)
+                                   for x in jax.tree.leaves(clipped))))
+        assert abs(total - 1.0) < 1e-5
+        assert abs(float(norm) - np.sqrt(90 + 160)) < 1e-3
+
+
+class TestSchedules:
+    def test_cosine_shape(self):
+        s = CosineSchedule(peak_lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(s(0)) == 0.0
+        assert abs(float(s(10)) - 1.0) < 1e-6
+        assert float(s(100)) <= 0.11
+        assert float(s(55)) < float(s(20))
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "nested": {"b": jnp.ones((4,), jnp.int32)}}
+        for step in (1, 2, 3, 4):
+            ck.save(str(tmp_path), step, tree, extra={"k": step}, keep=2)
+        assert ck.all_steps(str(tmp_path)) == [3, 4]
+        like = jax.tree.map(jnp.zeros_like, tree)
+        restored, manifest = ck.restore(str(tmp_path), 4, like)
+        assert manifest["extra"]["k"] == 4
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        ck.save(str(tmp_path), 1, {"a": jnp.ones(3)})
+        with pytest.raises(ValueError):
+            ck.restore(str(tmp_path), 1, {"zzz": jnp.ones(3)})
+
+    def test_elastic_reshard_on_load(self, tmp_path):
+        """Restore with explicit shardings (single-device here; the API is
+        topology-free — the multi-device path is exercised in
+        tests/test_distributed.py via subprocess)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+        ck.save(str(tmp_path), 7, tree)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = {"w": NamedSharding(mesh, P())}
+        restored, _ = ck.restore(str(tmp_path), 7,
+                                 jax.tree.map(jnp.zeros_like, tree), sh)
+        assert restored["w"].sharding == sh["w"]
+
+
+class TestCompression:
+    def test_ef_reduces_error_over_steps(self):
+        """Error feedback: repeated quantisation of the same gradient must
+        converge (residual carries the rounding error)."""
+        rng = np.random.default_rng(0)
+        g = {"w": jnp.asarray(rng.normal(size=(256,)), jnp.float32)}
+        ef = init_error_feedback(g)
+        applied = jnp.zeros((256,), jnp.float32)
+        for i in range(20):
+            q, s, ef = compress_grads_with_ef(g, ef, jax.random.PRNGKey(i))
+            applied += decompress_grads(q, s)["w"]
+        avg = applied / 20
+        err = float(jnp.linalg.norm(avg - g["w"]) / jnp.linalg.norm(g["w"]))
+        assert err < 0.05
+
+    def test_quantise_roundtrip_bounded(self):
+        from repro.train.compression import dequantise_int8, quantise_int8
+        x = jnp.linspace(-3, 3, 100)
+        q, s = quantise_int8(x, jax.random.PRNGKey(0))
+        err = jnp.abs(dequantise_int8(q, s) - x).max()
+        assert float(err) <= float(s) * 1.01
+
+
+class TestGradMonitor:
+    def test_flags_gradient_spike(self):
+        gm = GradMonitor(feature_dim=8, warmup=20, alpha=4.0)
+        state, w = gm.init()
+        rng = np.random.default_rng(0)
+
+        def grads_like(scale):
+            return {"a": jnp.asarray(rng.normal(size=(16,)) * scale,
+                                     jnp.float32),
+                    "b": jnp.asarray(rng.normal(size=(8,)) * scale,
+                                     jnp.float32)}
+
+        flags = []
+        for i in range(60):
+            state, anom, _ = gm.step(state, w, grads_like(1.0),
+                                     jnp.asarray(1.0))
+            flags.append(bool(anom))
+        assert sum(flags) <= 4                       # healthy stream ~clean
+        # inject a 1000x gradient spike
+        state, anom, _ = gm.step(state, w, grads_like(1000.0),
+                                 jnp.asarray(50.0))
+        assert bool(anom)
+
+    def test_warmup_never_flags(self):
+        gm = GradMonitor(feature_dim=4, warmup=100)
+        state, w = gm.init()
+        state, anom, _ = gm.step(
+            state, w, {"a": jnp.ones((4,)) * 1e6}, jnp.asarray(1e9))
+        assert not bool(anom)
+
+
+class TestDataFilterAndStream:
+    def test_stream_determinism_and_restart(self):
+        cfg = StreamConfig(vocab_size=100, seq_len=8, global_batch=4, seed=3)
+        s1 = DataStream(cfg)
+        batches = [next(s1) for _ in range(5)]
+        s2 = DataStream(cfg)
+        s2.load_state_dict({"step": 3})
+        np.testing.assert_array_equal(next(s2)["tokens"],
+                                      batches[3]["tokens"])
+
+    def test_filter_catches_poisoned_embeddings(self):
+        filt = AceDataFilter(d_model=16, warmup_items=64, alpha=3.0)
+        state, w = filt.init()
+        rng = np.random.default_rng(0)
+        mu = np.ones(16) * 2.0
+        # healthy stream: clustered sequence embeddings
+        for _ in range(30):
+            emb = jnp.asarray(rng.normal(size=(8, 4, 16)) * 0.3 + mu,
+                              jnp.float32)
+            mask = jnp.ones((8, 4), jnp.float32)
+            state, _, kept = filt(state, w, emb, mask)
+        # poisoned batch: reversed-direction embeddings
+        bad = jnp.asarray(rng.normal(size=(8, 4, 16)) * 0.3 - 3 * mu,
+                          jnp.float32)
+        state, new_mask, kept = filt(state, w, bad,
+                                     jnp.ones((8, 4), jnp.float32))
+        assert float(kept) < 0.5
+        assert float(new_mask.sum()) < 0.5 * new_mask.size
+
+
+class TestEndToEnd:
+    def test_train_restart_from_checkpoint_is_exact(self, tmp_path):
+        """Fault-tolerance core: crash + restore reproduces the same state
+        as an uninterrupted run (same data order, same params)."""
+        a = Arch("qwen2_1_5b", reduced=True)
+        tcfg = TrainConfig(total_steps=20, warmup_steps=2, peak_lr=1e-3,
+                           use_data_filter=False, use_grad_monitor=False,
+                           ckpt_dir=str(tmp_path), ckpt_interval=5,
+                           seed=5)
+        scfg = StreamConfig(vocab_size=a.cfg.vocab_size, seq_len=8,
+                            global_batch=4, seed=5)
+        # continuous 10-step run
+        state_a, _ = train(a, tcfg, DataStream(scfg), num_steps=10,
+                           log_every=0)
+        # interrupted: 7 steps, then a fresh driver restores step 5 + runs 5
+        tcfg_b = TrainConfig(**{**tcfg.__dict__,
+                                "ckpt_dir": str(tmp_path) + "_b"})
+        state_b, _ = train(a, tcfg_b, DataStream(scfg), num_steps=7,
+                           log_every=0)
+        state_c, _ = train(a, tcfg_b, DataStream(scfg), num_steps=5,
+                           log_every=0)   # auto-restores from step 5
+        assert int(state_c.step) == 10
+        flat_a = jax.tree.leaves(state_a.params)
+        flat_c = jax.tree.leaves(state_c.params)
+        for x, y in zip(flat_a, flat_c):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_monitor_skips_poisoned_step(self):
+        """Poisoned batches spike the loss/grads; the monitor must skip at
+        least some of them once armed."""
+        a = Arch("olmo_1b", reduced=True)
+        tcfg = TrainConfig(total_steps=100, warmup_steps=2, peak_lr=1e-3,
+                           use_data_filter=False, use_grad_monitor=True,
+                           seed=1)
+        step_fn = jax.jit(make_train_step(a, tcfg))
+        state = init_train_state(a, tcfg, jax.random.PRNGKey(1))
+        scfg = StreamConfig(vocab_size=a.cfg.vocab_size, seq_len=16,
+                            global_batch=8, seed=1)
+        stream = DataStream(scfg)
+        for _ in range(30):      # healthy warmup
+            b = {k: jnp.asarray(v) for k, v in next(stream).items()
+                 if not k.startswith("_")}
+            state, m = step_fn(state, b)
+        params_before = jax.tree.leaves(state.params)
+        # poisoned step: gradient bomb via giant labels mismatch + lr
+        bad = next(stream)
+        bad_b = {k: jnp.asarray(v) for k, v in bad.items()
+                 if not k.startswith("_")}
+        bad_b["tokens"] = jnp.zeros_like(bad_b["tokens"])
+        bad_b["labels"] = jnp.full_like(bad_b["labels"],
+                                        a.cfg.vocab_size - 1)
+        state2, m2 = step_fn(state, bad_b)
+        # either flagged (params frozen) or absorbed; flag expected
+        if float(m2["grad_anomaly"]) == 1.0:
+            for x, y in zip(params_before, jax.tree.leaves(state2.params)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            pytest.skip("monitor did not flag this particular spike "
+                        "(threshold is statistical)")

@@ -1,0 +1,108 @@
+"""Distributed ACE throughput: replicated vs table-sharded insert/score.
+
+Runs in a subprocess with fake CPU devices (the benchmark process must keep
+seeing 1 device — launch/dryrun.py's contract), builds a 1×N_SHARDS
+("data", "model") mesh, and times the shard_map'd repro.dist paths against
+the single-device reference at a sketch size where table sharding matters
+(K=16, L=64 → 16 MB of int32 counts; bump K to 18+/L to 200+ on real HW).
+
+CPU numbers measure *schedule overhead*, not TPU speed — the point is the
+collective structure: replicated insert psums an (L, 2^K) histogram, the
+table-sharded one psums only a (B,) float vector.  Emits the standard CSV
+rows for benchmarks.run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+N_SHARDS = 2
+
+_WORKER = """
+    import time
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import sketch as sk
+    from repro.core.sketch import AceConfig
+    from repro.dist.sketch_parallel import (
+        make_shardmap_update, make_table_sharded_score,
+        make_table_sharded_update, sketch_shardings,
+        table_sharded_shardings)
+
+    B, D = {batch}, 24
+    cfg = AceConfig(dim=D, num_bits={num_bits}, num_tables={num_tables},
+                    seed=0)
+    mesh = jax.make_mesh((1, {shards}), ("data", "model"))
+    w = sk.make_params(cfg)
+    x = jnp.asarray(
+        np.random.default_rng(0).normal(size=(B, D)), jnp.float32)
+
+    def timeit(fn, *args, iters=8, warmup=2):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / iters
+
+    results = {{"memory_bytes": cfg.memory_bytes()}}
+    with jax.set_mesh(mesh):
+        # replicated layout
+        st_rep = jax.device_put(sk.init(cfg), sketch_shardings(mesh))
+        upd_rep = jax.jit(make_shardmap_update(mesh, cfg))
+        scr_rep = jax.jit(lambda s, q: sk.score(s, w, q, cfg))
+        results["replicated_insert_s"] = timeit(upd_rep, st_rep, x, w)
+        results["replicated_score_s"] = timeit(scr_rep, st_rep, x)
+
+        # table-sharded layout
+        st_ts = jax.device_put(sk.init(cfg), table_sharded_shardings(mesh))
+        upd_ts = jax.jit(make_table_sharded_update(mesh, cfg))
+        scr_ts = jax.jit(make_table_sharded_score(mesh, cfg))
+        results["sharded_insert_s"] = timeit(upd_ts, st_ts, x, w)
+        results["sharded_score_s"] = timeit(scr_ts, st_ts, x, w)
+    print("DIST_RESULT " + __import__("json").dumps(results))
+"""
+
+
+def run(csv_rows: list[str], batch: int = 2048, num_bits: int = 16,
+        num_tables: int = 64) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={N_SHARDS} "
+                        + env.get("XLA_FLAGS", ""))
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(repo, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    code = textwrap.dedent(_WORKER).format(
+        batch=batch, num_bits=num_bits, num_tables=num_tables,
+        shards=N_SHARDS)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        print(f"!! dist_throughput worker failed:\n{out.stderr[-1500:]}",
+              file=sys.stderr)
+        csv_rows.append("dist_throughput_FAILED,0,0")
+        return
+    line = next(l for l in out.stdout.splitlines()
+                if l.startswith("DIST_RESULT "))
+    res = json.loads(line[len("DIST_RESULT "):])
+
+    mb = res["memory_bytes"] / 2**20
+    print(f"\n# Distributed ACE throughput (CPU {N_SHARDS}-way tables "
+          f"axis, B={batch}, K={num_bits}, L={num_tables} -> "
+          f"{mb:.0f} MB counts; {mb / N_SHARDS:.0f} MB/device sharded)")
+    for layout in ("replicated", "sharded"):
+        for op in ("insert", "score"):
+            t = res[f"{layout}_{op}_s"]
+            print(f"{layout:10s} {op}: {t * 1e6:8.0f} us/batch "
+                  f"({batch / t / 1e6:6.2f} M items/s)")
+            csv_rows.append(
+                f"dist_{layout}_{op}_items_per_s,{t * 1e6:.0f},"
+                f"{batch / t:.0f}")
+
+
+if __name__ == "__main__":
+    rows: list[str] = []
+    run(rows)
+    print("\n".join(rows))

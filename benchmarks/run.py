@@ -24,8 +24,9 @@ def main() -> None:
                     help="run a single benchmark module by name")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_discriminative, fig3_5_variance,
-                            memory_table, table3_5_comparison, throughput)
+    from benchmarks import (dist_throughput, fig1_discriminative,
+                            fig3_5_variance, memory_table,
+                            table3_5_comparison, throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -45,6 +46,8 @@ def main() -> None:
             csv_rows, ace_n=ace_n, baseline_n=base_n),
         "memory": lambda: memory_table.run(csv_rows),
         "throughput": lambda: throughput.run(csv_rows),
+        "dist_throughput": lambda: dist_throughput.run(
+            csv_rows, batch=512 if args.quick else 2048),
     }
     if roofline_report is not None:
         benches["roofline"] = lambda: roofline_report.run(csv_rows)

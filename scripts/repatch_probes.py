@@ -12,7 +12,7 @@ import sys
 import jax
 
 from repro.launch.dryrun import probe_costs
-from repro.launch.mesh import make_production_mesh, rules_for
+from repro.dist.mesh import make_production_mesh, rules_for
 from repro.models.common import set_rules
 from repro.models.registry import Arch
 

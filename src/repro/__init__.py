@@ -6,3 +6,15 @@ Paper: Luo & Shrivastava, "Arrays of (locality-sensitive) Count Estimators
 See DESIGN.md / EXPERIMENTS.md at the repo root.
 """
 __version__ = "1.0.0"
+
+# jax<0.6 compatibility: `jax.set_mesh` (used by the dry-run and the
+# sharding tests) landed after the pinned 0.4.x line.  On old jax the Mesh
+# object itself is the context manager with the same enter/exit semantics,
+# so gate a shim rather than forking every call site.
+import jax as _jax
+
+if not hasattr(_jax, "set_mesh"):
+    def _set_mesh(mesh):
+        return mesh
+    _jax.set_mesh = _set_mesh
+del _jax

@@ -1,116 +1,10 @@
-"""Distributed ACE: sharded streaming update + exact psum merge.
-
-The sketch is a commutative monoid under count addition (``sketch.merge``),
-so the multi-device story is exactly gradient all-reduce's:
-
-  * each data shard hashes + histograms its local slice of the batch,
-  * one ``psum`` over the data axes yields the histogram of the global batch,
-  * every device applies the same dense add to its (replicated) counts.
-
-This keeps the counts replica-consistent without ever gathering raw data —
-which is also the paper's §4 privacy story at datacenter scale: only counts
-of hashes cross the network.
-
-Two deployment modes:
-
-1. ``update_shardmap`` / ``score_shardmap`` — explicit shard_map collectives,
-   used inside training steps that are themselves shard_mapped.
-2. Plain jit + NamedSharding: annotate batch as data-sharded, counts as
-   replicated, and let SPMD partitioning insert the all-reduce.  This is the
-   mode compiled into ``train_step`` (see repro/train/train_loop.py) so the
-   dry-run HLO contains the ACE collective schedule.
+"""Deprecated shim — the distributed ACE primitives moved to
+``repro.dist.sketch_parallel`` (PR: repro.dist subsystem).  Import from
+there; this module re-exports for older callers and will be removed.
 """
-from __future__ import annotations
-
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.core import sketch as sk
-from repro.core.sketch import AceConfig, AceState
-from repro.core.srp import hash_buckets
-
-
-def local_histogram(x: jax.Array, w: jax.Array, cfg: AceConfig) -> jax.Array:
-    """Histogram of the local batch shard: (B_local, d) -> (L, 2^K)."""
-    buckets = hash_buckets(x, w, cfg.srp)
-    return sk.histogram(buckets, cfg)
-
-
-def update_global(state: AceState, x: jax.Array, w: jax.Array,
-                  cfg: AceConfig, axis_names=()) -> AceState:
-    """Insert a (possibly sharded) batch into a replicated sketch.
-
-    Inside shard_map: pass ``axis_names`` to psum the histogram.  Under plain
-    jit/SPMD, call with axis_names=() and let sharding propagation reduce.
-    """
-    hist = local_histogram(x, w, cfg)
-    if axis_names:
-        hist = jax.lax.psum(hist, axis_names)
-    new_counts = state.counts + hist
-
-    # Post-insert scores of the local shard items for Welford (approximate
-    # insert-time stream; exact μ never uses it).
-    buckets = hash_buckets(x, w, cfg.srp)
-    rows = jnp.broadcast_to(
-        jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
-    scores = jnp.mean(new_counts[rows, buckets].astype(jnp.float32), axis=-1)
-
-    b_local = jnp.asarray(scores.shape[0], jnp.float32)
-    if axis_names:
-        b_local = jax.lax.psum(b_local, axis_names)
-    n = state.n
-    tot = n + b_local
-    rates = scores / jnp.maximum(tot, 1.0)   # rate stream (see sketch.py)
-    sum_s = jnp.sum(rates)
-    sum_s2 = jnp.sum(rates * rates)
-    if axis_names:
-        sum_s = jax.lax.psum(sum_s, axis_names)
-        sum_s2 = jax.lax.psum(sum_s2, axis_names)
-    mean_b = sum_s / jnp.maximum(b_local, 1.0)
-    m2_b = jnp.maximum(sum_s2 - b_local * mean_b * mean_b, 0.0)
-
-    b = b_local
-    delta = mean_b - state.welford_mean
-    safe = jnp.maximum(tot, 1.0)
-    return AceState(
-        counts=new_counts,
-        n=tot,
-        welford_mean=state.welford_mean + delta * b / safe,
-        welford_m2=state.welford_m2 + m2_b + delta**2 * n * b / safe,
-    )
-
-
-def score_global(state: AceState, q: jax.Array, w: jax.Array,
-                 cfg: AceConfig) -> jax.Array:
-    """Score a sharded query batch against the replicated sketch.
-
-    Pure map — no collective needed (counts are replicated)."""
-    return sk.lookup(state, hash_buckets(q, w, cfg.srp))
-
-
-def make_shardmap_update(mesh, cfg: AceConfig, data_axes=("data",)):
-    """Build a shard_map'd update: batch sharded over ``data_axes``, sketch
-    replicated.  Returned fn: (state, x, w) -> state."""
-    from jax.experimental.shard_map import shard_map
-
-    batch_spec = P(data_axes)
-    rep = P()
-
-    def _upd(state, x, w):
-        return update_global(state, x, w, cfg, axis_names=data_axes)
-
-    return shard_map(
-        _upd, mesh=mesh,
-        in_specs=(AceState(rep, rep, rep, rep), batch_spec, rep),
-        out_specs=AceState(rep, rep, rep, rep),
-        check_rep=False)
-
-
-def sketch_shardings(mesh) -> AceState:
-    """NamedSharding pytree for the replicated sketch under plain jit."""
-    from jax.sharding import NamedSharding
-    rep = NamedSharding(mesh, P())
-    return AceState(rep, rep, rep, rep)
+from repro.dist.sketch_parallel import (  # noqa: F401
+    local_histogram, make_shardmap_update, make_table_sharded_mean_mu,
+    make_table_sharded_score, make_table_sharded_update, mean_mu_table_sharded,
+    score_global, score_table_sharded, sketch_shardings,
+    table_sharded_shardings, update_global, update_table_sharded,
+)

@@ -16,7 +16,10 @@ two formulations against each other, including deletes (Eq. 12).
 
 Because counts are additive, sketches over disjoint data shards merge by
 elementwise addition — this is the whole multi-pod story (see
-``repro.core.distributed``): each data shard sketches locally, a psum merges.
+``repro.dist.sketch_parallel``): each data shard sketches locally, a psum
+merges; and because the L arrays are independent, counts also shard over
+the L axis (the table-sharded layout there) when the sketch outgrows one
+device.
 """
 from __future__ import annotations
 
@@ -104,7 +107,12 @@ def lookup(state: AceState, buckets: jax.Array) -> jax.Array:
     L = state.counts.shape[0]
     rows = jnp.arange(L, dtype=jnp.int32)
     gathered = state.counts[rows[None, :], buckets]          # (B, L)
-    return jnp.mean(gathered.astype(jnp.float32), axis=-1)
+    # mean over L as an explicit reciprocal multiply: a bare `/ L` is
+    # rewritten to `* (1/L)` by XLA fast-math in SOME programs but not
+    # others, which would break the bitwise replicated↔table-sharded
+    # parity contract (repro.dist.sketch_parallel uses the same constant).
+    return jnp.sum(gathered.astype(jnp.float32), axis=-1) \
+        * jnp.float32(1.0 / L)
 
 
 def histogram(buckets: jax.Array, cfg: AceConfig) -> jax.Array:
@@ -114,6 +122,32 @@ def histogram(buckets: jax.Array, cfg: AceConfig) -> jax.Array:
     rows = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
     zero = jnp.zeros((L, cfg.num_buckets), dtype=jnp.dtype(cfg.counter_dtype))
     return zero.at[rows, buckets].add(1)
+
+
+def welford_fold(welford_mean: jax.Array, welford_m2: jax.Array,
+                 n: jax.Array, b: jax.Array, tot: jax.Array,
+                 mean_b: jax.Array, m2_b: jax.Array, min_n: float):
+    """Fold one batch's rate statistics into the Welford stream.
+
+    (mean_b, m2_b) are the batch mean / sum-of-squared-deviations of the
+    rates; the cold-start gate (min_n) RESTARTS the stream on the first
+    gated batch — early rates are off-scale and Welford never forgets.
+    Shared by every insert path (single-device, replicated shard_map,
+    table-sharded — repro.dist.sketch_parallel) so their Welford numerics
+    stay identical by construction, not by copy-synced formulas.
+    """
+    delta = mean_b - welford_mean
+    gate = (n >= min_n).astype(jnp.float32)
+    eff_n = jnp.where(gate > 0, n, 0.0)
+    new_mean = jnp.where(
+        gate > 0,
+        welford_mean + delta * b / jnp.maximum(tot, 1.0),
+        mean_b)
+    new_m2 = jnp.where(
+        gate > 0,
+        welford_m2 + m2_b + delta**2 * eff_n * b / jnp.maximum(tot, 1.0),
+        m2_b)
+    return new_mean, new_m2
 
 
 def insert_buckets(state: AceState, buckets: jax.Array,
@@ -130,8 +164,9 @@ def insert_buckets(state: AceState, buckets: jax.Array,
     new_counts = state.counts.at[rows, buckets].add(1)
 
     # Post-insert scores of the batch items (vs the fully updated arrays).
+    # Reciprocal multiply, not `/ L` — see the note in ``lookup``.
     gathered = new_counts[rows, buckets].astype(jnp.float32)   # (B, L)
-    scores = jnp.mean(gathered, axis=-1)                       # (B,)
+    scores = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)  # (B,)
 
     # Welford over collision RATES score/n, not raw scores: raw insert-time
     # scores grow ~linearly with n (item i scores ≈ O(i)), which inflates σ
@@ -143,20 +178,9 @@ def insert_buckets(state: AceState, buckets: jax.Array,
     rates = scores / jnp.maximum(tot, 1.0)
     mean_b = jnp.mean(rates)
     m2_b = jnp.sum((rates - mean_b) ** 2)
-    delta = mean_b - state.welford_mean
-    # cold-start gate: early rates are off-scale; folding them in would
-    # inflate σ permanently (Welford never forgets)
-    gate = (n >= cfg.welford_min_n).astype(jnp.float32)
-    eff_n = jnp.where(gate > 0, n, 0.0)
-    new_mean = jnp.where(
-        gate > 0,
-        state.welford_mean + delta * b / jnp.maximum(tot, 1.0),
-        mean_b)
-    new_m2 = jnp.where(
-        gate > 0,
-        state.welford_m2 + m2_b + delta**2 * eff_n * b
-        / jnp.maximum(tot, 1.0),
-        m2_b)
+    new_mean, new_m2 = welford_fold(
+        state.welford_mean, state.welford_m2, n, b, tot, mean_b, m2_b,
+        cfg.welford_min_n)
 
     return AceState(counts=new_counts, n=tot,
                     welford_mean=new_mean, welford_m2=new_m2)

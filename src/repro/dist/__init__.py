@@ -1,0 +1,29 @@
+"""repro.dist — the single home for distributed ACE.
+
+Layers (each module header says which paper section it implements and which
+execution mode — explicit ``shard_map`` collectives vs plain jit/SPMD — it
+targets):
+
+* ``repro.dist.mesh``           device meshes, logical-axis rules, and the
+                                sharding-rule sets for the sketch pytree
+                                (replicated and table-sharded layouts).
+* ``repro.dist.sketch_parallel`` data-parallel (replicated counts) and
+                                table-sharded (counts split over L) insert /
+                                score / statistics, plus the exact psum merge.
+* ``repro.dist.pipeline``       GPipe-style pipeline parallelism over a
+                                ``pipe`` mesh axis (collective-permute ring).
+* ``repro.dist.hlo_analysis``   compiled-HLO text analysis: collective bytes
+                                by kind, while-loop trip counts.
+* ``repro.dist.roofline``       three-term (compute/HBM/ICI) roofline model
+                                over the dry-run artifacts.
+
+The old import paths ``repro.core.distributed`` and ``repro.launch.mesh``
+remain as thin deprecation shims re-exporting from here.
+"""
+from repro.dist import hlo_analysis, mesh, sketch_parallel  # noqa: F401
+from repro.dist.sketch_parallel import (  # noqa: F401
+    local_histogram, make_shardmap_update, make_table_sharded_mean_mu,
+    make_table_sharded_score, make_table_sharded_update, score_global,
+    sketch_shardings, table_shard_info, table_sharded_mean_mu,
+    table_sharded_shardings, update_global,
+)

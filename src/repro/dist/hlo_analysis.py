@@ -1,0 +1,134 @@
+"""Compiled-HLO text analysis: collective traffic and loop trip counts.
+
+This is the measurement half of the ACE collective story (paper §4 argues
+only *counts of hashes* ever cross the network; this module lets the dry-run
+verify that claim on the actual compiled module).  It supports both
+execution modes: programs built with explicit ``shard_map`` collectives and
+plain jit/SPMD programs where GSPMD inserted the all-reduce — by the time
+XLA is done, both are the same ``all-reduce``/``all-gather``/
+``reduce-scatter`` instructions in the HLO text.
+
+Consumed by ``repro.launch.dryrun`` (per-cell collective schedule recorded
+to JSON) and ``repro.dist.roofline`` (the ICI term of the three-term model).
+Pure string processing — importing this module never touches jax device
+state, so it is safe inside the dry-run's 512-fake-device subprocesses.
+"""
+from __future__ import annotations
+
+import re
+
+# Bits per element for every dtype XLA prints in shape strings.  4-bit and
+# 1-bit (pred is stored as a byte) types round up at the shape level.
+_DTYPE_BITS = {
+    "pred": 8,
+    "s2": 2, "u2": 2, "s4": 4, "u4": 4,
+    "s8": 8, "u8": 8,
+    "s16": 16, "u16": 16, "f16": 16, "bf16": 16,
+    "s32": 32, "u32": 32, "f32": 32,
+    "s64": 64, "u64": 64, "f64": 64,
+    "f8e4m3fn": 8, "f8e5m2": 8, "f8e4m3b11fnuz": 8,
+    "f8e4m3fnuz": 8, "f8e5m2fnuz": 8, "f8e3m4": 8, "f8e4m3": 8,
+    "c64": 64, "c128": 128,
+    "token": 0, "opaque": 0,
+}
+
+_ARRAY_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,\s]*)\]")
+
+# `%name = SHAPE op-kind(...)`.  SHAPE is either a tuple `( ... )` or an
+# array `dtype[dims]{layout}`; the kind may carry an async -start/-done
+# suffix.  Anchoring on `= SHAPE kind(` keeps instruction *names* like
+# `%all-reduce.1 = ...` from matching by themselves.
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z]\w*\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-broadcast|ragged-all-to-all)"
+    r"(?P<suffix>-start|-done)?\s*\(")
+
+
+def _split_tuple(inner: str) -> list[str]:
+    """Split a tuple-shape body on top-level commas only."""
+    parts, depth, cur = [], 0, []
+    for ch in inner:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p for p in (s.strip() for s in parts) if p]
+
+
+def _shape_bytes(shape: str) -> int:
+    """Bytes of an HLO shape string.
+
+    Handles arrays (``bf16[4,8]``), scalars (``f32[]``), layout suffixes
+    (``f32[16]{0}``) and tuples (``(f32[4], s32[2])`` — summed).  Unknown
+    dtypes contribute 0 rather than raising: the parser must survive any
+    HLO text the backend prints.
+    """
+    s = shape.strip()
+    if s.startswith("("):
+        return sum(_shape_bytes(p) for p in _split_tuple(s[1:s.rfind(")")]))
+    m = _ARRAY_SHAPE_RE.match(s)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        d = d.strip()
+        if d:
+            n *= int(d)
+    return (n * _DTYPE_BITS.get(dtype, 0) + 7) // 8
+
+
+def collective_bytes_by_kind(hlo_text: str) -> dict:
+    """Bucket the collective traffic of a compiled module by op kind.
+
+    Returns ``{kind: {"bytes": int, "count": int}, ..., "total_bytes": int}``
+    where kind is the base HLO opcode (``all-reduce``, ``all-gather``,
+    ``reduce-scatter``, ``all-to-all``, ``collective-permute``, ...).
+
+    Bytes are the *result* shape of each op — the per-device payload one
+    issue of the collective moves, which is the quantity the roofline's ICI
+    term wants.  Async pairs count once: ``-start`` carries the bytes (for a
+    tuple-shaped start, the last element — the destination buffer), the
+    matching ``-done`` is skipped.
+    """
+    out: dict = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue
+        shape = m.group("shape")
+        if m.group("suffix") == "-start" and shape.startswith("("):
+            parts = _split_tuple(shape[1:shape.rfind(")")])
+            shape = parts[-1] if parts else shape
+        kind = m.group("kind")
+        slot = out.setdefault(kind, {"bytes": 0, "count": 0})
+        slot["bytes"] += _shape_bytes(shape)
+        slot["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+_TRIP_RE = re.compile(
+    r'known_trip_count[^0-9]{0,16}(\d+)|trip_count[="\s:]{1,4}(\d+)')
+
+
+def while_loop_trip_counts(hlo_text: str) -> list[int]:
+    """Trip counts XLA proved for the module's while loops.
+
+    Backends annotate unrollable loops with ``known_trip_count={n=R}`` (or
+    ``trip_count=R`` in older dumps).  Returns every annotation found, in
+    text order; an empty list just means the backend did not annotate —
+    the dry-run records it as best-effort metadata, never a hard signal.
+    """
+    out = []
+    for m in _TRIP_RE.finditer(hlo_text):
+        out.append(int(m.group(1) or m.group(2)))
+    return out

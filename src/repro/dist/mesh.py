@@ -1,0 +1,185 @@
+"""Device meshes, logical-axis rules, and sketch sharding layouts.
+
+Targets the plain jit/SPMD mode: everything here produces
+``PartitionSpec``/``NamedSharding`` trees that are handed to ``jax.jit``
+(GSPMD inserts the collectives); the explicit shard_map mode lives in
+``repro.dist.sketch_parallel``.  ``make_production_mesh`` is a FUNCTION
+(not a module constant) so importing this module never touches jax device
+state — required because tests and benches run on 1 real device while the
+dry-run forces 512 host devices via XLA_FLAGS before any jax import (see
+launch/dryrun.py).
+
+Sketch layouts (paper §3.3: the sketch is L independent count arrays, so L
+is the natural shard axis once L × 2^K outgrows one device):
+
+* ``replicated``     — every device holds all (L, 2^K) counts; inserts
+                       psum the batch histogram over the data axes.
+* ``table_sharded``  — counts split over L across the ``model``/``tables``
+                       mesh axis; inserts are psum-free on that axis and
+                       scoring needs only one small (B,) psum.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh for subprocess-based sharding tests (8 fake devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def rules_for(mesh, *, long_context: bool = False) -> dict:
+    """Logical-axis -> mesh-axis rules for this mesh.
+
+    long_context (batch=1 decode): batch cannot shard, so the KV-cache
+    SEQUENCE axis takes the data dims (context parallelism) and activations
+    stay replicated on batch.
+
+    The ACE logical axes ride along: ``tables`` (the L axis of the sketch)
+    maps to the tensor-parallel mesh axis — sharding counts over L is the
+    sketch's analogue of sharding heads — and ``buckets`` (the 2^K axis)
+    never shards (bucket ids are data-dependent gather indices).
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    rules = {
+        "batch": None if long_context else batch_axes,
+        "cache_seq": batch_axes if long_context else None,
+        "capacity": batch_axes,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "tables": "model",
+        "buckets": None,
+    }
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Sketch pytree layouts.
+# ---------------------------------------------------------------------------
+
+def sketch_pspecs(layout: str = "replicated", table_axis: str = "model"):
+    """PartitionSpec pytree (AceState-shaped) for a sketch layout.
+
+    Returned as the raw 4-tuple ``(counts, n, welford_mean, welford_m2)``
+    spec so callers can build either ``AceState(*specs)`` or shard_map
+    in/out specs without this module importing ``repro.core`` (keeps the
+    mesh layer dependency-free).
+    """
+    if layout == "replicated":
+        counts = P()
+    elif layout == "table_sharded":
+        counts = P(table_axis, None)
+    else:
+        raise ValueError(f"unknown sketch layout {layout!r} "
+                         "(want 'replicated' or 'table_sharded')")
+    return (counts, P(), P(), P())
+
+
+def sketch_layout_shardings(mesh, layout: str = "replicated",
+                            table_axis: str = "model"):
+    """NamedSharding 4-tuple for ``sketch_pspecs`` on a concrete mesh.
+
+    Returns the raw 4-tuple (counts, n, welford_mean, welford_m2); the
+    AceState-shaped conveniences live in ``repro.dist.sketch_parallel``
+    (``sketch_shardings`` / ``table_sharded_shardings``) — deliberately a
+    different name so the two APIs can't be confused."""
+    return tuple(NamedSharding(mesh, ps)
+                 for ps in sketch_pspecs(layout, table_axis))
+
+
+def named_sharding_tree(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_pspec(ps: P, shape: tuple, mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim.
+
+    E.g. qwen2's 2 KV heads cannot shard over a 16-way "model" axis —
+    Megatron-style GQA replicates KV beyond kv_heads; whisper's 6 heads
+    replicate entirely.  Documented in DESIGN.md §4 (this is policy, not a
+    workaround: uneven sharding would silently pad and waste the mesh).
+    The same rule keeps an L=50 sketch off a 16-way tables axis.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def axis_size(entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for e in entry:
+                n *= sizes[e]
+            return n
+        return sizes[entry]
+
+    out = []
+    for i, entry in enumerate(ps):
+        if i >= len(shape):
+            out.append(None)
+            continue
+        out.append(entry if entry is None
+                   or shape[i] % axis_size(entry) == 0 else None)
+    return P(*out)
+
+
+def apply_fsdp(ps: P, shape: tuple, mesh, axis: str = "data") -> P:
+    """ZeRO-3/FSDP via GSPMD: additionally shard the largest free dim of a
+    parameter over ``axis``.  XLA inserts the per-layer all-gather during
+    compute and the reduce-scatter on gradients — exactly FSDP semantics,
+    composed with the existing "model" (TP) assignments.
+
+    Params stay replicated across "pod" (FSDP within pod; cross-pod
+    traffic stays gradient-only — the standard multi-pod layout).
+    """
+    if axis not in mesh.axis_names:
+        return ps
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes[axis]
+    entries = list(ps) + [None] * (len(shape) - len(ps))
+    # already sharded on `axis` somewhere?
+    for e in entries:
+        parts = e if isinstance(e, (tuple, list)) else (e,)
+        if axis in parts:
+            return ps
+    best, best_dim = 0, -1
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % n == 0 and d > best:
+            best, best_dim = d, i
+    if best_dim < 0:
+        return ps
+    entries[best_dim] = axis
+    return P(*entries)
+
+
+def fsdp_tree(pspec_tree, shape_tree, mesh, axis: str = "data"):
+    """apply_fsdp over a pytree of PartitionSpecs (+ aligned shapes)."""
+    flat_ps, tdef = jax.tree.flatten(
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_shapes = tdef.flatten_up_to(shape_tree)
+    out = [apply_fsdp(ps, tuple(s.shape), mesh, axis)
+           for ps, s in zip(flat_ps, flat_shapes)]
+    return tdef.unflatten(out)
+
+
+def sharding_tree_for(mesh, pspec_tree, shape_tree):
+    """NamedShardings with per-leaf divisibility sanitisation."""
+    flat_ps, tdef = jax.tree.flatten(
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_shapes = tdef.flatten_up_to(shape_tree)
+    out = [NamedSharding(mesh, sanitize_pspec(ps, tuple(s.shape), mesh))
+           for ps, s in zip(flat_ps, flat_shapes)]
+    return tdef.unflatten(out)

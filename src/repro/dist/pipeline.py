@@ -1,0 +1,71 @@
+"""GPipe-style pipeline parallelism over a ``pipe`` mesh axis.
+
+shard_map mode only: each device owns one stage's parameters (leading
+stage dim sharded P("pipe")) and activations hop stage→stage+1 through a
+``ppermute`` ring, the classic bubble schedule — S + M − 1 ticks for S
+stages and M microbatches, bubble fraction (S−1)/(S+M−1).
+
+This is framework plumbing rather than paper math: ACE itself never needs
+pipelining (the sketch is O(MB)), but the models it guards (repro.models)
+do, and the dry-run's collective accounting (repro.dist.hlo_analysis)
+covers the permute traffic this schedule emits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    """Idle fraction of the GPipe schedule: (S−1)/(S+M−1)."""
+    return (num_stages - 1) / (num_stages + num_microbatches - 1)
+
+
+def pipeline_apply(layer_fn, params, x, *, mesh, num_stages: int,
+                   num_microbatches: int, axis: str = "pipe"):
+    """Run ``x`` through ``num_stages`` stages of ``layer_fn`` as a pipeline.
+
+    layer_fn: (stage_params, h) -> h, applied by each device to its stage.
+    params:   pytree whose leaves have a leading stage dim (S, ...).
+    x:        (M, mb, ...) microbatched input, replicated.
+
+    Returns (M, mb, ...) — the output of stage S−1 for every microbatch,
+    replicated (a masked psum broadcasts it off the last device).  Matches
+    the sequential composition of the stages exactly up to float order.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    S, M = num_stages, num_microbatches
+    if x.shape[0] != M:
+        raise ValueError(f"x has {x.shape[0]} microbatches, expected {M}")
+
+    def _stage(local_params, xs):
+        p = jax.tree.map(lambda a: a[0], local_params)   # drop stage dim
+        idx = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % S) for i in range(S)]
+
+        def tick(t, carry):
+            outputs, recv = carry
+            mb = t - idx                                  # my microbatch id
+            mb_c = jnp.clip(mb, 0, M - 1)
+            # stage 0 reads from the input stream, others from the ring
+            x_in = jnp.where(idx == 0, xs[mb_c], recv)
+            y = layer_fn(p, x_in)
+            active = (mb >= 0) & (mb < M)
+            write = active & (idx == S - 1)
+            outputs = outputs.at[mb_c].set(
+                jnp.where(write, y, outputs[mb_c]))
+            sent = jax.lax.ppermute(y, axis, perm)
+            return outputs, sent
+
+        outputs = jnp.zeros_like(xs)
+        outputs, _ = jax.lax.fori_loop(
+            0, M + S - 1, tick, (outputs, jnp.zeros_like(xs[0])))
+        # only the last stage holds real outputs; psum broadcasts them
+        mask = (idx == S - 1).astype(outputs.dtype)
+        return jax.lax.psum(outputs * mask, axis)
+
+    pspec = jax.tree.map(lambda _: P(axis), params)
+    return shard_map(_stage, mesh=mesh, in_specs=(pspec, P()),
+                     out_specs=P(), check_rep=False)(params, x)

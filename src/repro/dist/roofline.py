@@ -1,0 +1,102 @@
+"""Three-term roofline over the dry-run artifacts (jit/SPMD mode only —
+the numbers come from compiled-module analyses, no device ever runs).
+
+Per cell (arch × shape × mesh JSON from repro.launch.dryrun):
+
+    compute_s    = flops / peak_flops          (MXU term)
+    memory_s     = bytes_accessed / hbm_bw     (HBM term)
+    collective_s = collective_bytes / ici_bw   (ICI term, from
+                                                repro.dist.hlo_analysis)
+    bound_s      = max of the three            (the roofline bound)
+
+``useful_ratio`` = compute_s / bound_s is the fraction of the bound spent
+on math — 1.0 means compute-bound, small means the cell ships bytes.
+Scan-corrected totals (the depth-1/depth-2 probe extrapolation recorded
+under ``corrected``) are preferred over the raw single-body analyses.
+
+Hardware constants are TPU v5e per chip: 197 TF/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI (EXPERIMENTS.md §Roofline quotes these alongside the
+generated table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 MXU, TPU v5e
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound_s: float
+    useful_ratio: float
+    dominant: str          # "compute" | "memory" | "collective"
+    note: str
+
+
+def build_row(cell: dict) -> RooflineRow | None:
+    """One dry-run JSON cell -> a RooflineRow (None for failed cells)."""
+    if not cell.get("ok"):
+        return None
+    corr = cell.get("corrected") or {}
+    flops = corr.get("flops", cell.get("flops")) or 0.0
+    bytes_acc = corr.get("bytes_accessed", cell.get("bytes_accessed")) or 0.0
+    coll = corr.get("collectives") or cell.get("collectives") or {}
+    coll_bytes = float(coll.get("total_bytes", 0.0))
+
+    compute_s = max(float(flops), 0.0) / PEAK_FLOPS
+    memory_s = max(float(bytes_acc), 0.0) / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    useful = compute_s / bound_s if bound_s > 0 else 0.0
+
+    kinds = [k for k in coll if k != "total_bytes"]
+    kinds.sort(key=lambda k: -coll[k].get("bytes", 0))
+    note = (f"top collective {kinds[0]}" if kinds and coll_bytes > 0
+            else "no collective traffic")
+    return RooflineRow(
+        arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bound_s=bound_s, useful_ratio=useful, dominant=dominant, note=note)
+
+
+def build_all(results_dir: str) -> list[RooflineRow]:
+    """All rows from ``<results_dir>/*.json``, sorted arch/shape/mesh."""
+    rows = []
+    for name in sorted(os.listdir(results_dir)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(results_dir, name)) as f:
+            row = build_row(json.load(f))
+        if row is not None:
+            rows.append(row)
+    rows.sort(key=lambda r: (r.arch, r.shape, r.mesh))
+    return rows
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    """Markdown table of the three-term model (EXPERIMENTS.md §Roofline)."""
+    out = ["| arch | shape | mesh | compute_s | memory_s | collective_s "
+           "| bound_s | dominant | useful |",
+           "|" + "---|" * 9]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.4f} | "
+            f"{r.memory_s:.4f} | {r.collective_s:.4f} | {r.bound_s:.4f} | "
+            f"{r.dominant} | {r.useful_ratio:.3f} |")
+    if not rows:
+        out.append("| (no dry-run artifacts) | - | - | - | - | - | - | - "
+                   "| - |")
+    return "\n".join(out)

@@ -1,0 +1,323 @@
+"""Distributed ACE sketches: replicated and table-sharded layouts.
+
+Implements the multi-device story of paper §3.3–§3.4 (the sketch is a
+commutative monoid under count addition) and the §4 privacy claim at
+datacenter scale: only counts of hashes ever cross the network, never raw
+data.  Every primitive exists in two execution modes:
+
+1. **shard_map mode** — the ``update_*``/``score_*`` inner functions take
+   explicit ``axis_names`` and issue their own ``psum``; the ``make_*``
+   builders wrap them in ``shard_map`` for standalone use.  This is the
+   mode used inside training steps that are themselves shard_mapped.
+2. **jit/SPMD mode** — call the plain ``repro.core.sketch`` ops on arrays
+   placed with ``sketch_shardings``/``table_sharded_shardings`` and let
+   GSPMD insert the collectives.  This is the mode compiled into
+   ``train_step`` (repro/train/train_loop.py) so the dry-run HLO contains
+   the ACE collective schedule (measured by ``repro.dist.hlo_analysis``).
+
+Two layouts:
+
+* **replicated** (the seed layout, ex ``repro.core.distributed``): every
+  device holds all (L, 2^K) counts.  Each data shard hashes + histograms
+  its local slice of the batch; one psum over the data axes yields the
+  global-batch histogram; every device applies the same dense add.  Counts
+  stay replica-consistent; scoring is a pure map (no collective).
+
+* **table_sharded** (new): counts are split over the L (tables) axis
+  across a ``model``/``tables`` mesh axis, so sketches larger than one
+  device's memory become possible (K=18+, L=200+ — the flow-table capacity
+  regime of Jang et al.).  Because the L arrays are fully independent
+  (paper §3.1: L independent meta-hashes), the schedule is:
+
+    - insert: each shard scatter-adds the histogram slice of its *locally
+      owned tables* — **psum-free** on the tables axis;
+    - score:  local partial sum over L_local tables, then ONE small (B,)
+      float psum, then the /L division — bytes on the wire are 4·B per
+      batch instead of 4·L·2^K;
+    - μ / σ:  per-shard partial sums of Σ‖A_j‖² (Eq. 11 closed form)
+      reduced by a scalar psum.
+
+  All cross-shard reductions sum exactly-representable integers in
+  float32, so table-sharded insert/score/μ are *bitwise identical* to the
+  replicated path (asserted by tests/test_dist_sharded.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig, AceState
+from repro.core.srp import hash_buckets
+from repro.dist.mesh import sketch_pspecs
+
+
+# ---------------------------------------------------------------------------
+# Replicated layout (ex repro.core.distributed).
+# ---------------------------------------------------------------------------
+
+def local_histogram(x: jax.Array, w: jax.Array, cfg: AceConfig) -> jax.Array:
+    """Histogram of the local batch shard: (B_local, d) -> (L, 2^K)."""
+    buckets = hash_buckets(x, w, cfg.srp)
+    return sk.histogram(buckets, cfg)
+
+
+def update_global(state: AceState, x: jax.Array, w: jax.Array,
+                  cfg: AceConfig, axis_names=()) -> AceState:
+    """Insert a (possibly sharded) batch into a replicated sketch.
+
+    Inside shard_map: pass ``axis_names`` to psum the histogram.  Under plain
+    jit/SPMD, call with axis_names=() and let sharding propagation reduce.
+    """
+    hist = local_histogram(x, w, cfg)
+    if axis_names:
+        hist = jax.lax.psum(hist, axis_names)
+    new_counts = state.counts + hist
+
+    # Post-insert scores of the local shard items for Welford (approximate
+    # insert-time stream; exact μ never uses it).
+    buckets = hash_buckets(x, w, cfg.srp)
+    rows = jnp.broadcast_to(
+        jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
+    scores = jnp.sum(new_counts[rows, buckets].astype(jnp.float32), axis=-1) \
+        * jnp.float32(1.0 / cfg.num_tables)
+
+    b_local = jnp.asarray(scores.shape[0], jnp.float32)
+    if axis_names:
+        b_local = jax.lax.psum(b_local, axis_names)
+    n = state.n
+    tot = n + b_local
+    rates = scores / jnp.maximum(tot, 1.0)   # rate stream (see sketch.py)
+    sum_s = jnp.sum(rates)
+    sum_s2 = jnp.sum(rates * rates)
+    if axis_names:
+        sum_s = jax.lax.psum(sum_s, axis_names)
+        sum_s2 = jax.lax.psum(sum_s2, axis_names)
+    mean_b = sum_s / jnp.maximum(b_local, 1.0)
+    m2_b = jnp.maximum(sum_s2 - b_local * mean_b * mean_b, 0.0)
+
+    new_mean, new_m2 = sk.welford_fold(
+        state.welford_mean, state.welford_m2, n, b_local, tot, mean_b, m2_b,
+        cfg.welford_min_n)
+    return AceState(counts=new_counts, n=tot,
+                    welford_mean=new_mean, welford_m2=new_m2)
+
+
+def score_global(state: AceState, q: jax.Array, w: jax.Array,
+                 cfg: AceConfig) -> jax.Array:
+    """Score a sharded query batch against the replicated sketch.
+
+    Pure map — no collective needed (counts are replicated)."""
+    return sk.lookup(state, hash_buckets(q, w, cfg.srp))
+
+
+def make_shardmap_update(mesh, cfg: AceConfig, data_axes=("data",)):
+    """Build a shard_map'd update: batch sharded over ``data_axes``, sketch
+    replicated.  Returned fn: (state, x, w) -> state."""
+    from jax.experimental.shard_map import shard_map
+
+    batch_spec = P(data_axes)
+    rep = P()
+
+    def _upd(state, x, w):
+        return update_global(state, x, w, cfg, axis_names=data_axes)
+
+    return shard_map(
+        _upd, mesh=mesh,
+        in_specs=(AceState(rep, rep, rep, rep), batch_spec, rep),
+        out_specs=AceState(rep, rep, rep, rep),
+        check_rep=False)
+
+
+def sketch_shardings(mesh) -> AceState:
+    """NamedSharding pytree for the replicated sketch under plain jit."""
+    rep = NamedSharding(mesh, P())
+    return AceState(rep, rep, rep, rep)
+
+
+# ---------------------------------------------------------------------------
+# Table-sharded layout: counts split over L across `table_axis`.
+# ---------------------------------------------------------------------------
+
+def table_shard_info(cfg: AceConfig, mesh, table_axis: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if table_axis not in sizes:
+        raise ValueError(f"mesh has no axis {table_axis!r} "
+                         f"(axes: {mesh.axis_names})")
+    shards = sizes[table_axis]
+    if cfg.num_tables % shards != 0:
+        raise ValueError(
+            f"L={cfg.num_tables} tables do not divide over "
+            f"{table_axis}={shards} shards; pick L a multiple of the axis "
+            "(sanitize_pspec would silently fall back to replicated)")
+    return shards
+
+
+def _local_buckets(x: jax.Array, w: jax.Array, cfg: AceConfig,
+                   table_axis: str, num_shards: int):
+    """Bucket ids of this shard's tables: (B, L) hashed, (B, L_local) kept.
+
+    Hashing is ONE lane-padded matmul (see repro.core.srp) — recomputing
+    all L tables' bits on every table shard costs ~1/num_shards of the
+    insert and keeps W replicated (slicing W per shard would fight the
+    128-lane padding); only the bucket *slice* is consumed.
+    """
+    l_local = cfg.num_tables // num_shards
+    buckets = hash_buckets(x, w, cfg.srp)                      # (B, L)
+    start = jax.lax.axis_index(table_axis) * l_local
+    return jax.lax.dynamic_slice_in_dim(buckets, start, l_local, axis=1)
+
+
+def update_table_sharded(state: AceState, x: jax.Array, w: jax.Array,
+                         cfg: AceConfig, *, table_axis: str,
+                         num_shards: int, data_axes=()) -> AceState:
+    """shard_map-mode insert for the table-sharded layout.
+
+    ``state.counts`` is the LOCAL (L_local, 2^K) block; scalars are
+    replicated.  The counts update is psum-free on ``table_axis`` (each
+    shard owns its tables outright); the only collectives are the (B,)
+    float psum for the Welford score stream and, when the batch is also
+    sharded, the histogram psum over ``data_axes``.
+    """
+    l_local = cfg.num_tables // num_shards
+    buckets = _local_buckets(x, w, cfg, table_axis, num_shards)  # (B, Ll)
+    rows = jnp.broadcast_to(
+        jnp.arange(l_local, dtype=jnp.int32)[None, :], buckets.shape)
+
+    if data_axes:
+        zero = jnp.zeros((l_local, cfg.num_buckets),
+                         dtype=jnp.dtype(cfg.counter_dtype))
+        hist = zero.at[rows, buckets].add(1)
+        hist = jax.lax.psum(hist, data_axes)
+        new_counts = state.counts + hist
+    else:
+        new_counts = state.counts.at[rows, buckets].add(1)
+
+    # Post-insert scores: local partial sum over owned tables, one (B,)
+    # psum, then the same /L mean as sketch.insert_buckets.  All summands
+    # are integer-valued float32 (< 2^24), so this matches the replicated
+    # jnp.mean bitwise.
+    partial = jnp.sum(new_counts[rows, buckets].astype(jnp.float32), axis=-1)
+    total = jax.lax.psum(partial, table_axis)                   # (B,)
+    scores = total * jnp.float32(1.0 / cfg.num_tables)
+
+    b = jnp.asarray(scores.shape[0], jnp.float32)
+    if data_axes:
+        b = jax.lax.psum(b, data_axes)
+    n = state.n
+    tot = n + b
+    rates = scores / jnp.maximum(tot, 1.0)
+    if data_axes:
+        sum_s = jax.lax.psum(jnp.sum(rates), data_axes)
+        mean_b = sum_s / jnp.maximum(b, 1.0)
+        m2_b = jax.lax.psum(jnp.sum((rates - mean_b) ** 2), data_axes)
+    else:
+        # exact batch-stat order of sketch.insert_buckets -> bitwise parity
+        mean_b = jnp.mean(rates)
+        m2_b = jnp.sum((rates - mean_b) ** 2)
+    new_mean, new_m2 = sk.welford_fold(
+        state.welford_mean, state.welford_m2, n, b, tot, mean_b, m2_b,
+        cfg.welford_min_n)
+    return AceState(counts=new_counts, n=tot,
+                    welford_mean=new_mean, welford_m2=new_m2)
+
+
+def score_table_sharded(state: AceState, q: jax.Array, w: jax.Array,
+                        cfg: AceConfig, *, table_axis: str,
+                        num_shards: int) -> jax.Array:
+    """shard_map-mode Ŝ(q, D): local partial-mean + one (B,) psum.
+
+    4·B bytes cross ``table_axis`` per call — independent of K and L, which
+    is what makes the K=18+/L=200+ regime servable."""
+    buckets = _local_buckets(q, w, cfg, table_axis, num_shards)
+    l_local = cfg.num_tables // num_shards
+    rows = jnp.broadcast_to(
+        jnp.arange(l_local, dtype=jnp.int32)[None, :], buckets.shape)
+    partial = jnp.sum(state.counts[rows, buckets].astype(jnp.float32),
+                      axis=-1)
+    # same literal reciprocal constant as sketch.lookup (bitwise parity)
+    return jax.lax.psum(partial, table_axis) \
+        * jnp.float32(1.0 / cfg.num_tables)
+
+
+def mean_mu_table_sharded(state: AceState, cfg: AceConfig, *,
+                          table_axis: str) -> jax.Array:
+    """Exact μ (Eq. 11 closed form) from per-shard partial Σ‖A_j‖²."""
+    c = state.counts.astype(jnp.float32)
+    ssq = jax.lax.psum(jnp.sum(c * c), table_axis)
+    return ssq / (jnp.maximum(state.n, 1.0) * cfg.num_tables)
+
+
+def _table_sharded_specs(table_axis: str) -> AceState:
+    return AceState(*(sketch_pspecs("table_sharded", table_axis)))
+
+
+def make_table_sharded_update(mesh, cfg: AceConfig, *,
+                              table_axis: str = "model", data_axes=()):
+    """Build a shard_map'd table-sharded insert: (state, x, w) -> state.
+
+    ``state.counts`` carries P(table_axis, None); the batch is sharded over
+    ``data_axes`` when given, else replicated across the mesh."""
+    from jax.experimental.shard_map import shard_map
+
+    shards = table_shard_info(cfg, mesh, table_axis)
+    st = _table_sharded_specs(table_axis)
+    xspec = P(data_axes) if data_axes else P()
+
+    def _upd(state, x, w):
+        return update_table_sharded(state, x, w, cfg, table_axis=table_axis,
+                                    num_shards=shards, data_axes=data_axes)
+
+    return shard_map(_upd, mesh=mesh, in_specs=(st, xspec, P()),
+                     out_specs=st, check_rep=False)
+
+
+def make_table_sharded_score(mesh, cfg: AceConfig, *,
+                             table_axis: str = "model"):
+    """Build a shard_map'd table-sharded score: (state, q, w) -> (B,)."""
+    from jax.experimental.shard_map import shard_map
+
+    shards = table_shard_info(cfg, mesh, table_axis)
+    st = _table_sharded_specs(table_axis)
+
+    def _scr(state, q, w):
+        return score_table_sharded(state, q, w, cfg, table_axis=table_axis,
+                                   num_shards=shards)
+
+    return shard_map(_scr, mesh=mesh, in_specs=(st, P(), P()),
+                     out_specs=P(), check_rep=False)
+
+
+def make_table_sharded_mean_mu(mesh, cfg: AceConfig, *,
+                               table_axis: str = "model"):
+    """Build a shard_map'd exact-μ: (state,) -> scalar."""
+    from jax.experimental.shard_map import shard_map
+
+    table_shard_info(cfg, mesh, table_axis)
+    st = _table_sharded_specs(table_axis)
+
+    def _mu(state):
+        return mean_mu_table_sharded(state, cfg, table_axis=table_axis)
+
+    return shard_map(_mu, mesh=mesh, in_specs=(st,), out_specs=P(),
+                     check_rep=False)
+
+
+def table_sharded_mean_mu(mesh, cfg: AceConfig, state: AceState,
+                          table_axis: str = "model") -> jax.Array:
+    """Convenience one-shot exact μ of a table-sharded (global) state."""
+    return make_table_sharded_mean_mu(mesh, cfg, table_axis=table_axis)(state)
+
+
+def table_sharded_shardings(mesh, table_axis: str = "model") -> AceState:
+    """NamedSharding pytree placing a GLOBAL AceState table-sharded.
+
+    Use with ``jax.device_put(sk.init(cfg), table_sharded_shardings(mesh))``
+    — the global (L, 2^K) counts array is split over ``table_axis`` rows;
+    ``merge``/checkpointing keep working on the global view unchanged
+    (jit/SPMD mode), while the ``make_table_sharded_*`` fns consume the
+    same placement in shard_map mode.
+    """
+    return AceState(*(NamedSharding(mesh, ps)
+                      for ps in sketch_pspecs("table_sharded", table_axis)))

@@ -40,8 +40,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.hlo_analysis import (collective_bytes_by_kind,
                                      while_loop_trip_counts)
-from repro.launch.mesh import (fsdp_tree, make_production_mesh, rules_for,
-                               sanitize_pspec, sharding_tree_for)
+from repro.dist.mesh import (fsdp_tree, make_production_mesh, rules_for,
+                             sanitize_pspec, sharding_tree_for)
 from repro.models import transformer as tf
 from repro.models import whisper as wh
 from repro.models.common import logical_to_pspec, set_rules
@@ -88,6 +88,14 @@ def _reconcile(spec, shapes):
 
 def _replicated_like(tree):
     return jax.tree.map(lambda _: P(), tree)
+
+
+def _cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() normalised: jax<=0.4 returns [dict]."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
 
 
 @dataclasses.dataclass
@@ -228,7 +236,8 @@ def _lower_cell(arch: Arch, shape, mesh, rules, long_ctx: bool,
         grad_ps = jax.tree.map(
             lambda sh: sh.spec, param_sh,
             is_leaf=lambda x: hasattr(x, "spec"))
-        step = make_train_step(arch, tcfg, grad_pspecs=grad_ps)
+        step = make_train_step(arch, tcfg, grad_pspecs=grad_ps,
+                               sketch_layout="replicated")
         return jax.jit(step, in_shardings=(state_sh, batch_sh),
                        out_shardings=(state_sh, None),
                        donate_argnums=(0,)).lower(state_shapes, in_specs)
@@ -287,7 +296,7 @@ def probe_costs(arch_name: str, shape_name: str, mesh, rules,
         with jax.set_mesh(mesh):
             lowered = _lower_cell(arch, shape, mesh, rules, long_ctx, policy)
             compiled = lowered.compile()
-            cost = compiled.cost_analysis()
+            cost = _cost_analysis(compiled)
             coll = collective_bytes_by_kind(compiled.as_text())
         results.append({"flops": float(cost.get("flops", 0.0)),
                         "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -336,7 +345,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool) -> CellResult:
             lowered = _lower_cell(arch, shape, mesh, rules, long_ctx, policy)
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _cost_analysis(compiled)
             hlo = compiled.as_text()
             coll = collective_bytes_by_kind(hlo)
             trips = while_loop_trip_counts(hlo)

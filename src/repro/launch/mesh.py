@@ -1,130 +1,8 @@
-"""Production mesh + logical-axis rule sets.
-
-``make_production_mesh`` is a FUNCTION (not a module constant) so importing
-this module never touches jax device state — required because tests and
-benches run on 1 real device while the dry-run forces 512 host devices via
-XLA_FLAGS before any jax import (see launch/dryrun.py).
+"""Deprecated shim — mesh construction and sharding rules moved to
+``repro.dist.mesh`` (PR: repro.dist subsystem).  Import from there; this
+module re-exports for older callers and will be removed.
 """
-from __future__ import annotations
-
-import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None):
-    """Small mesh for subprocess-based sharding tests (8 fake devices)."""
-    if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
-    return jax.make_mesh((data, model), ("data", "model"))
-
-
-def rules_for(mesh, *, long_context: bool = False) -> dict:
-    """Logical-axis -> mesh-axis rules for this mesh.
-
-    long_context (batch=1 decode): batch cannot shard, so the KV-cache
-    SEQUENCE axis takes the data dims (context parallelism) and activations
-    stay replicated on batch.
-    """
-    has_pod = "pod" in mesh.axis_names
-    batch_axes = ("pod", "data") if has_pod else ("data",)
-    rules = {
-        "batch": None if long_context else batch_axes,
-        "cache_seq": batch_axes if long_context else None,
-        "capacity": batch_axes,
-        "heads": "model",
-        "kv_heads": "model",
-        "ff": "model",
-        "vocab": "model",
-    }
-    return rules
-
-
-def named_sharding_tree(mesh, pspec_tree):
-    return jax.tree.map(
-        lambda ps: NamedSharding(mesh, ps), pspec_tree,
-        is_leaf=lambda x: isinstance(x, P))
-
-
-def sanitize_pspec(ps: P, shape: tuple, mesh) -> P:
-    """Drop mesh axes that do not divide the corresponding dim.
-
-    E.g. qwen2's 2 KV heads cannot shard over a 16-way "model" axis —
-    Megatron-style GQA replicates KV beyond kv_heads; whisper's 6 heads
-    replicate entirely.  Documented in DESIGN.md §4 (this is policy, not a
-    workaround: uneven sharding would silently pad and waste the mesh).
-    """
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-
-    def axis_size(entry) -> int:
-        if entry is None:
-            return 1
-        if isinstance(entry, (tuple, list)):
-            n = 1
-            for e in entry:
-                n *= sizes[e]
-            return n
-        return sizes[entry]
-
-    out = []
-    for i, entry in enumerate(ps):
-        if i >= len(shape):
-            out.append(None)
-            continue
-        out.append(entry if entry is None
-                   or shape[i] % axis_size(entry) == 0 else None)
-    return P(*out)
-
-
-def apply_fsdp(ps: P, shape: tuple, mesh, axis: str = "data") -> P:
-    """ZeRO-3/FSDP via GSPMD: additionally shard the largest free dim of a
-    parameter over ``axis``.  XLA inserts the per-layer all-gather during
-    compute and the reduce-scatter on gradients — exactly FSDP semantics,
-    composed with the existing "model" (TP) assignments.
-
-    Params stay replicated across "pod" (FSDP within pod; cross-pod
-    traffic stays gradient-only — the standard multi-pod layout).
-    """
-    if axis not in mesh.axis_names:
-        return ps
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    n = sizes[axis]
-    entries = list(ps) + [None] * (len(shape) - len(ps))
-    # already sharded on `axis` somewhere?
-    for e in entries:
-        parts = e if isinstance(e, (tuple, list)) else (e,)
-        if axis in parts:
-            return ps
-    best, best_dim = 0, -1
-    for i, (e, d) in enumerate(zip(entries, shape)):
-        if e is None and d % n == 0 and d > best:
-            best, best_dim = d, i
-    if best_dim < 0:
-        return ps
-    entries[best_dim] = axis
-    return P(*entries)
-
-
-def fsdp_tree(pspec_tree, shape_tree, mesh, axis: str = "data"):
-    """apply_fsdp over a pytree of PartitionSpecs (+ aligned shapes)."""
-    flat_ps, tdef = jax.tree.flatten(
-        pspec_tree, is_leaf=lambda x: isinstance(x, P))
-    flat_shapes = tdef.flatten_up_to(shape_tree)
-    out = [apply_fsdp(ps, tuple(s.shape), mesh, axis)
-           for ps, s in zip(flat_ps, flat_shapes)]
-    return tdef.unflatten(out)
-
-
-def sharding_tree_for(mesh, pspec_tree, shape_tree):
-    """NamedShardings with per-leaf divisibility sanitisation."""
-    flat_ps, tdef = jax.tree.flatten(
-        pspec_tree, is_leaf=lambda x: isinstance(x, P))
-    flat_shapes = tdef.flatten_up_to(shape_tree)
-    out = [NamedSharding(mesh, sanitize_pspec(ps, tuple(s.shape), mesh))
-           for ps, s in zip(flat_ps, flat_shapes)]
-    return tdef.unflatten(out)
+from repro.dist.mesh import (  # noqa: F401
+    apply_fsdp, fsdp_tree, make_debug_mesh, make_production_mesh,
+    named_sharding_tree, rules_for, sanitize_pspec, sharding_tree_for,
+)

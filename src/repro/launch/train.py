@@ -53,10 +53,10 @@ def main() -> None:
 
     ctx = None
     if args.mesh:
+        from repro.dist.mesh import make_debug_mesh, rules_for
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"))
-        set_rules({"batch": ("data",), "heads": "model",
-                   "kv_heads": "model", "ff": "model", "vocab": "model"})
+        mesh = make_debug_mesh(data=d, model=m)
+        set_rules(rules_for(mesh))
         ctx = jax.set_mesh(mesh)
         ctx.__enter__()
     try:

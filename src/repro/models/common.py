@@ -25,6 +25,30 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
+@jax.custom_vjp
+def opt_barrier(tree):
+    """``jax.lax.optimization_barrier`` that stays differentiable.
+
+    jax<0.5 has no differentiation rules for the barrier primitive; this
+    wrapper supplies the upstream behaviour (barrier the primal on the way
+    forward, the cotangent on the way back) so remat'd scans keep their
+    anti-hoisting barrier under grad on the pinned 0.4.x line and behave
+    identically on newer jax.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+def _opt_barrier_fwd(tree):
+    return opt_barrier(tree), None
+
+
+def _opt_barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # Logical-axis sharding rules
 # ---------------------------------------------------------------------------

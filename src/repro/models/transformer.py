@@ -24,7 +24,8 @@ from repro.models import mamba as mb
 from repro.models import mlp as mlp_mod
 from repro.models import rwkv6 as rw
 from repro.models.common import (KeyGen, ModelConfig, apply_norm, dense_init,
-                                 init_norm, logical_to_pspec, shard, softcap)
+                                 init_norm, logical_to_pspec, opt_barrier,
+                                 shard, softcap)
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +262,7 @@ def forward(params, batch, cfg: ModelConfig, remat: bool = True,
         # barrier: stops XLA hoisting the per-iteration FSDP all-gather /
         # bf16 cast of the whole stacked weights out of the loop (which
         # would materialise every layer's gathered weights at once).
-        layer_p = jax.lax.optimization_barrier(layer_p)
+        layer_p = opt_barrier(layer_p)
         x, aux_acc = carry
         for pos, kind in enumerate(cfg.block_pattern):
             use_moe = _layer_has_moe(cfg, pos) and kind != "rwkv"
@@ -355,7 +356,7 @@ def prefill(params, batch, cfg: ModelConfig, s_max: int | None = None):
         if cfg.block_pattern != ("rwkv",) else None
 
     def superblock(x, layer_p):
-        layer_p = jax.lax.optimization_barrier(layer_p)
+        layer_p = opt_barrier(layer_p)
         caches = []
         for pos, kind in enumerate(cfg.block_pattern):
             use_moe = _layer_has_moe(cfg, pos) and kind != "rwkv"
@@ -392,7 +393,7 @@ def decode_step(params, batch, cache, pos, cfg: ModelConfig):
 
     def superblock(x, scanned):
         layer_p, layer_c = scanned
-        layer_p = jax.lax.optimization_barrier(layer_p)
+        layer_p = opt_barrier(layer_p)
         new_caches = []
         for p_idx, kind in enumerate(cfg.block_pattern):
             use_moe = _layer_has_moe(cfg, p_idx) and kind != "rwkv"

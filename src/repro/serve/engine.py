@@ -28,9 +28,19 @@ class GuardrailConfig:
 
 
 class Guardrail:
-    """ACE admission filter over request embeddings (stateful host wrapper)."""
+    """ACE admission filter over request embeddings (stateful host wrapper).
 
-    def __init__(self, gcfg: GuardrailConfig):
+    With a ``mesh``, the sketch state is placed via ``repro.dist``:
+    ``sketch_layout="replicated"`` mirrors the counts on every device (the
+    default single-device behaviour, scaled out), while ``"table_sharded"``
+    splits the (L, 2^K) counts over the L axis across ``table_axis`` —
+    jit/SPMD mode of repro.dist.sketch_parallel — so guardrail sketches
+    beyond one device's memory (K=18+, L=200+) stay servable.
+    """
+
+    def __init__(self, gcfg: GuardrailConfig, *, mesh=None,
+                 sketch_layout: str = "replicated",
+                 table_axis: str = "model"):
         self.gcfg = gcfg
         self.ace_cfg = AceConfig(dim=gcfg.d_model + 1,
                                  num_bits=gcfg.num_bits,
@@ -38,6 +48,20 @@ class Guardrail:
                                  welford_min_n=gcfg.warmup_items / 2)
         self.state = sk.init(self.ace_cfg)
         self.w = sk.make_params(self.ace_cfg)
+        if mesh is not None:
+            from repro.dist.sketch_parallel import (
+                table_shard_info, sketch_shardings,
+                table_sharded_shardings)
+            if sketch_layout == "table_sharded":
+                table_shard_info(self.ace_cfg, mesh, table_axis)
+                sh = table_sharded_shardings(mesh, table_axis)
+            elif sketch_layout == "replicated":
+                sh = sketch_shardings(mesh)
+            else:
+                raise ValueError(
+                    f"unknown sketch layout {sketch_layout!r} "
+                    "(want 'replicated' or 'table_sharded')")
+            self.state = jax.device_put(self.state, sh)
 
     def _features(self, embeds: jax.Array) -> jax.Array:
         """Unit-normalised mean embedding + bias coordinate.

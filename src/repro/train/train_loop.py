@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch as sk
+from repro.core.sketch import AceState
 from repro.data.pipeline import AceDataFilter, DataStream, StreamConfig
+from repro.dist.mesh import sketch_pspecs
 from repro.models.registry import Arch, is_whisper
 from repro.train import checkpoint as ckpt_lib
 from repro.train.compression import (EfState, compress_grads_with_ef,
@@ -79,14 +81,23 @@ def init_train_state(arch: Arch, tcfg: TrainConfig, key) -> TrainState:
                       rng=jax.random.PRNGKey(tcfg.seed))
 
 
-def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None):
+def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
+                    sketch_layout: str | None = None):
     """Builds the pure train step.  (state, batch) -> (state, metrics).
 
     grad_pspecs: optional PartitionSpec pytree (params structure).  When
     given, every microbatch's gradients are constrained to the params'
     (FSDP) sharding INSIDE the accumulation loop, so XLA emits per-layer
     reduce-scatters instead of full-size all-reduces — ZeRO-2 gradient
-    sharding (§Perf iteration B1)."""
+    sharding (§Perf iteration B1).
+
+    sketch_layout: optional ACE sketch layout name ("replicated" or
+    "table_sharded", see repro.dist.mesh.sketch_pspecs).  When given, the
+    data-filter and grad-monitor sketch states are sharding-constrained to
+    that layout inside the step — jit/SPMD mode of
+    repro.dist.sketch_parallel; GSPMD then inserts the histogram psum
+    (replicated) or keeps the counts split over the tables axis
+    (table_sharded, for monitor sketches past one device's memory)."""
     cfg = arch.cfg
     opt = make_optimizer(tcfg.optimizer)
     sched = CosineSchedule(peak_lr=tcfg.peak_lr,
@@ -96,6 +107,15 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None):
         if tcfg.use_grad_monitor else None
     filt = AceDataFilter(d_model=cfg.d_model) \
         if tcfg.use_data_filter else None
+
+    def constrain_sketch(st):
+        """Pin an AceState to the requested repro.dist layout (no-op when
+        sketch_layout is None or the state is absent)."""
+        if sketch_layout is None or st is None:
+            return st
+        return AceState(*(jax.lax.with_sharding_constraint(leaf, ps)
+                          for leaf, ps in zip(st, sketch_pspecs(
+                              sketch_layout))))
 
     def embeddings_of(params, batch):
         if "embeds" in batch:
@@ -124,6 +144,7 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None):
             embeds = embeddings_of(params, batch)
             filter_state, new_mask, kept = filt(
                 state.filter_state, state.filter_w, embeds, mask)
+            filter_state = constrain_sketch(filter_state)
             batch = dict(batch, mask=new_mask)
             metrics["filter_keep_frac"] = kept
 
@@ -186,6 +207,7 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None):
         if gm is not None:
             monitor, is_anom, score = gm.step(state.monitor, state.monitor_w,
                                               grads, loss)
+            monitor = monitor._replace(ace=constrain_sketch(monitor.ace))
             metrics["grad_anomaly"] = is_anom.astype(jnp.float32)
             metrics["grad_score"] = score
             new_params, new_opt = jax.tree.map(

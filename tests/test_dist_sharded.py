@@ -1,0 +1,255 @@
+"""Table-sharded sketch parity: the repro.dist.sketch_parallel
+table-sharded layout must agree EXACTLY (counts, scores, μ, Welford σ
+stream) with the single-device replicated path — every cross-shard
+reduction sums exactly-representable integers in float32, so the match is
+bitwise, not approximate.  Runs on a 1×2 CPU mesh of fake devices via
+subprocess (the main test process must keep seeing 1 device — see
+launch/dryrun.py's contract)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 2, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+class TestTableShardedParity:
+    def test_insert_score_mu_bitwise_match_replicated(self):
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core import sketch as sk
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import (
+                make_table_sharded_mean_mu, make_table_sharded_score,
+                make_table_sharded_update, table_sharded_shardings)
+
+            cfg = AceConfig(dim=8, num_bits=6, num_tables=10, seed=0)
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            w = sk.make_params(cfg)
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+            q = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+
+            ref = sk.insert(sk.init(cfg), w, x, cfg)
+            ref_scores = sk.score(ref, w, q, cfg)
+
+            upd = make_table_sharded_update(mesh, cfg)
+            scr = make_table_sharded_score(mesh, cfg)
+            mu_fn = make_table_sharded_mean_mu(mesh, cfg)
+            with jax.set_mesh(mesh):
+                state = jax.device_put(sk.init(cfg),
+                                       table_sharded_shardings(mesh))
+                out = upd(state, x, w)
+                scores = scr(out, q, w)
+                mu = mu_fn(out)
+
+            assert bool(jnp.all(jnp.asarray(out.counts)
+                                == ref.counts)), "counts differ"
+            assert bool(jnp.all(jnp.asarray(scores)
+                                == ref_scores)), "scores differ"
+            assert float(mu) == float(sk.mean_mu(ref)), "mu differs"
+            assert float(out.n) == float(ref.n)
+            # the Welford scalars are reassociation-sensitive (fast-math);
+            # the contract there is tight-tolerance, not bitwise
+            np.testing.assert_allclose(float(out.welford_mean),
+                                       float(ref.welford_mean), rtol=1e-6)
+            np.testing.assert_allclose(float(out.welford_m2),
+                                       float(ref.welford_m2), rtol=1e-6)
+            print("PARITY_OK", float(mu))
+        """)
+        assert "PARITY_OK" in out
+
+    def test_second_insert_batch_keeps_parity(self):
+        """The Welford stream stays bitwise-equal across multiple batches
+        (n > 0 path of the cold-start gate)."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core import sketch as sk
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import (
+                make_table_sharded_update, table_sharded_shardings)
+
+            cfg = AceConfig(dim=8, num_bits=5, num_tables=8, seed=1,
+                            welford_min_n=16.0)
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            w = sk.make_params(cfg)
+            rng = np.random.default_rng(1)
+            xs = [jnp.asarray(rng.normal(size=(48, 8)), jnp.float32)
+                  for _ in range(3)]
+
+            ref = sk.init(cfg)
+            for x in xs:
+                ref = sk.insert(ref, w, x, cfg)
+
+            upd = make_table_sharded_update(mesh, cfg)
+            with jax.set_mesh(mesh):
+                st = jax.device_put(sk.init(cfg),
+                                    table_sharded_shardings(mesh))
+                for x in xs:
+                    st = upd(st, x, w)
+            assert bool(jnp.all(jnp.asarray(st.counts) == ref.counts))
+            np.testing.assert_allclose(float(st.welford_mean),
+                                       float(ref.welford_mean), rtol=1e-6)
+            np.testing.assert_allclose(float(st.welford_m2),
+                                       float(ref.welford_m2), rtol=1e-6)
+            np.testing.assert_allclose(float(sk.sigma_welford(st)),
+                                       float(sk.sigma_welford(ref)),
+                                       rtol=1e-6)
+            print("STREAM_OK")
+        """)
+        assert "STREAM_OK" in out
+
+    def test_merge_exact_across_layouts(self):
+        """merge (the CRDT count addition + Chan Welford rule) gives the
+        same sketch whether its inputs are replicated or table-sharded."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core import sketch as sk
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import (
+                make_table_sharded_update, table_sharded_shardings)
+
+            cfg = AceConfig(dim=6, num_bits=5, num_tables=6, seed=2)
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            w = sk.make_params(cfg)
+            rng = np.random.default_rng(2)
+            xa = jnp.asarray(rng.normal(size=(40, 6)), jnp.float32)
+            xb = jnp.asarray(rng.normal(size=(24, 6)), jnp.float32)
+
+            ra = sk.insert(sk.init(cfg), w, xa, cfg)
+            rb = sk.insert(sk.init(cfg), w, xb, cfg)
+            ref = sk.merge(ra, rb)
+
+            upd = make_table_sharded_update(mesh, cfg)
+            with jax.set_mesh(mesh):
+                sh = table_sharded_shardings(mesh)
+                sa = upd(jax.device_put(sk.init(cfg), sh), xa, w)
+                sb = upd(jax.device_put(sk.init(cfg), sh), xb, w)
+                merged = jax.jit(sk.merge)(sa, sb)
+            assert bool(jnp.all(jnp.asarray(merged.counts) == ref.counts))
+            assert float(merged.n) == float(ref.n)
+            np.testing.assert_allclose(float(merged.welford_mean),
+                                       float(ref.welford_mean), rtol=1e-6)
+            np.testing.assert_allclose(float(merged.welford_m2),
+                                       float(ref.welford_m2), rtol=1e-6)
+            assert float(sk.mean_mu(merged)) == float(sk.mean_mu(ref))
+            print("MERGE_OK")
+        """)
+        assert "MERGE_OK" in out
+
+    def test_spmd_mode_placement_stays_exact(self):
+        """jit/SPMD mode: plain repro.core.sketch ops on a table-sharded
+        placement produce the replicated results (GSPMD inserts the
+        collectives)."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.core import sketch as sk
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import table_sharded_shardings
+
+            cfg = AceConfig(dim=8, num_bits=6, num_tables=10, seed=0)
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            w = sk.make_params(cfg)
+            x = jnp.asarray(
+                np.random.default_rng(0).normal(size=(64, 8)), jnp.float32)
+            ref = sk.insert(sk.init(cfg), w, x, cfg)
+            with jax.set_mesh(mesh):
+                st = jax.device_put(sk.init(cfg),
+                                    table_sharded_shardings(mesh))
+                out = sk.insert(st, w, x, cfg)
+                scores = sk.score(out, w, x, cfg)
+            assert bool(jnp.all(jnp.asarray(out.counts) == ref.counts))
+            ref_scores = sk.score(ref, w, x, cfg)
+            np.testing.assert_allclose(np.asarray(scores),
+                                       np.asarray(ref_scores), rtol=1e-6)
+            print("SPMD_OK")
+        """)
+        assert "SPMD_OK" in out
+
+
+class TestTrainStepSketchLayout:
+    def test_table_sharded_monitor_in_train_step(self):
+        """make_train_step(sketch_layout="table_sharded") compiles and runs:
+        the ACE data-filter and grad-monitor sketch states are constrained
+        over the tables axis inside the step (jit/SPMD mode)."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.models.common import set_rules
+            from repro.models.registry import Arch
+            from repro.train.train_loop import (TrainConfig,
+                                                init_train_state,
+                                                make_train_step)
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            set_rules({"batch": ("data",), "heads": "model",
+                       "kv_heads": "model", "ff": "model",
+                       "vocab": "model"})
+            a = Arch("olmo_1b", reduced=True)
+            tcfg = TrainConfig(use_data_filter=True, use_grad_monitor=True,
+                               warmup_steps=1, peak_lr=1e-3)
+            with jax.set_mesh(mesh):
+                state = init_train_state(a, tcfg, jax.random.PRNGKey(0))
+                step = jax.jit(make_train_step(
+                    a, tcfg, sketch_layout="table_sharded"))
+                rng = np.random.default_rng(0)
+                batch = {"tokens": jnp.asarray(
+                             rng.integers(0, 512, (4, 16)), jnp.int32),
+                         "labels": jnp.asarray(
+                             rng.integers(0, 512, (4, 16)), jnp.int32)}
+                for _ in range(2):
+                    state, metrics = step(state, batch)
+            assert np.isfinite(float(metrics["loss"]))
+            assert float(state.monitor.ace.n) > 0   # monitor inserted
+            print("LAYOUT_TRAIN_OK", float(metrics["loss"]))
+        """)
+        assert "LAYOUT_TRAIN_OK" in out
+
+
+class TestValidation:
+    def test_indivisible_tables_raise(self):
+        """L must divide over the tables axis — no silent padding."""
+        out = run_py("""
+            import jax
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import make_table_sharded_update
+
+            cfg = AceConfig(dim=4, num_bits=4, num_tables=9, seed=0)
+            mesh = jax.make_mesh((1, 2), ("data", "model"))
+            try:
+                make_table_sharded_update(mesh, cfg)
+            except ValueError as e:
+                assert "9" in str(e)
+                print("RAISED_OK")
+        """)
+        assert "RAISED_OK" in out
+
+    def test_missing_axis_raises(self):
+        out = run_py("""
+            import jax
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import make_table_sharded_score
+
+            cfg = AceConfig(dim=4, num_bits=4, num_tables=8, seed=0)
+            mesh = jax.make_mesh((2,), ("data",))
+            try:
+                make_table_sharded_score(mesh, cfg, table_axis="tables")
+            except ValueError as e:
+                assert "tables" in str(e)
+                print("RAISED_OK")
+        """)
+        assert "RAISED_OK" in out

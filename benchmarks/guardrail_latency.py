@@ -1,0 +1,203 @@
+"""Guardrail admission latency: pre-PR host-sync path vs device-resident.
+
+Measures per-batch ``admit`` wall time (p50/p99) and the number of XLA
+compiles each path triggers while the admitted count varies batch to
+batch.  The legacy path (reproduced verbatim below) syncs n/σ to the
+host, hashes every batch twice, and retraces on each distinct
+admitted-count because of the data-dependent ``kept`` gather; the
+device-resident path is one fixed-shape jitted program whose only host
+transfer is the returned mask.
+
+Compiles are counted with a ``jax.monitoring`` duration-event hook on
+``/jax/core/compile/backend_compile_duration`` (one event per XLA
+executable built).
+
+Emits a ``BENCH_guardrail.json`` next to the CWD so the perf trajectory
+has machine-readable data points.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.guardrail_latency [--smoke]
+
+``--smoke`` shrinks K/L/batch for CI and additionally drives the fused
+Pallas kernel path (``use_kernels=True`` under ``interpret=True``),
+asserting it agrees with the reference path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.monitoring
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.serve.engine import Guardrail, GuardrailConfig
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_count = [0]
+_listener_installed = [False]
+
+
+def _install_compile_counter():
+    if _listener_installed[0]:
+        return
+    def _on_event(name, secs, **kw):  # noqa: ANN001
+        if name == _COMPILE_EVENT:
+            _compile_count[0] += 1
+    jax.monitoring.register_event_duration_secs_listener(_on_event)
+    _listener_installed[0] = True
+
+
+def _admit_legacy(g: Guardrail, embeds: jax.Array) -> np.ndarray:
+    """The pre-PR Guardrail.admit, kept here as the benchmark baseline:
+    host round-trips (np.asarray(scores), float(n)), a second hash of the
+    admitted gather, and a per-admitted-count retrace."""
+    feat = g._features(embeds)
+    scores = sk.score(g.state, g.w, feat, g.ace_cfg)
+    rates = scores / max(float(g.state.n), 1.0)
+    mu_rate = sk.mean_rate(g.state)
+    sigma = sk.sigma_welford(g.state)
+    armed = float(g.state.n) >= g.gcfg.warmup_items
+    if armed:
+        admit = np.asarray(rates >= mu_rate - g.gcfg.alpha * sigma)
+    else:
+        admit = np.ones(feat.shape[0], bool)
+    kept = jnp.asarray(np.where(admit)[0], jnp.int32)
+    if kept.size:
+        g.state = sk.insert_buckets(
+            g.state, sk.hash_buckets(feat[kept], g.w, g.ace_cfg.srp),
+            g.ace_cfg)
+    return admit
+
+
+def _make_batches(n_batches: int, batch: int, seq: int, d_model: int,
+                  seed: int = 0) -> list[np.ndarray]:
+    """Request-embedding batches with a varying OOD fraction, so the
+    admitted count changes batch to batch (the legacy path's retrace
+    trigger)."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=d_model)
+    out = []
+    for i in range(n_batches):
+        e = rng.normal(size=(batch, seq, d_model)).astype(np.float32) * 0.05
+        e += base * 2.0
+        k = (i * 3) % (batch // 2 + 1)          # 0..B/2 OOD rows, varying
+        if k:
+            e[:k] = rng.normal(size=(k, seq, d_model)).astype(np.float32) * 4.0
+        out.append(e)
+    return out
+
+
+def _drive(admit_fn, batches, warm) -> dict:
+    """Warm with ``warm`` batches (compile + arm the sketch), then time
+    the rest; returns latency percentiles and the compile count measured
+    over the timed region only."""
+    for e in batches[:warm]:
+        admit_fn(jnp.asarray(e))
+    start_compiles = _compile_count[0]
+    lat, admitted = [], []
+    for e in batches[warm:]:
+        x = jnp.asarray(e)
+        t0 = time.perf_counter()
+        mask = admit_fn(x)                       # np.asarray = the sync
+        lat.append((time.perf_counter() - t0) * 1e6)
+        admitted.append(int(mask.sum()))
+    return {
+        "p50_us": float(np.percentile(lat, 50)),
+        "p99_us": float(np.percentile(lat, 99)),
+        "mean_us": float(np.mean(lat)),
+        "compiles_timed_region": _compile_count[0] - start_compiles,
+        "admitted_counts": admitted,
+    }
+
+
+def run(csv_rows: list[str] | None = None, *, batch: int = 256,
+        n_batches: int = 48, seq: int = 4, d_model: int = 64,
+        num_bits: int = 12, num_tables: int = 32,
+        json_path: str = "BENCH_guardrail.json",
+        smoke: bool = False) -> dict:
+    _install_compile_counter()
+    if smoke:
+        batch, n_batches, seq, d_model = 32, 12, 2, 16
+        num_bits, num_tables = 5, 8
+
+    gkw = dict(d_model=d_model, num_bits=num_bits, num_tables=num_tables,
+               alpha=3.0, warmup_items=float(batch * 2))
+    warm = 4
+    batches = _make_batches(n_batches + warm, batch, seq, d_model)
+
+    g_old = Guardrail(GuardrailConfig(**gkw))
+    legacy = _drive(lambda e: _admit_legacy(g_old, e), batches, warm)
+
+    g_new = Guardrail(GuardrailConfig(**gkw))
+    fused = _drive(g_new.admit, batches, warm)
+    fused["trace_count"] = g_new.trace_count
+
+    result = {
+        "batch": batch, "seq": seq, "d_model": d_model,
+        "num_bits": num_bits, "num_tables": num_tables,
+        "n_batches": n_batches,
+        "legacy": legacy, "fused": fused,
+        "speedup_p50": legacy["p50_us"] / max(fused["p50_us"], 1e-9),
+        "speedup_p99": legacy["p99_us"] / max(fused["p99_us"], 1e-9),
+    }
+
+    if smoke:
+        # Exercise the fused Pallas kernel (interpret=True on CPU) and
+        # require mask agreement with the reference device path.  The
+        # kernel's tiled f32 hash may flip a sign on a |proj| ~ 0
+        # projection (the documented 0.1%-bucket tolerance of the srp
+        # kernels), so allow a sliver of disagreement instead of
+        # bit-exactness — a real logic bug diverges massively.
+        g_js = Guardrail(GuardrailConfig(**gkw))
+        g_kn = Guardrail(GuardrailConfig(**gkw), use_kernels=True)
+        agree, total = 0, 0
+        for e in batches:
+            mj, mk = g_js.admit(jnp.asarray(e)), g_kn.admit(jnp.asarray(e))
+            agree += int((mj == mk).sum())
+            total += mj.size
+        assert agree / total > 0.99, f"kernel/jnp mask parity {agree}/{total}"
+        assert g_kn.trace_count == 1
+        result["kernel_path"] = {"trace_count": g_kn.trace_count,
+                                 "mask_agreement": agree / total}
+
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    print(f"guardrail admit  B={batch} K={num_bits} L={num_tables} "
+          f"({n_batches} timed batches)")
+    print(f"  legacy : p50 {legacy['p50_us']:9.1f} us   "
+          f"p99 {legacy['p99_us']:9.1f} us   "
+          f"compiles {legacy['compiles_timed_region']}")
+    print(f"  fused  : p50 {fused['p50_us']:9.1f} us   "
+          f"p99 {fused['p99_us']:9.1f} us   "
+          f"compiles {fused['compiles_timed_region']}   "
+          f"traces {fused['trace_count']}")
+    print(f"  speedup: p50 {result['speedup_p50']:.2f}x   "
+          f"p99 {result['speedup_p99']:.2f}x   -> {json_path}")
+    if csv_rows is not None:
+        csv_rows.append(
+            f"guardrail_admit_legacy,{legacy['p50_us']:.1f},"
+            f"{legacy['compiles_timed_region']}")
+        csv_rows.append(
+            f"guardrail_admit_fused,{fused['p50_us']:.1f},"
+            f"{fused['compiles_timed_region']}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny K/L for CI; also drives the Pallas "
+                         "kernel path under interpret=True")
+    ap.add_argument("--json", default="BENCH_guardrail.json")
+    args = ap.parse_args()
+    res = run(json_path=args.json, smoke=args.smoke)
+    assert res["fused"]["trace_count"] == 1, "fused path retraced!"
+
+
+if __name__ == "__main__":
+    main()

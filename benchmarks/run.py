@@ -25,8 +25,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dist_throughput, fig1_discriminative,
-                            fig3_5_variance, memory_table,
-                            table3_5_comparison, throughput)
+                            fig3_5_variance, guardrail_latency,
+                            memory_table, table3_5_comparison, throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -48,6 +48,8 @@ def main() -> None:
         "throughput": lambda: throughput.run(csv_rows),
         "dist_throughput": lambda: dist_throughput.run(
             csv_rows, batch=512 if args.quick else 2048),
+        "guardrail": lambda: guardrail_latency.run(
+            csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:
         benches["roofline"] = lambda: roofline_report.run(csv_rows)

@@ -99,20 +99,31 @@ def make_params(cfg: AceConfig, dtype=jnp.float32) -> jax.Array:
 # reference path and stays pure-jnp.
 # ---------------------------------------------------------------------------
 
+def batch_scores(counts: jax.Array, buckets: jax.Array) -> jax.Array:
+    """Scores of a batch of bucket ids vs a counts array: (B, L) -> (B,).
+
+    The rows-broadcast gather + reciprocal-multiply mean.  The mean over
+    L is an explicit reciprocal multiply, never a bare `/ L`: XLA
+    fast-math rewrites `/ L` to `* (1/L)` in SOME programs but not
+    others, which would break the bitwise parity contracts across the
+    single-device, fused-kernel and repro.dist paths — every score and
+    post-insert Welford gather goes through THIS helper (or mirrors its
+    constant, where table-sharding makes the gather structurally
+    different) so the formula exists once.
+    """
+    L = counts.shape[0]
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+    gathered = counts[rows, buckets].astype(jnp.float32)         # (B, L)
+    return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+
+
 def lookup(state: AceState, buckets: jax.Array) -> jax.Array:
     """counts[j, buckets[., j]] averaged over j.  (B, L) -> (B,) float32.
 
     This is Ŝ(q, D) of Algorithm 1 (query phase).
     """
-    L = state.counts.shape[0]
-    rows = jnp.arange(L, dtype=jnp.int32)
-    gathered = state.counts[rows[None, :], buckets]          # (B, L)
-    # mean over L as an explicit reciprocal multiply: a bare `/ L` is
-    # rewritten to `* (1/L)` by XLA fast-math in SOME programs but not
-    # others, which would break the bitwise replicated↔table-sharded
-    # parity contract (repro.dist.sketch_parallel uses the same constant).
-    return jnp.sum(gathered.astype(jnp.float32), axis=-1) \
-        * jnp.float32(1.0 / L)
+    return batch_scores(state.counts, buckets)
 
 
 def histogram(buckets: jax.Array, cfg: AceConfig) -> jax.Array:
@@ -164,9 +175,7 @@ def insert_buckets(state: AceState, buckets: jax.Array,
     new_counts = state.counts.at[rows, buckets].add(1)
 
     # Post-insert scores of the batch items (vs the fully updated arrays).
-    # Reciprocal multiply, not `/ L` — see the note in ``lookup``.
-    gathered = new_counts[rows, buckets].astype(jnp.float32)   # (B, L)
-    scores = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)  # (B,)
+    scores = batch_scores(new_counts, buckets)                 # (B,)
 
     # Welford over collision RATES score/n, not raw scores: raw insert-time
     # scores grow ~linearly with n (item i scores ≈ O(i)), which inflates σ
@@ -182,6 +191,72 @@ def insert_buckets(state: AceState, buckets: jax.Array,
         state.welford_mean, state.welford_m2, n, b, tot, mean_b, m2_b,
         cfg.welford_min_n)
 
+    return AceState(counts=new_counts, n=tot,
+                    welford_mean=new_mean, welford_m2=new_m2)
+
+
+def masked_batch_welford(state: AceState, scores: jax.Array,
+                         maskf: jax.Array, min_n: float, reduce=None):
+    """Welford fold over only the masked items of a fixed-shape batch.
+
+    ``scores`` are post-insert scores of ALL items (B,); ``maskf`` is the
+    0/1 float admit mask.  Returns (n, welford_mean, welford_m2) after
+    folding the masked subset's rate statistics — identical (up to float
+    summation order) to folding ``scores[mask]`` through the dense path.
+    An all-zero mask leaves the stream untouched (the dense path would
+    NaN on an empty batch).
+
+    ``reduce`` (optional) is applied to each scalar partial sum (count,
+    rate sum, M2 sum) — a psum over the data axes when the batch is
+    sharded, identity otherwise.  Every masked insert path (single-device,
+    fused-kernel admit via repro.kernels.ops.ace_admit, and both
+    repro.dist.sketch_parallel layouts) folds through THIS function, so
+    their numerics stay identical by construction, not by copy-synced
+    formulas (same contract as ``welford_fold`` for the dense paths).
+    """
+    if reduce is None:
+        def reduce(v):  # noqa: A001 — identity for the unsharded batch
+            return v
+    b = reduce(jnp.sum(maskf))
+    n = state.n
+    tot = n + b
+    rates = scores / jnp.maximum(tot, 1.0)
+    mean_b = reduce(jnp.sum(rates * maskf)) / jnp.maximum(b, 1.0)
+    m2_b = reduce(jnp.sum(((rates - mean_b) ** 2) * maskf))
+    new_mean, new_m2 = welford_fold(
+        state.welford_mean, state.welford_m2, n, b, tot, mean_b, m2_b,
+        min_n)
+    has = b > 0
+    return (tot,
+            jnp.where(has, new_mean, state.welford_mean),
+            jnp.where(has, new_m2, state.welford_m2))
+
+
+def insert_buckets_masked(state: AceState, buckets: jax.Array,
+                          mask: jax.Array, cfg: AceConfig) -> AceState:
+    """Masked (weighted) insert: insert only the items where ``mask``.
+
+    Equivalent to ``insert_buckets(state, buckets[mask], cfg)`` — exactly
+    for counts/n/μ (the scatter-add of 0/1 weights builds the identical
+    histogram), and up to float summation order for the Welford stream —
+    but FIXED-SHAPE: no data-dependent gather, so one compiled program
+    serves every batch regardless of how many items are admitted.  This
+    is the serving guardrail's insert (order-invariant and shape-stable;
+    see Guardrail.admit).
+    """
+    L = cfg.num_tables
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+    w_ctr = jnp.broadcast_to(
+        mask.astype(state.counts.dtype)[:, None], buckets.shape)
+    new_counts = state.counts.at[rows, buckets].add(w_ctr)
+
+    # Post-insert scores of ALL items vs the fully updated arrays (the
+    # masked-out items just don't contribute to the Welford fold below).
+    scores = batch_scores(new_counts, buckets)                  # (B,)
+
+    tot, new_mean, new_m2 = masked_batch_welford(
+        state, scores, mask.astype(jnp.float32), cfg.welford_min_n)
     return AceState(counts=new_counts, n=tot,
                     welford_mean=new_mean, welford_m2=new_m2)
 
@@ -259,6 +334,22 @@ def mean_rate(state: AceState) -> jax.Array:
 def sigma_welford(state: AceState) -> jax.Array:
     """Streaming σ of collision RATES (score/n) from insert-time stream."""
     return jnp.sqrt(state.welford_m2 / jnp.maximum(state.n - 1.0, 1.0))
+
+
+def admit_threshold(state: AceState, alpha: float,
+                    warmup_items: float) -> jax.Array:
+    """Score-space admission threshold: admit iff  score >= threshold.
+
+    The μ−ασ rule lives in rate space (rate = score/n); multiplying both
+    sides by max(n, 1) > 0 moves it to score space so the decision is a
+    single compare against ONE device scalar — which is what the fused
+    admit kernel consumes.  During warmup (n < warmup_items) the
+    threshold is −inf: everything is admitted.  Pure device scalar ops —
+    no host sync.
+    """
+    t = (mean_rate(state) - alpha * sigma_welford(state)) \
+        * jnp.maximum(state.n, 1.0)
+    return jnp.where(state.n >= warmup_items, t, -jnp.inf)
 
 
 def sigma_cubic_proxy(state: AceState) -> jax.Array:

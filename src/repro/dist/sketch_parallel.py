@@ -78,10 +78,7 @@ def update_global(state: AceState, x: jax.Array, w: jax.Array,
     # Post-insert scores of the local shard items for Welford (approximate
     # insert-time stream; exact μ never uses it).
     buckets = hash_buckets(x, w, cfg.srp)
-    rows = jnp.broadcast_to(
-        jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
-    scores = jnp.sum(new_counts[rows, buckets].astype(jnp.float32), axis=-1) \
-        * jnp.float32(1.0 / cfg.num_tables)
+    scores = sk.batch_scores(new_counts, buckets)
 
     b_local = jnp.asarray(scores.shape[0], jnp.float32)
     if axis_names:
@@ -100,6 +97,38 @@ def update_global(state: AceState, x: jax.Array, w: jax.Array,
     new_mean, new_m2 = sk.welford_fold(
         state.welford_mean, state.welford_m2, n, b_local, tot, mean_b, m2_b,
         cfg.welford_min_n)
+    return AceState(counts=new_counts, n=tot,
+                    welford_mean=new_mean, welford_m2=new_m2)
+
+
+def update_global_masked(state: AceState, x: jax.Array, w: jax.Array,
+                         mask: jax.Array, cfg: AceConfig,
+                         axis_names=()) -> AceState:
+    """Masked insert into a replicated sketch (fixed-shape guardrail path).
+
+    Mirrors ``sketch.insert_buckets_masked`` exactly: the 0/1-weighted
+    histogram keeps counts/n bitwise equal to inserting the admitted
+    subset, and the Welford fold uses the same masked-moment formulas as
+    the single-device path (→ bitwise parity when ``axis_names`` is
+    empty, float32-round-off otherwise).
+    """
+    buckets = hash_buckets(x, w, cfg.srp)
+    rows = jnp.broadcast_to(
+        jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
+    w_ctr = jnp.broadcast_to(
+        mask.astype(state.counts.dtype)[:, None], buckets.shape)
+    zero = jnp.zeros((cfg.num_tables, cfg.num_buckets),
+                     dtype=jnp.dtype(cfg.counter_dtype))
+    hist = zero.at[rows, buckets].add(w_ctr)
+    if axis_names:
+        hist = jax.lax.psum(hist, axis_names)
+    new_counts = state.counts + hist
+
+    scores = sk.batch_scores(new_counts, buckets)
+    reduce = (lambda v: jax.lax.psum(v, axis_names)) if axis_names else None
+    tot, new_mean, new_m2 = sk.masked_batch_welford(
+        state, scores, mask.astype(jnp.float32), cfg.welford_min_n,
+        reduce=reduce)
     return AceState(counts=new_counts, n=tot,
                     welford_mean=new_mean, welford_m2=new_m2)
 
@@ -126,6 +155,26 @@ def make_shardmap_update(mesh, cfg: AceConfig, data_axes=("data",)):
     return shard_map(
         _upd, mesh=mesh,
         in_specs=(AceState(rep, rep, rep, rep), batch_spec, rep),
+        out_specs=AceState(rep, rep, rep, rep),
+        check_rep=False)
+
+
+def make_masked_update(mesh, cfg: AceConfig, data_axes=()):
+    """Build a shard_map'd replicated MASKED insert: (state, x, w, mask) ->
+    state.  With ``data_axes`` empty, batch and mask are replicated and
+    every device applies the identical dense masked add."""
+    from jax.experimental.shard_map import shard_map
+
+    rep = P()
+    bspec = P(data_axes) if data_axes else P()
+
+    def _upd(state, x, w, mask):
+        return update_global_masked(state, x, w, mask, cfg,
+                                    axis_names=data_axes)
+
+    return shard_map(
+        _upd, mesh=mesh,
+        in_specs=(AceState(rep, rep, rep, rep), bspec, rep, bspec),
         out_specs=AceState(rep, rep, rep, rep),
         check_rep=False)
 
@@ -223,6 +272,50 @@ def update_table_sharded(state: AceState, x: jax.Array, w: jax.Array,
                     welford_mean=new_mean, welford_m2=new_m2)
 
 
+def update_table_sharded_masked(state: AceState, x: jax.Array,
+                                w: jax.Array, mask: jax.Array,
+                                cfg: AceConfig, *, table_axis: str,
+                                num_shards: int,
+                                data_axes=()) -> AceState:
+    """shard_map-mode MASKED insert for the table-sharded layout.
+
+    The guardrail's fixed-shape admission insert, scaled out: each shard
+    scatter-adds the 0/1-weighted histogram slice of its own tables
+    (psum-free on ``table_axis``); the (B,) score psum and the masked
+    Welford fold follow ``update_table_sharded``.  With ``data_axes``
+    empty this is bitwise-identical to ``update_global_masked`` /
+    ``sketch.insert_buckets_masked`` — all cross-shard sums are over
+    exactly-representable integers, and the masked-moment formulas match
+    term for term (asserted by tests/test_guardrail_admit.py).
+    """
+    l_local = cfg.num_tables // num_shards
+    buckets = _local_buckets(x, w, cfg, table_axis, num_shards)  # (B, Ll)
+    rows = jnp.broadcast_to(
+        jnp.arange(l_local, dtype=jnp.int32)[None, :], buckets.shape)
+    w_ctr = jnp.broadcast_to(
+        mask.astype(state.counts.dtype)[:, None], buckets.shape)
+
+    if data_axes:
+        zero = jnp.zeros((l_local, cfg.num_buckets),
+                         dtype=jnp.dtype(cfg.counter_dtype))
+        hist = zero.at[rows, buckets].add(w_ctr)
+        hist = jax.lax.psum(hist, data_axes)
+        new_counts = state.counts + hist
+    else:
+        new_counts = state.counts.at[rows, buckets].add(w_ctr)
+
+    partial = jnp.sum(new_counts[rows, buckets].astype(jnp.float32), axis=-1)
+    total = jax.lax.psum(partial, table_axis)                   # (B,)
+    scores = total * jnp.float32(1.0 / cfg.num_tables)
+
+    reduce = (lambda v: jax.lax.psum(v, data_axes)) if data_axes else None
+    tot, new_mean, new_m2 = sk.masked_batch_welford(
+        state, scores, mask.astype(jnp.float32), cfg.welford_min_n,
+        reduce=reduce)
+    return AceState(counts=new_counts, n=tot,
+                    welford_mean=new_mean, welford_m2=new_m2)
+
+
 def score_table_sharded(state: AceState, q: jax.Array, w: jax.Array,
                         cfg: AceConfig, *, table_axis: str,
                         num_shards: int) -> jax.Array:
@@ -270,6 +363,26 @@ def make_table_sharded_update(mesh, cfg: AceConfig, *,
                                     num_shards=shards, data_axes=data_axes)
 
     return shard_map(_upd, mesh=mesh, in_specs=(st, xspec, P()),
+                     out_specs=st, check_rep=False)
+
+
+def make_table_sharded_masked_update(mesh, cfg: AceConfig, *,
+                                     table_axis: str = "model",
+                                     data_axes=()):
+    """Build a shard_map'd table-sharded MASKED insert:
+    (state, x, w, mask) -> state."""
+    from jax.experimental.shard_map import shard_map
+
+    shards = table_shard_info(cfg, mesh, table_axis)
+    st = _table_sharded_specs(table_axis)
+    bspec = P(data_axes) if data_axes else P()
+
+    def _upd(state, x, w, mask):
+        return update_table_sharded_masked(
+            state, x, w, mask, cfg, table_axis=table_axis,
+            num_shards=shards, data_axes=data_axes)
+
+    return shard_map(_upd, mesh=mesh, in_specs=(st, bspec, P(), bspec),
                      out_specs=st, check_rep=False)
 
 

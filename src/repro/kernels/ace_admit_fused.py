@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: fused ACE guardrail admission — hash + score +
+threshold + masked insert in ONE kernel launch and one HBM pass.
+
+The serving guardrail (paper's query phase as an admission filter) used to
+take three kernel launches and TWO hash matmuls per request batch:
+``srp_hash`` for scoring, a lookup, then ``srp_hash`` again over the
+admitted gather for the insert.  This kernel hashes once and keeps the
+bucket ids in VMEM for both the score gather and the masked scatter-add:
+
+    proj    = q @ W                    (MXU, accumulated over d tiles)
+    buckets = pack(sign(proj))         (MXU)
+    score   = mean_j counts[j, b_j]    (flattened row-offset gather)
+    admit   = score >= threshold       (threshold: one prefetched scalar,
+                                        −inf during warmup — see
+                                        sketch.admit_threshold)
+    counts[j, b_j] += admit ? 1 : 0    (masked insert, counts ALIASED in
+                                        VMEM — updated in place)
+
+    HBM reads : q (B·d·4) + W (d·P·4) + counts (L·2^K, resident)
+    HBM writes: scores+mask (B·2·4) + bucket ids (B·L·4, for the Welford
+                epilogue in ops.ace_admit) — counts never round-trip.
+
+Scoring happens strictly against the PRE-insert counts (the gather
+materialises before the scatter loop), matching the reference path that
+scores the whole batch before inserting it.
+
+Grid: (d/bk,) — the whole (padded) batch is one tile so the masked insert
+runs after every row's score in a single program; guardrail admission
+batches are request batches (B ≤ ~1k at paper scale), and the wrapper
+enforces the ~14 MB VMEM budget on the non-interpret path (chunk the
+batch if it trips — each chunk is an independent masked insert, so the
+split is exact for counts/n).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.srp import SrpConfig
+from repro.kernels.ace_score_fused import flat_table_gather
+from repro.kernels.srp_hash import make_pack_matrix, _round_up
+
+
+def _kernel(q_ref, w_ref, pack_ref, thresh_ref, counts_in_ref,
+            counts_out_ref, sm_ref, buckets_ref, acc_ref,
+            *, nk: int, B: int, L: int, nbuckets: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # Touch the alias so the in-place dataflow is explicit (ace_update
+        # idiom): counts_out_ref IS counts_in_ref's buffer.
+        counts_out_ref[0, 0] = counts_in_ref[0, 0]
+
+    acc_ref[...] += jnp.dot(
+        q_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        Bp = acc_ref.shape[0]
+        bits = (acc_ref[...] >= 0.0).astype(jnp.float32)
+        buckets = jnp.dot(bits, pack_ref[...],
+                          preferred_element_type=jnp.float32).astype(jnp.int32)
+        buckets_ref[...] = buckets
+
+        # Score from PRE-insert counts: the gather materialises before any
+        # scatter below mutates the (aliased) counts buffer.
+        gathered = flat_table_gather(counts_in_ref[...], buckets, L, nbuckets)
+        scores = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)  # (Bp,)
+
+        # Pad rows (>= B) hash garbage — never admit them.
+        valid = jax.lax.broadcasted_iota(
+            jnp.int32, (Bp, 1), 0).reshape(Bp) < B
+        admit = jnp.logical_and(scores >= thresh_ref[0, 0], valid)
+        admitf = jnp.where(admit, 1.0, 0.0).astype(jnp.float32)
+
+        col = jax.lax.broadcasted_iota(jnp.int32, sm_ref.shape, 1)
+        sm_ref[...] = jnp.where(
+            col == 0, scores[:, None],
+            jnp.where(col == 1, admitf[:, None], 0.0))
+
+        # Masked insert: scalar RMW over the LIVE rows only (t < B·L).
+        # Admission batches are small, so the scalar loop beats paying the
+        # one-hot sweep; weight 0 rows are read-modify-written unchanged,
+        # keeping the loop branch-free.
+        def body(t, _):
+            b = t // L
+            j = t % L
+            idx = buckets_ref[b, j]
+            w_b = sm_ref[b, 1]
+            c = counts_out_ref[j, pl.dslice(idx, 1)]
+            counts_out_ref[j, pl.dslice(idx, 1)] = \
+                c + w_b.astype(c.dtype)
+            return 0
+
+        jax.lax.fori_loop(0, B * L, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bk", "interpret"))
+def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
+                    thresh: jax.Array, cfg: SrpConfig, bk: int = 512,
+                    interpret: bool = True):
+    """One-launch guardrail admission step.
+
+    counts (L, 2^K), q (B, d), w (d, P), thresh () float32 (score-space,
+    −inf admits everything) ->
+        (new_counts (L, 2^K)  — counts + masked batch histogram (aliased),
+         scores (B,) float32  — PRE-insert Ŝ(q, D),
+         admit (B,) bool,
+         buckets (B, L) int32 — the one hash, re-exported so the Welford
+         epilogue never hashes again).
+    """
+    B, d = q.shape
+    P = cfg.padded_projections
+    L, nbuckets = counts.shape
+    assert w.shape == (d, P) and L == cfg.num_tables
+
+    Bp = _round_up(B, 8)
+    bk_ = min(bk, _round_up(d, 128))
+    dp = _round_up(d, bk_)
+    lp = _round_up(L, 128)
+    # The whole batch is ONE tile (the masked insert must run after every
+    # row's pre-insert score), so VMEM bounds B on the real TPU path:
+    # q + w + pack + counts + acc + sm + buckets must fit ~16 MB.
+    vmem = 4 * (Bp * bk_ + bk_ * P + P * lp + Bp * P
+                + Bp * 128 + Bp * lp) \
+        + L * nbuckets * jnp.dtype(counts.dtype).itemsize
+    if not interpret and vmem > 14 * 1024 * 1024:
+        raise ValueError(
+            f"ace_admit_fused: B={B} needs ~{vmem >> 20} MB VMEM at "
+            f"P={P}, K·L=({nbuckets.bit_length() - 1},{L}) — over the "
+            "~14 MB budget; chunk the admission batch (each chunk is an "
+            "independent masked insert, so splitting preserves counts/n "
+            "exactly)")
+    qp = jnp.pad(q, ((0, Bp - B), (0, dp - d)))
+    wp = jnp.pad(w, ((0, dp - d), (0, 0)))
+    pack = jnp.asarray(make_pack_matrix(cfg, lp))
+    nk = dp // bk_
+    thresh_arr = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+
+    new_counts, sm, buckets = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, B=B, L=L, nbuckets=nbuckets),
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((Bp, bk_), lambda k: (0, k)),
+            pl.BlockSpec((bk_, P), lambda k: (k, 0)),
+            pl.BlockSpec((P, lp), lambda k: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((L, nbuckets), lambda k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, nbuckets), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, 128), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, lp), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, nbuckets), counts.dtype),
+            jax.ShapeDtypeStruct((Bp, 128), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, lp), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Bp, P), jnp.float32)],
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(qp, wp, pack, thresh_arr, counts)
+    return (new_counts, sm[:B, 0], sm[:B, 1] > 0.0, buckets[:B, :L])

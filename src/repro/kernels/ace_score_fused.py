@@ -9,8 +9,10 @@ bucket ids in registers/VMEM and emits only the (B,) scores:
     HBM writes: scores (B·4)
 
 Grid: (B/bm, d/bk) with the (bm, P) accumulator in VMEM scratch; on the last
-d-tile: sign -> pack-matmul -> per-table lane-gather -> row mean, written to
-a (bm, 128) output tile (column 0 holds the score; the wrapper slices).
+d-tile: sign -> pack-matmul -> ONE flattened row-offset gather
+(``buckets + j·2^K`` into the raveled counts, see ``flat_table_gather``) ->
+row mean, written to a (bm, 128) output tile (column 0 holds the score; the
+wrapper slices).
 
 VMEM at defaults (bm=128, bk=512, P=768, K=15, L=50, int32 counts):
   q 0.25 + W 1.5 + acc 0.4 + pack 0.4 + counts 6.6 + out ~0.1 ≈ 9.2 MB.
@@ -28,8 +30,25 @@ from repro.core.srp import SrpConfig
 from repro.kernels.srp_hash import make_pack_matrix, _round_up
 
 
+def flat_table_gather(counts: jax.Array, buckets: jax.Array,
+                      L: int, nbuckets: int) -> jax.Array:
+    """Gather counts[j, buckets[:, j]] as ONE flattened take.
+
+    counts (L, 2^K) ravels row-major to (L·2^K,) and table j's ids offset
+    by j·2^K index straight into it — a single vectorised gather instead
+    of L unrolled per-table ``jnp.take``s (at the paper's L=50 the unroll
+    bloats the Mosaic program and trace time ~50×).  The ravel is a
+    layout no-op when 2^K is lane-aligned (K ≥ 7; always true at serving
+    scale — tiny-K test shapes only run under interpret).
+    """
+    flat = counts.reshape(L * nbuckets)
+    offs = buckets[:, :L] + jax.lax.broadcasted_iota(
+        jnp.int32, (buckets.shape[0], L), 1) * nbuckets
+    return jnp.take(flat, offs, axis=0).astype(jnp.float32)       # (B, L)
+
+
 def _kernel(q_ref, w_ref, pack_ref, counts_ref, out_ref, acc_ref,
-            *, nk: int, L: int):
+            *, nk: int, L: int, nbuckets: int):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -47,12 +66,10 @@ def _kernel(q_ref, w_ref, pack_ref, counts_ref, out_ref, acc_ref,
         bits = (acc_ref[...] >= 0.0).astype(jnp.float32)
         buckets = jnp.dot(bits, pack_ref[...],
                           preferred_element_type=jnp.float32).astype(jnp.int32)
-        total = jnp.zeros((buckets.shape[0],), jnp.float32)
-        for j in range(L):  # static unroll over tables
-            row = counts_ref[j, :]
-            total = total + jnp.take(row, buckets[:, j], axis=0).astype(
-                jnp.float32)
-        score = total / jnp.float32(L)
+        gathered = flat_table_gather(counts_ref[...], buckets, L, nbuckets)
+        # reciprocal multiply, not `/ L` — same parity convention as
+        # sketch.batch_scores and the fused admit kernel
+        score = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
         out_ref[...] = jnp.broadcast_to(score[:, None], out_ref.shape)
 
 
@@ -76,7 +93,7 @@ def ace_score_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
     nb, nk = Bp // bm_, dp // bk_
 
     out = pl.pallas_call(
-        functools.partial(_kernel, nk=nk, L=L),
+        functools.partial(_kernel, nk=nk, L=L, nbuckets=nbuckets),
         grid=(nb, nk),
         in_specs=[
             pl.BlockSpec((bm_, bk_), lambda i, k: (i, k)),

@@ -5,15 +5,26 @@ the paper's K=15, L=50 — the TPU translation of the paper's "fits in L3
 cache") and are updated **in place** via input/output aliasing; only the
 (B, L) bucket ids stream in from HBM.
 
-TPUs have no fast random scatter, so the per-item `A[H(x)]++` of Algorithm 1
-becomes a sequential scalar read-modify-write loop over the (B, L) ids on
-the scalar core — which is exactly what the paper's CPU inner loop does,
-and is collision-safe by construction.  The loop is O(B·L) scalar ops
-against a (B·d·K·L)-FLOP hash matmul, i.e. ~d·K/1 ≳ 10³× cheaper — the
-update is never the bottleneck (validated in §Roofline of EXPERIMENTS.md).
+Two lowering strategies, chosen by ``mode``:
 
-A vectorised histogram variant (one-hot compare-accumulate over bucket
-tiles) is provided for small K in ``repro.kernels.ops.histogram_small_k``.
+* ``"scalar"``: TPUs have no fast random scatter, so the per-item
+  `A[H(x)]++` of Algorithm 1 becomes a sequential scalar read-modify-write
+  loop over the (B, L) ids on the scalar core — exactly what the paper's
+  CPU inner loop does, and collision-safe by construction.  Cost ~
+  c·B·L scalar cycles (c ≈ 8 for the RMW + loop overhead).
+
+* ``"hist"``: vectorised one-hot compare-accumulate — per table j, compare
+  the (B,) id column against the bucket iota and column-sum the (B, 2^K)
+  one-hot block on the VPU.  Cost ~ L·⌈B/8⌉·(2^K/128) VPU ops, i.e.
+  B·L·2^K/1024 lanes of work: MORE raw ops than the scalar loop but wide
+  and parallel, so it wins whenever 2^K ≲ c·1024 AND the batch is big
+  enough to amortise the loop setup.
+
+``mode="auto"`` (the default used by ``repro.kernels.ops.ace_update``)
+applies that cost model: the hist path is selected when B·L exceeds
+``HIST_BREAK_EVEN_BL`` and the bucket space is at most
+``HIST_MAX_BUCKETS``; otherwise the scalar loop runs.  Both paths are
+bit-identical (property-tested in tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -23,8 +34,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# Break-even constants of the cost model above (c ≈ 8 scalar cycles per
+# RMW → hist wins up to 2^K = 8192; the B·L floor keeps tiny batches on
+# the zero-setup scalar loop).
+HIST_BREAK_EVEN_BL = 1024
+HIST_MAX_BUCKETS = 8192
+# The one-hot block is swept in row tiles of this many batch items so its
+# VMEM intermediate stays bounded (128 × 8192 × 4 B = 4 MB at the max
+# bucket space) no matter how large B grows.
+HIST_ROW_TILE = 128
 
-def _kernel(buckets_ref, counts_in_ref, counts_out_ref, *, B: int, L: int):
+
+def choose_mode(B: int, L: int, nbuckets: int) -> str:
+    """Pick the insert lowering for a (B, L) batch into 2^K buckets."""
+    if B * L >= HIST_BREAK_EVEN_BL and nbuckets <= HIST_MAX_BUCKETS:
+        return "hist"
+    return "scalar"
+
+
+def _kernel_scalar(buckets_ref, counts_in_ref, counts_out_ref,
+                   *, B: int, L: int):
     # Aliased: counts_out_ref is the same buffer as counts_in_ref.
     def body(t, _):
         b = t // L
@@ -39,19 +68,56 @@ def _kernel(buckets_ref, counts_in_ref, counts_out_ref, *, B: int, L: int):
     jax.lax.fori_loop(0, B * L, body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "donate"))
+def _kernel_hist(buckets_ref, counts_in_ref, counts_out_ref,
+                 *, B: int, L: int, nbuckets: int):
+    # One-hot compare-accumulate per table (fori, not unrolled, so the
+    # Mosaic program stays O(1) in L).  Duplicate ids in a column land on
+    # the same one-hot lane and sum — collision-safe like the scalar RMW.
+    # The batch axis is swept in HIST_ROW_TILE chunks so the one-hot
+    # intermediate is at most (tile, 2^K) in VMEM, independent of B.
+    ids = buckets_ref[...]                                       # (B, L)
+    dtype = counts_out_ref.dtype
+    counts_out_ref[0, 0] = counts_in_ref[0, 0]
+
+    def body(j, _):
+        hist = jnp.zeros((1, nbuckets), dtype)
+        for t0 in range(0, B, HIST_ROW_TILE):                # static tiling
+            bt = min(HIST_ROW_TILE, B - t0)
+            col = jax.lax.dynamic_slice(ids, (t0, j), (bt, 1))   # (bt, 1)
+            onehot = (col == jax.lax.broadcasted_iota(
+                jnp.int32, (bt, nbuckets), 1)).astype(dtype)     # (bt, 2^K)
+            hist = hist + jnp.sum(onehot, axis=0, keepdims=True,
+                                  dtype=dtype)                   # (1, 2^K)
+        row = counts_out_ref[pl.dslice(j, 1), :]
+        counts_out_ref[pl.dslice(j, 1), :] = row + hist
+        return 0
+
+    jax.lax.fori_loop(0, L, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "donate", "mode"))
 def ace_update(counts: jax.Array, buckets: jax.Array,
-               interpret: bool = True, donate: bool = True) -> jax.Array:
+               interpret: bool = True, donate: bool = True,
+               mode: str = "auto") -> jax.Array:
     """counts (L, 2^K) int; buckets (B, L) int32 -> updated counts.
 
     In-place on TPU via input_output_aliases (the counts buffer is donated).
+    ``mode`` ∈ {"auto", "scalar", "hist"} — see the module docstring.
     """
     L, nbuckets = counts.shape
     B = buckets.shape[0]
     assert buckets.shape == (B, L)
+    if mode == "auto":
+        mode = choose_mode(B, L, nbuckets)
+    if mode == "scalar":
+        kern = functools.partial(_kernel_scalar, B=B, L=L)
+    elif mode == "hist":
+        kern = functools.partial(_kernel_hist, B=B, L=L, nbuckets=nbuckets)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
 
     return pl.pallas_call(
-        functools.partial(_kernel, B=B, L=L),
+        kern,
         grid=(1,),
         in_specs=[
             pl.BlockSpec((B, L), lambda i: (0, 0)),

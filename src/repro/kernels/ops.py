@@ -15,8 +15,10 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import sketch as _sk
 from repro.core.sketch import AceConfig, AceState
 from repro.core.srp import SrpConfig
+from repro.kernels import ace_admit_fused as _a
 from repro.kernels import ace_query as _q
 from repro.kernels import ace_score_fused as _f
 from repro.kernels import ace_update as _u
@@ -32,8 +34,15 @@ def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
 
 def ace_update(state: AceState, buckets: jax.Array,
                cfg: AceConfig) -> AceState:
-    """Kernel-path insert (counts only; Welford stream via gathered counts)."""
-    new_counts = _u.ace_update(state.counts, buckets, interpret=INTERPRET)
+    """Kernel-path insert (counts only; Welford stream via gathered counts).
+
+    The count-array lowering is ``mode="auto"``: the vectorised one-hot
+    histogram when B·L clears the scalar-loop break-even (and the bucket
+    space fits the VPU sweep), the sequential scalar RMW loop otherwise —
+    see ``repro.kernels.ace_update.choose_mode``.
+    """
+    new_counts = _u.ace_update(state.counts, buckets, interpret=INTERPRET,
+                               mode="auto")
     gathered = _q.ace_query(new_counts, buckets, interpret=INTERPRET)
     scores = jnp.mean(gathered, axis=-1)
     b = jnp.asarray(scores.shape[0], jnp.float32)
@@ -61,3 +70,28 @@ def ace_score(state: AceState, q: jax.Array, w: jax.Array,
     """Fused hash+lookup+mean scoring of raw query vectors."""
     return _f.ace_score_fused(state.counts, q, w, cfg.srp,
                               interpret=INTERPRET)
+
+
+def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
+              *, alpha: float, warmup_items: float):
+    """Fused guardrail admission: ONE kernel launch, one hash matmul.
+
+    The μ−ασ threshold is computed on-device from the state scalars
+    (sketch.admit_threshold, −inf during warmup), the kernel hashes +
+    scores + masked-inserts in a single HBM pass, and the Welford stream
+    folds the admitted items from the kernel's re-exported bucket ids —
+    no re-hash, no host sync.  Returns (new_state, admit_mask (B,) bool).
+    """
+    thresh = _sk.admit_threshold(state, alpha, warmup_items)
+    new_counts, _scores, admit, buckets = _a.ace_admit_fused(
+        state.counts, q, w, thresh, cfg.srp, interpret=INTERPRET)
+
+    # Welford epilogue over POST-insert scores of the admitted items —
+    # shared helpers with sketch.insert_buckets_masked (O(B·L) gather, no
+    # second hash).
+    post = _sk.batch_scores(new_counts, buckets)
+    tot, new_mean, new_m2 = _sk.masked_batch_welford(
+        state, post, admit.astype(jnp.float32), cfg.welford_min_n)
+    new_state = AceState(counts=new_counts, n=tot,
+                         welford_mean=new_mean, welford_m2=new_m2)
+    return new_state, admit

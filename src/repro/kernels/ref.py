@@ -37,3 +37,21 @@ def ace_score_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
     """Fused hash+lookup+mean: (B, d) queries -> (B,) scores."""
     buckets = hash_buckets(q, w, cfg)
     return jnp.mean(ace_query_ref(counts, buckets), axis=-1)
+
+
+def ace_admit_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
+                  thresh: jax.Array, cfg: SrpConfig):
+    """Fused admission: hash once, score pre-insert, threshold, masked add.
+
+    Mirrors ``ace_admit_fused``: returns (new_counts, scores, admit,
+    buckets)."""
+    buckets = hash_buckets(q, w, cfg)
+    gathered = ace_query_ref(counts, buckets)                      # (B, L)
+    scores = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / cfg.num_tables)
+    admit = scores >= thresh
+    rows = jnp.broadcast_to(
+        jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
+    w_ctr = jnp.broadcast_to(
+        admit.astype(counts.dtype)[:, None], buckets.shape)
+    new_counts = counts.at[rows, buckets].add(w_ctr)
+    return new_counts, scores, admit, buckets

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core import sketch as sk
 from repro.core.sketch import AceConfig
+from repro.core.srp import hash_buckets
 from repro.models.registry import Arch, is_whisper
 
 
@@ -30,17 +31,33 @@ class GuardrailConfig:
 class Guardrail:
     """ACE admission filter over request embeddings (stateful host wrapper).
 
+    ``admit`` is ONE fixed-shape jitted device program: hash once, score
+    from the same bucket ids, compare against the on-device μ−ασ score
+    threshold, and fold the admitted items back in with a masked
+    (0/1-weighted) insert — order-invariant and shape-stable, so a single
+    compiled executable serves every batch no matter how many items are
+    admitted, and the only host transfer per batch is the returned (B,)
+    mask.  (The pre-PR path synced n/σ to the host, hashed twice, and
+    retraced on every distinct admitted-count via a data-dependent
+    gather.)
+
+    With ``use_kernels=True`` the hash→score→threshold→masked-insert runs
+    as the single fused Pallas kernel ``repro.kernels.ace_admit_fused``
+    (one launch, one HBM pass; ``interpret=True`` on CPU).
+
     With a ``mesh``, the sketch state is placed via ``repro.dist``:
     ``sketch_layout="replicated"`` mirrors the counts on every device (the
     default single-device behaviour, scaled out), while ``"table_sharded"``
     splits the (L, 2^K) counts over the L axis across ``table_axis`` —
     jit/SPMD mode of repro.dist.sketch_parallel — so guardrail sketches
-    beyond one device's memory (K=18+, L=200+) stay servable.
+    beyond one device's memory (K=18+, L=200+) stay servable; the same
+    jitted admit program works in every layout (GSPMD inserts the
+    collectives around the masked insert).
     """
 
     def __init__(self, gcfg: GuardrailConfig, *, mesh=None,
                  sketch_layout: str = "replicated",
-                 table_axis: str = "model"):
+                 table_axis: str = "model", use_kernels: bool = False):
         self.gcfg = gcfg
         self.ace_cfg = AceConfig(dim=gcfg.d_model + 1,
                                  num_bits=gcfg.num_bits,
@@ -48,6 +65,15 @@ class Guardrail:
                                  welford_min_n=gcfg.warmup_items / 2)
         self.state = sk.init(self.ace_cfg)
         self.w = sk.make_params(self.ace_cfg)
+        if use_kernels and mesh is not None:
+            raise ValueError("use_kernels admission is single-device; "
+                             "drop the mesh or use the jnp path")
+        self.use_kernels = use_kernels
+        self.trace_count = 0          # incremented at TRACE time only
+        # The incoming state is dead the moment admit() rebinds it, so
+        # donate it: the masked insert updates the counts buffer in place
+        # instead of copying (L, 2^K) every batch.
+        self._admit = jax.jit(self._admit_impl, donate_argnums=0)
         if mesh is not None:
             from repro.dist.sketch_parallel import (
                 table_shard_info, sketch_shardings,
@@ -74,27 +100,30 @@ class Guardrail:
         bias = jnp.full((f.shape[0], 1), self.gcfg.bias_const, jnp.float32)
         return jnp.concatenate([f, bias], axis=-1)
 
+    def _admit_impl(self, state: sk.AceState, w: jax.Array,
+                    embeds: jax.Array):
+        """The whole admission step as one traced device program."""
+        self.trace_count += 1
+        cfg = self.ace_cfg
+        feat = self._features(embeds)
+        if self.use_kernels:
+            from repro.kernels import ops as kops
+            return kops.ace_admit(state, feat, w, cfg,
+                                  alpha=self.gcfg.alpha,
+                                  warmup_items=self.gcfg.warmup_items)
+        buckets = hash_buckets(feat, w, cfg.srp)       # the ONE hash
+        scores = sk.lookup(state, buckets)             # same bucket ids
+        admit = scores >= sk.admit_threshold(
+            state, self.gcfg.alpha, self.gcfg.warmup_items)
+        new_state = sk.insert_buckets_masked(state, buckets, admit, cfg)
+        return new_state, admit
+
     def admit(self, embeds: jax.Array) -> np.ndarray:
         """(B, S, D) request embeddings -> (B,) bool admitted; admits update
         the sketch (the serving distribution drifts with traffic — the
-        paper's dynamic-update property)."""
-        feat = self._features(embeds)
-        scores = sk.score(self.state, self.w, feat, self.ace_cfg)
-        rates = scores / max(float(self.state.n), 1.0)
-        mu_rate = sk.mean_rate(self.state)
-        sigma = sk.sigma_welford(self.state)
-        armed = float(self.state.n) >= self.gcfg.warmup_items
-        if armed:
-            admit = np.asarray(rates >= mu_rate - self.gcfg.alpha * sigma)
-        else:
-            admit = np.ones(feat.shape[0], bool)
-        kept = jnp.asarray(np.where(admit)[0], jnp.int32)
-        if kept.size:
-            self.state = sk.insert_buckets(
-                self.state, sk.hash_buckets(feat[kept], self.w,
-                                            self.ace_cfg.srp),
-                self.ace_cfg)
-        return admit
+        paper's dynamic-update property).  One host transfer: the mask."""
+        self.state, admit = self._admit(self.state, self.w, embeds)
+        return np.asarray(admit)
 
 
 class ServeEngine:

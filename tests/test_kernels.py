@@ -10,9 +10,11 @@ from repro.core.sketch import AceConfig
 from repro.core.srp import SrpConfig, hash_buckets, make_projections
 from repro.kernels import ref as R
 from repro.kernels import ops
+from repro.kernels.ace_admit_fused import ace_admit_fused
 from repro.kernels.ace_query import ace_query
 from repro.kernels.ace_score_fused import ace_score_fused
-from repro.kernels.ace_update import ace_update
+from repro.kernels.ace_update import (HIST_MAX_BUCKETS, ace_update,
+                                      choose_mode)
 from repro.kernels.srp_hash import srp_hash
 
 jax.config.update("jax_platform_name", "cpu")
@@ -101,6 +103,104 @@ class TestAceUpdateKernel:
         want = R.ace_update_ref(counts, buckets)
         assert got.dtype == dtype and bool(jnp.all(got == want))
 
+    @pytest.mark.parametrize("B,d,K,L", SHAPES)
+    @pytest.mark.parametrize("mode", ["hist", "auto"])
+    def test_hist_mode_matches_scalar(self, B, d, K, L, mode):
+        """The vectorised one-hot histogram path is bit-identical to the
+        scalar RMW loop (duplicates included)."""
+        rng = np.random.default_rng(B + L)
+        counts = jnp.asarray(rng.integers(0, 7, size=(L, 1 << K)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 1 << K, size=(B, L)), jnp.int32)
+        got = ace_update(counts, buckets, mode=mode)
+        want = ace_update(counts, buckets, mode="scalar")
+        assert bool(jnp.all(got == want))
+
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.int16])
+    def test_hist_mode_counter_dtypes(self, dtype):
+        rng = np.random.default_rng(4)
+        counts = jnp.zeros((6, 128), dtype)
+        buckets = jnp.asarray(rng.integers(0, 128, size=(80, 6)), jnp.int32)
+        got = ace_update(counts, buckets, mode="hist")
+        assert got.dtype == dtype
+        assert bool(jnp.all(got == R.ace_update_ref(counts, buckets)))
+
+    def test_auto_dispatch_break_even(self):
+        """auto picks hist above the B·L break-even (small bucket space),
+        scalar below it or when 2^K outgrows the VPU sweep."""
+        assert choose_mode(256, 16, 1 << 10) == "hist"
+        assert choose_mode(4, 8, 1 << 10) == "scalar"
+        assert choose_mode(4096, 50, 2 * HIST_MAX_BUCKETS) == "scalar"
+
+
+class TestFusedAdmitKernel:
+    @pytest.mark.parametrize("B,d,K,L", SHAPES)
+    def test_matches_ref(self, B, d, K, L):
+        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=B)
+        w = make_projections(cfg)
+        x = _x(B, d, seed=8)
+        rng = np.random.default_rng(10)
+        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)), jnp.int32)
+        # a mid-range threshold so the mask actually splits the batch
+        pre = R.ace_score_ref(counts, x, w, cfg)
+        thresh = jnp.float32(np.median(np.asarray(pre)))
+        nc, scores, admit, buckets = ace_admit_fused(counts, x, w, thresh,
+                                                     cfg)
+        # The hash can flip a sign where |proj| ~ 0 (summation-order
+        # artifact, same contract as the bf16 srp_hash test); everything
+        # DOWNSTREAM of the kernel's own bucket draw must be exact.
+        agree = float(jnp.mean(
+            (buckets == R.srp_hash_ref(x, w, cfg)).astype(jnp.float32)))
+        assert agree > 0.999
+        want_scores = jnp.sum(R.ace_query_ref(counts, buckets), axis=-1) \
+            * jnp.float32(1.0 / L)
+        np.testing.assert_allclose(np.asarray(scores),
+                                   np.asarray(want_scores), rtol=1e-6)
+        want_admit = scores >= thresh
+        assert bool(jnp.all(admit == want_admit))
+        rows = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+        want_counts = counts.at[rows, buckets].add(
+            jnp.broadcast_to(admit.astype(counts.dtype)[:, None],
+                             buckets.shape))
+        assert bool(jnp.all(nc == want_counts)), "masked insert differs"
+
+    @pytest.mark.parametrize("t,expect", [(-np.inf, "all"), (np.inf, "none")])
+    def test_threshold_extremes(self, t, expect):
+        cfg = SrpConfig(dim=32, num_bits=6, num_tables=9, seed=2)
+        w = make_projections(cfg)
+        x = _x(21, 32, seed=3)
+        counts = jnp.zeros((9, 64), jnp.int32)
+        nc, scores, admit, _ = ace_admit_fused(counts, x, w, jnp.float32(t),
+                                               cfg)
+        if expect == "all":
+            assert bool(jnp.all(admit)) and int(nc.sum()) == 21 * 9
+        else:
+            assert not bool(jnp.any(admit)) and int(nc.sum()) == 0
+
+    def test_scores_are_pre_insert(self):
+        """Scoring must see the counts BEFORE the masked insert mutates
+        the aliased buffer (all items admitted, duplicates in play)."""
+        cfg = SrpConfig(dim=16, num_bits=4, num_tables=5, seed=0)
+        w = make_projections(cfg)
+        x = jnp.broadcast_to(_x(1, 16, seed=4), (12, 16))  # 12 duplicates
+        counts = jnp.zeros((5, 16), jnp.int32)
+        nc, scores, admit, _ = ace_admit_fused(counts, x, w,
+                                               jnp.float32(-np.inf), cfg)
+        np.testing.assert_allclose(np.asarray(scores), np.zeros(12))
+        assert int(nc.sum()) == 12 * 5   # but all 12 inserts landed
+
+    def test_pad_rows_never_insert(self):
+        """B not a multiple of 8: the pad rows hash garbage and must not
+        leak into the histogram or the mask."""
+        cfg = SrpConfig(dim=8, num_bits=5, num_tables=3, seed=1)
+        w = make_projections(cfg)
+        x = _x(5, 8, seed=5)
+        counts = jnp.zeros((3, 32), jnp.int32)
+        nc, scores, admit, buckets = ace_admit_fused(
+            counts, x, w, jnp.float32(-np.inf), cfg)
+        assert admit.shape == (5,) and scores.shape == (5,)
+        assert int(nc.sum()) == 5 * 3
+
 
 class TestAceQueryKernel:
     @pytest.mark.parametrize("B,d,K,L", SHAPES)
@@ -162,3 +262,27 @@ class TestOpsDispatch:
         np.testing.assert_allclose(
             np.asarray(ops.ace_score(st_k, q, w, cfg)),
             np.asarray(sk.score(st_j, w, q, cfg)), rtol=1e-6)
+
+    def test_ops_admit_matches_sketch_masked_path(self):
+        """Kernel-path admission equals hash→lookup→threshold→masked
+        insert on the pure-jnp sketch path, Welford stream included."""
+        from repro.core import sketch as sk
+        cfg = AceConfig(dim=14, num_bits=7, num_tables=10, seed=9,
+                        welford_min_n=8.0)
+        w = sk.make_params(cfg)
+        st_k = st_j = sk.insert(sk.init(cfg), w, _x(40, 14, seed=2), cfg)
+        for i in range(3):
+            q = _x(24, 14, seed=3 + i)
+            st_k, mask_k = ops.ace_admit(st_k, q, w, cfg, alpha=1.0,
+                                         warmup_items=16.0)
+            buckets = hash_buckets(q, w, cfg.srp)
+            scores = sk.lookup(st_j, buckets)
+            mask_j = scores >= sk.admit_threshold(st_j, 1.0, 16.0)
+            st_j = sk.insert_buckets_masked(st_j, buckets, mask_j, cfg)
+            assert bool(jnp.all(mask_k == mask_j))
+        assert bool(jnp.all(st_k.counts == st_j.counts))
+        assert float(st_k.n) == float(st_j.n)
+        np.testing.assert_allclose(float(st_k.welford_mean),
+                                   float(st_j.welford_mean), rtol=1e-6)
+        np.testing.assert_allclose(float(st_k.welford_m2),
+                                   float(st_j.welford_m2), rtol=1e-5)

@@ -26,7 +26,8 @@ def main() -> None:
 
     from benchmarks import (dist_throughput, fig1_discriminative,
                             fig3_5_variance, guardrail_latency,
-                            memory_table, table3_5_comparison, throughput)
+                            memory_table, stream_throughput,
+                            table3_5_comparison, throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -49,6 +50,8 @@ def main() -> None:
         "dist_throughput": lambda: dist_throughput.run(
             csv_rows, batch=512 if args.quick else 2048),
         "guardrail": lambda: guardrail_latency.run(
+            csv_rows, smoke=args.quick),
+        "stream": lambda: stream_throughput.run(
             csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:

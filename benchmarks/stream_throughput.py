@@ -1,0 +1,274 @@
+"""Streaming ingest throughput: legacy per-batch filter loop vs the
+scan-fused StreamRunner, and dense vs SRHT hashing at the crossover.
+
+Two measurements, one JSON (``BENCH_stream.json``):
+
+1. **Ingest.**  The pre-PR ``AceDataFilter.__call__`` (reproduced verbatim
+   below: hashes every batch TWICE, hand-rolls Welford, one device program
+   + host syncs per Python-level batch) driven batch-by-batch, against
+   ``repro.stream.StreamRunner`` consuming the same stream in chunks of T
+   with ONE donated-state scan program and one summary pull per chunk.
+   Reports items/s, host transfers (D2H/H2D counted at the drivers' only
+   sync points) per batch/chunk, and XLA compile counts over the timed
+   region (``jax.monitoring`` duration-event hook).
+
+2. **Hash crossover.**  ``hash_buckets`` under ``hash_mode="dense"`` vs
+   ``"srht"`` at d ∈ {64, 4096} (paper K=15, L=50), asserting the
+   ``"auto"`` break-even picks the measured winner at BOTH corners —
+   dense where the matmul is tiny and SRHT's m-row gather dominates, SRHT
+   where O(d·KL) loses to O(d log d + m).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.stream_throughput [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.monitoring
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as sk
+from repro.core.srp import SrpConfig, hash_buckets, make_projections
+from repro.core.srht import choose_hash_mode
+from repro.data.pipeline import AceDataFilter
+from repro.stream import StreamRunner
+
+from benchmarks.guardrail_latency import (_compile_count,
+                                          _install_compile_counter)
+
+
+# ---------------------------------------------------------------------------
+# The pre-PR AceDataFilter.__call__, kept verbatim as the ingest baseline:
+# TWO hashes per batch (sk.score + sk.hash_buckets), inline Welford.
+# ---------------------------------------------------------------------------
+
+def _legacy_filter_call(filt: AceDataFilter, state, w, feat, mask):
+    cfg = filt.ace_cfg
+    scores = sk.score(state, w, feat, cfg)
+    rates = scores / jnp.maximum(state.n, 1.0)
+    mu_rate = sk.mean_rate(state)
+    sigma = sk.sigma_welford(state)
+    armed = state.n >= filt.warmup_items
+    anom = jnp.logical_and(armed, rates < mu_rate - filt.alpha * sigma)
+    keep = jnp.logical_not(anom)
+    buckets = sk.hash_buckets(feat, w, cfg.srp)        # the SECOND hash
+    B, L = buckets.shape
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
+    inc = jnp.broadcast_to(keep[:, None], (B, L)).astype(state.counts.dtype)
+    new_counts = state.counts.at[rows, buckets].add(inc)
+    b = jnp.sum(keep.astype(jnp.float32))
+    n = state.n
+    tot = n + b
+    kept_rates = jnp.where(keep, scores / jnp.maximum(tot, 1.0), 0.0)
+    mean_b = jnp.sum(kept_rates) / jnp.maximum(b, 1.0)
+    m2_b = jnp.sum(jnp.where(keep, (kept_rates - mean_b) ** 2, 0.0))
+    delta = mean_b - state.welford_mean
+    safe = jnp.maximum(tot, 1.0)
+    new_state = sk.AceState(
+        counts=new_counts, n=tot,
+        welford_mean=state.welford_mean + delta * b / safe,
+        welford_m2=state.welford_m2 + m2_b + delta ** 2 * n * b / safe)
+    new_mask = mask * keep[:, None].astype(mask.dtype)
+    return new_state, new_mask, jnp.mean(keep.astype(jnp.float32))
+
+
+def _bench_ingest(n_chunks: int, batch: int, d: int, chunk_T: int,
+                  num_bits: int, num_tables: int):
+    """Per-batch (legacy) and per-chunk (scan) times, MEDIAN-aggregated —
+    this container is a noisy shared CPU, and a single total-wall number
+    swings 2× with scheduler luck; medians of many small timings don't.
+    The arrival batch is deliberately small (the paper's streaming setting
+    is per-item scoring): that is exactly the regime where the legacy
+    loop's per-batch dispatch + metric sync dominates the O(K·L) sketch
+    work and the scan runner's amortisation pays."""
+    n_batches = n_chunks * chunk_T
+    filt = AceDataFilter(d_model=d, num_bits=num_bits,
+                         num_tables=num_tables, warmup_items=float(batch),
+                         alpha=3.0)
+    rng = np.random.default_rng(0)
+    feats_np = [np.asarray(filt.features(jnp.asarray(
+        rng.normal(size=(batch, 2, d)) * 0.3 + 1.0, jnp.float32)))
+        for _ in range(n_batches)]
+    mask = jnp.ones((batch, 2), jnp.float32)
+
+    # ---- legacy per-batch loop: 1 H2D feed + 1 D2H metric sync per batch
+    state, w = filt.init()
+    legacy_step = jax.jit(
+        lambda s, w, f, m: _legacy_filter_call(filt, s, w, f, m))
+    state, _, frac = legacy_step(state, w, jnp.asarray(feats_np[0]), mask)
+    float(frac)                                       # compile + warm
+    start_c = _compile_count[0]
+    h2d = d2h = 0
+    per_batch = []
+    for f in feats_np:
+        t0 = time.perf_counter()
+        fd = jnp.asarray(f); h2d += 1                 # the feed
+        state, _, frac = legacy_step(state, w, fd, mask)
+        _ = float(frac); d2h += 1                     # the metric sync
+        per_batch.append(time.perf_counter() - t0)
+    legacy_med = float(np.median(per_batch))
+    legacy = {
+        "items_per_s": batch / legacy_med,
+        "median_batch_ms": legacy_med * 1e3,
+        "d2h_per_batch": d2h / n_batches,
+        "h2d_per_batch": h2d / n_batches,
+        "compiles_timed_region": _compile_count[0] - start_c,
+        "hashes_per_batch": 2,
+    }
+
+    # ---- scan runner: 1 stacked feed + 1 summary pull per T batches
+    runner = StreamRunner(filt, chunk_T=chunk_T)
+    state, w = runner.init()
+    chunks = [np.stack(feats_np[c * chunk_T:(c + 1) * chunk_T])
+              for c in range(n_chunks)]
+    state, summary = runner.consume(state, w, jnp.asarray(chunks[0]))
+    jax.device_get(summary)                           # compile + warm
+    start_c = _compile_count[0]
+    h2d = d2h = 0
+    per_chunk = []
+    for c in chunks:
+        t0 = time.perf_counter()
+        feats = jnp.asarray(c); h2d += 1
+        state, summary = runner.consume(state, w, feats)
+        jax.device_get(summary); d2h += 1             # the ONLY pull
+        per_chunk.append(time.perf_counter() - t0)
+    scan_med = float(np.median(per_chunk))
+    scan = {
+        "items_per_s": chunk_T * batch / scan_med,
+        "median_chunk_ms": scan_med * 1e3,
+        "d2h_per_chunk": d2h / n_chunks,
+        "h2d_per_chunk": h2d / n_chunks,
+        "compiles_timed_region": _compile_count[0] - start_c,
+        "trace_count": runner.trace_count,
+        "hashes_per_batch": 1,
+    }
+    return {"batch": batch, "d_model": d, "chunk_T": chunk_T,
+            "num_bits": num_bits, "num_tables": num_tables,
+            "n_batches": n_batches,
+            "legacy": legacy, "scan": scan,
+            "speedup_items_per_s": scan["items_per_s"]
+            / max(legacy["items_per_s"], 1e-9)}
+
+
+def _bench_hash_crossover(dims, batch: int, iters: int):
+    """Wall-time dense vs SRHT ``hash_buckets`` + the auto pick per dim."""
+    out = {}
+    rng = np.random.default_rng(1)
+    for d in dims:
+        x = jnp.asarray(rng.normal(size=(batch, d)), jnp.float32)
+        res = {}
+        for mode in ("dense", "srht"):
+            cfg = SrpConfig(dim=d, hash_mode=mode)    # paper K=15, L=50
+            w = make_projections(cfg)
+            fn = jax.jit(lambda x, w, cfg=cfg: hash_buckets(x, w, cfg))
+            jax.block_until_ready(fn(x, w))           # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                r = fn(x, w)
+            jax.block_until_ready(r)
+            res[mode] = (time.perf_counter() - t0) / iters * 1e6
+        auto = choose_hash_mode(SrpConfig(dim=d, hash_mode="auto"))
+        winner = "srht" if res["srht"] < res["dense"] else "dense"
+        out[str(d)] = {
+            "dense_us": res["dense"], "srht_us": res["srht"],
+            "auto_picks": auto, "measured_winner": winner,
+            "auto_agrees": auto == winner,
+        }
+    return out
+
+
+def run(csv_rows: list[str] | None = None, *,
+        json_path: str = "BENCH_stream.json", smoke: bool = False) -> dict:
+    _install_compile_counter()
+    if smoke and json_path == "BENCH_stream.json":
+        # don't clobber the committed full-run artifact (cited by the
+        # README/ARCHITECTURE tables) with tiny smoke-shape numbers
+        json_path = "BENCH_stream.smoke.json"
+    if smoke:
+        reps = 1
+        ingest_kw = dict(n_chunks=3, batch=8, d=32, chunk_T=16,
+                         num_bits=8, num_tables=16)
+        hash_kw = dict(dims=(64, 4096), batch=64, iters=4)
+    else:
+        reps = 3
+        ingest_kw = dict(n_chunks=4, batch=8, d=64, chunk_T=128,
+                         num_bits=10, num_tables=32)
+        hash_kw = dict(dims=(64, 4096), batch=256, iters=16)
+
+    # Repeat the whole comparison and report the median-speedup rep: one
+    # scheduler hiccup on this shared container can halve either side's
+    # throughput for a whole rep, and a single sample would swing the
+    # headline 2x in either direction.
+    runs = [_bench_ingest(**ingest_kw) for _ in range(reps)]
+    runs.sort(key=lambda r: r["speedup_items_per_s"])
+    ingest = runs[len(runs) // 2]
+    ingest["rep_speedups"] = [round(r["speedup_items_per_s"], 2)
+                              for r in runs]
+    crossover = _bench_hash_crossover(**hash_kw)
+    result = {"ingest": ingest, "hash_crossover": crossover}
+
+    with open(json_path, "w") as f:
+        json.dump(result, f, indent=2)
+
+    lg, sc = ingest["legacy"], ingest["scan"]
+    print(f"stream ingest  B={ingest['batch']} d={ingest['d_model']} "
+          f"K={ingest['num_bits']} L={ingest['num_tables']} "
+          f"T={ingest['chunk_T']} ({ingest['n_batches']} batches)")
+    print(f"  legacy : {lg['items_per_s']:10.0f} items/s   "
+          f"{lg['d2h_per_batch']:.0f} D2H + {lg['h2d_per_batch']:.0f} H2D "
+          f"per batch   2 hashes/batch   "
+          f"compiles {lg['compiles_timed_region']}")
+    print(f"  scan   : {sc['items_per_s']:10.0f} items/s   "
+          f"{sc['d2h_per_chunk']:.0f} D2H + {sc['h2d_per_chunk']:.0f} H2D "
+          f"per {ingest['chunk_T']}-batch chunk   1 hash/batch   "
+          f"compiles {sc['compiles_timed_region']}   "
+          f"traces {sc['trace_count']}")
+    print(f"  speedup: {ingest['speedup_items_per_s']:.2f}x items/s")
+    for d, r in crossover.items():
+        print(f"hash d={d:>5}: dense {r['dense_us']:9.1f} us   "
+              f"srht {r['srht_us']:9.1f} us   auto->{r['auto_picks']} "
+              f"({'agrees' if r['auto_agrees'] else 'DISAGREES'} "
+              f"with measurement)")
+
+    if csv_rows is not None:
+        csv_rows.append(
+            f"stream_ingest_legacy,{1e6 / lg['items_per_s']:.3f},"
+            f"{lg['compiles_timed_region']}")
+        csv_rows.append(
+            f"stream_ingest_scan,{1e6 / sc['items_per_s']:.3f},"
+            f"{sc['compiles_timed_region']}")
+        for d, r in crossover.items():
+            csv_rows.append(f"hash_dense_d{d},{r['dense_us']:.1f},0")
+            csv_rows.append(f"hash_srht_d{d},{r['srht_us']:.1f},0")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI")
+    ap.add_argument("--json", default="BENCH_stream.json")
+    args = ap.parse_args()
+    res = run(json_path=args.json, smoke=args.smoke)
+
+    ingest, cross = res["ingest"], res["hash_crossover"]
+    assert ingest["scan"]["trace_count"] == 1, "scan runner retraced!"
+    assert ingest["scan"]["d2h_per_chunk"] <= 1.0, \
+        "scan runner pulled more than once per chunk"
+    if not args.smoke:
+        assert ingest["speedup_items_per_s"] >= 5.0, \
+            f"scan speedup {ingest['speedup_items_per_s']:.2f}x < 5x"
+        assert cross["4096"]["srht_us"] < cross["4096"]["dense_us"], \
+            "SRHT did not beat dense at d=4096"
+        assert all(r["auto_agrees"] for r in cross.values()), \
+            f"auto break-even disagrees with measurement: {cross}"
+
+
+if __name__ == "__main__":
+    main()

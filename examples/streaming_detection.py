@@ -1,18 +1,32 @@
-"""Streaming anomaly detection with drift — the paper's Challenge 1.
+"""Streaming anomaly detection with drift — the paper's Challenge 1, at
+device speed.
 
     PYTHONPATH=src python examples/streaming_detection.py
 
-A high-rate stream whose distribution drifts over time; a sliding-window
-ACE sketch (insert new / delete expired — Eq. 11/12 dynamic updates) keeps
-detecting burst anomalies without ever storing the stream.
+A high-rate stream whose distribution drifts over time, with periodic
+burst anomalies.  Ingest runs through ``repro.stream.StreamRunner``: T
+batches stack into one chunk and ONE donated-state ``lax.scan`` device
+program hashes → scores → thresholds → masked-inserts every batch, so the
+host touches the device once per T batches (the stacked feed + the chunk
+summary) instead of ≥ 2 syncs per batch — the difference between the
+sketch running at stream rate and the Python loop being the bottleneck.
+
+Per chunk the summary reports kept fraction, per-step anomaly counts (the
+burst detector below just thresholds them) and the top-k most-anomalous
+item coordinates, all computed on device.  The sketch updates online with
+kept items only; Eq. 12 sliding-window deletes remain available off this
+path (``sk.delete`` — see examples/quickstart.py).
 """
+import time
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import AceConfig
-from repro.core import sketch as sk
+from repro.data.pipeline import AceDataFilter
+from repro.stream import StreamRunner
 
-WINDOW = 4096          # sliding window (items)
+CHUNK_T = 10           # batches per scan chunk (one host round-trip each)
 BATCH = 256
 STEPS = 60
 DIM = 24
@@ -24,7 +38,7 @@ def stream_batch(rng, t, poison=False):
     what an SRP score sees."""
     half = DIM // 2
     mu = np.zeros(DIM)
-    mu[:half] = 4.0 * (1.0 + 0.3 * np.sin(t / 10.0 + np.arange(half)))
+    mu[:half] = 4.0 * (1.0 + 0.1 * np.sin(t / 10.0 + np.arange(half)))
     if poison:
         nu = np.zeros(DIM)
         nu[half:] = 6.0
@@ -34,47 +48,49 @@ def stream_batch(rng, t, poison=False):
 
 def main():
     rng = np.random.default_rng(0)
-    cfg = AceConfig(dim=DIM, num_bits=13, num_tables=40, seed=1)
-    state = sk.init(cfg)
-    w = sk.make_params(cfg)
-    history = []          # host-side ring buffer of batch hashes to expire
+    filt = AceDataFilter(d_model=DIM, num_bits=13, num_tables=40,
+                         alpha=3.0, warmup_items=1024.0)
+    runner = StreamRunner(filt, chunk_T=CHUNK_T, topk=4)
+    state, w = runner.init()
+    # (T, B, DIM) raw chunk -> (T, B, DIM+1) features (unit-mean + bias;
+    # S=1 sequences) in ONE jitted program — not T per-batch dispatches.
+    feat_chunk = jax.jit(jax.vmap(lambda b: filt.features(b[:, None, :])))
 
+    poison_steps = {t for t in range(STEPS) if t % 10 == 9 and t > 20}
     caught, missed, false_pos = 0, 0, 0
-    for t in range(STEPS):
-        poison = t % 10 == 9 and t > 20
-        batch = jnp.asarray(stream_batch(rng, t, poison), jnp.float32)
+    t0 = time.perf_counter()
 
-        # score against the current sketch (rate space: score/n)
-        rates = sk.score(state, w, batch, cfg) / max(float(state.n), 1.0)
-        mu = sk.mean_rate(state)
-        sigma = sk.sigma_welford(state)
-        armed = float(state.n) > 1024
-        frac_low = float(jnp.mean(
-            (rates < mu - 2.0 * sigma).astype(jnp.float32)))
-        batch_anomalous = armed and frac_low > 0.5
+    for c0 in range(0, STEPS, CHUNK_T):
+        batches = [stream_batch(rng, t, t in poison_steps)
+                   for t in range(c0, c0 + CHUNK_T)]
+        raw = jnp.asarray(np.stack(batches), jnp.float32)  # the ONE feed
+        state, summary = runner.consume(state, w, feat_chunk(raw))
+        s = jax.device_get(summary)            # the chunk's ONE sync
 
-        if poison and batch_anomalous:
-            caught += 1
-        elif poison:
-            missed += 1
-        elif batch_anomalous:
-            false_pos += 1
+        for i, t in enumerate(range(c0, c0 + CHUNK_T)):
+            flagged = int(s.anom_counts[i]) > BATCH // 2
+            if t in poison_steps and flagged:
+                caught += 1
+            elif t in poison_steps:
+                missed += 1
+            elif flagged:
+                false_pos += 1
+        worst = ", ".join(
+            f"step {c0 + int(st)} item {int(it)} (margin {m:+.2f})"
+            for st, it, m in zip(s.topk_step, s.topk_item, s.topk_margin)
+            if np.isfinite(m))
+        print(f"chunk t=[{c0:2d},{c0 + CHUNK_T - 1:2d}]  n={s.n:7.0f}  "
+              f"kept={s.kept_frac:.3f}  anom/step={s.anom_counts.tolist()}")
+        if worst:
+            print(f"  most anomalous: {worst}")
 
-        # sliding window: insert non-anomalous data, expire the oldest
-        if not batch_anomalous:
-            state = sk.insert(state, w, batch, cfg)
-            history.append(batch)
-        if len(history) * BATCH > WINDOW:
-            state = sk.delete(state, w, history.pop(0), cfg)
-
-        tag = ("POISON " if poison else "       ") + \
-            ("FLAGGED" if batch_anomalous else "")
-        if poison or batch_anomalous or t % 10 == 0:
-            print(f"t={t:3d} n={float(state.n):6.0f} μ_rate={float(mu):6.3f} "
-                  f"low-frac={frac_low:.2f} {tag}")
-
+    dt = time.perf_counter() - t0
     print(f"\nbursts caught {caught}, missed {missed}, "
           f"clean batches falsely flagged {false_pos}")
+    print(f"throughput: {STEPS * BATCH / dt:,.0f} items/s "
+          f"({STEPS // CHUNK_T} host round-trips for {STEPS} batches; "
+          f"scan program traced {runner.trace_count}x)")
+    cfg = filt.ace_cfg
     print(f"sketch memory: {cfg.memory_bytes() / 2**20:.2f} MB; "
           f"stream processed: {STEPS * BATCH} items "
           f"({STEPS * BATCH * DIM * 4 / 2**20:.1f} MB never stored)")

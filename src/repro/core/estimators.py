@@ -97,7 +97,9 @@ class AceEstimator:
 
     def update(self, x: jax.Array) -> "AceEstimator":
         if self.use_kernels:
-            buckets = self._kops.srp_hash(x, self.w, self.cfg.srp)
+            # hash_dispatch, not srp_hash: honours cfg.hash_mode (the
+            # dense w is a (d, 0) placeholder under "srht")
+            buckets = self._kops.hash_dispatch(x, self.w, self.cfg.srp)
             self.state = self._kops.ace_update(self.state, buckets, self.cfg)
         else:
             self.state = sk.insert(self.state, self.w, x, self.cfg)

@@ -62,11 +62,15 @@ class AceConfig:
     welford_min_n: float = 0.0  # skip σ-stream updates below this n (the
                                 # cold-start rates score/n are off-scale and
                                 # would inflate σ forever)
+    hash_mode: str = "dense"    # "dense" | "srht" | "auto" — threaded into
+                                # .srp; part of the persisted-sketch
+                                # contract (see SrpConfig.hash_mode)
 
     @property
     def srp(self) -> SrpConfig:
         return SrpConfig(dim=self.dim, num_bits=self.num_bits,
-                         num_tables=self.num_tables, seed=self.seed)
+                         num_tables=self.num_tables, seed=self.seed,
+                         hash_mode=self.hash_mode)
 
     @property
     def num_buckets(self) -> int:

@@ -17,6 +17,8 @@ the data-pipeline filter where d = d_model can be 12288).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -49,18 +51,25 @@ def fwht(x: jax.Array) -> jax.Array:
 
 
 class SrhtParams:
-    """Static (numpy) SRHT parameters — signs and row sample, derived from seed."""
+    """Static (numpy) SRHT parameters — signs and row sample, derived from seed.
+
+    Kept as HOST numpy arrays on purpose: ``srht_params`` caches instances
+    and the first construction may happen inside a jit trace (the hash
+    dispatch resolves parameters at trace time) — jnp arrays built there
+    would be tracers and leak through the cache.  numpy operands convert
+    to device constants at the jnp op that consumes them.
+    """
 
     def __init__(self, cfg: SrpConfig):
         self.cfg = cfg
         d_pad = _next_pow2(max(cfg.dim, 2))
         rng = np.random.default_rng(cfg.seed + 0x5A5A)
         self.d_pad = d_pad
-        self.signs1 = jnp.asarray(rng.choice([-1.0, 1.0], size=(d_pad,)), jnp.float32)
-        self.signs2 = jnp.asarray(rng.choice([-1.0, 1.0], size=(d_pad,)), jnp.float32)
+        self.signs1 = rng.choice([-1.0, 1.0], size=(d_pad,)).astype(np.float32)
+        self.signs2 = rng.choice([-1.0, 1.0], size=(d_pad,)).astype(np.float32)
         m = cfg.num_projections
         # Sample rows with replacement across possibly > d_pad projections.
-        self.rows = jnp.asarray(rng.integers(0, d_pad, size=(m,)), jnp.int32)
+        self.rows = rng.integers(0, d_pad, size=(m,)).astype(np.int32)
 
 
 def srht_bits(x: jax.Array, params: SrhtParams) -> jax.Array:
@@ -79,6 +88,19 @@ def srht_hash_buckets(x: jax.Array, params: SrhtParams) -> jax.Array:
     return pack_buckets(srht_bits(x, params), params.cfg)
 
 
+@functools.lru_cache(maxsize=64)
+def srht_params(cfg: SrpConfig) -> SrhtParams:
+    """Cached SRHT parameters per config.
+
+    ``hash_buckets``/``hash_dispatch`` resolve parameters on every call
+    (often at trace time inside a jitted hot path); rebuilding the sign
+    diagonals + row sample from numpy each time would re-derive and
+    re-upload identical constants per trace.  SrpConfig is frozen and
+    hashable, so the cache key is exact.
+    """
+    return SrhtParams(cfg)
+
+
 def flops_dense(cfg: SrpConfig, batch: int) -> int:
     """FLOPs of the dense SRP matmul path."""
     return 2 * batch * cfg.dim * cfg.padded_projections
@@ -89,3 +111,48 @@ def flops_srht(cfg: SrpConfig, batch: int) -> int:
     d_pad = _next_pow2(max(cfg.dim, 2))
     log2d = d_pad.bit_length() - 1
     return batch * (2 * d_pad * log2d + 2 * d_pad + cfg.num_projections)
+
+
+# ---------------------------------------------------------------------------
+# Dense-vs-SRHT break-even for hash_mode="auto".
+#
+# Raw FLOP counts (``flops_dense``/``flops_srht``) are the wrong units to
+# compare directly: the dense path is ONE matmul running at MXU (or BLAS)
+# throughput, while the SRHT path is log2(d) butterfly passes plus an
+# m-element row gather on the VPU — a matmul FLOP is tens of times cheaper
+# than a vector-op, and a gathered element costs far more than an add.
+# The two weights below fold that in; they are calibrated so the model's
+# pick matches the measured winner on both CPU (BLAS vs XLA elementwise)
+# and the TPU roofline at the benchmark corners d ∈ {64, 4096} with the
+# paper's K=15, L=50 (dense wins low-d where the matmul is tiny and the
+# fixed m-gather dominates SRHT; SRHT wins high-d where the matmul grows
+# O(d·KL) against O(d log d)).  ``benchmarks/stream_throughput.py``
+# re-measures both corners every run and asserts the model still agrees.
+# ---------------------------------------------------------------------------
+
+DENSE_MATMUL_SPEEDUP = 32.0   # matmul FLOPs per vector-op-equivalent
+GATHER_COST_FACTOR = 16.0     # cost of one gathered element vs one add
+
+
+def effective_cost_dense(cfg: SrpConfig) -> float:
+    """Throughput-weighted per-item cost of the dense matmul hash."""
+    return flops_dense(cfg, 1) / DENSE_MATMUL_SPEEDUP
+
+
+def effective_cost_srht(cfg: SrpConfig) -> float:
+    """Throughput-weighted per-item cost of the SRHT hash."""
+    d_pad = _next_pow2(max(cfg.dim, 2))
+    log2d = d_pad.bit_length() - 1
+    return (2 * d_pad * log2d + 2 * d_pad
+            + GATHER_COST_FACTOR * cfg.num_projections)
+
+
+def choose_hash_mode(cfg: SrpConfig) -> str:
+    """The ``hash_mode="auto"`` dispatch rule: cheaper effective cost wins.
+
+    Batch size cancels (both paths are linear in B), so the choice is a
+    pure function of the static config — safe to resolve at trace time.
+    """
+    if effective_cost_srht(cfg) < effective_cost_dense(cfg):
+        return "srht"
+    return "dense"

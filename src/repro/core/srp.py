@@ -32,6 +32,9 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+HASH_MODES = ("dense", "srht", "auto")
+
+
 @dataclasses.dataclass(frozen=True)
 class SrpConfig:
     """Static configuration of an SRP meta-hash bank.
@@ -44,6 +47,14 @@ class SrpConfig:
       pad_lanes: if True, the projection matrix is materialised with K*L
         rounded up to a multiple of 128 (extra columns are ignored at pack
         time).  The paper uses K=15, L=50 -> 750 projections; we compute 768.
+      hash_mode: which hash construction every hot path uses —
+        ``"dense"`` (the O(d·KL) Gaussian matmul, MXU), ``"srht"`` (the
+        O(d log d + KL) Fast-JL transform of paper §2.2, VPU —
+        ``repro.core.srht``), or ``"auto"`` (the throughput-weighted
+        break-even ``repro.core.srht.choose_hash_mode`` picks per config).
+        The two families draw DIFFERENT hash functions: a sketch built
+        under one mode must be queried under the same mode (the mode is
+        part of the persisted-sketch contract, like ``seed``).
     """
 
     dim: int
@@ -51,6 +62,7 @@ class SrpConfig:
     num_tables: int = 50
     seed: int = 0
     pad_lanes: bool = True
+    hash_mode: str = "dense"
 
     @property
     def num_projections(self) -> int:
@@ -72,7 +84,15 @@ def make_projections(cfg: SrpConfig, dtype=jnp.float32) -> jax.Array:
 
     The first K*L columns are the live projections (column j*K + k is bit k of
     meta-hash j); trailing pad columns are only there for lane alignment.
+
+    When the config resolves to the SRHT hash family, the matrix is never
+    consumed — return a (d, 0) placeholder instead of materialising (and
+    threading through every jitted program) what would be ~37 MB of dead
+    fp32 at d_model=12288.  The placeholder keeps every ``(state, w, x)``
+    call signature intact.
     """
+    if resolve_hash_mode(cfg) == "srht":
+        return jnp.zeros((cfg.dim, 0), dtype=dtype)
     key = jax.random.PRNGKey(cfg.seed)
     w = jax.random.normal(key, (cfg.dim, cfg.padded_projections), dtype=dtype)
     return w
@@ -102,8 +122,31 @@ def pack_buckets(bits: jax.Array, cfg: SrpConfig) -> jax.Array:
     return jnp.sum(grouped * weights, axis=-1, dtype=jnp.int32)
 
 
+def resolve_hash_mode(cfg: SrpConfig) -> str:
+    """Resolve ``cfg.hash_mode`` to a concrete family (auto → break-even)."""
+    if cfg.hash_mode not in HASH_MODES:
+        raise ValueError(f"unknown hash_mode {cfg.hash_mode!r} "
+                         f"(want one of {HASH_MODES})")
+    if cfg.hash_mode == "auto":
+        from repro.core import srht  # local: srht imports this module
+        return srht.choose_hash_mode(cfg)
+    return cfg.hash_mode
+
+
 def hash_buckets(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
-    """Full SRP meta-hash: (..., d) -> (..., L) bucket ids in [0, 2^K)."""
+    """Full SRP meta-hash: (..., d) -> (..., L) bucket ids in [0, 2^K).
+
+    THE hash entry point of every jnp hot path (sketch insert/score, both
+    ``repro.dist`` layouts, the data filter, the stream runner): dispatches
+    on ``cfg.hash_mode`` between the dense matmul and the SRHT fast path,
+    so flipping the knob re-routes them all at once.  ``w`` is ignored
+    under ``"srht"`` (the transform is parameterised by sign diagonals and
+    a row sample derived from ``cfg.seed``) but keeps its place in the
+    signature so the two families are drop-in interchangeable.
+    """
+    if resolve_hash_mode(cfg) == "srht":
+        from repro.core import srht  # local: srht imports this module
+        return srht.srht_hash_buckets(x, srht.srht_params(cfg))
     return pack_buckets(srp_bits(x, w, cfg), cfg)
 
 

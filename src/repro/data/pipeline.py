@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch as sk
+from repro.core import srp
 from repro.core.sketch import AceConfig
 
 
@@ -91,12 +92,14 @@ class AceDataFilter:
     alpha: float = 4.0
     warmup_items: float = 512.0
     bias_const: float = 0.25
+    hash_mode: str = "dense"     # "dense" | "srht" | "auto" (SrpConfig)
 
     @property
     def ace_cfg(self) -> AceConfig:
         return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
                          num_tables=self.num_tables, seed=29,
-                         welford_min_n=self.warmup_items / 2)
+                         welford_min_n=self.warmup_items / 2,
+                         hash_mode=self.hash_mode)
 
     def init(self):
         return sk.init(self.ace_cfg), sk.make_params(self.ace_cfg)
@@ -112,42 +115,46 @@ class AceDataFilter:
         bias = jnp.full((f.shape[0], 1), self.bias_const, jnp.float32)
         return jnp.concatenate([f, bias], axis=-1)
 
+    def step(self, state, w, feat):
+        """One filter step over precomputed features: hash ONCE, score from
+        the same bucket ids, threshold on-device, masked insert.
+
+        Returns (new_state, keep (B,) bool, margin (B,) float32) where
+        ``margin = score − threshold`` (most-negative = most anomalous;
+        +inf during warmup, when the threshold is −inf and everything is
+        kept).  This is the scan body of ``repro.stream.StreamRunner`` and
+        the filter path compiled into ``train_step`` — ONE implementation
+        for both, so chunked and per-batch ingest stay equivalent by
+        construction.
+
+        The decision matches the pre-rewrite μ−ασ rate-space rule moved to
+        score space via ``sk.admit_threshold`` (multiply both sides by
+        max(n, 1) > 0); the insert + Welford fold delegate to
+        ``sk.insert_buckets_masked`` → ``sk.masked_batch_welford``, the
+        same single-homed helpers as the serving guardrail and both
+        ``repro.dist`` layouts.  Two behaviour notes vs the old inline
+        block (both unifications, property-tested in tests/test_stream.py):
+        the Welford stream now folds POST-insert scores (Algorithm 1 line
+        12's x-vs-D∪{x} convention, like every other insert path) where
+        the old code folded pre-insert scores, and the ``welford_min_n``
+        cold-start gate declared in ``ace_cfg`` is now actually honoured
+        (the hand-rolled block ignored it).
+        """
+        cfg = self.ace_cfg
+        buckets = srp.hash_buckets(feat, w, cfg.srp)   # the ONE hash
+        scores = sk.lookup(state, buckets)             # same bucket ids
+        thresh = sk.admit_threshold(state, self.alpha, self.warmup_items)
+        keep = scores >= thresh
+        margin = scores - thresh
+        new_state = sk.insert_buckets_masked(state, buckets, keep, cfg)
+        return new_state, keep, margin
+
     def __call__(self, state, w, embeds, mask):
         """Score + filter + update.  Returns (new_state, new_mask, frac_kept).
 
         mask: (B, S) loss mask; anomalous sequences are zeroed out.
         """
-        cfg = self.ace_cfg
         feat = self.features(embeds)                       # (B, d+1)
-        scores = sk.score(state, w, feat, cfg)
-        rates = scores / jnp.maximum(state.n, 1.0)
-        mu_rate = sk.mean_rate(state)
-        sigma = sk.sigma_welford(state)
-        armed = state.n >= self.warmup_items
-        anom = jnp.logical_and(armed,
-                               rates < mu_rate - self.alpha * sigma)
-        keep = jnp.logical_not(anom)
-        # update sketch with kept items only: scatter-add the keep flag as
-        # the increment (0 for anomalous rows) — no sentinel index games.
-        buckets = sk.hash_buckets(feat, w, cfg.srp)
-        B, L = buckets.shape
-        rows = jnp.broadcast_to(
-            jnp.arange(L, dtype=jnp.int32)[None, :], (B, L))
-        inc = jnp.broadcast_to(
-            keep[:, None], (B, L)).astype(state.counts.dtype)
-        new_counts = state.counts.at[rows, buckets].add(inc)
-        b = jnp.sum(keep.astype(jnp.float32))
-        n = state.n
-        tot = n + b
-        kept_rates = jnp.where(keep, scores / jnp.maximum(tot, 1.0), 0.0)
-        mean_b = jnp.sum(kept_rates) / jnp.maximum(b, 1.0)
-        m2_b = jnp.sum(jnp.where(keep,
-                                 (kept_rates - mean_b) ** 2, 0.0))
-        delta = mean_b - state.welford_mean
-        safe = jnp.maximum(tot, 1.0)
-        new_state = sk.AceState(
-            counts=new_counts, n=tot,
-            welford_mean=state.welford_mean + delta * b / safe,
-            welford_m2=state.welford_m2 + m2_b + delta ** 2 * n * b / safe)
+        new_state, keep, _margin = self.step(state, w, feat)
         new_mask = mask * keep[:, None].astype(mask.dtype)
         return new_state, new_mask, jnp.mean(keep.astype(jnp.float32))

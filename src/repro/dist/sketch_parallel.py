@@ -423,6 +423,23 @@ def table_sharded_mean_mu(mesh, cfg: AceConfig, state: AceState,
     return make_table_sharded_mean_mu(mesh, cfg, table_axis=table_axis)(state)
 
 
+def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
+                         table_axis: str = "model") -> AceState:
+    """NamedSharding pytree for a named sketch layout (validated).
+
+    The one place the "replicated"/"table_sharded" layout names resolve
+    to placements — the guardrail, the stream runner, and any other
+    stateful host wrapper share it instead of re-growing the same
+    if/elif (+ divisibility validation) each."""
+    if layout == "table_sharded":
+        table_shard_info(cfg, mesh, table_axis)
+        return table_sharded_shardings(mesh, table_axis)
+    if layout == "replicated":
+        return sketch_shardings(mesh)
+    raise ValueError(f"unknown sketch layout {layout!r} "
+                     "(want 'replicated' or 'table_sharded')")
+
+
 def table_sharded_shardings(mesh, table_axis: str = "model") -> AceState:
     """NamedSharding pytree placing a GLOBAL AceState table-sharded.
 

@@ -42,6 +42,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.srp import SrpConfig
 from repro.kernels.ace_score_fused import flat_table_gather
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.srp_hash import make_pack_matrix, _round_up
 
 
@@ -107,7 +108,7 @@ def _kernel(q_ref, w_ref, pack_ref, thresh_ref, counts_in_ref,
 @functools.partial(jax.jit, static_argnames=("cfg", "bk", "interpret"))
 def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
                     thresh: jax.Array, cfg: SrpConfig, bk: int = 512,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """One-launch guardrail admission step.
 
     counts (L, 2^K), q (B, d), w (d, P), thresh () float32 (score-space,
@@ -118,6 +119,7 @@ def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
          buckets (B, L) int32 — the one hash, re-exported so the Welford
          epilogue never hashes again).
     """
+    interpret = resolve_interpret(interpret)
     B, d = q.shape
     P = cfg.padded_projections
     L, nbuckets = counts.shape

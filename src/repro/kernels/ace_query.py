@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 
 def _kernel_vector(buckets_ref, counts_ref, out_ref, *, L: int):
     for j in range(L):  # static unroll over tables
@@ -43,9 +45,10 @@ def _kernel_scalar(buckets_ref, counts_ref, out_ref, *, B: int, L: int):
 
 @functools.partial(jax.jit, static_argnames=("interpret", "mode", "bm"))
 def ace_query(counts: jax.Array, buckets: jax.Array,
-              interpret: bool = True, mode: str = "vector",
+              interpret: bool | None = None, mode: str = "vector",
               bm: int = 1024) -> jax.Array:
     """counts (L, 2^K), buckets (B, L) -> gathered (B, L) float32."""
+    interpret = resolve_interpret(interpret)
     L, nbuckets = counts.shape
     B = buckets.shape[0]
     assert buckets.shape == (B, L)

@@ -27,6 +27,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.srp import SrpConfig
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.srp_hash import make_pack_matrix, _round_up
 
 
@@ -76,8 +77,9 @@ def _kernel(q_ref, w_ref, pack_ref, counts_ref, out_ref, acc_ref,
 @functools.partial(jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
 def ace_score_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
                     cfg: SrpConfig, bm: int = 128, bk: int = 512,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """counts (L, 2^K), q (B, d), w (d, P) -> scores (B,) float32."""
+    interpret = resolve_interpret(interpret)
     B, d = q.shape
     P = cfg.padded_projections
     L, nbuckets = counts.shape

@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 # Break-even constants of the cost model above (c ≈ 8 scalar cycles per
 # RMW → hist wins up to 2^K = 8192; the B·L floor keeps tiny batches on
 # the zero-setup scalar loop).
@@ -97,13 +99,14 @@ def _kernel_hist(buckets_ref, counts_in_ref, counts_out_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret", "donate", "mode"))
 def ace_update(counts: jax.Array, buckets: jax.Array,
-               interpret: bool = True, donate: bool = True,
+               interpret: bool | None = None, donate: bool = True,
                mode: str = "auto") -> jax.Array:
     """counts (L, 2^K) int; buckets (B, L) int32 -> updated counts.
 
     In-place on TPU via input_output_aliases (the counts buffer is donated).
     ``mode`` ∈ {"auto", "scalar", "hist"} — see the module docstring.
     """
+    interpret = resolve_interpret(interpret)
     L, nbuckets = counts.shape
     B = buckets.shape[0]
     assert buckets.shape == (B, L)

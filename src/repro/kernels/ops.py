@@ -1,35 +1,61 @@
 """jit'd public wrappers over the Pallas kernels, with backend dispatch.
 
-On this CPU container the kernels run under ``interpret=True`` (the kernel
-body executes as traced JAX on CPU — bit-exact contract validation); on a
-TPU runtime set ``repro.kernels.ops.INTERPRET = False`` (or the
-REPRO_PALLAS_INTERPRET=0 env var) for the Mosaic lowering.
+Interpret-vs-Mosaic is resolved per call through the shared
+``repro.kernels.runtime`` resolver (REPRO_PALLAS_INTERPRET env var, else
+backend probe: interpret everywhere but TPU) — there is no module-level
+flag to forget, and every kernel entry point in this package goes through
+the same default, so a benchmark can never silently time interpret mode
+on one path and Mosaic on another.
+
+Hash-family dispatch: ``hash_dispatch`` routes ``SrpConfig.hash_mode``
+between the dense-MXU ``srp_hash`` kernel and the VPU-only ``srht_hash``
+kernel (``"auto"`` applies the throughput-weighted break-even of
+``repro.core.srht.choose_hash_mode``).  The fused score/admit entry
+points honour the same knob: under ``"srht"`` the single hash runs as
+the SRHT kernel and the rest of the fused program (gather / threshold /
+masked insert) falls back to the shared jnp helpers — still exactly one
+hash per batch; the all-in-one-launch Pallas fusions are dense-only
+(their hash matmul is welded into the kernel body).
 
 Also exposes the sketch-level convenience ops used by AceEstimator
 (``use_kernels=True``) and the serving guardrail.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as _sk
 from repro.core.sketch import AceConfig, AceState
-from repro.core.srp import SrpConfig
+from repro.core.srp import SrpConfig, resolve_hash_mode
 from repro.kernels import ace_admit_fused as _a
 from repro.kernels import ace_query as _q
 from repro.kernels import ace_score_fused as _f
 from repro.kernels import ace_update as _u
+from repro.kernels import srht_hash as _sh
 from repro.kernels import srp_hash as _h
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
-    """(B, d) -> (B, L) bucket ids via the Pallas kernel."""
-    return _h.srp_hash(x, w, cfg, interpret=INTERPRET)
+    """(B, d) -> (B, L) bucket ids via the dense-matmul Pallas kernel."""
+    return _h.srp_hash(x, w, cfg)
+
+
+def srht_hash(x: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """(B, d) -> (B, L) bucket ids via the SRHT (Fast-JL) Pallas kernel."""
+    return _sh.srht_hash(x, cfg)
+
+
+def hash_dispatch(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
+    """THE kernel-path hash: dense-MXU vs SRHT-VPU by ``cfg.hash_mode``.
+
+    Mirrors ``repro.core.srp.hash_buckets``'s dispatch for the jnp paths;
+    every kernel-path caller (fused score/admit, AceEstimator, stream
+    benchmarks) hashes through here so the knob governs all of them.
+    """
+    if resolve_hash_mode(cfg) == "srht":
+        return _sh.srht_hash(x, cfg)
+    return _h.srp_hash(x, w, cfg)
 
 
 def ace_update(state: AceState, buckets: jax.Array,
@@ -41,9 +67,8 @@ def ace_update(state: AceState, buckets: jax.Array,
     space fits the VPU sweep), the sequential scalar RMW loop otherwise —
     see ``repro.kernels.ace_update.choose_mode``.
     """
-    new_counts = _u.ace_update(state.counts, buckets, interpret=INTERPRET,
-                               mode="auto")
-    gathered = _q.ace_query(new_counts, buckets, interpret=INTERPRET)
+    new_counts = _u.ace_update(state.counts, buckets, mode="auto")
+    gathered = _q.ace_query(new_counts, buckets)
     scores = jnp.mean(gathered, axis=-1)
     b = jnp.asarray(scores.shape[0], jnp.float32)
     n = state.n
@@ -61,30 +86,43 @@ def ace_update(state: AceState, buckets: jax.Array,
 
 def ace_query(state: AceState, buckets: jax.Array) -> jax.Array:
     """(B, L) bucket ids -> (B,) scores via the Pallas gather kernel."""
-    return jnp.mean(_q.ace_query(state.counts, buckets, interpret=INTERPRET),
-                    axis=-1)
+    return jnp.mean(_q.ace_query(state.counts, buckets), axis=-1)
 
 
 def ace_score(state: AceState, q: jax.Array, w: jax.Array,
               cfg: AceConfig) -> jax.Array:
-    """Fused hash+lookup+mean scoring of raw query vectors."""
-    return _f.ace_score_fused(state.counts, q, w, cfg.srp,
-                              interpret=INTERPRET)
+    """Fused hash+lookup+mean scoring of raw query vectors.
+
+    Dense mode: one all-in-one Pallas launch.  SRHT mode: the SRHT hash
+    kernel + the gather kernel (two launches, still one hash).
+    """
+    if resolve_hash_mode(cfg.srp) == "srht":
+        return ace_query(state, _sh.srht_hash(q, cfg.srp))
+    return _f.ace_score_fused(state.counts, q, w, cfg.srp)
 
 
 def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
               *, alpha: float, warmup_items: float):
-    """Fused guardrail admission: ONE kernel launch, one hash matmul.
+    """Fused guardrail admission: ONE hash, no host syncs.
 
     The μ−ασ threshold is computed on-device from the state scalars
-    (sketch.admit_threshold, −inf during warmup), the kernel hashes +
-    scores + masked-inserts in a single HBM pass, and the Welford stream
-    folds the admitted items from the kernel's re-exported bucket ids —
-    no re-hash, no host sync.  Returns (new_state, admit_mask (B,) bool).
+    (sketch.admit_threshold, −inf during warmup).  Dense mode runs the
+    single fused kernel (hash + score + threshold + masked insert, counts
+    aliased in VMEM); SRHT mode hashes with the SRHT kernel and runs the
+    same score→threshold→masked-insert dataflow through the shared jnp
+    helpers.  Both fold the Welford stream from the one set of bucket
+    ids — no re-hash.  Returns (new_state, admit_mask (B,) bool).
     """
     thresh = _sk.admit_threshold(state, alpha, warmup_items)
+    if resolve_hash_mode(cfg.srp) == "srht":
+        buckets = _sh.srht_hash(q, cfg.srp)
+        scores = _sk.batch_scores(state.counts, buckets)
+        admit = scores >= thresh
+        new_state = _sk.insert_buckets_masked(state, buckets, admit, cfg)
+        return new_state, admit
+
     new_counts, _scores, admit, buckets = _a.ace_admit_fused(
-        state.counts, q, w, thresh, cfg.srp, interpret=INTERPRET)
+        state.counts, q, w, thresh, cfg.srp)
 
     # Welford epilogue over POST-insert scores of the admitted items —
     # shared helpers with sketch.insert_buckets_masked (O(B·L) gather, no

@@ -1,0 +1,46 @@
+"""Shared interpret-mode resolver for every Pallas kernel entry point.
+
+Every kernel wrapper in ``repro.kernels`` takes ``interpret: bool | None``
+and resolves ``None`` through :func:`resolve_interpret`, so there is ONE
+place deciding whether kernel bodies run under the Pallas interpreter
+(traced JAX on CPU — bit-exact contract validation) or the Mosaic TPU
+lowering.  Before this module, ``srp_hash`` and friends hard-coded
+``interpret=True`` in their signatures, which meant a TPU run that forgot
+to pass the flag silently *timed interpret mode* — benchmarks looked
+plausible and measured nothing.
+
+Resolution order:
+
+1. ``REPRO_PALLAS_INTERPRET`` env var, when set: ``"0"`` → Mosaic,
+   anything else → interpret.  (Same variable the old ``ops.INTERPRET``
+   global read; it now governs every kernel, not just the ops wrappers.)
+2. Otherwise: interpret exactly when the default JAX backend is not a
+   TPU — CPU containers validate contracts, TPU runtimes get Mosaic
+   without any flag-plumbing.
+
+An explicit ``interpret=True/False`` argument always wins (tests pin it;
+the VMEM-budget check in ``ace_admit_fused`` keys off the resolved
+value).
+"""
+from __future__ import annotations
+
+import os
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """The process-wide interpret default (env var, else backend probe)."""
+    env = os.environ.get(_ENV)
+    if env is not None:
+        return env != "0"
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument (None → default)."""
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)

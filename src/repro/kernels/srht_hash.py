@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: SRHT meta-hash — FWHT butterflies + sign diagonals +
+row gather + bit-pack, all in VMEM on the VPU.
+
+The Fast-JL construction of paper §2.2: instead of the O(d·KL) dense
+Gaussian matmul, compute
+
+    y    = H·D2·H·D1·x        (two sign-diagonal + Walsh–Hadamard rounds)
+    proj = y[rows]            (m = K·L sampled rows)
+    b_j  = pack(sign(proj))   (K-bit big-endian pack per meta-hash)
+
+in O(d log d + m) per item.  Everything runs on the VPU: each of the
+log2(d) butterfly stages is one add/sub pass over the (bm, d_pad) tile
+resident in VMEM, the row sample is a lane gather, and the pack is an
+integer multiply-accumulate over the K axis — the MXU is left completely
+free for the model the ingest pipeline feeds (the dense ``srp_hash``
+kernel, by contrast, owns the MXU for both its matmuls).  At guardrail
+scale (d_model 4096–12288) this is the difference between the hash being
+the dominant FLOPs of every insert/score/admit and it disappearing into
+the VPU's idle lanes.
+
+The stage arithmetic reuses ``repro.core.srht.fwht`` verbatim, so the
+kernel is bit-identical to the ``srht_bits`` reference under interpret
+mode by construction (asserted in tests/test_stream.py), and the bucket
+pack matches ``repro.core.srp.pack_buckets`` term for term.
+
+Grid: (B/bm,) — one tile owns the whole transform for its rows; there is
+no cross-tile reduction (unlike the dense kernel's d-tile loop) because
+the FWHT needs all d lanes at once.  VMEM at defaults (bm=128, d_pad=8192,
+m_pad=768): x 4 MB + butterfly temp ~4 MB + proj 0.4 MB ≈ 8.5 MB.
+
+Lowering note: written for interpret mode (this container) and
+lane-aligned shapes; on a real Mosaic lowering, d_pad < 128 tiles would
+need lane padding — irrelevant in practice because ``hash_mode="auto"``
+never routes small d to SRHT (the dense matmul wins below the crossover).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.srht import SrhtParams, fwht, srht_params
+from repro.core.srp import SrpConfig
+from repro.kernels.runtime import resolve_interpret
+from repro.kernels.srp_hash import _round_up
+
+
+def _kernel(x_ref, s1_ref, s2_ref, rows_ref, out_ref,
+            *, K: int, L: int, m: int):
+    # Two H·D rounds — same op order as core.srht.srht_bits, so every
+    # float add/sub happens on identical values in identical order.
+    y = fwht(x_ref[...] * s1_ref[...])          # (bm, d_pad)
+    y = fwht(y * s2_ref[...])
+
+    rows = rows_ref[0, :m]                      # (m,) int32, static slice
+    proj = jnp.take(y, rows, axis=1)            # (bm, m) lane gather
+    bits = (proj >= 0).astype(jnp.int32)
+
+    # VPU bit-pack: (bm, L, K) · 2^(K-1-k) summed over k — integer MAC,
+    # matching pack_buckets' big-endian convention exactly (no MXU pack
+    # matmul like the dense kernels).
+    grouped = bits.reshape(bits.shape[0], L, K)
+    weights = jnp.left_shift(
+        jnp.int32(1),
+        K - 1 - jax.lax.broadcasted_iota(jnp.int32, (L, K), 1))
+    buckets = jnp.sum(grouped * weights[None, :, :], axis=-1,
+                      dtype=jnp.int32)          # (bm, L)
+    lp = out_ref.shape[-1]
+    out_ref[...] = jnp.pad(buckets, ((0, 0), (0, lp - L)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bm", "interpret"))
+def srht_hash(x: jax.Array, cfg: SrpConfig, bm: int = 128,
+              interpret: bool | None = None) -> jax.Array:
+    """(B, d) -> (B, L) int32 bucket ids via the SRHT Pallas kernel.
+
+    Parameters (sign diagonals + row sample) derive from ``cfg.seed``
+    through the shared ``repro.core.srht.srht_params`` cache — the same
+    draw the jnp reference uses, so kernel and reference implement ONE
+    hash function.  No projection matrix ``w`` is consumed.
+    """
+    interpret = resolve_interpret(interpret)
+    params: SrhtParams = srht_params(cfg)
+    B, d = x.shape
+    assert d == cfg.dim, (d, cfg.dim)
+    d_pad = params.d_pad
+    L, K, m = cfg.num_tables, cfg.num_bits, cfg.num_projections
+    lp = _round_up(L, 128)
+    m_pad = _round_up(m, 128)
+
+    bm_ = min(bm, _round_up(B, 8))
+    Bp = _round_up(B, bm_)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Bp - B), (0, d_pad - d)))
+    s1 = params.signs1[None, :]
+    s2 = params.signs2[None, :]
+    rows = jnp.pad(params.rows, (0, m_pad - m))[None, :]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, K=K, L=L, m=m),
+        grid=(Bp // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, d_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, m_pad), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, lp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, lp), jnp.int32),
+        interpret=interpret,
+    )(xp, s1, s2, rows)
+    return out[:B, :L]

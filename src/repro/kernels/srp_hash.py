@@ -28,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.srp import SrpConfig
+from repro.kernels.runtime import resolve_interpret
 
 
 def _round_up(x: int, m: int) -> int:
@@ -69,12 +70,15 @@ def _kernel(x_ref, w_ref, pack_ref, out_ref, acc_ref, *, nk: int):
     jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
 def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig,
              bm: int = 256, bk: int = 512,
-             interpret: bool = True) -> jax.Array:
+             interpret: bool | None = None) -> jax.Array:
     """(B, d) @ (d, P) -> (B, L) int32 bucket ids in [0, 2^K).
 
-    ``interpret=True`` runs the kernel body on CPU (this container); on a TPU
-    runtime pass interpret=False for the Mosaic lowering.
+    ``interpret=None`` resolves through the shared
+    ``repro.kernels.runtime`` resolver (env var / backend probe), so TPU
+    runs get the Mosaic lowering without flag-plumbing and benchmarks
+    cannot silently time interpret mode.
     """
+    interpret = resolve_interpret(interpret)
     B, d = x.shape
     P = cfg.padded_projections
     assert w.shape == (d, P), (w.shape, (d, P))

@@ -26,6 +26,7 @@ class GuardrailConfig:
     alpha: float = 4.0
     warmup_items: float = 256.0
     bias_const: float = 0.25
+    hash_mode: str = "dense"    # "dense" | "srht" | "auto" (SrpConfig)
 
 
 class Guardrail:
@@ -62,7 +63,8 @@ class Guardrail:
         self.ace_cfg = AceConfig(dim=gcfg.d_model + 1,
                                  num_bits=gcfg.num_bits,
                                  num_tables=gcfg.num_tables, seed=41,
-                                 welford_min_n=gcfg.warmup_items / 2)
+                                 welford_min_n=gcfg.warmup_items / 2,
+                                 hash_mode=gcfg.hash_mode)
         self.state = sk.init(self.ace_cfg)
         self.w = sk.make_params(self.ace_cfg)
         if use_kernels and mesh is not None:
@@ -75,19 +77,10 @@ class Guardrail:
         # instead of copying (L, 2^K) every batch.
         self._admit = jax.jit(self._admit_impl, donate_argnums=0)
         if mesh is not None:
-            from repro.dist.sketch_parallel import (
-                table_shard_info, sketch_shardings,
-                table_sharded_shardings)
-            if sketch_layout == "table_sharded":
-                table_shard_info(self.ace_cfg, mesh, table_axis)
-                sh = table_sharded_shardings(mesh, table_axis)
-            elif sketch_layout == "replicated":
-                sh = sketch_shardings(mesh)
-            else:
-                raise ValueError(
-                    f"unknown sketch layout {sketch_layout!r} "
-                    "(want 'replicated' or 'table_sharded')")
-            self.state = jax.device_put(self.state, sh)
+            from repro.dist.sketch_parallel import shardings_for_layout
+            self.state = jax.device_put(
+                self.state, shardings_for_layout(
+                    self.ace_cfg, mesh, sketch_layout, table_axis))
 
     def _features(self, embeds: jax.Array) -> jax.Array:
         """Unit-normalised mean embedding + bias coordinate.
@@ -126,6 +119,17 @@ class Guardrail:
         return np.asarray(admit)
 
 
+def _to_host(x: jax.Array) -> np.ndarray:
+    """The ONE device→host transfer of a generate() call.
+
+    A separate named function (not an inline np.asarray) so the decode
+    loop's zero-sync contract is a single call site — tests wrap it to
+    count transfers, and a stray np.asarray inside the loop would have to
+    bypass it visibly.
+    """
+    return np.asarray(x)
+
+
 class ServeEngine:
     """Greedy generation over a fixed batch (the paper-kind e2e driver)."""
 
@@ -140,7 +144,15 @@ class ServeEngine:
 
     def generate(self, params, batch, num_new_tokens: int,
                  prompt_len: int) -> np.ndarray:
-        """Greedy decode.  Returns (B, num_new_tokens) int32."""
+        """Greedy decode.  Returns (B, num_new_tokens) int32.
+
+        Tokens accumulate ON DEVICE across the decode loop and transfer
+        once at the end — the pre-PR loop pulled every token to the host
+        (``np.asarray(tok)`` per step), serialising decode on B·4-byte
+        syncs; now the loop body enqueues async dispatches back-to-back
+        and the only device→host transfer is the final (B, T) stack
+        (``_to_host``; counted in tests/test_stream.py).
+        """
         cfg = self.arch.cfg
         if self.guardrail is not None and "embeds" not in batch:
             embeds = jnp.take(params["embed"], batch["tokens"], axis=0)
@@ -148,7 +160,7 @@ class ServeEngine:
         logits, cache = self._prefill(params, batch)
         B = logits.shape[0]
         tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        out = [np.asarray(tok)]
+        toks = [tok]
         for i in range(1, num_new_tokens):
             pos = jnp.full((B,), prompt_len + i - 1, jnp.int32)
             if cfg.mrope_sections is not None:
@@ -156,8 +168,8 @@ class ServeEngine:
             step_batch = {"tokens": tok[:, None]}
             logits, cache = self._decode(params, step_batch, cache, pos)
             tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            out.append(np.asarray(tok))
-        return np.stack(out, axis=1)
+            toks.append(tok)
+        return _to_host(jnp.stack(toks, axis=1))    # the ONE transfer
 
 
 def decode_throughput(arch: Arch, params, cache, batch, pos,

@@ -1,0 +1,2 @@
+"""Streaming ingest at device speed (scan-fused chunk runner)."""
+from repro.stream.runner import ChunkSummary, StreamRunner  # noqa: F401

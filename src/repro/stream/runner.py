@@ -1,0 +1,167 @@
+"""Scan-fused streaming ingest: T batches per device program, one host
+transfer per chunk.
+
+The paper's headline claim is *stream-rate* detection — each item costs
+one hash plus O(L) cache lookups.  The per-batch ingest loop this module
+replaces broke that on the host side: every Python-level batch paid a
+device-program dispatch, and every batch synced at least twice (the
+kept-fraction metric plus the next dispatch's argument feed), so at high
+stream rates the filter was bounded by the host, not the sketch.
+
+``StreamRunner`` stacks T batches into one (T, B, d) chunk and consumes
+it with ONE donated-state ``lax.scan`` program whose body is exactly
+``AceDataFilter.step`` — hash once → score from the same bucket ids →
+on-device μ−ασ threshold → ``sk.insert_buckets_masked`` — and returns
+only a small per-chunk summary (kept fraction, per-step anomaly counts,
+on-device top-k most-anomalous item coordinates).  Host traffic per T
+batches: one stacked H2D feed + one summary D2H pull, versus ≥ 2·T
+transfers for the legacy loop; the sketch state never leaves the device
+(the carry is donated, so the counts buffer is updated in place across
+chunks).  ``benchmarks/stream_throughput.py`` counts both.
+
+Sharded ingest: pass a mesh + ``sketch_layout`` ("replicated" or
+"table_sharded") and the sketch state is placed via
+``repro.dist.sketch_parallel`` and sharding-constrained inside the scan
+body — the SAME jitted program in every layout; GSPMD inserts the
+collectives (jit/SPMD mode, exactly like the guardrail and train_step).
+
+The hash family follows the filter's ``hash_mode`` knob (dense matmul,
+SRHT fast transform, or auto break-even) because the scan body hashes
+through ``repro.core.srp.hash_buckets``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sketch import AceState
+from repro.data.pipeline import AceDataFilter
+
+
+class ChunkSummary(NamedTuple):
+    """Everything the host learns about a chunk — ONE small transfer.
+
+    kept_frac:   () float32 — fraction of the chunk's T·B items kept.
+    anom_counts: (T,) int32 — anomalies flagged per step.
+    topk_step:   (k,) int32 — step index of the k most-anomalous items.
+    topk_item:   (k,) int32 — row index within that step's batch.
+    topk_margin: (k,) float32 — score − threshold (most negative = most
+                 anomalous; +inf while the sketch is in warmup).
+    n:           () float32 — sketch item count after the chunk.
+    """
+
+    kept_frac: jax.Array
+    anom_counts: jax.Array
+    topk_step: jax.Array
+    topk_item: jax.Array
+    topk_margin: jax.Array
+    n: jax.Array
+
+
+class StreamRunner:
+    """Chunked scan ingest around an ``AceDataFilter``.
+
+    ``consume`` is ONE fixed-shape jitted program (state donated) per
+    (T, B, d) chunk shape; ``trace_count`` asserts it stays one
+    executable across chunks.  ``return_masks=True`` additionally returns
+    the (T, B) keep mask — still a single transfer when the caller pulls
+    it together with the summary — which is how the training loop's
+    chunked prefilter applies the verdicts to its loss masks.
+    """
+
+    def __init__(self, filt: AceDataFilter, chunk_T: int, topk: int = 8,
+                 return_masks: bool = False, *, mesh=None,
+                 sketch_layout: str = "replicated",
+                 table_axis: str = "model"):
+        self.filt = filt
+        self.chunk_T = int(chunk_T)
+        self.topk = int(topk)
+        self.return_masks = return_masks
+        self.mesh = mesh
+        self.sketch_layout = sketch_layout
+        self.trace_count = 0          # incremented at TRACE time only
+        self._shardings = None
+        if mesh is not None:
+            from repro.dist.sketch_parallel import shardings_for_layout
+            self._shardings = shardings_for_layout(
+                filt.ace_cfg, mesh, sketch_layout, table_axis)
+        # The incoming state is dead the moment consume() rebinds it —
+        # donate it so the (L, 2^K) counts update in place every chunk.
+        self._consume = jax.jit(self._consume_impl, donate_argnums=0)
+
+    def init(self):
+        """(state, w), with the state placed per the mesh layout."""
+        state, w = self.filt.init()
+        return self._place(state), w
+
+    def _place(self, state: AceState) -> AceState:
+        if self._shardings is None:
+            return state
+        return jax.device_put(state, self._shardings)
+
+    def _constrain(self, state: AceState) -> AceState:
+        """Pin the scan carry to the requested repro.dist layout so GSPMD
+        keeps the collectives inside the scan body (no-op off-mesh)."""
+        if self._shardings is None:
+            return state
+        return AceState(*(jax.lax.with_sharding_constraint(leaf, sh)
+                          for leaf, sh in zip(state, self._shardings)))
+
+    def _consume_impl(self, state: AceState, w: jax.Array,
+                      feats: jax.Array):
+        self.trace_count += 1
+        T, B = feats.shape[0], feats.shape[1]
+
+        def step(carry, feat):
+            new_state, keep, margin = self.filt.step(carry, w, feat)
+            return self._constrain(new_state), (keep, margin)
+
+        state, (keeps, margins) = jax.lax.scan(step, state, feats)
+        keepf = keeps.astype(jnp.float32)                     # (T, B)
+        k = min(self.topk, T * B)
+        # top-k most anomalous = smallest margins, coordinates on device
+        neg, idx = jax.lax.top_k(-margins.reshape(-1), k)
+        summary = ChunkSummary(
+            kept_frac=jnp.mean(keepf),
+            anom_counts=jnp.sum(1 - keeps.astype(jnp.int32), axis=1),
+            topk_step=(idx // B).astype(jnp.int32),
+            topk_item=(idx % B).astype(jnp.int32),
+            topk_margin=-neg,
+            n=state.n)
+        if self.return_masks:
+            return state, summary, keeps
+        return state, summary
+
+    def consume(self, state: AceState, w: jax.Array, feats: jax.Array):
+        """One chunk: feats (T, B, d) features (d = filter's dim+1 when
+        produced by ``AceDataFilter.features``).  Returns
+        (new_state, summary[, keeps]) — all still on device; pull the
+        summary with ONE ``jax.device_get`` when the host needs it."""
+        assert feats.ndim == 3 and feats.shape[0] == self.chunk_T, \
+            (feats.shape, self.chunk_T)
+        return self._consume(state, w, feats)
+
+    def run(self, state: AceState, w: jax.Array,
+            batches: Iterable[np.ndarray]):
+        """Host driver: chunk an iterator of (B, d) feature batches and
+        consume each chunk with one device program + one summary pull.
+
+        Returns (final state, [host ChunkSummary per chunk]).  A trailing
+        partial chunk (fewer than T batches) is dropped — the stream is
+        infinite in production; pad explicitly if the tail matters.
+        """
+        summaries = []
+        buf: list[np.ndarray] = []
+        for b in batches:
+            buf.append(np.asarray(b))
+            if len(buf) < self.chunk_T:
+                continue
+            feats = jnp.asarray(np.stack(buf))     # ONE H2D per chunk
+            buf.clear()
+            out = self.consume(state, w, feats)
+            state, summary = out[0], out[1]
+            summaries.append(jax.device_get(summary))  # ONE D2H per chunk
+        return state, summaries

@@ -41,6 +41,10 @@ class TrainConfig:
     remat: bool = True
     remat_policy: str = "full"   # "dots": save matmul outs (C1)
     use_data_filter: bool = True     # ACE filter on sequence embeddings
+    filter_chunk: int = 0            # T>1: run the data filter as ONE
+                                     # scan program per T batches
+                                     # (repro.stream.StreamRunner) instead
+                                     # of per-batch inside train_step
     use_grad_monitor: bool = True    # ACE monitor on gradient stats
     grad_compression: bool = False   # int8 + error feedback
     monitor_feature_dim: int = 32
@@ -81,6 +85,21 @@ def init_train_state(arch: Arch, tcfg: TrainConfig, key) -> TrainState:
                       rng=jax.random.PRNGKey(tcfg.seed))
 
 
+def sequence_embeddings(params, batch, cfg):
+    """Embeddings the ACE data filter scores — shared by the per-batch
+    filter path inside train_step and the chunked StreamRunner prefilter
+    in ``train`` so both score identical features."""
+    if "embeds" in batch:
+        return batch["embeds"]
+    # the ACE filter only needs the sequence-mean embedding; subsample
+    # ≤256 tokens/seq and gather in compute dtype — a full-batch fp32
+    # (B, S, D) gather would dominate step memory for 12k-dim models.
+    toks = batch["tokens"]
+    stride = max(toks.shape[1] // 256, 1)
+    return jnp.take(params["embed"].astype(cfg.adtype),
+                    toks[:, ::stride], axis=0)
+
+
 def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
                     sketch_layout: str | None = None):
     """Builds the pure train step.  (state, batch) -> (state, metrics).
@@ -105,8 +124,11 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
                            total_steps=tcfg.total_steps)
     gm = GradMonitor(feature_dim=tcfg.monitor_feature_dim) \
         if tcfg.use_grad_monitor else None
+    # With filter_chunk > 1 the driver runs the filter OUTSIDE the step as
+    # one StreamRunner scan per T batches (see ``train``); the step then
+    # just consumes the pre-masked batches.
     filt = AceDataFilter(d_model=cfg.d_model) \
-        if tcfg.use_data_filter else None
+        if tcfg.use_data_filter and tcfg.filter_chunk <= 1 else None
 
     def constrain_sketch(st):
         """Pin an AceState to the requested repro.dist layout (no-op when
@@ -116,17 +138,6 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
         return AceState(*(jax.lax.with_sharding_constraint(leaf, ps)
                           for leaf, ps in zip(st, sketch_pspecs(
                               sketch_layout))))
-
-    def embeddings_of(params, batch):
-        if "embeds" in batch:
-            return batch["embeds"]
-        # the ACE filter only needs the sequence-mean embedding; subsample
-        # ≤256 tokens/seq and gather in compute dtype — a full-batch fp32
-        # (B, S, D) gather would dominate step memory for 12k-dim models.
-        toks = batch["tokens"]
-        stride = max(toks.shape[1] // 256, 1)
-        return jnp.take(params["embed"].astype(cfg.adtype),
-                        toks[:, ::stride], axis=0)
 
     def loss_fn(params, batch):
         return arch.loss(params, batch, remat=tcfg.remat,
@@ -141,7 +152,7 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
         if filt is not None:
             mask = batch.get("mask",
                              jnp.ones(batch["labels"].shape, jnp.float32))
-            embeds = embeddings_of(params, batch)
+            embeds = sequence_embeddings(params, batch, cfg)
             filter_state, new_mask, kept = filt(
                 state.filter_state, state.filter_w, embeds, mask)
             filter_state = constrain_sketch(filter_state)
@@ -230,7 +241,26 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
           state: TrainState | None = None):
     """Host driver: jit, checkpoint/restart, straggler timer, logging.
 
+    With ``tcfg.filter_chunk = T > 1`` the ACE data filter runs as a
+    chunked prefilter: every T batches, their sequence-embedding features
+    are scored/inserted by ONE donated-state ``StreamRunner`` scan
+    program (hash once per batch, masked insert, zero per-batch host
+    syncs) and the returned (T, B) keep mask is applied to the loss masks
+    as the batches feed the (filter-free) train step.  The sketch updates
+    in the exact same per-batch order as the in-step path; the only
+    semantic difference is that a chunk's features are embedded with the
+    params at chunk start (embedding-table drift WITHIN a chunk is
+    ignored — negligible at any sane T, and the filter only sees mean
+    embeddings anyway).  Steps past the last full chunk fall back to the
+    per-batch ``filt.step`` program.  Checkpoints are only taken on
+    chunk-final steps (mid-chunk, the sketch already contains batches no
+    step has trained on — see ``run_step``), so restart stays exact;
+    pick ``ckpt_interval`` a multiple of ``filter_chunk`` to keep the
+    save cadence.
+
     Returns (final state, list of metric dicts)."""
+    from repro.stream.runner import StreamRunner
+
     step_fn = jax.jit(make_train_step(arch, tcfg))
     if state is None:
         state = init_train_state(arch, tcfg, jax.random.PRNGKey(tcfg.seed))
@@ -244,18 +274,46 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
             state = restored
             stream.load_state_dict({"step": manifest["extra"]["data_step"]})
 
+    chunk_T = tcfg.filter_chunk if tcfg.use_data_filter else 0
+    runner = feat_fn = pb_step = None
+    if chunk_T > 1:
+        filt = AceDataFilter(d_model=arch.cfg.d_model)
+        runner = StreamRunner(filt, chunk_T=chunk_T, return_masks=True)
+        # ONE jitted program computes the whole chunk's features (vmap
+        # over the stacked T axis) — not T per-batch dispatches; the
+        # batches are already device-resident for the train steps, so the
+        # filter adds no extra H2D traffic.
+        feat_fn = jax.jit(lambda params, stacked: jax.vmap(
+            lambda jb: filt.features(
+                sequence_embeddings(params, jb, arch.cfg)))(stacked))
+        pb_step = jax.jit(filt.step)          # tail-batch fallback
+
     timer = StepTimer(slo_seconds=120.0)
     history = []
-    for _ in range(num_steps):
-        batch = next(stream)
-        jbatch = {k: jnp.asarray(v) for k, v in batch.items()
-                  if not k.startswith("_")}
-        state, metrics = step_fn(state, jbatch)
+
+    def run_step(jbatch, keep=None, saveable=True):
+        nonlocal state
+        metrics = {}
+        if keep is not None:
+            mask = jbatch.get("mask",
+                              jnp.ones(jbatch["labels"].shape, jnp.float32))
+            jbatch = dict(jbatch,
+                          mask=mask * keep[:, None].astype(mask.dtype))
+            metrics["filter_keep_frac"] = jnp.mean(
+                keep.astype(jnp.float32))
+        state, step_metrics = step_fn(state, jbatch)
+        metrics.update(step_metrics)
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics["straggler_breach"] = float(timer.tick())
         history.append(metrics)
         step = int(state.step)
-        if mgr is not None:
+        # ``saveable`` is False for non-final steps of a prefilter chunk:
+        # the chunk's runner pass already inserted ALL T batches into the
+        # sketch and advanced the stream, so a checkpoint taken mid-chunk
+        # would restore a sketch that has seen batches no step trained on
+        # (and skip those batches on resume).  Chunk-final steps are
+        # consistent: T batches trained == T batches inserted.
+        if mgr is not None and saveable:
             mgr.maybe_save(step, state,
                            extra={"data_step": stream.state_dict()["step"]})
         if log_every and step % log_every == 0:
@@ -263,4 +321,38 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
                   f"gnorm={metrics['grad_norm']:.3f} "
                   f"keep={metrics.get('filter_keep_frac', 1.0):.3f} "
                   f"anom={metrics.get('grad_anomaly', 0.0):.0f}")
+
+    def next_jbatch():
+        batch = next(stream)
+        return {k: jnp.asarray(v) for k, v in batch.items()
+                if not k.startswith("_")}
+
+    done = 0
+    while done < num_steps:
+        if runner is not None and num_steps - done >= chunk_T:
+            # ---- chunked prefilter: T batches, ONE filter program
+            jbatches = [next_jbatch() for _ in range(chunk_T)]
+            ekey = "embeds" if "embeds" in jbatches[0] else "tokens"
+            feats = feat_fn(state.params, {
+                ekey: jnp.stack([jb[ekey] for jb in jbatches])})
+            fstate, _summary, keeps = runner.consume(
+                state.filter_state, state.filter_w, feats)
+            state = state._replace(filter_state=fstate)
+            for t, jb in enumerate(jbatches):
+                run_step(jb, keep=keeps[t], saveable=t == chunk_T - 1)
+            done += chunk_T
+        else:
+            jb = next_jbatch()
+            if runner is not None:
+                # tail batches past the last full chunk: same step fn,
+                # per-batch program
+                ekey = "embeds" if "embeds" in jb else "tokens"
+                feat = feat_fn(state.params, {ekey: jb[ekey][None]})[0]
+                fstate, keep, _m = pb_step(state.filter_state,
+                                           state.filter_w, feat)
+                state = state._replace(filter_state=fstate)
+                run_step(jb, keep=keep)
+            else:
+                run_step(jb)
+            done += 1
     return state, history

@@ -239,6 +239,54 @@ class TestEndToEnd:
             np.testing.assert_allclose(np.asarray(x), np.asarray(y),
                                        rtol=1e-6, atol=1e-6)
 
+    def test_chunked_prefilter_runs_chunks_and_tail(self):
+        """filter_chunk=T: chunk branch + tail fallback both produce
+        per-step keep fracs, and the filter sketch sees every batch."""
+        a = Arch("qwen2_1_5b", reduced=True)
+        tcfg = TrainConfig(total_steps=7, warmup_steps=2,
+                           use_grad_monitor=False, use_data_filter=True,
+                           filter_chunk=3, seed=7)
+        scfg = StreamConfig(vocab_size=a.cfg.vocab_size, seq_len=8,
+                            global_batch=4, seed=7)
+        state, hist = train(a, tcfg, DataStream(scfg), num_steps=7,
+                            log_every=0)   # 2 chunks + 1 tail batch
+        assert len(hist) == 7
+        assert all("filter_keep_frac" in m for m in hist)
+        assert int(state.step) == 7
+        # every batch (kept or not) advanced the filter's Welford/n stream
+        assert float(state.filter_state.n) > 0
+
+    def test_chunked_prefilter_restart_from_checkpoint_is_exact(
+            self, tmp_path):
+        """Chunk-atomic checkpointing: saves land only on chunk-final
+        steps, so crash + restore reproduces the uninterrupted run
+        exactly — sketch, stream position and params all consistent."""
+        a = Arch("qwen2_1_5b", reduced=True)
+        tcfg = TrainConfig(total_steps=20, warmup_steps=2, peak_lr=1e-3,
+                           use_data_filter=True, filter_chunk=2,
+                           use_grad_monitor=False,
+                           ckpt_dir=str(tmp_path), ckpt_interval=2,
+                           seed=6)
+        scfg = StreamConfig(vocab_size=a.cfg.vocab_size, seq_len=8,
+                            global_batch=4, seed=6)
+        state_a, _ = train(a, tcfg, DataStream(scfg), num_steps=8,
+                           log_every=0)
+        tcfg_b = TrainConfig(**{**tcfg.__dict__,
+                                "ckpt_dir": str(tmp_path) + "_b"})
+        state_b, _ = train(a, tcfg_b, DataStream(scfg), num_steps=5,
+                           log_every=0)   # saves land at steps 2 and 4
+        state_c, _ = train(a, tcfg_b, DataStream(scfg), num_steps=4,
+                           log_every=0)   # auto-restores from step 4
+        assert int(state_c.step) == 8
+        assert bool(jnp.all(state_a.filter_state.counts ==
+                            state_c.filter_state.counts))
+        assert float(state_a.filter_state.n) == \
+            float(state_c.filter_state.n)
+        for x, y in zip(jax.tree.leaves(state_a.params),
+                        jax.tree.leaves(state_c.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-6)
+
     def test_monitor_skips_poisoned_step(self):
         """Poisoned batches spike the loss/grads; the monitor must skip at
         least some of them once armed."""

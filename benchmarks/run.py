@@ -27,7 +27,8 @@ def main() -> None:
     from benchmarks import (dist_throughput, fig1_discriminative,
                             fig3_5_variance, guardrail_latency,
                             memory_table, stream_throughput,
-                            table3_5_comparison, throughput)
+                            table3_5_comparison, throughput,
+                            window_throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -52,6 +53,8 @@ def main() -> None:
         "guardrail": lambda: guardrail_latency.run(
             csv_rows, smoke=args.quick),
         "stream": lambda: stream_throughput.run(
+            csv_rows, smoke=args.quick),
+        "window": lambda: window_throughput.run(
             csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:

@@ -14,8 +14,15 @@ sketch running at stream rate and the Python loop being the bottleneck.
 Per chunk the summary reports kept fraction, per-step anomaly counts (the
 burst detector below just thresholds them) and the top-k most-anomalous
 item coordinates, all computed on device.  The sketch updates online with
-kept items only; Eq. 12 sliding-window deletes remain available off this
-path (``sk.delete`` — see examples/quickstart.py).
+kept items only.
+
+Part 2 is the SLIDING-WINDOW demo: an abrupt regime shift that a
+cumulative ("frozen") sketch never recovers from — its μ/σ keep
+describing a regime that stopped arriving, the μ−ασ threshold collapses,
+and post-shift bursts sail through undetected — while the
+``repro.window`` epoch ring (same runner, same scan program, rotation
+INSIDE the donated scan body) ages the stale regime out and catches the
+bursts again once the window slides past the shift.
 """
 import time
 
@@ -25,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.data.pipeline import AceDataFilter
 from repro.stream import StreamRunner
+from repro.window import WindowedAceFilter
 
 CHUNK_T = 10           # batches per scan chunk (one host round-trip each)
 BATCH = 256
@@ -44,6 +52,64 @@ def stream_batch(rng, t, poison=False):
         nu[half:] = 6.0
         return np.abs(rng.normal(size=(BATCH, DIM)) * 0.3 + nu)
     return np.abs(rng.normal(size=(BATCH, DIM)) * 0.6 + mu)
+
+
+def shift_batch(rng, t, shift_t, poison=False):
+    """Abrupt regime change: cone A (first half of dims) until shift_t,
+    cone B (second quarter) after; bursts on the last quarter of dims
+    throughout (identical distribution pre/post — only "normal" moves)."""
+    q = DIM // 4
+    mu = np.zeros(DIM)
+    if t < shift_t:
+        mu[:2 * q] = 4.0
+    else:
+        mu[q:2 * q] = 5.0
+    if poison:
+        nu = np.zeros(DIM)
+        nu[3 * q:] = 6.0
+        return np.abs(rng.normal(size=(BATCH, DIM)) * 0.3 + nu)
+    return np.abs(rng.normal(size=(BATCH, DIM)) * 0.5 + mu)
+
+
+def drift_demo():
+    """Frozen vs windowed under an abrupt shift (monitor mode: flag but
+    insert everything, so both sketches keep seeing the stream)."""
+    steps, shift_t = 120, 40
+    poison_steps = {t for t in range(steps) if t % 10 == 9}
+    common = dict(d_model=DIM, num_bits=12, num_tables=32, alpha=2.5,
+                  warmup_items=2048.0, insert_all=True)
+    detectors = {
+        "frozen  ": AceDataFilter(**common),
+        "windowed": WindowedAceFilter(**common, num_epochs=4,
+                                      rotate_every=10),
+    }
+    print(f"\n=== drift demo: regime shift at t={shift_t}, bursts every "
+          f"10 steps, window = 4 epochs x 10 steps ===")
+    for name, filt in detectors.items():
+        rng = np.random.default_rng(1)
+        runner = StreamRunner(filt, chunk_T=CHUNK_T)
+        state, w = runner.init()
+        feat_chunk = jax.jit(jax.vmap(lambda b: filt.features(b[:, None, :])))
+        caught_pre = caught_post = missed_pre = missed_post = 0
+        for c0 in range(0, steps, CHUNK_T):
+            batches = [shift_batch(rng, t, shift_t, t in poison_steps)
+                       for t in range(c0, c0 + CHUNK_T)]
+            raw = jnp.asarray(np.stack(batches), jnp.float32)
+            state, summary = runner.consume(state, w, feat_chunk(raw))
+            s = jax.device_get(summary)
+            for i, t in enumerate(range(c0, c0 + CHUNK_T)):
+                if t not in poison_steps:
+                    continue
+                hit = int(s.anom_counts[i]) > BATCH // 2
+                # give both detectors the window span to re-adapt
+                if t < shift_t:
+                    caught_pre += hit; missed_pre += not hit
+                elif t >= shift_t + 40:
+                    caught_post += hit; missed_post += not hit
+        print(f"  {name}: bursts pre-shift {caught_pre}/"
+              f"{caught_pre + missed_pre}   post-shift (re-adapted) "
+              f"{caught_post}/{caught_post + missed_post}   "
+              f"(1 trace, {steps // CHUNK_T} host round-trips)")
 
 
 def main():
@@ -94,6 +160,8 @@ def main():
     print(f"sketch memory: {cfg.memory_bytes() / 2**20:.2f} MB; "
           f"stream processed: {STEPS * BATCH} items "
           f"({STEPS * BATCH * DIM * 4 / 2**20:.1f} MB never stored)")
+
+    drift_demo()
 
 
 if __name__ == "__main__":

@@ -84,6 +84,22 @@ class DataStream:
 # ACE data filter (jit-compatible; compiled into train_step)
 # ---------------------------------------------------------------------------
 
+def mean_embed_features(embeds: jax.Array, bias_const: float) -> jax.Array:
+    """(B, S, D) embeddings -> (B, D+1) unit-mean + bias features.
+
+    Unit-normalised mean embedding + a bias coordinate: direction drift
+    is what the angular SRP sees; the bias re-encodes magnitude at a
+    controlled weight.  THE featurisation — shared by the flat
+    ``AceDataFilter`` and the windowed ``repro.window.WindowedAceFilter``
+    so frozen-vs-windowed comparisons (and the E=1 bitwise contract)
+    rest on identical features by construction, not by copy-sync.
+    """
+    f = jnp.mean(embeds.astype(jnp.float32), axis=1)
+    f = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-9)
+    bias = jnp.full((f.shape[0], 1), bias_const, jnp.float32)
+    return jnp.concatenate([f, bias], axis=-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class AceDataFilter:
     d_model: int
@@ -93,6 +109,11 @@ class AceDataFilter:
     warmup_items: float = 512.0
     bias_const: float = 0.25
     hash_mode: str = "dense"     # "dense" | "srht" | "auto" (SrpConfig)
+    insert_all: bool = False     # detector mode: still flag (keep=False)
+                                 # but insert EVERY item — for monitoring
+                                 # a stream you don't gate (benchmarks,
+                                 # dashboards); default is filter mode
+                                 # (anomalies never enter the sketch)
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -105,15 +126,9 @@ class AceDataFilter:
         return sk.init(self.ace_cfg), sk.make_params(self.ace_cfg)
 
     def features(self, embeds: jax.Array) -> jax.Array:
-        """(B, S, D) token/patch/frame embeddings -> (B, D+1) features.
-
-        Unit-normalised mean embedding + a bias coordinate: direction drift
-        is what the angular SRP sees; the bias re-encodes magnitude at a
-        controlled weight."""
-        f = jnp.mean(embeds.astype(jnp.float32), axis=1)
-        f = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-9)
-        bias = jnp.full((f.shape[0], 1), self.bias_const, jnp.float32)
-        return jnp.concatenate([f, bias], axis=-1)
+        """(B, S, D) token/patch/frame embeddings -> (B, D+1) features
+        (see ``mean_embed_features``)."""
+        return mean_embed_features(embeds, self.bias_const)
 
     def step(self, state, w, feat):
         """One filter step over precomputed features: hash ONCE, score from
@@ -146,7 +161,8 @@ class AceDataFilter:
         thresh = sk.admit_threshold(state, self.alpha, self.warmup_items)
         keep = scores >= thresh
         margin = scores - thresh
-        new_state = sk.insert_buckets_masked(state, buckets, keep, cfg)
+        ins = jnp.ones_like(keep) if self.insert_all else keep
+        new_state = sk.insert_buckets_masked(state, buckets, ins, cfg)
         return new_state, keep, margin
 
     def __call__(self, state, w, embeds, mask):

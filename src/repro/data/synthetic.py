@@ -128,6 +128,51 @@ def make_fig1_dataset(seed: int = 0):
             outliers.astype(np.float32))
 
 
+def make_drift_stream(n_steps: int, batch: int, dim: int, *,
+                      shift_step: int, anomaly_every: int = 7,
+                      anomaly_frac: float = 0.25, seed: int = 0):
+    """Concept-drift stream for windowed-vs-frozen sketch comparisons.
+
+    Yields ``n_steps`` batches of (batch, dim) nonnegative features plus
+    per-item anomaly labels.  Three populations, all angularly separated
+    (what an SRP score sees):
+
+    * **regime A inliers** — a cone on the first third of the dims; the
+      only inlier population before ``shift_step``.
+    * **regime B inliers** — a cone on the middle third; replaces A at
+      ``shift_step`` (an abrupt shift, the hardest case for a cumulative
+      sketch: A's mass never leaves it, so post-shift μ stays pinned to a
+      regime that stopped arriving and σ inflates on the A/B mix).
+    * **anomalies** — scattered directions on the last third, injected
+      into every ``anomaly_every``-th batch at ``anomaly_frac`` of rows,
+      SAME distribution throughout (so recall before/after the shift is
+      apples-to-apples; only the detector's notion of "normal" moves).
+
+    Returns a list of (x (batch, dim) float32, y (batch,) int8) — pure
+    function of the arguments, like every generator in this module.
+    """
+    rng = np.random.default_rng(seed)
+    third = dim // 3
+    mu_a = np.zeros(dim)
+    mu_a[:third] = 5.0
+    mu_b = np.zeros(dim)
+    mu_b[third:2 * third] = 5.0
+    out = []
+    for t in range(n_steps):
+        mu = mu_a if t < shift_step else mu_b
+        x = np.abs(rng.normal(size=(batch, dim)) * 0.5 + mu)
+        y = np.zeros(batch, np.int8)
+        if anomaly_every and t % anomaly_every == anomaly_every - 1:
+            k = max(1, int(round(batch * anomaly_frac)))
+            rows = rng.choice(batch, size=k, replace=False)
+            nu = np.zeros(dim)
+            nu[2 * third:] = 6.0
+            x[rows] = np.abs(rng.normal(size=(k, dim)) * 0.4 + nu)
+            y[rows] = 1
+        out.append((x.astype(np.float32), y))
+    return out
+
+
 def bias_augment(x: np.ndarray, c: float = 1.0) -> np.ndarray:
     """Append a constant coordinate: makes SRP (angular) sensitive to offsets.
 

@@ -87,6 +87,29 @@ def sketch_pspecs(layout: str = "replicated", table_axis: str = "model"):
     return (counts, P(), P(), P())
 
 
+def window_pspecs(layout: str = "replicated", table_axis: str = "model"):
+    """PartitionSpec 8-tuple for an epoch-ring ``WindowedAceState``.
+
+    Raw-tuple convention mirrors ``sketch_pspecs``: ``(counts, n,
+    welford_mean, welford_m2, tail, ssq, cursor, tick)``.  The ring's
+    counts are (E, L, 2^K) — the epoch axis NEVER shards (epochs are
+    time slices; every device must see the whole window to combine),
+    while the L axis shards exactly like the flat sketch (``tables``
+    rule) in BOTH the ring and the maintained (L, 2^K) tail view; the
+    per-epoch scalar vectors and ring pointers replicate.
+    """
+    if layout == "replicated":
+        counts = P()
+        tail = P()
+    elif layout == "table_sharded":
+        counts = P(None, table_axis, None)
+        tail = P(table_axis, None)
+    else:
+        raise ValueError(f"unknown sketch layout {layout!r} "
+                         "(want 'replicated' or 'table_sharded')")
+    return (counts, P(), P(), P(), tail, P(), P(), P())
+
+
 def sketch_layout_shardings(mesh, layout: str = "replicated",
                             table_axis: str = "model"):
     """NamedSharding 4-tuple for ``sketch_pspecs`` on a concrete mesh.

@@ -440,6 +440,86 @@ def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
                      "(want 'replicated' or 'table_sharded')")
 
 
+def window_shardings_for_layout(cfg: AceConfig, mesh, num_epochs: int,
+                                layout: str, table_axis: str = "model"):
+    """NamedSharding pytree for an epoch-ring ``WindowedAceState``.
+
+    The window analogue of ``shardings_for_layout`` (same validated
+    layout names, same divisibility check): the (E, L, 2^K) ring shards
+    its L axis exactly like the flat sketch — the epoch axis never
+    shards — so a windowed guardrail/stream-runner places with one call
+    and GSPMD keeps the per-epoch gathers and the live-epoch
+    dynamic-update inside the jitted program.  ``num_epochs`` is
+    accepted (and unused beyond symmetry) so call sites that only hold
+    a config can still build the tree before the state exists.
+    """
+    from repro.dist.mesh import window_pspecs
+    from repro.window.ring import WindowedAceState
+    del num_epochs  # the pspec tree is epoch-count-free (P() on E)
+    if layout == "table_sharded":
+        table_shard_info(cfg, mesh, table_axis)
+    elif layout != "replicated":
+        raise ValueError(f"unknown sketch layout {layout!r} "
+                         "(want 'replicated' or 'table_sharded')")
+    return WindowedAceState(*(NamedSharding(mesh, ps)
+                              for ps in window_pspecs(layout, table_axis)))
+
+
+def score_window_table_sharded(counts: jax.Array, weights: jax.Array,
+                               buckets: jax.Array, cfg: AceConfig, *,
+                               table_axis: str,
+                               num_shards: int) -> jax.Array:
+    """shard_map-mode windowed Ŝ(q): per-epoch local partials, ONE
+    (E, B) psum, then the γ-weighted combine in ring-index order.
+
+    ``counts`` is the LOCAL (E, L_local, 2^K) ring block; ``weights``
+    the replicated (E,) γ^age vector; ``buckets`` the (B, L_local)
+    slice of this shard's tables.  The psum runs BEFORE the weighting:
+    per-epoch partial sums are integer-valued float32 (< 2^24), so the
+    cross-shard reduction is exact and the subsequent weighted
+    accumulate is the IDENTICAL float sequence as the replicated
+    ``repro.window.score_windowed`` — bitwise parity for every γ, not
+    just the hard window (weighting local partials first would need
+    w·(a+b) ≡ w·a + w·b, which floats do not grant).
+    """
+    E = counts.shape[0]
+    l_local = cfg.num_tables // num_shards
+    rows = jnp.broadcast_to(
+        jnp.arange(l_local, dtype=jnp.int32)[None, :], buckets.shape)
+    partial = jnp.stack(
+        [jnp.sum(counts[e][rows, buckets].astype(jnp.float32), axis=-1)
+         for e in range(E)])                                   # (E, B)
+    total = jax.lax.psum(partial, table_axis)                  # exact ints
+    acc = jnp.zeros(buckets.shape[:1], jnp.float32)
+    for e in range(E):   # ring-index order — same as score_windowed
+        acc = acc + weights[e] * total[e]
+    return acc * jnp.float32(1.0 / cfg.num_tables)
+
+
+def make_table_sharded_window_score(mesh, cfg: AceConfig, *,
+                                    table_axis: str = "model"):
+    """Build a shard_map'd windowed score:
+    (ring counts (E, L, 2^K), weights (E,), q, w) -> (B,) scores.
+
+    The table-sharded window reads move 4·E·B bytes per batch (one
+    (E, B) float psum) — independent of K and L, same scaling story as
+    ``make_table_sharded_score`` with an E-row combine on top."""
+    from jax.experimental.shard_map import shard_map
+
+    shards = table_shard_info(cfg, mesh, table_axis)
+
+    def _scr(counts, weights, q, w):
+        buckets = _local_buckets(q, w, cfg, table_axis, shards)
+        return score_window_table_sharded(
+            counts, weights, buckets, cfg, table_axis=table_axis,
+            num_shards=shards)
+
+    return shard_map(
+        _scr, mesh=mesh,
+        in_specs=(P(None, table_axis, None), P(), P(), P()),
+        out_specs=P(), check_rep=False)
+
+
 def table_sharded_shardings(mesh, table_axis: str = "model") -> AceState:
     """NamedSharding pytree placing a GLOBAL AceState table-sharded.
 

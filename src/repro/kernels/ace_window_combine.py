@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: windowed ACE scoring — E-way weighted gather+combine
+in ONE launch.
+
+The sliding-window sketch (``repro.window``) scores a query against E
+epoch count arrays and combines them with per-epoch decay weights:
+
+    score(q) = (1/L) · Σ_e w_e · Σ_j C_e[j, H_j(q)]
+
+Done naively that is E separate ``ace_query`` launches plus a host-side
+weighted sum — E× the launch overhead and E round-trips of the (B, L)
+gathered matrices through HBM.  This kernel keeps the whole (E, L, 2^K)
+ring VMEM-resident and fuses gather → weight → epoch-sum → table-mean
+into one pass; HBM traffic is the (B, L) bucket ids in and the (B,)
+scores out, independent of E.
+
+Two lowering strategies, chosen by ``mode``:
+
+* ``"flat"`` (preferred): the ring ravels to one (E·L·2^K,) row and each
+  (epoch, table) pair's ids offset by ``(e·L + j)·2^K`` — E·L gather
+  columns in a SINGLE vectorised ``jnp.take`` (the window generalisation
+  of ``ace_score_fused.flat_table_gather``'s row-offset trick), then the
+  weighted epoch reduction runs as one (B, E) @ diag-free contraction.
+* ``"unroll"``: per-epoch static loop over E ``flat_table_gather`` calls
+  (the guaranteed-lowerable baseline; also what the jnp reference path
+  does).  ``choose_mode`` picks ``"flat"`` while the flattened gather
+  index space fits the single-take budget, ``"unroll"`` beyond it.
+
+Summation-order contract: BOTH modes accumulate ``w_e · (per-epoch table
+row-sum)`` over e in ring-index order and apply ONE final reciprocal
+multiply by 1/L — the same formula sequence as
+``repro.window.score_windowed`` and ``kernels.ref.ace_window_combine_ref``.
+Like every score-emitting kernel here (``ace_score_fused``,
+``ace_query`` + mean), the in-kernel L-reduction may reassociate vs the
+plain-jnp program, so kernel-vs-ref parity is float-tolerance (rtol
+1e-6 in the parity matrix), while the jnp windowed path keeps its OWN
+bitwise contracts (E=1 ≡ ``batch_scores``, sharded ≡ replicated).
+
+VMEM at the paper shape (K=15, L=50, int32, E=8): counts 50 MB — past
+the ~16 MB budget, so serving-scale windows run table-sharded (the ring
+splits over L; see repro.dist) or at int16/K=13; the kernel itself is
+shape-agnostic and the tests sweep small awkward shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
+
+
+# One vectorised take's index space: beyond this the flat gather's
+# (B, E·L) offset matrix + raveled ring stop paying for themselves and
+# the per-epoch unroll (E smaller takes) lowers more predictably.
+FLAT_MAX_COLS = 4096
+
+
+def choose_mode(E: int, L: int) -> str:
+    """The ``mode="auto"`` break-even: flat single-take vs per-epoch
+    unroll, by the number of gather columns E·L."""
+    return "flat" if E * L <= FLAT_MAX_COLS else "unroll"
+
+
+def _weighted_table_sums(counts, buckets, weights, *, E, L, nbuckets,
+                         mode):
+    """Σ_e w_e · Σ_j C_e[j, b_j]  for a (bm, L) bucket block -> (bm,).
+
+    Shared by both the kernel body and (via ref) the oracles; the
+    canonical summation order lives HERE once.
+    """
+    rows_off = jax.lax.broadcasted_iota(
+        jnp.int32, (buckets.shape[0], L), 1) * nbuckets
+    if mode == "flat":
+        flat = counts.reshape(E * L * nbuckets)
+        # (B, E*L) offsets: epoch-major blocks of table-offset ids
+        offs = jnp.concatenate(
+            [buckets + rows_off + e * (L * nbuckets) for e in range(E)],
+            axis=1)
+        gathered = jnp.take(flat, offs, axis=0).astype(jnp.float32)
+        acc = jnp.zeros(buckets.shape[:1], jnp.float32)
+        for e in range(E):   # ring-index order (parity contract)
+            acc = acc + weights[e] * jnp.sum(
+                gathered[:, e * L:(e + 1) * L], axis=-1)
+        return acc
+    # unroll: E independent flattened single-epoch gathers
+    acc = jnp.zeros(buckets.shape[:1], jnp.float32)
+    for e in range(E):
+        flat_e = counts[e].reshape(L * nbuckets)
+        g = jnp.take(flat_e, buckets + rows_off,
+                     axis=0).astype(jnp.float32)
+        acc = acc + weights[e] * jnp.sum(g, axis=-1)
+    return acc
+
+
+def _kernel(buckets_ref, w_ref, counts_ref, out_ref, *, E, L, nbuckets,
+            mode):
+    buckets = buckets_ref[...]
+    weights = [w_ref[0, e] for e in range(E)]
+    acc = _weighted_table_sums(counts_ref[...], buckets, weights,
+                               E=E, L=L, nbuckets=nbuckets, mode=mode)
+    score = acc * jnp.float32(1.0 / L)
+    out_ref[...] = jnp.broadcast_to(score[:, None], out_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "mode", "bm"))
+def ace_window_combine(counts: jax.Array, buckets: jax.Array,
+                       weights: jax.Array,
+                       interpret: bool | None = None, mode: str = "auto",
+                       bm: int = 1024) -> jax.Array:
+    """counts (E, L, 2^K), buckets (B, L), weights (E,) -> (B,) scores.
+
+    ``weights`` is the γ^age epoch-weight vector (a traced array — the
+    ring cursor moves every rotation, and re-tracing per cursor position
+    would defeat the one-executable contract)."""
+    interpret = resolve_interpret(interpret)
+    E, L, nbuckets = counts.shape
+    B = buckets.shape[0]
+    assert buckets.shape == (B, L), (buckets.shape, (B, L))
+    assert weights.shape == (E,), (weights.shape, E)
+    if mode == "auto":
+        mode = choose_mode(E, L)
+    if mode not in ("flat", "unroll"):
+        raise ValueError(f"unknown mode {mode!r}")
+
+    bm_ = min(bm, max(B, 8))
+    Bp = ((B + bm_ - 1) // bm_) * bm_
+    bp = jnp.pad(buckets, ((0, Bp - B), (0, 0)))
+    # lane-pad the weights row so the (1, E) block is VPU-addressable
+    Ep = ((E + 127) // 128) * 128
+    wp = jnp.pad(weights.astype(jnp.float32)[None, :], ((0, 0), (0, Ep - E)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, E=E, L=L, nbuckets=nbuckets, mode=mode),
+        grid=(Bp // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, L), lambda i: (i, 0)),
+            pl.BlockSpec((1, Ep), lambda i: (0, 0)),
+            pl.BlockSpec((E, L, nbuckets), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 128), jnp.float32),
+        interpret=interpret,
+    )(bp, wp, counts)
+    return out[:B, 0]

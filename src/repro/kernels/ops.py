@@ -32,6 +32,7 @@ from repro.kernels import ace_admit_fused as _a
 from repro.kernels import ace_query as _q
 from repro.kernels import ace_score_fused as _f
 from repro.kernels import ace_update as _u
+from repro.kernels import ace_window_combine as _wc
 from repro.kernels import srht_hash as _sh
 from repro.kernels import srp_hash as _h
 
@@ -99,6 +100,56 @@ def ace_score(state: AceState, q: jax.Array, w: jax.Array,
     if resolve_hash_mode(cfg.srp) == "srht":
         return ace_query(state, _sh.srht_hash(q, cfg.srp))
     return _f.ace_score_fused(state.counts, q, w, cfg.srp)
+
+
+def ace_window_score(wstate, buckets: jax.Array, gamma: float,
+                     mode: str = "auto") -> jax.Array:
+    """Windowed Ŝ(q): (B, L) bucket ids scored against a
+    ``repro.window.WindowedAceState`` epoch ring via the fused
+    ``ace_window_combine`` kernel (one launch; E-way weighted gather +
+    combine).  ``mode="auto"`` picks the flat single-take lowering while
+    E·L fits the gather budget, the per-epoch unroll beyond it
+    (``ace_window_combine.choose_mode``).  Same canonical summation order
+    as ``repro.window.score_windowed``; agreement is float-tolerance
+    (the in-kernel L-reduction may reassociate — the ``ace_score_fused``
+    contract).
+    """
+    from repro.window.ring import epoch_weights
+    E = wstate.counts.shape[0]
+    weights = epoch_weights(wstate.cursor, E, gamma)
+    return _wc.ace_window_combine(wstate.counts, buckets, weights,
+                                  mode=mode)
+
+
+def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
+                       *, gamma: float, alpha: float, warmup_items: float,
+                       rotate_every: int = 0):
+    """Kernel-path windowed admission: ONE hash, no host syncs.
+
+    The windowed analogue of ``ace_admit``: the single hash runs through
+    ``hash_dispatch`` (dense-MXU or SRHT-VPU per ``cfg.hash_mode``);
+    scoring, threshold and the live-epoch masked insert delegate to the
+    shared ``repro.window`` tail+live helpers, with the scoring gathers
+    passed straight into the insert's ssq increment (``pre_sums``) so
+    the whole admission costs exactly the jnp windowed path's gather
+    budget — NOT the E-way ``ace_window_combine`` launch, which reads
+    all E epochs and would then force the insert to re-gather tail+live
+    anyway (strictly more HBM traffic at the ring's own γ; that kernel
+    is the arbitrary-γ QUERY entry, ``ace_window_score``).  The eager
+    epoch clock ticks after the insert, same positions as every other
+    windowed driver.  Returns (new_state, admit (B,) bool).
+    """
+    from repro.window import ring
+    buckets = hash_dispatch(q, w, cfg.srp)
+    tail_sums, live_sums = ring.window_table_sums(wstate, buckets)
+    scores = ring.score_live(tail_sums, live_sums, cfg.num_tables)
+    admit = scores >= ring.admit_threshold_windowed(
+        wstate, gamma, alpha, warmup_items)
+    new_state = ring.insert_current(wstate, buckets, admit, cfg,
+                                    gamma=gamma,
+                                    pre_sums=(tail_sums, live_sums))
+    new_state = ring.maybe_rotate(new_state, rotate_every, gamma)
+    return new_state, admit
 
 
 def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,

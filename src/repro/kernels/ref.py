@@ -39,6 +39,26 @@ def ace_score_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
     return jnp.mean(ace_query_ref(counts, buckets), axis=-1)
 
 
+def ace_window_combine_ref(counts: jax.Array, buckets: jax.Array,
+                           weights: jax.Array) -> jax.Array:
+    """Windowed scoring: counts (E, L, 2^K), buckets (B, L), weights (E,)
+    -> (B,) scores.
+
+    Mirrors ``ace_window_combine``'s canonical summation order (per-epoch
+    table row-sum, weighted, accumulated over e in ring-index order, ONE
+    final 1/L reciprocal multiply — the same sequence as
+    ``repro.window.score_windowed``); kernel-vs-ref comparisons are
+    float-tolerance like every score-emitting kernel (the in-kernel
+    L-reduction may reassociate).
+    """
+    E, L = counts.shape[0], counts.shape[1]
+    acc = jnp.zeros(buckets.shape[:1], jnp.float32)
+    for e in range(E):
+        acc = acc + weights[e] * jnp.sum(
+            ace_query_ref(counts[e], buckets), axis=-1)
+    return acc * jnp.float32(1.0 / L)
+
+
 def ace_admit_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
                   thresh: jax.Array, cfg: SrpConfig):
     """Fused admission: hash once, score pre-insert, threshold, masked add.

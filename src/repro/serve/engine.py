@@ -27,6 +27,13 @@ class GuardrailConfig:
     warmup_items: float = 256.0
     bias_const: float = 0.25
     hash_mode: str = "dense"    # "dense" | "srht" | "auto" (SrpConfig)
+    # Sliding-window mode (repro.window): >1 epochs turns the sketch into
+    # a device-resident epoch ring whose admit threshold is computed from
+    # WINDOW-combined moments, so the guardrail tracks traffic drift by
+    # FORGETTING stale regimes instead of letting them pin μ/σ forever.
+    window_epochs: int = 1      # 1 = the flat (cumulative) sketch
+    window_decay: float = 1.0   # γ; epoch weight γ^age at query time
+    rotate_every: int = 0       # admit calls per epoch (0 = never rotate)
 
 
 class Guardrail:
@@ -54,6 +61,17 @@ class Guardrail:
     beyond one device's memory (K=18+, L=200+) stay servable; the same
     jitted admit program works in every layout (GSPMD inserts the
     collectives around the masked insert).
+
+    With ``gcfg.window_epochs > 1`` the sketch is a sliding-window epoch
+    ring (``repro.window``): the admit threshold comes from the
+    WINDOW-combined μ/σ, admits insert into the live epoch, and every
+    ``gcfg.rotate_every`` admit calls the ring rotates INSIDE the same
+    jitted program (device-side cond on the ring's tick) — so a traffic
+    regime that stops arriving ages out of the filter in
+    ``window_epochs × rotate_every`` calls instead of biasing μ/σ
+    forever.  Still one hash, one executable, one host transfer; the
+    epoch ring shards over the SAME layouts (the L axis splits, the E
+    axis never does).
     """
 
     def __init__(self, gcfg: GuardrailConfig, *, mesh=None,
@@ -65,7 +83,28 @@ class Guardrail:
                                  num_tables=gcfg.num_tables, seed=41,
                                  welford_min_n=gcfg.warmup_items / 2,
                                  hash_mode=gcfg.hash_mode)
-        self.state = sk.init(self.ace_cfg)
+        self.windowed = gcfg.window_epochs > 1
+        if self.windowed:
+            from repro.window import ring
+            if gcfg.rotate_every <= 0:
+                # nothing else rotates a guardrail's ring: E>1 epochs
+                # with no clock silently degenerates to the frozen
+                # sketch at E× the memory — exactly the misconfig the
+                # windowed mode exists to replace
+                raise ValueError(
+                    "windowed guardrail (window_epochs > 1) needs "
+                    "rotate_every > 0 — without a rotation clock the "
+                    "ring never expires and behaves like the frozen "
+                    "sketch")
+            # WindowConfig VALIDATES (epochs, decay, rotate_every) up
+            # front — a bad γ must fail loudly here, not silently weight
+            # stale epochs above live traffic
+            self.state = ring.init_window(ring.WindowConfig(
+                ace=self.ace_cfg, num_epochs=gcfg.window_epochs,
+                decay=gcfg.window_decay,
+                rotate_every=gcfg.rotate_every))
+        else:
+            self.state = sk.init(self.ace_cfg)
         self.w = sk.make_params(self.ace_cfg)
         if use_kernels and mesh is not None:
             raise ValueError("use_kernels admission is single-device; "
@@ -77,21 +116,25 @@ class Guardrail:
         # instead of copying (L, 2^K) every batch.
         self._admit = jax.jit(self._admit_impl, donate_argnums=0)
         if mesh is not None:
-            from repro.dist.sketch_parallel import shardings_for_layout
-            self.state = jax.device_put(
-                self.state, shardings_for_layout(
-                    self.ace_cfg, mesh, sketch_layout, table_axis))
+            if self.windowed:
+                from repro.dist.sketch_parallel import \
+                    window_shardings_for_layout
+                shardings = window_shardings_for_layout(
+                    self.ace_cfg, mesh, gcfg.window_epochs, sketch_layout,
+                    table_axis)
+            else:
+                from repro.dist.sketch_parallel import shardings_for_layout
+                shardings = shardings_for_layout(
+                    self.ace_cfg, mesh, sketch_layout, table_axis)
+            self.state = jax.device_put(self.state, shardings)
 
     def _features(self, embeds: jax.Array) -> jax.Array:
-        """Unit-normalised mean embedding + bias coordinate.
-
-        Normalising first makes the (angular) SRP see DIRECTION drift at
-        full resolution; the bias coordinate then re-encodes relative
-        magnitude at a controlled weight (bias_const)."""
-        f = jnp.mean(embeds.astype(jnp.float32), axis=1)
-        f = f / (jnp.linalg.norm(f, axis=-1, keepdims=True) + 1e-9)
-        bias = jnp.full((f.shape[0], 1), self.gcfg.bias_const, jnp.float32)
-        return jnp.concatenate([f, bias], axis=-1)
+        """Unit-normalised mean embedding + bias coordinate — the SAME
+        shared helper as the data filters (``mean_embed_features``), so
+        the serving guardrail and the training-side filters can never
+        drift apart on featurisation."""
+        from repro.data.pipeline import mean_embed_features
+        return mean_embed_features(embeds, self.gcfg.bias_const)
 
     def _admit_impl(self, state: sk.AceState, w: jax.Array,
                     embeds: jax.Array):
@@ -99,6 +142,33 @@ class Guardrail:
         self.trace_count += 1
         cfg = self.ace_cfg
         feat = self._features(embeds)
+        if self.windowed:
+            from repro.window import ring
+            if self.use_kernels:
+                from repro.kernels import ops as kops
+                return kops.ace_admit_windowed(
+                    state, feat, w, cfg, gamma=self.gcfg.window_decay,
+                    alpha=self.gcfg.alpha,
+                    warmup_items=self.gcfg.warmup_items,
+                    rotate_every=self.gcfg.rotate_every)
+            buckets = hash_buckets(feat, w, cfg.srp)   # the ONE hash
+            # tail + live gathers (the live one is the flat path's own)
+            tail_sums, live_sums = ring.window_table_sums(state, buckets)
+            scores = ring.score_live(tail_sums, live_sums,
+                                     cfg.num_tables)
+            admit = scores >= ring.admit_threshold_windowed(
+                state, self.gcfg.window_decay, self.gcfg.alpha,
+                self.gcfg.warmup_items)
+            new_state = ring.insert_current(
+                state, buckets, admit, cfg,
+                gamma=self.gcfg.window_decay,
+                pre_sums=(tail_sums, live_sums))
+            # eager epoch clock: the admit call that fills an epoch
+            # rotates the ring on its way out (device-side cond)
+            new_state = ring.maybe_rotate(new_state,
+                                          self.gcfg.rotate_every,
+                                          self.gcfg.window_decay)
+            return new_state, admit
         if self.use_kernels:
             from repro.kernels import ops as kops
             return kops.ace_admit(state, feat, w, cfg,

@@ -28,6 +28,17 @@ collectives (jit/SPMD mode, exactly like the guardrail and train_step).
 The hash family follows the filter's ``hash_mode`` knob (dense matmul,
 SRHT fast transform, or auto break-even) because the scan body hashes
 through ``repro.core.srp.hash_buckets``.
+
+Sliding windows: with a ``repro.window.WindowedAceFilter`` (or any
+filter whose state is a ``WindowedAceState`` ring), ``rotate_every=R``
+advances the epoch ring every R scan steps INSIDE the donated device
+program — as straight-line code between R-step scan segments when R
+divides the chunk (no per-step branching; a per-step cond would copy
+the multi-MB carry), or as one tick-gated clock per chunk boundary when
+R spans chunks.  Windowing therefore adds ZERO extra host syncs: still
+exactly 1 H2D + 1 D2H per chunk, still one executable
+(``trace_count``), and rotations land at the same stream positions as
+the per-batch drivers' eager ``maybe_rotate`` clock.
 """
 from __future__ import annotations
 
@@ -75,19 +86,42 @@ class StreamRunner:
     def __init__(self, filt: AceDataFilter, chunk_T: int, topk: int = 8,
                  return_masks: bool = False, *, mesh=None,
                  sketch_layout: str = "replicated",
-                 table_axis: str = "model"):
+                 table_axis: str = "model",
+                 rotate_every: int | None = None):
         self.filt = filt
         self.chunk_T = int(chunk_T)
         self.topk = int(topk)
         self.return_masks = return_masks
         self.mesh = mesh
         self.sketch_layout = sketch_layout
+        # Epoch-ring rotation clock: None inherits the filter's own
+        # ``rotate_every`` (0 for the flat AceDataFilter — no rotation).
+        if rotate_every is None:
+            rotate_every = int(getattr(filt, "rotate_every", 0))
+        self.rotate_every = int(rotate_every)
+        if self.rotate_every and not hasattr(filt, "num_epochs"):
+            raise ValueError("rotate_every needs a windowed filter "
+                             "(repro.window.WindowedAceFilter); the flat "
+                             "AceDataFilter has no epoch ring to rotate")
+        if self.rotate_every and self.chunk_T % self.rotate_every != 0 \
+                and self.rotate_every % self.chunk_T != 0:
+            raise ValueError(
+                f"rotate_every={self.rotate_every} must divide or be a "
+                f"multiple of chunk_T={self.chunk_T} so epoch boundaries "
+                "land deterministically inside or between chunks")
         self.trace_count = 0          # incremented at TRACE time only
         self._shardings = None
         if mesh is not None:
-            from repro.dist.sketch_parallel import shardings_for_layout
-            self._shardings = shardings_for_layout(
-                filt.ace_cfg, mesh, sketch_layout, table_axis)
+            if hasattr(filt, "num_epochs"):
+                from repro.dist.sketch_parallel import \
+                    window_shardings_for_layout
+                self._shardings = window_shardings_for_layout(
+                    filt.ace_cfg, mesh, filt.num_epochs, sketch_layout,
+                    table_axis)
+            else:
+                from repro.dist.sketch_parallel import shardings_for_layout
+                self._shardings = shardings_for_layout(
+                    filt.ace_cfg, mesh, sketch_layout, table_axis)
         # The incoming state is dead the moment consume() rebinds it —
         # donate it so the (L, 2^K) counts update in place every chunk.
         self._consume = jax.jit(self._consume_impl, donate_argnums=0)
@@ -104,22 +138,63 @@ class StreamRunner:
 
     def _constrain(self, state: AceState) -> AceState:
         """Pin the scan carry to the requested repro.dist layout so GSPMD
-        keeps the collectives inside the scan body (no-op off-mesh)."""
+        keeps the collectives inside the scan body (no-op off-mesh).
+        Works for both the flat ``AceState`` and the epoch-ring
+        ``WindowedAceState`` (the shardings pytree mirrors the carry)."""
         if self._shardings is None:
             return state
-        return AceState(*(jax.lax.with_sharding_constraint(leaf, sh)
-                          for leaf, sh in zip(state, self._shardings)))
+        return type(state)(*(jax.lax.with_sharding_constraint(leaf, sh)
+                             for leaf, sh in zip(state, self._shardings)))
 
     def _consume_impl(self, state: AceState, w: jax.Array,
                       feats: jax.Array):
         self.trace_count += 1
         T, B = feats.shape[0], feats.shape[1]
+        R = self.rotate_every
+        gamma = getattr(self.filt, "decay", 1.0)
 
         def step(carry, feat):
             new_state, keep, margin = self.filt.step(carry, w, feat)
             return self._constrain(new_state), (keep, margin)
 
-        state, (keeps, margins) = jax.lax.scan(step, state, feats)
+        if R and T % R == 0:
+            # Epoch-ring rotation INSIDE the donated program, with no
+            # per-step branching: the chunk scans in R-step segments and
+            # the tick-gated clock runs once per segment boundary.  (A
+            # per-step lax.cond would make XLA copy the multi-MB ring
+            # carry on EVERY step — measured, that cost more than the
+            # whole flat filter step; once per R steps it is noise.)
+            # The tick-gated clock, not an unconditional rotate: a state
+            # handed over mid-epoch (tick off the R-grid — out of this
+            # runner's contract, which owns the stream from tick 0) then
+            # keeps its epoch open instead of rotating at phase-shifted
+            # positions, preserving the global invariant that rotations
+            # only ever land on tick ≡ 0 (mod R).  On-contract entry
+            # (every chunk starts at a multiple of T, R | T) makes the
+            # gate fire at every boundary — identical to the per-batch
+            # eager clock, asserted bitwise in tests/test_window.py.
+            from repro.window import maybe_rotate
+
+            def segment(carry, seg_feats):
+                carry, outs = jax.lax.scan(step, carry, seg_feats)
+                return self._constrain(
+                    maybe_rotate(carry, R, gamma)), outs
+
+            seg_feats = feats.reshape((T // R, R) + feats.shape[1:])
+            state, (keeps, margins) = jax.lax.scan(
+                segment, state, seg_feats)
+            keeps = keeps.reshape((T,) + keeps.shape[2:])
+            margins = margins.reshape((T,) + margins.shape[2:])
+        elif R:
+            # R is a multiple of T (validated in __init__): rotations
+            # only ever land on chunk boundaries — scan the chunk, then
+            # ONE tick-gated clock check (a single cond per chunk, not
+            # T per-step conds).
+            from repro.window import maybe_rotate
+            state, (keeps, margins) = jax.lax.scan(step, state, feats)
+            state = maybe_rotate(state, R, gamma)
+        else:
+            state, (keeps, margins) = jax.lax.scan(step, state, feats)
         keepf = keeps.astype(jnp.float32)                     # (T, B)
         k = min(self.topk, T * B)
         # top-k most anomalous = smallest margins, coordinates on device
@@ -130,7 +205,9 @@ class StreamRunner:
             topk_step=(idx // B).astype(jnp.int32),
             topk_item=(idx % B).astype(jnp.int32),
             topk_margin=-neg,
-            n=state.n)
+            # windowed carries hold per-epoch (E,) counts — report the
+            # ring total so the summary shape is layout-independent
+            n=state.n if state.n.ndim == 0 else jnp.sum(state.n))
         if self.return_masks:
             return state, summary, keeps
         return state, summary

@@ -45,6 +45,12 @@ class TrainConfig:
                                      # scan program per T batches
                                      # (repro.stream.StreamRunner) instead
                                      # of per-batch inside train_step
+    filter_window_epochs: int = 1    # >1: sliding-window filter — the
+                                     # sketch becomes a repro.window epoch
+                                     # ring so the admit threshold tracks
+                                     # stream drift instead of freezing
+    filter_window_decay: float = 1.0  # γ epoch decay (1.0 = hard window)
+    filter_rotate_every: int = 0     # filter steps (batches) per epoch
     use_grad_monitor: bool = True    # ACE monitor on gradient stats
     grad_compression: bool = False   # int8 + error feedback
     monitor_feature_dim: int = 32
@@ -65,6 +71,34 @@ class TrainState(NamedTuple):
     rng: jax.Array
 
 
+def make_data_filter(tcfg: TrainConfig, d_model: int):
+    """The ONE place the train stack decides flat-vs-windowed filtering.
+
+    ``filter_window_epochs > 1`` swaps the cumulative ``AceDataFilter``
+    for the epoch-ring ``repro.window.WindowedAceFilter`` — same step
+    protocol, same hash/threshold/insert dataflow, but the sketch state
+    is a ring whose stale epochs expire, so long-horizon training
+    streams with drift don't freeze the filter's μ/σ.  Every consumer
+    (init_train_state, the in-step path, the chunked prefilter, the
+    tail fallback) builds through here so they agree on the state type.
+    """
+    if tcfg.filter_window_epochs > 1:
+        if tcfg.filter_rotate_every <= 0:
+            # nothing else rotates the train filter's ring: E>1 epochs
+            # with no clock silently degenerates to the frozen sketch
+            # at E× the memory
+            raise ValueError(
+                "filter_window_epochs > 1 needs filter_rotate_every > 0 "
+                "— without a rotation clock the ring never expires and "
+                "behaves like the frozen sketch")
+        from repro.window import WindowedAceFilter
+        return WindowedAceFilter(
+            d_model=d_model, num_epochs=tcfg.filter_window_epochs,
+            decay=tcfg.filter_window_decay,
+            rotate_every=tcfg.filter_rotate_every)
+    return AceDataFilter(d_model=d_model)
+
+
 def init_train_state(arch: Arch, tcfg: TrainConfig, key) -> TrainState:
     params, _ = arch.init_params(key)
     opt = make_optimizer(tcfg.optimizer)
@@ -74,7 +108,7 @@ def init_train_state(arch: Arch, tcfg: TrainConfig, key) -> TrainState:
         gm = GradMonitor(feature_dim=tcfg.monitor_feature_dim)
         mon, mon_w = gm.init()
     if tcfg.use_data_filter:
-        filt = AceDataFilter(d_model=arch.cfg.d_model)
+        filt = make_data_filter(tcfg, arch.cfg.d_model)
         fs, fw = filt.init()
     if tcfg.grad_compression:
         ef = init_error_feedback(params)
@@ -127,17 +161,23 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
     # With filter_chunk > 1 the driver runs the filter OUTSIDE the step as
     # one StreamRunner scan per T batches (see ``train``); the step then
     # just consumes the pre-masked batches.
-    filt = AceDataFilter(d_model=cfg.d_model) \
+    filt = make_data_filter(tcfg, cfg.d_model) \
         if tcfg.use_data_filter and tcfg.filter_chunk <= 1 else None
 
     def constrain_sketch(st):
-        """Pin an AceState to the requested repro.dist layout (no-op when
-        sketch_layout is None or the state is absent)."""
+        """Pin an AceState (or a windowed epoch ring) to the requested
+        repro.dist layout (no-op when sketch_layout is None or the state
+        is absent).  The pspec tree is picked by the state's own leaf
+        count, so flat and windowed filter states coexist."""
         if sketch_layout is None or st is None:
             return st
-        return AceState(*(jax.lax.with_sharding_constraint(leaf, ps)
-                          for leaf, ps in zip(st, sketch_pspecs(
-                              sketch_layout))))
+        if len(st) == 4:
+            pspecs = sketch_pspecs(sketch_layout)
+        else:
+            from repro.dist.mesh import window_pspecs
+            pspecs = window_pspecs(sketch_layout)
+        return type(st)(*(jax.lax.with_sharding_constraint(leaf, ps)
+                          for leaf, ps in zip(st, pspecs)))
 
     def loss_fn(params, batch):
         return arch.loss(params, batch, remat=tcfg.remat,
@@ -277,7 +317,9 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
     chunk_T = tcfg.filter_chunk if tcfg.use_data_filter else 0
     runner = feat_fn = pb_step = None
     if chunk_T > 1:
-        filt = AceDataFilter(d_model=arch.cfg.d_model)
+        filt = make_data_filter(tcfg, arch.cfg.d_model)
+        # a windowed filter carries its own rotation clock; the runner
+        # inherits it and rotates inside the scan body
         runner = StreamRunner(filt, chunk_T=chunk_T, return_masks=True)
         # ONE jitted program computes the whole chunk's features (vmap
         # over the stacked T axis) — not T per-batch dispatches; the
@@ -286,7 +328,19 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
         feat_fn = jax.jit(lambda params, stacked: jax.vmap(
             lambda jb: filt.features(
                 sequence_embeddings(params, jb, arch.cfg)))(stacked))
-        pb_step = jax.jit(filt.step)          # tail-batch fallback
+
+        def _tail_step(s, w, feat):
+            # tail-batch fallback: same per-step program as the scan
+            # body, INCLUDING the (eager, post-insert) epoch-ring clock,
+            # so rotations land at identical stream positions whether a
+            # batch went through a chunk or the tail
+            s, keep, margin = filt.step(s, w, feat)
+            if getattr(filt, "num_epochs", 1) > 1:
+                from repro.window import maybe_rotate
+                s = maybe_rotate(s, filt.rotate_every, filt.decay)
+            return s, keep, margin
+
+        pb_step = jax.jit(_tail_step)
 
     timer = StepTimer(slo_seconds=120.0)
     history = []

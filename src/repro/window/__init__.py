@@ -1,0 +1,29 @@
+"""Sliding-window ACE: device-resident epoch ring with on-device
+rotation/decay.
+
+``repro.window.ring`` is the state + pure ops (rotate / decayed combine /
+windowed moments & threshold / masked insert into the live epoch);
+``repro.window.filter`` is the drift-tracking drop-in for
+``AceDataFilter``.  See docs/ARCHITECTURE.md §5.
+"""
+from repro.window.ring import (WindowConfig, WindowedAceState,
+                               admit_threshold_windowed, combined_ace,
+                               combined_moments, combined_n,
+                               decayed_counts, epoch_table_sums,
+                               epoch_weights, init, init_window,
+                               insert_current, live_epoch, maybe_rotate,
+                               mean_mu_windowed, rotate, score_combined,
+                               score_from_sums, score_live,
+                               score_windowed, sigma_windowed,
+                               window_table_sums)
+from repro.window.filter import WindowedAceFilter
+
+__all__ = [
+    "WindowConfig", "WindowedAceState", "WindowedAceFilter",
+    "admit_threshold_windowed", "combined_ace", "combined_moments",
+    "combined_n", "decayed_counts", "epoch_table_sums", "epoch_weights",
+    "init", "init_window", "insert_current", "live_epoch",
+    "maybe_rotate", "mean_mu_windowed", "rotate", "score_combined",
+    "score_from_sums", "score_live", "score_windowed", "sigma_windowed",
+    "window_table_sums",
+]

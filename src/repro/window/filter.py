@@ -1,0 +1,118 @@
+"""Windowed ACE data filter — the drift-tracking drop-in for
+``repro.data.pipeline.AceDataFilter``.
+
+Same step protocol (``init``, ``features``, ``step``, ``__call__``,
+``ace_cfg``), same single hash per batch, same score→threshold→masked-
+insert dataflow — but the state is a ``WindowedAceState`` ring and every
+statistic (score, μ, σ, admit threshold) is window-combined, so the
+filter FORGETS: after a distribution shift the stale regime ages out in
+``num_epochs × rotate_every`` steps instead of poisoning μ/σ forever.
+
+Rotation is NOT performed inside ``step`` — it belongs to whoever drives
+the stream clock (``StreamRunner(rotate_every=...)`` inside its scan
+body, ``Guardrail`` per admit call, or the train driver's tail path via
+``maybe_rotate``).  Keeping the step rotation-free means one step ==
+one insert tick everywhere, and the chunk-vs-sequential equivalence
+contract of the stream runner holds for windowed state exactly as it
+does for the plain sketch.
+
+With ``num_epochs=1`` (and any γ — the live epoch's weight is exactly
+1.0) the filter is BITWISE ``AceDataFilter``: same buckets, same scores,
+same threshold, same inserted counts (tests/test_window.py asserts it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import srp
+from repro.core.sketch import AceConfig
+from repro.window import ring
+from repro.window.ring import WindowConfig, WindowedAceState
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowedAceFilter:
+    """ACE anomaly filter over a sliding epoch ring (jit-compatible)."""
+
+    d_model: int
+    num_bits: int = 13
+    num_tables: int = 32
+    alpha: float = 4.0
+    warmup_items: float = 512.0
+    bias_const: float = 0.25
+    hash_mode: str = "dense"
+    insert_all: bool = False    # detector mode (see AceDataFilter)
+    num_epochs: int = 4
+    decay: float = 1.0          # γ; 1.0 = hard window
+    rotate_every: int = 0       # steps per epoch (driver-enforced clock)
+
+    @property
+    def ace_cfg(self) -> AceConfig:
+        # same construction as AceDataFilter.ace_cfg: the E=1 window must
+        # be the SAME sketch (seed included) as the flat filter's.
+        return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
+                         num_tables=self.num_tables, seed=29,
+                         welford_min_n=self.warmup_items / 2,
+                         hash_mode=self.hash_mode)
+
+    @property
+    def window_cfg(self) -> WindowConfig:
+        return WindowConfig(ace=self.ace_cfg, num_epochs=self.num_epochs,
+                            decay=self.decay,
+                            rotate_every=self.rotate_every)
+
+    def init(self):
+        from repro.core import sketch as sk
+        # init_window routes through WindowConfig, which VALIDATES the
+        # (num_epochs, decay, rotate_every) triple up front
+        return (ring.init_window(self.window_cfg),
+                sk.make_params(self.ace_cfg))
+
+    def features(self, embeds: jax.Array) -> jax.Array:
+        """(B, S, D) embeddings -> (B, D+1) unit-mean + bias features —
+        the SAME shared helper as ``AceDataFilter`` (identical
+        featurisation is what makes frozen-vs-windowed comparisons, and
+        the E=1 bitwise contract, apples-to-apples)."""
+        from repro.data.pipeline import mean_embed_features
+        return mean_embed_features(embeds, self.bias_const)
+
+    def step(self, state: WindowedAceState, w, feat):
+        """hash ONCE → window-combined score → window-combined μ−ασ
+        threshold → masked insert into the live epoch.
+
+        Returns (new_state, keep (B,) bool, margin (B,) float32); the
+        scan body of ``StreamRunner`` when the filter is windowed.
+        Rotation is the driver's job (see module docstring)."""
+        cfg = self.ace_cfg
+        buckets = srp.hash_buckets(feat, w, cfg.srp)   # the ONE hash
+        # tail + live gathers: the live one is the flat sketch's own
+        # score gather; the tail one is the whole windowing surcharge
+        tail_sums, live_sums = ring.window_table_sums(state, buckets)
+        scores = ring.score_live(tail_sums, live_sums, cfg.num_tables)
+        thresh = ring.admit_threshold_windowed(
+            state, self.decay, self.alpha, self.warmup_items)
+        keep = scores >= thresh
+        margin = scores - thresh
+        ins = jnp.ones_like(keep) if self.insert_all else keep
+        # the scoring gathers double as the ssq increment's ⟨h, C_w⟩ input
+        new_state = ring.insert_current(
+            state, buckets, ins, cfg, gamma=self.decay,
+            pre_sums=(tail_sums, live_sums))
+        return new_state, keep, margin
+
+    def __call__(self, state, w, embeds, mask):
+        """Score + filter + update (per-batch driver convenience).
+
+        One step, then the rotation clock (eager: the insert that fills
+        an epoch rotates the ring on its way out — same positions as the
+        stream runner's segment scan); returns (new_state, new_mask,
+        frac_kept)."""
+        feat = self.features(embeds)
+        new_state, keep, _margin = self.step(state, w, feat)
+        new_state = ring.maybe_rotate(new_state, self.rotate_every,
+                                      self.decay)
+        new_mask = mask * keep[:, None].astype(mask.dtype)
+        return new_state, new_mask, jnp.mean(keep.astype(jnp.float32))

@@ -9,11 +9,57 @@ with keyword strategies, ``@settings(max_examples=, deadline=)`` and
 ``st.integers(lo, hi)`` — running each property against deterministic
 pseudorandom draws.  Install the ``dev`` extra (``pip install -e .[dev]``)
 to property-test with the real engine; CI does.
+
+Also home of :func:`assert_allclose_dtype`, the suite's ONE float
+comparison helper: tolerance is chosen by the operands' dtype instead of
+per-call-site magic numbers, so "how close is close enough for fp32"
+is answered once (tests import it with ``from conftest import
+assert_allclose_dtype`` — pytest puts this directory on sys.path).
 """
 from __future__ import annotations
 
 import os
 import sys
+
+import numpy as np
+
+# Per-dtype relative tolerances: ~2 decimal digits of headroom over the
+# dtype's epsilon, matching the tightest bounds the suite historically
+# asserted ad hoc (fp32 comparisons were a mix of 1e-5..1e-7; bf16 sign
+# tests used percentage agreement instead and still do).
+_DTYPE_RTOL = {
+    np.dtype(np.float64): 1e-12,
+    np.dtype(np.float32): 1e-5,
+    np.dtype(np.float16): 5e-3,
+}
+
+
+def assert_allclose_dtype(actual, desired, rtol=None, atol=0.0,
+                          err_msg=""):
+    """np.testing.assert_allclose with dtype-derived default tolerance.
+
+    The rtol defaults to the loosest tolerance among the two operands'
+    float dtypes (int operands compare exactly via rtol=0 unless the
+    other side is float).  Pass ``rtol``/``atol`` explicitly only when a
+    computation is genuinely less stable than its dtype (say so in the
+    test).  jax arrays, numpy arrays and python scalars all accepted.
+    """
+    a = np.asarray(actual)
+    d = np.asarray(desired)
+    if rtol is None:
+        cands = [_DTYPE_RTOL[x.dtype] for x in (a, d)
+                 if x.dtype in _DTYPE_RTOL]
+        # bfloat16 (not a numpy dtype) arrives as its ml_dtypes alias —
+        # fall back to its epsilon-scale tolerance by name
+        for x in (a, d):
+            if "bfloat16" in str(x.dtype):
+                cands.append(2e-2)
+        rtol = max(cands) if cands else 0.0
+    np.testing.assert_allclose(a.astype(np.float64, copy=False)
+                               if "bfloat16" in str(a.dtype) else a,
+                               d.astype(np.float64, copy=False)
+                               if "bfloat16" in str(d.dtype) else d,
+                               rtol=rtol, atol=atol, err_msg=err_msg)
 
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                     "src")

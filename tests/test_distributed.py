@@ -16,6 +16,10 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# every test here round-trips a subprocess with a forced multi-device CPU
+# topology — minutes, not seconds; the CI fast lane (-m "not slow") skips them
+pytestmark = pytest.mark.slow
+
 
 def run_py(code: str, devices: int = 8, timeout: int = 420):
     env = dict(os.environ)

@@ -1,11 +1,23 @@
-"""Per-kernel validation: shape/dtype sweeps, hypothesis property tests,
-assert_allclose against the pure-jnp oracles in repro.kernels.ref."""
+"""Per-kernel validation.
+
+``TestKernelParityMatrix`` is the ONE kernel-vs-reference sweep: every
+kernel × the hash family feeding it (dense matmul vs SRHT) × how
+interpret mode is resolved (the ``runtime`` resolver default vs pinned
+``interpret=True``), over a set of deliberately awkward shapes.  Adding
+a kernel means adding one runner entry, not a new copy-pasted
+``test_matches_ref`` — the window-combine kernel rides the same matrix.
+
+The per-kernel classes below keep only what the matrix can't express:
+dtype behaviour, tiling invariance, collision/padding edge cases, mode
+break-evens, and the ops-level dispatch contracts.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from conftest import assert_allclose_dtype
 from repro.core.sketch import AceConfig
 from repro.core.srp import SrpConfig, hash_buckets, make_projections
 from repro.kernels import ref as R
@@ -15,6 +27,10 @@ from repro.kernels.ace_query import ace_query
 from repro.kernels.ace_score_fused import ace_score_fused
 from repro.kernels.ace_update import (HIST_MAX_BUCKETS, ace_update,
                                       choose_mode)
+from repro.kernels.ace_window_combine import (FLAT_MAX_COLS,
+                                              ace_window_combine)
+from repro.kernels.ace_window_combine import choose_mode as window_mode
+from repro.kernels.srht_hash import srht_hash
 from repro.kernels.srp_hash import srp_hash
 
 jax.config.update("jax_platform_name", "cpu")
@@ -34,18 +50,159 @@ SHAPES = [
     (256, 64, 6, 7),
 ]
 
+# Trimmed sweep for the full parity matrix (every kernel × hash family ×
+# interpret resolution); the paper-scale shape is the heavyweight and
+# rides the slow lane.
+MATRIX_SHAPES = [
+    (16, 32, 8, 10),
+    (7, 9, 4, 3),
+    (33, 128, 12, 50),
+    pytest.param(100, 300, 15, 50, marks=pytest.mark.slow),
+]
 
-class TestSrpHashKernel:
-    @pytest.mark.parametrize("B,d,K,L", SHAPES)
-    def test_matches_ref(self, B, d, K, L):
-        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=B + d)
+# (hash_mode feeding the kernel, interpret argument): None exercises the
+# repro.kernels.runtime resolver (env var / backend probe — interpret on
+# this CPU container), True pins it explicitly; both must agree.
+MODES = [("dense", None), ("srht", None),
+         pytest.param("dense", True, marks=pytest.mark.slow),
+         pytest.param("srht", True, marks=pytest.mark.slow)]
+
+
+class TestKernelParityMatrix:
+    """kernel × hash family × interpret resolution × shape, one sweep."""
+
+    def _cfg(self, d, K, L, hash_mode, seed):
+        return SrpConfig(dim=d, num_bits=K, num_tables=L, seed=seed,
+                         hash_mode=hash_mode)
+
+    def _data(self, B, d, K, L, hash_mode, seed=0):
+        cfg = self._cfg(d, K, L, hash_mode, seed + 1)
         w = make_projections(cfg)
-        x = _x(B, d, seed=d)
-        got = srp_hash(x, w, cfg)
-        want = R.srp_hash_ref(x, w, cfg)
+        x = _x(B, d, seed=seed + 2)
+        rng = np.random.default_rng(seed + 3)
+        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)),
+                             jnp.int32)
+        buckets = hash_buckets(x, w, cfg)     # family-realistic ids
+        return cfg, w, x, counts, buckets
+
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    def test_hash(self, B, d, K, L, hash_mode, interpret):
+        """srp_hash / srht_hash kernels ≡ the jnp hash_buckets dispatch,
+        bitwise (f32)."""
+        cfg, w, x, _counts, _b = self._data(B, d, K, L, hash_mode)
+        if hash_mode == "srht":
+            got = srht_hash(x, cfg, interpret=interpret)
+        else:
+            got = srp_hash(x, w, cfg, interpret=interpret)
+        want = hash_buckets(x, w, cfg)
         assert got.shape == (B, L) and got.dtype == jnp.int32
         assert bool(jnp.all(got == want))
 
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    def test_update(self, B, d, K, L, hash_mode, interpret):
+        """ace_update ≡ histogram scatter-add, exactly (both bucket-id
+        families as input distributions)."""
+        _cfg, _w, _x_, counts, buckets = self._data(B, d, K, L, hash_mode)
+        got = ace_update(counts, buckets, interpret=interpret)
+        want = R.ace_update_ref(counts, buckets)
+        assert bool(jnp.all(got == want))
+
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    def test_query(self, B, d, K, L, hash_mode, interpret):
+        """ace_query gathered counts ≡ fancy-index gather, exactly."""
+        _cfg, _w, _x_, counts, buckets = self._data(B, d, K, L, hash_mode)
+        got = ace_query(counts, buckets, interpret=interpret)
+        want = R.ace_query_ref(counts, buckets)
+        assert bool(jnp.all(got == want))
+
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    def test_score(self, B, d, K, L, hash_mode, interpret):
+        """Fused scoring (one launch under dense; SRHT-hash + gather
+        kernels under srht) ≡ hash→gather→mean reference, to float
+        reduction order."""
+        cfg, w, x, counts, _b = self._data(B, d, K, L, hash_mode)
+        if hash_mode == "srht":
+            got = jnp.mean(ace_query(
+                counts, srht_hash(x, cfg, interpret=interpret),
+                interpret=interpret), axis=-1)
+        else:
+            got = ace_score_fused(counts, x, w, cfg, interpret=interpret)
+        want = R.ace_score_ref(counts, x, w, cfg)
+        assert_allclose_dtype(got, want, rtol=1e-6)
+
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    def test_admit(self, B, d, K, L, hash_mode, interpret):
+        """Fused admission vs the reference: bucket draw agreement (the
+        in-kernel dense hash may flip a measure-zero sign), then exact
+        masked insert downstream of the kernel's own buckets."""
+        cfg, w, x, counts, _b = self._data(B, d, K, L, hash_mode)
+        pre = R.ace_score_ref(counts, x, w, cfg)
+        thresh = jnp.float32(np.median(np.asarray(pre)))
+        if hash_mode == "srht":
+            # srht admission path: bitwise-identical hash kernel + the
+            # shared jnp score/threshold/insert helpers
+            from repro.core import sketch as sk
+            buckets = srht_hash(x, cfg, interpret=interpret)
+            scores = sk.batch_scores(counts, buckets)
+            admit = scores >= thresh
+            nc = counts.at[
+                jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None, :],
+                                 buckets.shape), buckets].add(
+                jnp.broadcast_to(admit.astype(counts.dtype)[:, None],
+                                 buckets.shape))
+        else:
+            nc, scores, admit, buckets = ace_admit_fused(
+                counts, x, w, thresh, cfg, interpret=interpret)
+        want_nc, want_scores, want_admit, want_buckets = R.ace_admit_ref(
+            counts, x, w, thresh, cfg)
+        agree = float(jnp.mean(
+            (buckets == want_buckets).astype(jnp.float32)))
+        assert agree > 0.999
+        # everything downstream of the kernel's own bucket draw is exact
+        ref_nc, ref_scores, ref_admit, _ = self._admit_from_buckets(
+            counts, buckets, thresh, L)
+        assert_allclose_dtype(scores, ref_scores, rtol=1e-6)
+        assert bool(jnp.all(admit == (scores >= thresh)))
+        assert bool(jnp.all(nc == ref_nc)), "masked insert differs"
+
+    @staticmethod
+    def _admit_from_buckets(counts, buckets, thresh, L):
+        gathered = R.ace_query_ref(counts, buckets)
+        scores = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+        admit = scores >= thresh
+        rows = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+        nc = counts.at[rows, buckets].add(
+            jnp.broadcast_to(admit.astype(counts.dtype)[:, None],
+                             buckets.shape))
+        return nc, scores, admit, buckets
+
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    @pytest.mark.parametrize("E", [1, 4])
+    def test_window_combine(self, B, d, K, L, E, hash_mode, interpret):
+        """ace_window_combine (E-way weighted gather+combine, one
+        launch) ≡ the per-epoch reference, to float reduction order —
+        both lowering modes."""
+        _cfg, _w, _x_, _c, buckets = self._data(B, d, K, L, hash_mode)
+        rng = np.random.default_rng(B + E)
+        counts = jnp.asarray(rng.integers(0, 9, size=(E, L, 1 << K)),
+                             jnp.int32)
+        weights = jnp.asarray(0.7 ** rng.permutation(E), jnp.float32)
+        want = R.ace_window_combine_ref(counts, buckets, weights)
+        for mode in ("flat", "unroll", "auto"):
+            got = ace_window_combine(counts, buckets, weights,
+                                     interpret=interpret, mode=mode)
+            assert_allclose_dtype(got, want, rtol=1e-6,
+                                  err_msg=f"mode={mode}")
+
+
+class TestSrpHashKernel:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     def test_dtypes(self, dtype):
         cfg = SrpConfig(dim=64, num_bits=8, num_tables=10, seed=0)
@@ -57,6 +214,7 @@ class TestSrpHashKernel:
         agree = float(jnp.mean((got == want).astype(jnp.float32)))
         assert agree > 0.99
 
+    @pytest.mark.slow
     @settings(max_examples=15, deadline=None)
     @given(B=st.integers(1, 70), d=st.integers(2, 200),
            K=st.integers(1, 15), L=st.integers(1, 50))
@@ -77,15 +235,6 @@ class TestSrpHashKernel:
 
 
 class TestAceUpdateKernel:
-    @pytest.mark.parametrize("B,d,K,L", SHAPES)
-    def test_matches_ref(self, B, d, K, L):
-        rng = np.random.default_rng(B)
-        counts = jnp.asarray(rng.integers(0, 7, size=(L, 1 << K)), jnp.int32)
-        buckets = jnp.asarray(rng.integers(0, 1 << K, size=(B, L)), jnp.int32)
-        got = ace_update(counts, buckets)
-        want = R.ace_update_ref(counts, buckets)
-        assert bool(jnp.all(got == want))
-
     def test_duplicate_buckets_accumulate(self):
         """Collision-safety: many items in one bucket must all count."""
         L, K, B = 4, 6, 32
@@ -133,37 +282,6 @@ class TestAceUpdateKernel:
 
 
 class TestFusedAdmitKernel:
-    @pytest.mark.parametrize("B,d,K,L", SHAPES)
-    def test_matches_ref(self, B, d, K, L):
-        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=B)
-        w = make_projections(cfg)
-        x = _x(B, d, seed=8)
-        rng = np.random.default_rng(10)
-        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)), jnp.int32)
-        # a mid-range threshold so the mask actually splits the batch
-        pre = R.ace_score_ref(counts, x, w, cfg)
-        thresh = jnp.float32(np.median(np.asarray(pre)))
-        nc, scores, admit, buckets = ace_admit_fused(counts, x, w, thresh,
-                                                     cfg)
-        # The hash can flip a sign where |proj| ~ 0 (summation-order
-        # artifact, same contract as the bf16 srp_hash test); everything
-        # DOWNSTREAM of the kernel's own bucket draw must be exact.
-        agree = float(jnp.mean(
-            (buckets == R.srp_hash_ref(x, w, cfg)).astype(jnp.float32)))
-        assert agree > 0.999
-        want_scores = jnp.sum(R.ace_query_ref(counts, buckets), axis=-1) \
-            * jnp.float32(1.0 / L)
-        np.testing.assert_allclose(np.asarray(scores),
-                                   np.asarray(want_scores), rtol=1e-6)
-        want_admit = scores >= thresh
-        assert bool(jnp.all(admit == want_admit))
-        rows = jnp.broadcast_to(
-            jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
-        want_counts = counts.at[rows, buckets].add(
-            jnp.broadcast_to(admit.astype(counts.dtype)[:, None],
-                             buckets.shape))
-        assert bool(jnp.all(nc == want_counts)), "masked insert differs"
-
     @pytest.mark.parametrize("t,expect", [(-np.inf, "all"), (np.inf, "none")])
     def test_threshold_extremes(self, t, expect):
         cfg = SrpConfig(dim=32, num_bits=6, num_tables=9, seed=2)
@@ -186,7 +304,7 @@ class TestFusedAdmitKernel:
         counts = jnp.zeros((5, 16), jnp.int32)
         nc, scores, admit, _ = ace_admit_fused(counts, x, w,
                                                jnp.float32(-np.inf), cfg)
-        np.testing.assert_allclose(np.asarray(scores), np.zeros(12))
+        assert_allclose_dtype(scores, np.zeros(12, np.float32))
         assert int(nc.sum()) == 12 * 5   # but all 12 inserts landed
 
     def test_pad_rows_never_insert(self):
@@ -203,15 +321,14 @@ class TestFusedAdmitKernel:
 
 
 class TestAceQueryKernel:
-    @pytest.mark.parametrize("B,d,K,L", SHAPES)
     @pytest.mark.parametrize("mode", ["vector", "scalar"])
-    def test_matches_ref(self, B, d, K, L, mode):
-        rng = np.random.default_rng(B + 1)
-        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)), jnp.int32)
-        buckets = jnp.asarray(rng.integers(0, 1 << K, size=(B, L)), jnp.int32)
+    def test_lowering_modes_agree(self, mode):
+        rng = np.random.default_rng(6)
+        counts = jnp.asarray(rng.integers(0, 9, size=(10, 256)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 256, size=(40, 10)), jnp.int32)
         got = ace_query(counts, buckets, mode=mode)
         want = R.ace_query_ref(counts, buckets)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+        assert bool(jnp.all(got == want))
 
     def test_batch_tiling_invariance(self):
         rng = np.random.default_rng(5)
@@ -223,18 +340,6 @@ class TestAceQueryKernel:
 
 
 class TestFusedScoreKernel:
-    @pytest.mark.parametrize("B,d,K,L", SHAPES)
-    def test_matches_ref(self, B, d, K, L):
-        cfg = SrpConfig(dim=d, num_bits=K, num_tables=L, seed=B)
-        w = make_projections(cfg)
-        x = _x(B, d, seed=7)
-        rng = np.random.default_rng(9)
-        counts = jnp.asarray(rng.integers(0, 9, size=(L, 1 << K)), jnp.int32)
-        got = ace_score_fused(counts, x, w, cfg)
-        want = R.ace_score_ref(counts, x, w, cfg)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=1e-6)
-
     def test_fused_equals_two_kernel_path(self):
         cfg = SrpConfig(dim=100, num_bits=10, num_tables=25, seed=4)
         w = make_projections(cfg)
@@ -243,8 +348,33 @@ class TestFusedScoreKernel:
         counts = jnp.asarray(rng.integers(0, 9, size=(25, 1024)), jnp.int32)
         fused = ace_score_fused(counts, x, w, cfg)
         two = jnp.mean(ace_query(counts, srp_hash(x, w, cfg)), axis=-1)
-        np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
-                                   rtol=1e-6)
+        assert_allclose_dtype(fused, two, rtol=1e-6)
+
+
+class TestWindowCombineKernel:
+    def test_batch_tiling_invariance(self):
+        rng = np.random.default_rng(12)
+        counts = jnp.asarray(rng.integers(0, 9, size=(3, 8, 128)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 128, size=(70, 8)), jnp.int32)
+        weights = jnp.asarray([1.0, 0.5, 0.25], jnp.float32)
+        a = ace_window_combine(counts, buckets, weights, bm=16)
+        b = ace_window_combine(counts, buckets, weights, bm=1024)
+        assert bool(jnp.all(a == b))
+
+    def test_auto_mode_break_even(self):
+        assert window_mode(4, 50) == "flat"
+        assert window_mode(FLAT_MAX_COLS // 50 + 1, 50) == "unroll"
+
+    def test_single_epoch_unit_weight_is_plain_query_mean(self):
+        """E=1, w=[1.0]: the windowed combine is the flat score."""
+        rng = np.random.default_rng(13)
+        counts = jnp.asarray(rng.integers(0, 9, size=(1, 6, 64)), jnp.int32)
+        buckets = jnp.asarray(rng.integers(0, 64, size=(20, 6)), jnp.int32)
+        got = ace_window_combine(counts, buckets,
+                                 jnp.ones((1,), jnp.float32))
+        want = jnp.sum(R.ace_query_ref(counts[0], buckets), axis=-1) \
+            * jnp.float32(1.0 / 6)
+        assert_allclose_dtype(got, want, rtol=1e-6)
 
 
 class TestOpsDispatch:
@@ -259,14 +389,14 @@ class TestOpsDispatch:
         st_j = sk.insert(sk.init(cfg), w, x, cfg)
         assert bool(jnp.all(st_k.counts == st_j.counts))
         q = _x(16, 20, seed=1)
-        np.testing.assert_allclose(
-            np.asarray(ops.ace_score(st_k, q, w, cfg)),
-            np.asarray(sk.score(st_j, w, q, cfg)), rtol=1e-6)
+        assert_allclose_dtype(ops.ace_score(st_k, q, w, cfg),
+                              sk.score(st_j, w, q, cfg), rtol=1e-6)
 
     def test_ops_admit_matches_sketch_masked_path(self):
         """Kernel-path admission equals hash→lookup→threshold→masked
         insert on the pure-jnp sketch path, Welford stream included."""
         from repro.core import sketch as sk
+        from repro.core.srp import hash_buckets
         cfg = AceConfig(dim=14, num_bits=7, num_tables=10, seed=9,
                         welford_min_n=8.0)
         w = sk.make_params(cfg)
@@ -282,7 +412,23 @@ class TestOpsDispatch:
             assert bool(jnp.all(mask_k == mask_j))
         assert bool(jnp.all(st_k.counts == st_j.counts))
         assert float(st_k.n) == float(st_j.n)
-        np.testing.assert_allclose(float(st_k.welford_mean),
-                                   float(st_j.welford_mean), rtol=1e-6)
-        np.testing.assert_allclose(float(st_k.welford_m2),
-                                   float(st_j.welford_m2), rtol=1e-5)
+        assert_allclose_dtype(st_k.welford_mean, st_j.welford_mean,
+                              rtol=1e-6)
+        assert_allclose_dtype(st_k.welford_m2, st_j.welford_m2,
+                              rtol=1e-5)
+
+    def test_ops_window_score_matches_ring_reference(self):
+        """ops.ace_window_score (kernel path, cursor-derived weights)
+        ≡ repro.window.score_windowed at matching γ."""
+        from repro.window import ring
+        from repro.core.sketch import AceConfig
+        cfg = AceConfig(dim=10, num_bits=6, num_tables=8, seed=7)
+        rng = np.random.default_rng(14)
+        st = ring.init(cfg, 3)
+        for _ in range(5):
+            b = jnp.asarray(rng.integers(0, 64, size=(9, 8)), jnp.int32)
+            st = ring.insert_current(st, b, jnp.ones((9,), bool), cfg)
+            st = ring.maybe_rotate(st, 2, 0.6)
+        q = jnp.asarray(rng.integers(0, 64, size=(12, 8)), jnp.int32)
+        assert_allclose_dtype(ops.ace_window_score(st, q, 0.6),
+                              ring.score_windowed(st, q, 0.6), rtol=1e-6)

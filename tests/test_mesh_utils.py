@@ -86,6 +86,7 @@ class TestHloParsing:
         assert out["collective-permute"]["bytes"] == 64
         assert out["total_bytes"] > 0
 
+    @pytest.mark.slow
     def test_real_compiled_module(self):
         """End-to-end: an 8-device psum module reports all-reduce bytes."""
         import subprocess, sys, os, textwrap

@@ -1,0 +1,260 @@
+"""Property-based invariant suite for the WHOLE sketch algebra.
+
+The repo's layers lean on a growing pile of algebraic claims — inserts
+are order-invariant histograms, deletes are exact inverses (paper Eq.
+12), merge is the CRDT of a commutative monoid, the masked insert is the
+gather-insert in disguise, and the epoch ring is "just" E sketches under
+that same monoid.  Each claim used to be spot-checked with a few
+hand-enumerated cases; this suite states them as PROPERTIES over random
+shapes/batches/masks, so any future refactor of the count algebra has to
+survive a hypothesis sweep rather than three lucky examples.
+
+Strategies stay within ``st.integers`` so the suite still collects and
+runs under the deterministic hypothesis fallback in ``conftest.py``
+(hermetic containers without the real package); sizes are drawn as
+integers and the arrays derived from a seeded ``np.random.default_rng``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import assert_allclose_dtype
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig
+from repro.window import ring
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(K, L, seed=0, min_n=0.0):
+    return AceConfig(dim=6, num_bits=K, num_tables=L, seed=seed,
+                     welford_min_n=min_n)
+
+
+def _buckets(rng, B, cfg):
+    return jnp.asarray(
+        rng.integers(0, cfg.num_buckets, size=(B, cfg.num_tables)),
+        jnp.int32)
+
+
+def _seeded_state(cfg, rng, n_prior=20):
+    b = _buckets(rng, n_prior, cfg)
+    return sk.insert_buckets(sk.init(cfg), b, cfg)
+
+
+class TestInsertDelete:
+    @settings(max_examples=25, deadline=None)
+    @given(B=st.integers(1, 40), K=st.integers(2, 8), L=st.integers(1, 10),
+           seed=st.integers(0, 10_000))
+    def test_insert_then_delete_is_counts_identity(self, B, K, L, seed):
+        """delete_buckets ∘ insert_buckets restores counts, n and the
+        exact μ bitwise (Eq. 12: deletes are exact inverses; only the
+        one-pass Welford stream is irrecoverable by design)."""
+        cfg = _cfg(K, L)
+        rng = np.random.default_rng(seed)
+        state = _seeded_state(cfg, rng)
+        b = _buckets(rng, B, cfg)
+        round_trip = sk.delete_buckets(sk.insert_buckets(state, b, cfg),
+                                       b, cfg)
+        assert bool(jnp.all(round_trip.counts == state.counts))
+        assert float(round_trip.n) == float(state.n)
+        assert float(sk.mean_mu(round_trip)) == float(sk.mean_mu(state))
+
+    @settings(max_examples=10, deadline=None)
+    @given(B=st.integers(1, 24), K=st.integers(2, 6), seed=st.integers(0, 99))
+    def test_delete_commutes_with_insert(self, B, K, seed):
+        """Deleting batch A after inserting batch X equals inserting X
+        after deleting A (counts are an abelian group under ±1)."""
+        cfg = _cfg(K, 5)
+        rng = np.random.default_rng(seed)
+        state = _seeded_state(cfg, rng, n_prior=30)
+        a = _buckets(rng, B, cfg)
+        x = _buckets(rng, B + 1, cfg)
+        one = sk.insert_buckets(sk.delete_buckets(state, a, cfg), x, cfg)
+        two = sk.delete_buckets(sk.insert_buckets(state, x, cfg), a, cfg)
+        assert bool(jnp.all(one.counts == two.counts))
+        assert float(one.n) == float(two.n)
+
+
+class TestMerge:
+    @settings(max_examples=20, deadline=None)
+    @given(Ba=st.integers(1, 30), Bb=st.integers(1, 30),
+           K=st.integers(2, 7), L=st.integers(1, 8),
+           seed=st.integers(0, 10_000))
+    def test_merge_commutative(self, Ba, Bb, K, L, seed):
+        """merge(a, b) ≡ merge(b, a): counts/n exactly, Welford scalars
+        to float tolerance (Chan's rule is symmetric up to rounding)."""
+        cfg = _cfg(K, L)
+        rng = np.random.default_rng(seed)
+        a = sk.insert_buckets(sk.init(cfg), _buckets(rng, Ba, cfg), cfg)
+        b = sk.insert_buckets(sk.init(cfg), _buckets(rng, Bb, cfg), cfg)
+        ab, ba = sk.merge(a, b), sk.merge(b, a)
+        assert bool(jnp.all(ab.counts == ba.counts))
+        assert float(ab.n) == float(ba.n)
+        assert_allclose_dtype(ab.welford_mean, ba.welford_mean,
+                              atol=1e-7)
+        assert_allclose_dtype(ab.welford_m2, ba.welford_m2, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(Ba=st.integers(1, 20), Bb=st.integers(1, 20),
+           Bc=st.integers(1, 20), K=st.integers(2, 6),
+           seed=st.integers(0, 10_000))
+    def test_merge_associative(self, Ba, Bb, Bc, K, seed):
+        cfg = _cfg(K, 6)
+        rng = np.random.default_rng(seed)
+        parts = [sk.insert_buckets(sk.init(cfg), _buckets(rng, n, cfg), cfg)
+                 for n in (Ba, Bb, Bc)]
+        left = sk.merge(sk.merge(parts[0], parts[1]), parts[2])
+        right = sk.merge(parts[0], sk.merge(parts[1], parts[2]))
+        assert bool(jnp.all(left.counts == right.counts))
+        assert float(left.n) == float(right.n)
+        assert_allclose_dtype(left.welford_mean, right.welford_mean,
+                              atol=1e-7)
+        assert_allclose_dtype(left.welford_m2, right.welford_m2,
+                              atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(B=st.integers(2, 40), split=st.integers(1, 39),
+           K=st.integers(2, 7), seed=st.integers(0, 10_000))
+    def test_merge_of_shards_equals_sequential_insertion(self, B, split,
+                                                         K, seed):
+        """Sharding a batch, sketching each shard fresh, and merging
+        equals inserting the whole batch into one sketch — counts/n/μ
+        exact (the repro.dist story in one property)."""
+        cfg = _cfg(K, 7)
+        split = min(split, B - 1)
+        rng = np.random.default_rng(seed)
+        b = _buckets(rng, B, cfg)
+        whole = sk.insert_buckets(sk.init(cfg), b, cfg)
+        merged = sk.merge(
+            sk.insert_buckets(sk.init(cfg), b[:split], cfg),
+            sk.insert_buckets(sk.init(cfg), b[split:], cfg))
+        assert bool(jnp.all(whole.counts == merged.counts))
+        assert float(whole.n) == float(merged.n)
+        assert float(sk.mean_mu(whole)) == float(sk.mean_mu(merged))
+
+
+class TestMaskedInsert:
+    @settings(max_examples=20, deadline=None)
+    @given(B=st.integers(1, 40), K=st.integers(2, 7), L=st.integers(1, 8),
+           seed=st.integers(0, 10_000))
+    def test_all_ones_mask_is_plain_insert(self, B, K, L, seed):
+        """insert_buckets_masked with an all-ones mask ≡ insert_buckets:
+        counts/n/μ exact; the Welford stream to float summation order
+        (the masked path reduces Σ(rates·mask)/b where the dense path
+        reduces jnp.mean — same value, different reduction tree; this is
+        the documented contract of insert_buckets_masked)."""
+        cfg = _cfg(K, L, min_n=float(seed % 3) * 4.0)
+        rng = np.random.default_rng(seed)
+        state = _seeded_state(cfg, rng)
+        b = _buckets(rng, B, cfg)
+        masked = sk.insert_buckets_masked(state, b,
+                                          jnp.ones((B,), bool), cfg)
+        dense = sk.insert_buckets(state, b, cfg)
+        assert bool(jnp.all(masked.counts == dense.counts))
+        assert float(masked.n) == float(dense.n)
+        assert float(sk.mean_mu(masked)) == float(sk.mean_mu(dense))
+        assert_allclose_dtype(masked.welford_mean, dense.welford_mean,
+                              atol=1e-7)
+        assert_allclose_dtype(masked.welford_m2, dense.welford_m2,
+                              atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(B=st.integers(1, 30), K=st.integers(2, 6),
+           density=st.integers(0, 10), seed=st.integers(0, 10_000))
+    def test_mask_splits_into_two_masked_inserts(self, B, K, density,
+                                                 seed):
+        """Counts of a masked insert equal the sum of the two
+        complementary masked inserts' count deltas (scatter weights are
+        additive)."""
+        cfg = _cfg(K, 5)
+        rng = np.random.default_rng(seed)
+        state = _seeded_state(cfg, rng)
+        b = _buckets(rng, B, cfg)
+        m = jnp.asarray(rng.uniform(size=B) < density / 10.0)
+        all_in = sk.insert_buckets_masked(state, b,
+                                          jnp.ones((B,), bool), cfg)
+        part1 = sk.insert_buckets_masked(state, b, m, cfg)
+        part2 = sk.insert_buckets_masked(state, b, ~m, cfg)
+        delta = (part1.counts - state.counts) + (part2.counts
+                                                 - state.counts)
+        assert bool(jnp.all(delta == all_in.counts - state.counts))
+
+
+class TestWindowRing:
+    @settings(max_examples=10, deadline=None)
+    @given(E=st.integers(1, 5), B=st.integers(1, 20), K=st.integers(2, 6),
+           seed=st.integers(0, 10_000))
+    def test_rotate_pow_E_is_zeroed_ring(self, E, B, K, seed):
+        """rotate^E ≡ the all-zero init (every epoch expired once), with
+        the cursor back where it started — counts, tail, ssq, n and the
+        per-epoch Welford moments all cleared."""
+        cfg = _cfg(K, 4)
+        rng = np.random.default_rng(seed)
+        st_ = ring.init(cfg, E)
+        for _ in range(3):
+            st_ = ring.insert_current(st_, _buckets(rng, B, cfg),
+                                      jnp.ones((B,), bool), cfg)
+            st_ = ring.maybe_rotate(st_, 2, 1.0)
+        cursor0 = int(st_.cursor)
+        for _ in range(E):
+            st_ = ring.rotate(st_)
+        assert int(st_.cursor) == cursor0
+        assert int(jnp.sum(jnp.abs(st_.counts))) == 0
+        assert float(jnp.sum(jnp.abs(st_.tail))) == 0.0
+        assert float(st_.ssq) == 0.0
+        assert float(jnp.sum(st_.n)) == 0.0
+        assert float(jnp.sum(jnp.abs(st_.welford_mean))) == 0.0
+        assert float(jnp.sum(jnp.abs(st_.welford_m2))) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(E=st.integers(2, 5), B=st.integers(1, 16), K=st.integers(2, 6),
+           steps=st.integers(1, 12), seed=st.integers(0, 10_000))
+    def test_ring_total_equals_flat_sketch_of_window(self, E, B, K,
+                                                     steps, seed):
+        """Hard window, no expiry yet (fewer steps than the window
+        spans): the ring's combined counts equal ONE flat sketch fed the
+        same batches — windowing changes nothing until something
+        expires."""
+        cfg = _cfg(K, 4)
+        rng = np.random.default_rng(seed)
+        R = 3
+        # stay strictly inside the window span: the E·R-th insert's
+        # rotation is the FIRST expiry
+        steps = min(steps, E * R - 1)
+        st_ = ring.init(cfg, E)
+        flat = sk.init(cfg)
+        for _ in range(steps):
+            b = _buckets(rng, B, cfg)
+            m = jnp.asarray(rng.uniform(size=B) < 0.7)
+            st_ = ring.insert_current(st_, b, m, cfg)
+            st_ = ring.maybe_rotate(st_, R, 1.0)
+            flat = sk.insert_buckets_masked(flat, b, m, cfg)
+        assert bool(jnp.all(
+            ring.decayed_counts(st_, 1.0) ==
+            flat.counts.astype(jnp.float32)))
+        assert float(ring.combined_n(st_, 1.0)) == float(flat.n)
+        c = flat.counts.astype(jnp.float32)
+        assert float(st_.ssq) == float(jnp.sum(c * c))
+
+    @settings(max_examples=8, deadline=None)
+    @given(E=st.integers(1, 4), B=st.integers(1, 12), K=st.integers(2, 5),
+           seed=st.integers(0, 10_000))
+    def test_insert_order_invariance_within_epoch(self, E, B, K, seed):
+        """Within one epoch, inserting batch A then B equals B then A on
+        counts/tail/ssq (the monoid property lifted to the ring)."""
+        cfg = _cfg(K, 4)
+        rng = np.random.default_rng(seed)
+        st0 = ring.init(cfg, E)
+        a = _buckets(rng, B, cfg)
+        b = _buckets(rng, B + 1, cfg)
+        ones_a = jnp.ones((B,), bool)
+        ones_b = jnp.ones((B + 1,), bool)
+        ab = ring.insert_current(
+            ring.insert_current(st0, a, ones_a, cfg), b, ones_b, cfg)
+        ba = ring.insert_current(
+            ring.insert_current(st0, b, ones_b, cfg), a, ones_a, cfg)
+        assert bool(jnp.all(ab.counts == ba.counts))
+        assert float(ab.ssq) == float(ba.ssq)
+        assert float(jnp.sum(ab.n)) == float(jnp.sum(ba.n))

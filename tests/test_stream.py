@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_allclose_dtype
 from repro.core import sketch as sk
 from repro.core import srp
 from repro.core.srp import SrpConfig, hash_buckets, resolve_hash_mode
@@ -67,15 +68,13 @@ class TestStreamRunner:
 
         assert bool(jnp.all(s_run.counts == s_seq.counts))
         assert float(s_run.n) == float(s_seq.n)
-        np.testing.assert_allclose(float(s_run.welford_mean),
-                                   float(s_seq.welford_mean), rtol=1e-6)
-        np.testing.assert_allclose(float(s_run.welford_m2),
-                                   float(s_seq.welford_m2), rtol=1e-5)
+        assert_allclose_dtype(s_run.welford_mean, s_seq.welford_mean)
+        assert_allclose_dtype(s_run.welford_m2, s_seq.welford_m2)
         for t in range(T):
             want = masks_seq[t][:, 0] > 0
             assert bool(jnp.all(keeps[t] == want)), f"mask mismatch at {t}"
-        np.testing.assert_allclose(float(summary.kept_frac),
-                                   np.mean(fracs), rtol=1e-6)
+        assert_allclose_dtype(summary.kept_frac,
+                              np.float32(np.mean(fracs)))
         # the rejected batches show up in the per-step anomaly counts
         assert int(summary.anom_counts[-1]) == 8
         assert int(summary.anom_counts[0]) == 0
@@ -113,6 +112,7 @@ class TestStreamRunner:
         assert (np.diff(s.topk_margin) >= 0).all()   # most anomalous first
         assert runner.trace_count == 1
 
+    @pytest.mark.slow
     def test_sharded_layouts_match_single_device(self):
         """Same scan program under repro.dist placements (jit/SPMD mode):
         replicated and table-sharded chunk ingest must match the
@@ -308,8 +308,7 @@ class TestHashModeDispatch:
         est_k = AceEstimator(cfg, use_kernels=True).update(x)
         est_j = AceEstimator(cfg).update(x)
         assert bool(jnp.all(est_k.state.counts == est_j.state.counts))
-        np.testing.assert_allclose(np.asarray(est_k.score(q)),
-                                   np.asarray(est_j.score(q)), rtol=1e-6)
+        assert_allclose_dtype(est_k.score(q), est_j.score(q))
 
     def test_invalid_mode_raises(self):
         with pytest.raises(ValueError, match="hash_mode"):

@@ -287,6 +287,46 @@ class TestEndToEnd:
             np.testing.assert_allclose(np.asarray(x), np.asarray(y),
                                        rtol=1e-6, atol=1e-6)
 
+    def test_windowed_filter_chunked_restart_is_exact(self, tmp_path):
+        """Sliding-window filter + chunked prefilter: checkpoints carry
+        the WHOLE epoch ring (counts, tail, ssq, ring pointer, tick,
+        per-epoch moments) and stay chunk-atomic, so crash + restore
+        reproduces the uninterrupted run exactly — rotations land at the
+        same stream positions either side of the restart."""
+        a = Arch("qwen2_1_5b", reduced=True)
+        tcfg = TrainConfig(total_steps=20, warmup_steps=2, peak_lr=1e-3,
+                           use_data_filter=True, filter_chunk=2,
+                           filter_window_epochs=2, filter_rotate_every=2,
+                           use_grad_monitor=False,
+                           ckpt_dir=str(tmp_path), ckpt_interval=2,
+                           seed=9)
+        scfg = StreamConfig(vocab_size=a.cfg.vocab_size, seq_len=8,
+                            global_batch=4, seed=9)
+        state_a, _ = train(a, tcfg, DataStream(scfg), num_steps=8,
+                           log_every=0)
+        tcfg_b = TrainConfig(**{**tcfg.__dict__,
+                                "ckpt_dir": str(tmp_path) + "_b"})
+        state_b, _ = train(a, tcfg_b, DataStream(scfg), num_steps=5,
+                           log_every=0)   # saves land at steps 2 and 4
+        state_c, _ = train(a, tcfg_b, DataStream(scfg), num_steps=4,
+                           log_every=0)   # auto-restores from step 4
+        assert int(state_c.step) == 8
+        ring_a, ring_c = state_a.filter_state, state_c.filter_state
+        assert bool(jnp.all(ring_a.counts == ring_c.counts))
+        assert bool(jnp.all(ring_a.tail == ring_c.tail))
+        assert float(ring_a.ssq) == float(ring_c.ssq)
+        assert int(ring_a.cursor) == int(ring_c.cursor)
+        assert int(ring_a.tick) == int(ring_c.tick)
+        np.testing.assert_array_equal(np.asarray(ring_a.n),
+                                      np.asarray(ring_c.n))
+        np.testing.assert_allclose(np.asarray(ring_a.welford_m2),
+                                   np.asarray(ring_c.welford_m2),
+                                   rtol=1e-6)
+        for x, y in zip(jax.tree.leaves(state_a.params),
+                        jax.tree.leaves(state_c.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6, atol=1e-6)
+
     def test_monitor_skips_poisoned_step(self):
         """Poisoned batches spike the loss/grads; the monitor must skip at
         least some of them once armed."""

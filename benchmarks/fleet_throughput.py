@@ -1,0 +1,231 @@
+"""Fleet serving throughput: a Python loop of T single-tenant filters vs
+ONE fleet program consuming the same mixed-tenant stream.
+
+The scenario the tenant axis exists for: T independent detectors (one per
+user/stream) fed by a mixed arrival stream.  Pre-fleet, the only way to
+serve it was a host loop — split each arrival batch by tenant, dispatch
+each tenant's own jitted single-tenant step, sync its verdict — i.e.
+T device programs and T host round-trips per step, with the sketch math
+(O(K·L) per item) a rounding error under the dispatch overhead.  The
+fleet runs the whole mixed batch through one program (hash once, one
+routed gather, per-tenant thresholds, one scatter), and the scan runner
+amortises further: T_chunk steps per dispatch, ONE summary pull per
+chunk.
+
+Two measurements, one JSON (``BENCH_fleet.json``):
+
+1. **Per-step fleet program** vs the per-tenant Python loop at the same
+   arrival shape — the pure batching win.
+2. **Chunked fleet runner** (StreamRunner + FleetDataFilter) — batching
+   + scan amortisation; transfers and executables counted
+   (``trace_count``, D2H per chunk).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fleet_throughput [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import AceDataFilter
+from repro.fleet import FleetDataFilter
+from repro.stream import StreamRunner
+
+from benchmarks.guardrail_latency import (_compile_count,
+                                          _install_compile_counter)
+
+
+def _bench(T: int, batch: int, d: int, chunk_T: int, n_chunks: int,
+           num_bits: int, num_tables: int):
+    """One rep: legacy per-tenant loop, fleet per-step, fleet chunked."""
+    assert batch % T == 0, (batch, T)
+    per_tenant = batch // T
+    n_steps = chunk_T * n_chunks
+    kw = dict(num_bits=num_bits, num_tables=num_tables,
+              warmup_items=float(per_tenant), alpha=3.0)
+    rng = np.random.default_rng(0)
+
+    flt = AceDataFilter(d_model=d, **kw)
+    feats_np = []
+    tids_np = []
+    for _ in range(n_steps):
+        feats_np.append(np.asarray(flt.features(jnp.asarray(
+            rng.normal(size=(batch, 2, d)) * 0.3 + 1.0, jnp.float32))))
+        tids_np.append(np.asarray(
+            rng.permutation(np.repeat(np.arange(T), per_tenant))
+            .astype(np.int32)))
+
+    # ---- legacy: T single-tenant filters, host-routed.  Per step: split
+    # the batch by tenant, dispatch each tenant's jitted step on its own
+    # fixed-shape sub-batch, sync each verdict — T programs + T pulls.
+    state0, w = flt.init()
+    states = [state0] * T
+
+    @jax.jit
+    def one_step(state, w, feat):
+        return flt.step(state, w, feat)
+
+    # warm (compile once — every tenant shares the executable)
+    s_, k_, _ = one_step(states[0], w, jnp.asarray(feats_np[0][:per_tenant]))
+    np.asarray(k_)
+    start_c = _compile_count[0]
+    d2h = 0
+    per_step = []
+    for feat, tids in zip(feats_np, tids_np):
+        t0 = time.perf_counter()
+        order = np.argsort(tids, kind="stable")      # host-side routing
+        fsorted = feat[order]
+        for t in range(T):
+            ft = jnp.asarray(fsorted[t * per_tenant:(t + 1) * per_tenant])
+            states[t], keep, _ = one_step(states[t], w, ft)
+            np.asarray(keep)                         # the verdict sync
+            d2h += 1
+        per_step.append(time.perf_counter() - t0)
+    legacy_med = float(np.median(per_step))
+    legacy = {
+        "items_per_s": batch / legacy_med,
+        "median_step_ms": legacy_med * 1e3,
+        "dispatches_per_step": T,
+        "d2h_per_step": d2h / n_steps,
+        "compiles_timed_region": _compile_count[0] - start_c,
+    }
+
+    # ---- fleet, per-step program: one dispatch + one mask pull per step
+    ff = FleetDataFilter(d_model=d, num_tenants=T, **kw)
+    fstate, fw_ = ff.init()
+    fstep = jax.jit(ff.step)
+    s_, k_, _ = fstep(fstate, fw_, jnp.asarray(feats_np[0]),
+                      jnp.asarray(tids_np[0]))
+    np.asarray(k_)
+    start_c = _compile_count[0]
+    per_step = []
+    fstate, _ = ff.init()
+    for feat, tids in zip(feats_np, tids_np):
+        t0 = time.perf_counter()
+        fstate, keep, _ = fstep(fstate, fw_, jnp.asarray(feat),
+                                jnp.asarray(tids))
+        np.asarray(keep)
+        per_step.append(time.perf_counter() - t0)
+    step_med = float(np.median(per_step))
+    fleet_step = {
+        "items_per_s": batch / step_med,
+        "median_step_ms": step_med * 1e3,
+        "dispatches_per_step": 1,
+        "compiles_timed_region": _compile_count[0] - start_c,
+    }
+
+    # ---- fleet, chunked runner: 1 H2D + 1 D2H per chunk_T steps
+    runner = StreamRunner(ff, chunk_T=chunk_T)
+    rstate, rw = runner.init()
+    chunks = [(np.stack(feats_np[c * chunk_T:(c + 1) * chunk_T]),
+               np.stack(tids_np[c * chunk_T:(c + 1) * chunk_T]))
+              for c in range(n_chunks)]
+    out = runner.consume(rstate, rw, jnp.asarray(chunks[0][0]),
+                         jnp.asarray(chunks[0][1]))
+    rstate = out[0]
+    jax.device_get(out[1])                            # compile + warm
+    start_c = _compile_count[0]
+    d2h = h2d = 0
+    per_chunk = []
+    rstate, rw = runner.init()
+    for cf, ct in chunks:
+        t0 = time.perf_counter()
+        feats = jnp.asarray(cf)
+        tids = jnp.asarray(ct)
+        h2d += 1
+        rstate, summary = runner.consume(rstate, rw, feats, tids)
+        jax.device_get(summary)
+        d2h += 1                                      # the ONLY pull
+        per_chunk.append(time.perf_counter() - t0)
+    chunk_med = float(np.median(per_chunk))
+    fleet_scan = {
+        "items_per_s": chunk_T * batch / chunk_med,
+        "median_chunk_ms": chunk_med * 1e3,
+        "d2h_per_chunk": d2h / n_chunks,
+        "h2d_per_chunk": h2d / n_chunks,
+        "trace_count": runner.trace_count,
+        "compiles_timed_region": _compile_count[0] - start_c,
+    }
+
+    return {
+        "num_tenants": T, "batch": batch, "d_model": d,
+        "chunk_T": chunk_T, "num_bits": num_bits,
+        "num_tables": num_tables, "n_steps": n_steps,
+        "legacy_loop": legacy, "fleet_step": fleet_step,
+        "fleet_scan": fleet_scan,
+        "speedup_step": fleet_step["items_per_s"]
+        / max(legacy["items_per_s"], 1e-9),
+        "speedup_scan": fleet_scan["items_per_s"]
+        / max(legacy["items_per_s"], 1e-9),
+    }
+
+
+def run(csv_rows: list[str] | None = None, *,
+        json_path: str = "BENCH_fleet.json", smoke: bool = False) -> dict:
+    _install_compile_counter()
+    if smoke and json_path == "BENCH_fleet.json":
+        json_path = "BENCH_fleet.smoke.json"
+    if smoke:
+        reps = 1
+        kw = dict(T=8, batch=16, d=16, chunk_T=8, n_chunks=2,
+                  num_bits=8, num_tables=8)
+    else:
+        reps = 3
+        kw = dict(T=64, batch=64, d=32, chunk_T=16, n_chunks=3,
+                  num_bits=10, num_tables=16)
+
+    # median-speedup rep (container timing noise; see stream bench)
+    runs = [_bench(**kw) for _ in range(reps)]
+    runs.sort(key=lambda r: r["speedup_scan"])
+    res = runs[len(runs) // 2]
+    res["rep_speedups_scan"] = [round(r["speedup_scan"], 2) for r in runs]
+
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2)
+
+    lg, fs, fc = res["legacy_loop"], res["fleet_step"], res["fleet_scan"]
+    print(f"fleet  T={res['num_tenants']} B={res['batch']} "
+          f"d={res['d_model']} K={res['num_bits']} L={res['num_tables']} "
+          f"chunk={res['chunk_T']}")
+    print(f"  legacy loop : {lg['items_per_s']:10.0f} items/s   "
+          f"{lg['dispatches_per_step']} dispatches + "
+          f"{lg['d2h_per_step']:.0f} D2H per step")
+    print(f"  fleet step  : {fs['items_per_s']:10.0f} items/s   "
+          f"1 dispatch per step   ({res['speedup_step']:.1f}x)")
+    print(f"  fleet scan  : {fc['items_per_s']:10.0f} items/s   "
+          f"{fc['d2h_per_chunk']:.0f} D2H per {res['chunk_T']}-step chunk  "
+          f"traces {fc['trace_count']}   ({res['speedup_scan']:.1f}x)")
+
+    if csv_rows is not None:
+        csv_rows.append(
+            f"fleet_legacy_loop,{1e6 / lg['items_per_s']:.3f},"
+            f"{lg['compiles_timed_region']}")
+        csv_rows.append(
+            f"fleet_scan,{1e6 / fc['items_per_s']:.3f},"
+            f"{fc['compiles_timed_region']}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI")
+    ap.add_argument("--json", default="BENCH_fleet.json")
+    args = ap.parse_args()
+    res = run(json_path=args.json, smoke=args.smoke)
+    assert res["fleet_scan"]["trace_count"] == 1, "fleet runner retraced!"
+    assert res["fleet_scan"]["d2h_per_chunk"] <= 1.0, \
+        "fleet runner pulled more than once per chunk"
+    if not args.smoke:
+        assert res["speedup_scan"] >= 10.0, \
+            f"fleet scan speedup {res['speedup_scan']:.2f}x < 10x"
+
+
+if __name__ == "__main__":
+    main()

@@ -25,10 +25,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (dist_throughput, fig1_discriminative,
-                            fig3_5_variance, guardrail_latency,
-                            memory_table, stream_throughput,
-                            table3_5_comparison, throughput,
-                            window_throughput)
+                            fig3_5_variance, fleet_throughput,
+                            guardrail_latency, memory_table,
+                            stream_throughput, table3_5_comparison,
+                            throughput, window_throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -55,6 +55,8 @@ def main() -> None:
         "stream": lambda: stream_throughput.run(
             csv_rows, smoke=args.quick),
         "window": lambda: window_throughput.run(
+            csv_rows, smoke=args.quick),
+        "fleet": lambda: fleet_throughput.run(
             csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:

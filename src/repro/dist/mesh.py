@@ -110,6 +110,43 @@ def window_pspecs(layout: str = "replicated", table_axis: str = "model"):
     return (counts, P(), P(), P(), tail, P(), P(), P())
 
 
+def fleet_pspecs(layout: str = "replicated", table_axis: str = "model",
+                 tenant_axis: str = "data"):
+    """PartitionSpec 4-tuple for a multi-tenant ``FleetState``.
+
+    Raw-tuple convention mirrors ``sketch_pspecs``: ``(counts, n,
+    welford_mean, welford_m2)`` with counts (T, L, 2^K).  Tenants are
+    FULLY independent (no cross-tenant reduction anywhere — the fleet
+    analogue of the L tables being independent), so the tenant axis is
+    the cheapest shard axis the sketch has ever had: inserts, scores and
+    thresholds are all collective-free under tenant sharding, and it
+    COMPOSES with the L-axis table sharding (a (tenant, table) 2-D
+    split) because the two axes cut orthogonal dims:
+
+    * ``replicated``           — counts P(), stats P().
+    * ``table_sharded``        — counts P(None, table_axis, None): every
+                                 device holds all tenants' slice of L.
+    * ``tenant_sharded``       — counts P(tenant_axis, None, None) and
+                                 the (T,) stat vectors shard with it.
+    * ``tenant_table_sharded`` — counts P(tenant_axis, table_axis, None)
+                                 + tenant-sharded stats: the composed
+                                 2-D layout.
+    """
+    if layout == "replicated":
+        counts, stats = P(), P()
+    elif layout == "table_sharded":
+        counts, stats = P(None, table_axis, None), P()
+    elif layout == "tenant_sharded":
+        counts, stats = P(tenant_axis, None, None), P(tenant_axis)
+    elif layout == "tenant_table_sharded":
+        counts, stats = P(tenant_axis, table_axis, None), P(tenant_axis)
+    else:
+        raise ValueError(
+            f"unknown fleet layout {layout!r} (want 'replicated', "
+            "'table_sharded', 'tenant_sharded' or 'tenant_table_sharded')")
+    return (counts, stats, stats, stats)
+
+
 def sketch_layout_shardings(mesh, layout: str = "replicated",
                             table_axis: str = "model"):
     """NamedSharding 4-tuple for ``sketch_pspecs`` on a concrete mesh.

@@ -465,6 +465,40 @@ def window_shardings_for_layout(cfg: AceConfig, mesh, num_epochs: int,
                               for ps in window_pspecs(layout, table_axis)))
 
 
+def fleet_shardings_for_layout(cfg: AceConfig, mesh, num_tenants: int,
+                               layout: str, table_axis: str = "model",
+                               tenant_axis: str = "data"):
+    """NamedSharding pytree for a multi-tenant ``FleetState`` (validated).
+
+    The fleet analogue of ``shardings_for_layout``: resolves the four
+    fleet layout names of ``repro.dist.mesh.fleet_pspecs`` to placements
+    with the same up-front divisibility checks (T over ``tenant_axis``,
+    L over ``table_axis`` — no silent replication fallback).  Because
+    tenants never couple, the tenant axis shards EVERY leaf (counts and
+    the (T,) stat vectors alike) and all fleet ops stay collective-free
+    on it under jit/SPMD — GSPMD only inserts collectives for the L-axis
+    composition, exactly as in the single-tenant table-sharded layout.
+    """
+    from repro.dist.mesh import fleet_pspecs
+    from repro.fleet.state import FleetState
+    specs = fleet_pspecs(layout, table_axis, tenant_axis)  # validates name
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if layout in ("tenant_sharded", "tenant_table_sharded"):
+        if tenant_axis not in sizes:
+            raise ValueError(f"mesh has no axis {tenant_axis!r} "
+                             f"(axes: {mesh.axis_names})")
+        shards = sizes[tenant_axis]
+        if num_tenants % shards != 0:
+            raise ValueError(
+                f"T={num_tenants} tenants do not divide over "
+                f"{tenant_axis}={shards} shards; pick T a multiple of the "
+                "axis (sanitize_pspec would silently fall back to "
+                "replicated)")
+    if layout in ("table_sharded", "tenant_table_sharded"):
+        table_shard_info(cfg, mesh, table_axis)
+    return FleetState(*(NamedSharding(mesh, ps) for ps in specs))
+
+
 def score_window_table_sharded(counts: jax.Array, weights: jax.Array,
                                buckets: jax.Array, cfg: AceConfig, *,
                                table_axis: str,

@@ -1,0 +1,32 @@
+"""Multi-tenant ACE fleets: tenant-axis sketch stacking with batched
+routing on every hot path.
+
+One accelerator, thousands of independent detectors: ``FleetState``
+stacks T tenants' count arrays and moments on a leading axis, and every
+op takes a mixed-tenant batch with ``tenant_ids`` routing — hash once,
+one gather, one scatter, per-tenant thresholds.  See
+``repro.fleet.state`` (flat fleets), ``repro.fleet.filter`` (the
+drop-in multi-tenant data filter), ``repro.fleet.window`` (per-tenant
+epoch rings with per-tenant rotation clocks), and
+``docs/ARCHITECTURE.md`` §6.
+"""
+from repro.fleet.state import (FleetConfig, FleetState, admit_thresholds,
+                               fleet_scores, fleet_table_gather,
+                               from_states, init, insert_masked,
+                               mean_mu_fleet, per_tenant_counts,
+                               set_tenant, tenant_view)
+from repro.fleet.filter import FleetDataFilter
+from repro.fleet.window import (WindowedFleetState, init_fleet_window,
+                                insert_current_fleet, maybe_rotate_fleet,
+                                tenant_window_view, window_admit_thresholds,
+                                window_fleet_scores)
+
+__all__ = [
+    "FleetConfig", "FleetState", "FleetDataFilter", "WindowedFleetState",
+    "admit_thresholds", "fleet_scores", "fleet_table_gather",
+    "from_states", "init", "init_fleet_window", "insert_current_fleet",
+    "insert_masked", "maybe_rotate_fleet", "mean_mu_fleet",
+    "per_tenant_counts", "set_tenant", "tenant_view",
+    "tenant_window_view", "window_admit_thresholds",
+    "window_fleet_scores",
+]

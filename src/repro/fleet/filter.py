@@ -1,0 +1,101 @@
+"""Multi-tenant ACE data filter — the fleet drop-in for
+``repro.data.pipeline.AceDataFilter``.
+
+Same step protocol (``init``, ``features``, ``step``, ``__call__``,
+``ace_cfg``), same single hash per batch, same score→threshold→masked-
+insert dataflow — but the state is a ``FleetState`` of T independent
+tenant sketches and every batch carries ``tenant_ids`` (B,) routing each
+item to its own tenant: scores gather from the item's tenant tables, the
+μ−ασ threshold is the item's tenant's own (each tenant warms up, drifts,
+and alarms independently), and the masked insert scatters the whole mixed
+batch in one shot.
+
+With ``num_tenants=1`` (and all-zero tenant_ids) the filter is BITWISE
+``AceDataFilter``: same buckets, same scores, same threshold, same
+inserted counts and Welford stream (tests/test_fleet.py asserts it).
+
+``step`` takes ``(state, w, feat, tenant_ids)`` — one extra (B,) int32
+operand vs the single-tenant protocol; ``StreamRunner`` feeds it from the
+chunk's stacked tenant-id plane, and the per-batch ``__call__`` driver
+takes it alongside the embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import srp
+from repro.core.sketch import AceConfig
+from repro.fleet import state as fl
+from repro.fleet.state import FleetConfig, FleetState
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetDataFilter:
+    """ACE anomaly filter over a tenant fleet (jit-compatible)."""
+
+    d_model: int
+    num_tenants: int = 1
+    num_bits: int = 13
+    num_tables: int = 32
+    alpha: float = 4.0
+    warmup_items: float = 512.0
+    bias_const: float = 0.25
+    hash_mode: str = "dense"
+    insert_all: bool = False    # detector mode (see AceDataFilter)
+
+    @property
+    def ace_cfg(self) -> AceConfig:
+        # same construction as AceDataFilter.ace_cfg: the fleet-of-1 must
+        # be the SAME sketch (seed included) as the flat filter's.
+        return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
+                         num_tables=self.num_tables, seed=29,
+                         welford_min_n=self.warmup_items / 2,
+                         hash_mode=self.hash_mode)
+
+    @property
+    def fleet_cfg(self) -> FleetConfig:
+        return FleetConfig(ace=self.ace_cfg, num_tenants=self.num_tenants)
+
+    def init(self):
+        from repro.core import sketch as sk
+        return fl.init(self.fleet_cfg), sk.make_params(self.ace_cfg)
+
+    def features(self, embeds: jax.Array) -> jax.Array:
+        """(B, S, D) embeddings -> (B, D+1) unit-mean + bias features —
+        the SAME shared helper as ``AceDataFilter`` (identical
+        featurisation keeps the fleet-of-1 contract bitwise)."""
+        from repro.data.pipeline import mean_embed_features
+        return mean_embed_features(embeds, self.bias_const)
+
+    def step(self, state: FleetState, w, feat, tenant_ids):
+        """hash ONCE → tenant-routed score → per-tenant μ−ασ threshold →
+        one mixed-batch masked insert.
+
+        Returns (new_state, keep (B,) bool, margin (B,) float32); the
+        scan body of ``StreamRunner`` when the filter is a fleet.
+        ``tenant_ids`` (B,) int32 in [0, T).
+        """
+        cfg = self.ace_cfg
+        buckets = srp.hash_buckets(feat, w, cfg.srp)   # the ONE hash
+        scores = fl.fleet_scores(state, tenant_ids, buckets)
+        thresh = fl.admit_thresholds(
+            state, self.alpha, self.warmup_items)[tenant_ids]
+        keep = scores >= thresh
+        margin = scores - thresh
+        ins = jnp.ones_like(keep) if self.insert_all else keep
+        new_state = fl.insert_masked(state, tenant_ids, buckets, ins, cfg)
+        return new_state, keep, margin
+
+    def __call__(self, state, w, embeds, mask, tenant_ids):
+        """Score + filter + update a mixed-tenant batch.
+
+        mask: (B, S) loss mask; anomalous sequences are zeroed out.
+        Returns (new_state, new_mask, frac_kept).
+        """
+        feat = self.features(embeds)
+        new_state, keep, _margin = self.step(state, w, feat, tenant_ids)
+        new_mask = mask * keep[:, None].astype(mask.dtype)
+        return new_state, new_mask, jnp.mean(keep.astype(jnp.float32))

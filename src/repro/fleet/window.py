@@ -1,0 +1,301 @@
+"""Windowed multi-tenant fleets: T independent epoch rings, one program.
+
+The tenant-axis extension of ``repro.window``: every tenant owns a full
+``WindowedAceState`` ring (E epochs + tail view + ssq stream + cursor +
+tick), stacked on a leading T axis:
+
+    counts        (T, E, L, 2^K)   per-tenant epoch rings
+    n / welford_* (T, E)           per-tenant per-epoch moments
+    tail          (T, L, 2^K) f32  per-tenant γ-weighted tail views
+    ssq           (T,)             per-tenant ‖C_w‖² streams
+    cursor        (T,)  int32      per-tenant ring pointers
+    tick          (T,)  int32      per-tenant insert-step clocks
+
+The clocks are the point: tenants receive traffic at DIFFERENT rates, so
+each tenant's tick advances only on batches that actually contained its
+items, and ``maybe_rotate_fleet`` rotates exactly the tenants whose live
+epoch just filled — a bursty tenant cycles its window fast, an idle one
+keeps its history, and neither perturbs the other (the isolation
+property, tested).  One batch = one tick for every PRESENT tenant
+(mask-independent, like the flat ring's per-step tick).
+
+Routing reuses the fleet's flat-offset trick twice over: the live-epoch
+scatter/gathers address the (T·E·L, 2^K) flat ring at row
+``tid·E·L + cursor[tid]·L + j``, the tail gathers address the
+(T·L, 2^K) flat tail at ``tid·L + j``.  Per-tenant scalar streams
+(ssq, Welford) fold through the same (T, B) masked segment reductions
+as the flat fleet — masked-out entries are exact float zeros, so each
+tenant's fold is bitwise the single-ring ``ring.insert_current`` fold.
+
+Differential contracts (tests/test_fleet.py): fleet-of-1 ≡ the plain
+``WindowedAceState`` ops bitwise; a mixed batch ≡ per-tenant sequential
+``ring.insert_current`` with per-tenant sub-masks; rotation of tenant a
+leaves tenant b bitwise untouched.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig
+from repro.fleet.state import _tenant_onehot
+from repro.window import ring
+from repro.window.ring import WindowConfig, WindowedAceState
+
+
+class WindowedFleetState(NamedTuple):
+    """T stacked epoch rings (a pytree — jit/scan/donation safe)."""
+
+    counts: jax.Array        # (T, E, L, 2^K) counter dtype
+    n: jax.Array             # (T, E) float32
+    welford_mean: jax.Array  # (T, E) float32
+    welford_m2: jax.Array    # (T, E) float32
+    tail: jax.Array          # (T, L, 2^K) float32
+    ssq: jax.Array           # (T,) float32
+    cursor: jax.Array        # (T,) int32
+    tick: jax.Array          # (T,) int32
+
+    @property
+    def num_tenants(self) -> int:
+        return self.counts.shape[0]
+
+    @property
+    def num_epochs(self) -> int:
+        return self.counts.shape[1]
+
+
+def init_fleet_window(cfg: WindowConfig,
+                      num_tenants: int) -> WindowedFleetState:
+    if num_tenants < 1:
+        raise ValueError(f"num_tenants must be >= 1, got {num_tenants}")
+    from repro.fleet.state import check_flat_addressable
+    check_flat_addressable(num_tenants * cfg.num_epochs
+                           * cfg.ace.num_tables, cfg.ace.num_buckets,
+                           "init_fleet_window")
+    one = ring.init_window(cfg)
+    return WindowedFleetState(*(
+        jnp.broadcast_to(leaf, (num_tenants,) + leaf.shape)
+        for leaf in one))
+
+
+def tenant_window_view(state: WindowedFleetState, t) -> WindowedAceState:
+    """Tenant t's ring as a plain ``WindowedAceState`` (static/traced t)."""
+    return WindowedAceState(*(leaf[t] for leaf in state))
+
+
+def set_tenant_window(state: WindowedFleetState, t: int,
+                      one: WindowedAceState) -> WindowedFleetState:
+    return WindowedFleetState(*(
+        leaf.at[t].set(lf) for leaf, lf in zip(state, one)))
+
+
+# ---------------------------------------------------------------------------
+# Hot-path routed scoring: tail + live gathers, both flat-offset.
+# ---------------------------------------------------------------------------
+
+def window_table_sums_fleet(state: WindowedFleetState,
+                            tenant_ids: jax.Array, buckets: jax.Array):
+    """Per-item (tail_sums, live_sums), each vs the item's OWN tenant's
+    ring — the fleet analogue of ``ring.window_table_sums`` (same
+    gathered integers, same row-sum order → bitwise per tenant)."""
+    T, E, L, nbuckets = state.counts.shape
+    iota_j = jnp.arange(L, dtype=jnp.int32)[None, :]
+    tail_rows = tenant_ids[:, None] * L + iota_j                 # (B, L)
+    tail_flat = state.tail.reshape(T * L, nbuckets)
+    tail_sums = jnp.sum(tail_flat[tail_rows, buckets], axis=-1)
+    ring_rows = (tenant_ids[:, None] * (E * L)
+                 + state.cursor[tenant_ids][:, None] * L + iota_j)
+    flat = state.counts.reshape(T * E * L, nbuckets)
+    live_sums = jnp.sum(flat[ring_rows, buckets].astype(jnp.float32),
+                        axis=-1)
+    return tail_sums, live_sums
+
+
+def window_fleet_scores(state: WindowedFleetState, tenant_ids: jax.Array,
+                        buckets: jax.Array) -> jax.Array:
+    """(B,) windowed scores, each item vs its own tenant's window."""
+    tail_sums, live_sums = window_table_sums_fleet(
+        state, tenant_ids, buckets)
+    return ring.score_live(tail_sums, live_sums, state.counts.shape[2])
+
+
+def window_admit_thresholds(state: WindowedFleetState, gamma: float,
+                            alpha: float,
+                            warmup_items: float) -> jax.Array:
+    """(T,) per-tenant windowed μ−ασ thresholds —
+    ``ring.admit_threshold_windowed`` vmapped over the tenant axis (the
+    per-tenant component is the identical elementwise formula)."""
+    return jax.vmap(lambda s: ring.admit_threshold_windowed(
+        s, gamma, alpha, warmup_items))(WindowedAceState(*state))
+
+
+# ---------------------------------------------------------------------------
+# Routed insert + per-tenant clocks.
+# ---------------------------------------------------------------------------
+
+def insert_current_fleet(state: WindowedFleetState, tenant_ids: jax.Array,
+                         buckets: jax.Array, mask: jax.Array,
+                         cfg: AceConfig, gamma: float = 1.0,
+                         pre_sums=None) -> WindowedFleetState:
+    """Masked mixed-batch insert into each item's tenant's LIVE epoch.
+
+    ONE scatter on the (T·E·L, 2^K) flat ring; per-tenant ssq/Welford
+    streams advance by (T, B) masked segment reductions of the exact
+    per-item terms ``ring.insert_current`` reduces (masked-out entries
+    are exact zeros → bitwise per tenant).  Each PRESENT tenant's tick
+    advances by one step — absent tenants' clocks, moments, and counts
+    are bitwise untouched.
+    """
+    T, E, L, nbuckets = state.counts.shape
+    iota_j = jnp.arange(L, dtype=jnp.int32)[None, :]
+    ring_rows = (tenant_ids[:, None] * (E * L)
+                 + state.cursor[tenant_ids][:, None] * L + iota_j)
+    maskf = mask.astype(jnp.float32)
+    onehot = _tenant_onehot(tenant_ids, T)                       # (T, B)
+    present = (jnp.sum(onehot, axis=1) > 0)                      # (T,)
+
+    if pre_sums is None:
+        pre_sums = window_table_sums_fleet(state, tenant_ids, buckets)
+    tail_sums, live_pre = pre_sums
+
+    # -- THE scatter (each item's tenant's live-epoch rows)
+    w_ctr = jnp.broadcast_to(
+        mask.astype(state.counts.dtype)[:, None], buckets.shape)
+    new_ring = state.counts.reshape(T * E * L, nbuckets) \
+        .at[ring_rows, buckets].add(w_ctr).reshape(state.counts.shape)
+
+    # -- post-insert windowed sums/scores (tails unchanged)
+    live_post = jnp.sum(
+        new_ring.reshape(T * E * L, nbuckets)[ring_rows, buckets]
+        .astype(jnp.float32), axis=-1)
+    scores = ring.score_live(tail_sums, live_post, L)
+
+    def seg(v):   # (B,) -> (T,) per-tenant masked sums
+        return jnp.sum(onehot * v[None, :], axis=1)
+
+    # -- per-tenant ssq increment: Δ‖C_w‖² = 2·m_tail + m_pre + m_post,
+    #    accumulated in the SAME association order as ring.insert_current
+    #    (((ssq + 2·m_tail) + m_pre) + m_post) — float addition does not
+    #    reassociate, and the per-tenant streams must stay bitwise
+    new_ssq = state.ssq + 2.0 * seg(tail_sums * maskf)
+    new_ssq = new_ssq + seg(live_pre * maskf)
+    new_ssq = new_ssq + seg(live_post * maskf)
+
+    # -- per-tenant live-epoch Welford fold of windowed post-insert
+    #    rates (mirrors ring.insert_current term for term)
+    b = seg(maskf)                                               # (T,)
+    rows_te = jnp.arange(T, dtype=jnp.int32) * E + state.cursor  # (T,)
+    n_flat = state.n.reshape(T * E)
+    n_e = jnp.take(n_flat, rows_te)                              # (T,)
+    tot_e = n_e + b
+    n_w = jax.vmap(lambda s: ring.combined_n(s, gamma))(
+        WindowedAceState(*state)) + b                            # (T,)
+    rates = scores / jnp.maximum(n_w, 1.0)[tenant_ids]           # (B,)
+    mean_b = seg(rates * maskf) / jnp.maximum(b, 1.0)            # (T,)
+    m2_b = seg(((rates - mean_b[tenant_ids]) ** 2) * maskf)      # (T,)
+    mean_flat = state.welford_mean.reshape(T * E)
+    m2_flat = state.welford_m2.reshape(T * E)
+    new_mean, new_m2 = sk.welford_fold(
+        jnp.take(mean_flat, rows_te), jnp.take(m2_flat, rows_te),
+        n_e, b, tot_e, mean_b, m2_b, cfg.welford_min_n)
+    has = b > 0
+    new_mean = jnp.where(has, new_mean, jnp.take(mean_flat, rows_te))
+    new_m2 = jnp.where(has, new_m2, jnp.take(m2_flat, rows_te))
+
+    return state._replace(
+        counts=new_ring,
+        n=n_flat.at[rows_te].set(tot_e).reshape(T, E),
+        welford_mean=mean_flat.at[rows_te].set(new_mean).reshape(T, E),
+        welford_m2=m2_flat.at[rows_te].set(new_m2).reshape(T, E),
+        ssq=new_ssq,
+        tick=state.tick + present.astype(jnp.int32))
+
+
+def rotate_fleet(state: WindowedFleetState,
+                 gamma: float = 1.0) -> WindowedFleetState:
+    """Rotate EVERY tenant's ring once.
+
+    Fleet-native (NOT a vmapped ``ring.rotate``): vmap traces the body
+    into one XLA computation, where the tail update
+    ``γ·(tail + live − γ^{E−1}·expired)`` may fuse a multiply-subtract
+    into an FMA and drift the decayed tail by 1 ulp off the eager
+    single-ring op sequence — this version issues the IDENTICAL op
+    sequence on (T, ...)-leading arrays, keeping the fleet-of-1 and
+    per-tenant differential contracts bitwise.
+    """
+    T, E, L, nbuckets = state.counts.shape
+    tidx = jnp.arange(T, dtype=jnp.int32)
+    new_cursor = jnp.mod(state.cursor + 1, E)
+    live = state.counts[tidx, state.cursor]            # (T, L, 2^K)
+    expired = state.counts[tidx, new_cursor]
+    w_exp = jnp.float32(gamma) ** jnp.float32(E - 1)
+    # identical op sequence as ring.rotate — including its γ<1 caveat:
+    # traced contexts may FMA the subtract-of-product, so the decayed
+    # tail is bitwise only within one execution context (γ=1 is exact
+    # everywhere); see the comment there
+    tail = jnp.float32(gamma) * (
+        state.tail + live.astype(jnp.float32)
+        - w_exp * expired.astype(jnp.float32))
+    rows = tidx * E + new_cursor                       # (T,)
+    zero_slab = jnp.zeros((L, nbuckets), state.counts.dtype)
+    counts = state.counts.reshape(T * E, L, nbuckets) \
+        .at[rows].set(zero_slab).reshape(state.counts.shape)
+    zero = jnp.zeros((T,), jnp.float32)
+
+    def clear(leaf):
+        return leaf.reshape(T * E).at[rows].set(zero).reshape(T, E)
+
+    return WindowedFleetState(
+        counts=counts,
+        n=clear(state.n),
+        welford_mean=clear(state.welford_mean),
+        welford_m2=clear(state.welford_m2),
+        tail=tail,
+        ssq=jnp.sum(tail * tail, axis=(1, 2)),
+        cursor=new_cursor,
+        tick=state.tick,
+    )
+
+
+def maybe_rotate_fleet(state: WindowedFleetState, rotate_every: int,
+                       gamma: float = 1.0, *,
+                       tenant_ids: jax.Array) -> WindowedFleetState:
+    """Per-tenant rotation clocks: rotate exactly the tenants whose tick
+    says their live epoch JUST filled.
+
+    Call AFTER an insert step with the SAME ``tenant_ids`` — the
+    predicate is ``present ∧ tick % R == 0``, where ``present`` marks
+    the tenants that batch actually ticked.  Presence is load-bearing,
+    not an optimisation: the flat ring's ``tick > 0 ∧ tick % R == 0``
+    test is safe only because its tick advances on every call, so each
+    boundary fires once; a fleet tenant's tick freezes while it is
+    absent, and a tick parked on a boundary would otherwise re-fire on
+    EVERY later batch it sits out — cycling its cursor and wiping its
+    window history from pure neighbour traffic (the exact isolation
+    violation the per-tenant clocks exist to prevent).  Gating on
+    presence makes each tenant's rotation positions identical to the
+    sequential per-tenant driver, which only runs its ``maybe_rotate``
+    on that tenant's own steps.
+
+    Vectorised select (the fleet-native rotate computes all T candidate
+    rotations and keeps the due ones) — pure device work, fine for
+    host-driven admit/filter batches; a fleet stream runner would lower
+    it to segment boundaries the way ``StreamRunner`` does for single
+    rings.  ``rotate_every <= 0`` is the identity.
+    """
+    if rotate_every <= 0:
+        return state
+    rotated = rotate_fleet(state, gamma)
+    present = jnp.sum(_tenant_onehot(tenant_ids, state.num_tenants),
+                      axis=1) > 0
+    should = jnp.logical_and(
+        present, jnp.logical_and(state.tick > 0,
+                                 jnp.mod(state.tick, rotate_every) == 0))
+    out = []
+    for leaf_new, leaf_old in zip(rotated, state):
+        sel = should.reshape((-1,) + (1,) * (leaf_old.ndim - 1))
+        out.append(jnp.where(sel, leaf_new, leaf_old))
+    return WindowedFleetState(*out)

@@ -29,6 +29,7 @@ from repro.core import sketch as _sk
 from repro.core.sketch import AceConfig, AceState
 from repro.core.srp import SrpConfig, resolve_hash_mode
 from repro.kernels import ace_admit_fused as _a
+from repro.kernels import ace_fleet_score as _fl
 from repro.kernels import ace_query as _q
 from repro.kernels import ace_score_fused as _f
 from repro.kernels import ace_update as _u
@@ -100,6 +101,49 @@ def ace_score(state: AceState, q: jax.Array, w: jax.Array,
     if resolve_hash_mode(cfg.srp) == "srht":
         return ace_query(state, _sh.srht_hash(q, cfg.srp))
     return _f.ace_score_fused(state.counts, q, w, cfg.srp)
+
+
+def ace_fleet_score(fstate, q: jax.Array, tenant_ids: jax.Array,
+                    w: jax.Array, cfg: AceConfig) -> jax.Array:
+    """Fused multi-tenant scoring of raw query vectors: each item of the
+    mixed batch scores against ITS OWN tenant's tables
+    (``repro.fleet.FleetState``), one hash for the whole batch.
+
+    Dense mode: one all-in-one Pallas launch (``ace_fleet_score`` — the
+    tenant·L row-offset gather welded after the in-kernel hash).  SRHT
+    mode: the SRHT hash kernel + the jnp fleet gather (two dispatches,
+    still one hash) — the ``ace_admit`` SRHT precedent.
+    """
+    from repro.fleet import state as _fls
+    if resolve_hash_mode(cfg.srp) == "srht":
+        buckets = _sh.srht_hash(q, cfg.srp)
+        return _fls.fleet_scores(fstate, tenant_ids, buckets)
+    return _fl.ace_fleet_score(fstate.counts, q, tenant_ids, w, cfg.srp)
+
+
+def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
+                    w: jax.Array, cfg: AceConfig, *, alpha: float,
+                    warmup_items: float):
+    """Kernel-path multi-tenant admission: ONE hash, no host syncs.
+
+    The fleet analogue of ``ace_admit``: the single hash runs through
+    ``hash_dispatch`` (dense-MXU or SRHT-VPU per ``cfg.hash_mode``);
+    scoring, per-tenant thresholds and the one-scatter mixed-batch
+    insert delegate to the shared ``repro.fleet.state`` helpers — the
+    same single-homed dataflow as the jnp path, so kernel-path and jnp
+    admissions agree bitwise downstream of the bucket draw.  (There is
+    deliberately no all-in-one Pallas fleet admission: the masked
+    insert would need the whole (T·L, 2^K) fleet aliased in VMEM,
+    which only fits toy T — the gather-only ``ace_fleet_score`` kernel
+    is the fused piece worth having.)  Returns (new_state, admit (B,)).
+    """
+    from repro.fleet import state as _fls
+    buckets = hash_dispatch(q, w, cfg.srp)
+    scores = _fls.fleet_scores(fstate, tenant_ids, buckets)
+    admit = scores >= _fls.admit_thresholds(
+        fstate, alpha, warmup_items)[tenant_ids]
+    new_state = _fls.insert_masked(fstate, tenant_ids, buckets, admit, cfg)
+    return new_state, admit
 
 
 def ace_window_score(wstate, buckets: jax.Array, gamma: float,

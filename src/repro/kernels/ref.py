@@ -59,6 +59,23 @@ def ace_window_combine_ref(counts: jax.Array, buckets: jax.Array,
     return acc * jnp.float32(1.0 / L)
 
 
+def ace_fleet_score_ref(counts: jax.Array, q: jax.Array,
+                        tenant_ids: jax.Array, w: jax.Array,
+                        cfg: SrpConfig) -> jax.Array:
+    """Fused multi-tenant scoring: counts (T, L, 2^K), q (B, d),
+    tenant_ids (B,) -> (B,) scores, each item vs its OWN tenant's tables.
+
+    Mirrors ``ace_fleet_score``'s contract (the tenant·L row-offset
+    gather + the canonical row-sum / reciprocal-1/L combine of
+    ``repro.fleet.state.fleet_scores``)."""
+    T, L = counts.shape[0], counts.shape[1]
+    buckets = hash_buckets(q, w, cfg)
+    rows = tenant_ids[:, None] * L + jnp.arange(L, dtype=jnp.int32)[None, :]
+    flat = counts.reshape(T * L, counts.shape[2])
+    gathered = flat[rows, buckets].astype(jnp.float32)
+    return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+
+
 def ace_admit_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
                   thresh: jax.Array, cfg: SrpConfig):
     """Fused admission: hash once, score pre-insert, threshold, masked add.

@@ -34,6 +34,12 @@ class GuardrailConfig:
     window_epochs: int = 1      # 1 = the flat (cumulative) sketch
     window_decay: float = 1.0   # γ; epoch weight γ^age at query time
     rotate_every: int = 0       # admit calls per epoch (0 = never rotate)
+    # Multi-tenant fleet mode (repro.fleet): >1 tenants stacks T
+    # independent sketches behind ONE admit program; every admit call
+    # carries a (B,) tenant_ids routing vector and each request is
+    # scored / thresholded / inserted against its own tenant's state
+    # (per-tenant warmup, per-tenant drift — isolation is bitwise).
+    num_tenants: int = 1        # 1 = the classic single-tenant guardrail
 
 
 class Guardrail:
@@ -72,6 +78,16 @@ class Guardrail:
     forever.  Still one hash, one executable, one host transfer; the
     epoch ring shards over the SAME layouts (the L axis splits, the E
     axis never does).
+
+    With ``gcfg.num_tenants > 1`` the guardrail is a FLEET
+    (``repro.fleet``): T independent tenant sketches stacked behind the
+    same single admit program, with ``admit(embeds, tenant_ids)``
+    routing each request to its own tenant — per-tenant thresholds,
+    per-tenant warmup, one mixed-batch scatter, and (combined with
+    ``window_epochs > 1``) per-tenant epoch rings with per-tenant
+    rotation clocks.  Still one hash, one executable, one host
+    transfer; flat fleets shard over the tenant and/or table layouts of
+    ``repro.dist.sketch_parallel.fleet_shardings_for_layout``.
     """
 
     def __init__(self, gcfg: GuardrailConfig, *, mesh=None,
@@ -84,7 +100,27 @@ class Guardrail:
                                  welford_min_n=gcfg.warmup_items / 2,
                                  hash_mode=gcfg.hash_mode)
         self.windowed = gcfg.window_epochs > 1
-        if self.windowed:
+        self.multi_tenant = gcfg.num_tenants > 1
+        if self.multi_tenant:
+            from repro.fleet import state as fl
+            from repro.fleet import window as fw
+            if self.windowed:
+                from repro.window import ring
+                if gcfg.rotate_every <= 0:
+                    raise ValueError(
+                        "windowed guardrail (window_epochs > 1) needs "
+                        "rotate_every > 0 — without a rotation clock the "
+                        "ring never expires and behaves like the frozen "
+                        "sketch")
+                # per-tenant epoch rings with per-tenant rotation clocks
+                self.state = fw.init_fleet_window(ring.WindowConfig(
+                    ace=self.ace_cfg, num_epochs=gcfg.window_epochs,
+                    decay=gcfg.window_decay,
+                    rotate_every=gcfg.rotate_every), gcfg.num_tenants)
+            else:
+                self.state = fl.init(fl.FleetConfig(
+                    ace=self.ace_cfg, num_tenants=gcfg.num_tenants))
+        elif self.windowed:
             from repro.window import ring
             if gcfg.rotate_every <= 0:
                 # nothing else rotates a guardrail's ring: E>1 epochs
@@ -116,7 +152,17 @@ class Guardrail:
         # instead of copying (L, 2^K) every batch.
         self._admit = jax.jit(self._admit_impl, donate_argnums=0)
         if mesh is not None:
-            if self.windowed:
+            if self.multi_tenant:
+                if self.windowed:
+                    raise NotImplementedError(
+                        "sharded windowed fleets are not wired yet — "
+                        "drop the mesh or use window_epochs=1")
+                from repro.dist.sketch_parallel import \
+                    fleet_shardings_for_layout
+                shardings = fleet_shardings_for_layout(
+                    self.ace_cfg, mesh, gcfg.num_tenants, sketch_layout,
+                    table_axis)
+            elif self.windowed:
                 from repro.dist.sketch_parallel import \
                     window_shardings_for_layout
                 shardings = window_shardings_for_layout(
@@ -137,11 +183,52 @@ class Guardrail:
         return mean_embed_features(embeds, self.gcfg.bias_const)
 
     def _admit_impl(self, state: sk.AceState, w: jax.Array,
-                    embeds: jax.Array):
+                    embeds: jax.Array, tenant_ids=None):
         """The whole admission step as one traced device program."""
         self.trace_count += 1
         cfg = self.ace_cfg
         feat = self._features(embeds)
+        if self.multi_tenant:
+            from repro.fleet import state as fl
+            from repro.fleet import window as fw
+            if self.windowed:
+                # per-tenant windowed admission: one hash, routed tail +
+                # live gathers, per-tenant windowed μ−ασ thresholds, one
+                # live-epoch scatter, then the per-tenant rotation
+                # clocks — mirrors the single-ring windowed branch below
+                if self.use_kernels:
+                    from repro.kernels import ops as kops
+                    buckets = kops.hash_dispatch(feat, w, cfg.srp)
+                else:
+                    buckets = hash_buckets(feat, w, cfg.srp)
+                pre = fw.window_table_sums_fleet(state, tenant_ids,
+                                                 buckets)
+                from repro.window import ring
+                scores = ring.score_live(pre[0], pre[1], cfg.num_tables)
+                admit = scores >= fw.window_admit_thresholds(
+                    state, self.gcfg.window_decay, self.gcfg.alpha,
+                    self.gcfg.warmup_items)[tenant_ids]
+                new_state = fw.insert_current_fleet(
+                    state, tenant_ids, buckets, admit, cfg,
+                    gamma=self.gcfg.window_decay, pre_sums=pre)
+                new_state = fw.maybe_rotate_fleet(
+                    new_state, self.gcfg.rotate_every,
+                    self.gcfg.window_decay, tenant_ids=tenant_ids)
+                return new_state, admit
+            if self.use_kernels:
+                from repro.kernels import ops as kops
+                return kops.ace_fleet_admit(
+                    state, feat, tenant_ids, w, cfg,
+                    alpha=self.gcfg.alpha,
+                    warmup_items=self.gcfg.warmup_items)
+            buckets = hash_buckets(feat, w, cfg.srp)   # the ONE hash
+            scores = fl.fleet_scores(state, tenant_ids, buckets)
+            admit = scores >= fl.admit_thresholds(
+                state, self.gcfg.alpha,
+                self.gcfg.warmup_items)[tenant_ids]
+            new_state = fl.insert_masked(state, tenant_ids, buckets,
+                                         admit, cfg)
+            return new_state, admit
         if self.windowed:
             from repro.window import ring
             if self.use_kernels:
@@ -181,11 +268,24 @@ class Guardrail:
         new_state = sk.insert_buckets_masked(state, buckets, admit, cfg)
         return new_state, admit
 
-    def admit(self, embeds: jax.Array) -> np.ndarray:
+    def admit(self, embeds: jax.Array,
+              tenant_ids: jax.Array | None = None) -> np.ndarray:
         """(B, S, D) request embeddings -> (B,) bool admitted; admits update
         the sketch (the serving distribution drifts with traffic — the
-        paper's dynamic-update property).  One host transfer: the mask."""
-        self.state, admit = self._admit(self.state, self.w, embeds)
+        paper's dynamic-update property).  One host transfer: the mask.
+
+        Multi-tenant guardrails additionally take ``tenant_ids`` (B,)
+        int32 routing each request to its own tenant's sketch."""
+        if self.multi_tenant:
+            if tenant_ids is None:
+                raise ValueError("multi-tenant guardrail needs tenant_ids")
+            self.state, admit = self._admit(
+                self.state, self.w, embeds,
+                jnp.asarray(tenant_ids, jnp.int32))
+        else:
+            if tenant_ids is not None:
+                raise ValueError("tenant_ids given but num_tenants == 1")
+            self.state, admit = self._admit(self.state, self.w, embeds)
         return np.asarray(admit)
 
 

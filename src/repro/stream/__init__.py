@@ -1,2 +1,3 @@
 """Streaming ingest at device speed (scan-fused chunk runner)."""
-from repro.stream.runner import ChunkSummary, StreamRunner  # noqa: F401
+from repro.stream.runner import (ChunkSummary, FleetChunkSummary,  # noqa: F401
+                                 StreamRunner)

@@ -29,6 +29,16 @@ The hash family follows the filter's ``hash_mode`` knob (dense matmul,
 SRHT fast transform, or auto break-even) because the scan body hashes
 through ``repro.core.srp.hash_buckets``.
 
+Multi-tenant fleets: with a ``repro.fleet.FleetDataFilter`` the chunk
+additionally carries a (T_chunk, B) tenant-id plane and every scan step
+routes its mixed-tenant batch through the fleet's flat-offset
+gather/scatter — same ONE donated program, same 1 H2D + 1 D2H per
+chunk, with the summary upgraded to ``FleetChunkSummary`` (per-tenant
+kept/item counts and per-tenant n ride in the same single pull).
+Sharded fleets place via ``repro.dist.sketch_parallel
+.fleet_shardings_for_layout`` (tenant, table, or composed 2-D
+sharding).
+
 Sliding windows: with a ``repro.window.WindowedAceFilter`` (or any
 filter whose state is a ``WindowedAceState`` ring), ``rotate_every=R``
 advances the epoch ring every R scan steps INSIDE the donated device
@@ -72,6 +82,28 @@ class ChunkSummary(NamedTuple):
     n: jax.Array
 
 
+class FleetChunkSummary(NamedTuple):
+    """The fleet upgrade of ``ChunkSummary`` — still ONE small transfer.
+
+    Same global fields, plus per-tenant rows so the host can follow T
+    detectors without T pulls:
+
+    per_tenant_items: (T,) float32 — items routed to each tenant.
+    per_tenant_kept:  (T,) float32 — of those, how many were kept.
+    n:                (T,) float32 — each tenant's sketch n after the
+                      chunk (replaces the scalar n of the flat summary).
+    """
+
+    kept_frac: jax.Array
+    anom_counts: jax.Array
+    topk_step: jax.Array
+    topk_item: jax.Array
+    topk_margin: jax.Array
+    per_tenant_items: jax.Array
+    per_tenant_kept: jax.Array
+    n: jax.Array
+
+
 class StreamRunner:
     """Chunked scan ingest around an ``AceDataFilter``.
 
@@ -94,11 +126,19 @@ class StreamRunner:
         self.return_masks = return_masks
         self.mesh = mesh
         self.sketch_layout = sketch_layout
+        # Multi-tenant fleet filter: the scan body routes a per-step
+        # (B,) tenant-id vector and the summary grows per-tenant rows.
+        self.is_fleet = hasattr(filt, "num_tenants")
         # Epoch-ring rotation clock: None inherits the filter's own
         # ``rotate_every`` (0 for the flat AceDataFilter — no rotation).
         if rotate_every is None:
             rotate_every = int(getattr(filt, "rotate_every", 0))
         self.rotate_every = int(rotate_every)
+        if self.is_fleet and self.rotate_every:
+            raise NotImplementedError(
+                "windowed fleets are host-driven for now (per-tenant "
+                "clocks via repro.fleet.window.maybe_rotate_fleet); the "
+                "scan runner consumes FLAT fleets only")
         if self.rotate_every and not hasattr(filt, "num_epochs"):
             raise ValueError("rotate_every needs a windowed filter "
                              "(repro.window.WindowedAceFilter); the flat "
@@ -112,7 +152,13 @@ class StreamRunner:
         self.trace_count = 0          # incremented at TRACE time only
         self._shardings = None
         if mesh is not None:
-            if hasattr(filt, "num_epochs"):
+            if self.is_fleet:
+                from repro.dist.sketch_parallel import \
+                    fleet_shardings_for_layout
+                self._shardings = fleet_shardings_for_layout(
+                    filt.ace_cfg, mesh, filt.num_tenants, sketch_layout,
+                    table_axis)
+            elif hasattr(filt, "num_epochs"):
                 from repro.dist.sketch_parallel import \
                     window_shardings_for_layout
                 self._shardings = window_shardings_for_layout(
@@ -147,11 +193,25 @@ class StreamRunner:
                              for leaf, sh in zip(state, self._shardings)))
 
     def _consume_impl(self, state: AceState, w: jax.Array,
-                      feats: jax.Array):
+                      feats: jax.Array, tenant_ids=None):
         self.trace_count += 1
         T, B = feats.shape[0], feats.shape[1]
         R = self.rotate_every
         gamma = getattr(self.filt, "decay", 1.0)
+
+        if self.is_fleet:
+            # fleet scan: the step consumes (feat, tids) pairs — same
+            # donated carry, same single program (R is 0 by __init__)
+            def fstep(carry, xs):
+                feat, tids = xs
+                new_state, keep, margin = self.filt.step(
+                    carry, w, feat, tids)
+                return self._constrain(new_state), (keep, margin)
+
+            state, (keeps, margins) = jax.lax.scan(
+                fstep, state, (feats, tenant_ids))
+            return self._fleet_summary(state, keeps, margins,
+                                       tenant_ids, T, B)
 
         def step(carry, feat):
             new_state, keep, margin = self.filt.step(carry, w, feat)
@@ -212,33 +272,85 @@ class StreamRunner:
             return state, summary, keeps
         return state, summary
 
-    def consume(self, state: AceState, w: jax.Array, feats: jax.Array):
+    def _fleet_summary(self, state, keeps, margins, tenant_ids, T, B):
+        """Per-tenant summary rows from the scan outputs — all device
+        reductions, one transfer with the rest of the summary."""
+        from repro.fleet.state import per_tenant_counts
+        nt = self.filt.num_tenants
+        keepf = keeps.astype(jnp.float32)
+        k = min(self.topk, T * B)
+        neg, idx = jax.lax.top_k(-margins.reshape(-1), k)
+        tids_flat = tenant_ids.reshape(-1)
+        summary = FleetChunkSummary(
+            kept_frac=jnp.mean(keepf),
+            anom_counts=jnp.sum(1 - keeps.astype(jnp.int32), axis=1),
+            topk_step=(idx // B).astype(jnp.int32),
+            topk_item=(idx % B).astype(jnp.int32),
+            topk_margin=-neg,
+            per_tenant_items=per_tenant_counts(
+                tids_flat, jnp.ones_like(tids_flat), nt),
+            per_tenant_kept=per_tenant_counts(
+                tids_flat, keepf.reshape(-1), nt),
+            n=state.n)
+        if self.return_masks:
+            return state, summary, keeps
+        return state, summary
+
+    def consume(self, state: AceState, w: jax.Array, feats: jax.Array,
+                tenant_ids: jax.Array | None = None):
         """One chunk: feats (T, B, d) features (d = filter's dim+1 when
-        produced by ``AceDataFilter.features``).  Returns
+        produced by ``AceDataFilter.features``), plus the (T, B) int32
+        tenant-id plane when the filter is a fleet.  Returns
         (new_state, summary[, keeps]) — all still on device; pull the
         summary with ONE ``jax.device_get`` when the host needs it."""
         assert feats.ndim == 3 and feats.shape[0] == self.chunk_T, \
             (feats.shape, self.chunk_T)
+        if self.is_fleet:
+            assert tenant_ids is not None and \
+                tenant_ids.shape == feats.shape[:2], \
+                "fleet filters need a (T, B) tenant_ids plane"
+            return self._consume(state, w, feats, tenant_ids)
+        assert tenant_ids is None, \
+            "tenant_ids given but the filter is not a fleet"
         return self._consume(state, w, feats)
 
     def run(self, state: AceState, w: jax.Array,
-            batches: Iterable[np.ndarray]):
+            batches: Iterable[np.ndarray], tenant_ids=None):
         """Host driver: chunk an iterator of (B, d) feature batches and
         consume each chunk with one device program + one summary pull.
 
-        Returns (final state, [host ChunkSummary per chunk]).  A trailing
-        partial chunk (fewer than T batches) is dropped — the stream is
-        infinite in production; pad explicitly if the tail matters.
+        ``tenant_ids``: for fleet filters, an iterable of (B,) int32
+        vectors aligned with ``batches``.  Returns (final state,
+        [host ChunkSummary per chunk]).  A trailing partial chunk (fewer
+        than T batches) is dropped — the stream is infinite in
+        production; pad explicitly if the tail matters.
         """
+        if self.is_fleet and tenant_ids is None:
+            raise ValueError("fleet filters need tenant_ids batches")
+        if not self.is_fleet and tenant_ids is not None:
+            # fail loudly: silently dropping the ids would make the
+            # caller believe per-tenant routing happened (and the tenant
+            # buffer would grow unbounded on an infinite stream)
+            raise ValueError("tenant_ids given but the filter is not a "
+                             "fleet (num_tenants attribute missing)")
         summaries = []
         buf: list[np.ndarray] = []
+        tbuf: list[np.ndarray] = []
+        tit = iter(tenant_ids) if tenant_ids is not None else None
         for b in batches:
             buf.append(np.asarray(b))
+            if tit is not None:
+                tbuf.append(np.asarray(next(tit)))
             if len(buf) < self.chunk_T:
                 continue
             feats = jnp.asarray(np.stack(buf))     # ONE H2D per chunk
             buf.clear()
-            out = self.consume(state, w, feats)
+            if self.is_fleet:
+                tids = jnp.asarray(np.stack(tbuf), jnp.int32)
+                tbuf.clear()
+                out = self.consume(state, w, feats, tids)
+            else:
+                out = self.consume(state, w, feats)
             state, summary = out[0], out[1]
             summaries.append(jax.device_get(summary))  # ONE D2H per chunk
         return state, summaries

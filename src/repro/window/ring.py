@@ -192,6 +192,14 @@ def rotate(state: WindowedAceState, gamma: float = 1.0) -> WindowedAceState:
     expired = jax.lax.dynamic_index_in_dim(
         state.counts, new_cursor, axis=0, keepdims=False)
     w_exp = jnp.float32(gamma) ** jnp.float32(E - 1)
+    # γ<1 caveat: when this is traced into a larger program (the
+    # maybe_rotate cond, a jitted driver) XLA CPU fuses the
+    # subtract-of-product into an FMA, which rounds the decayed tail up
+    # to 1 ulp differently than the eager op-by-op sequence (an
+    # optimization_barrier on the product does NOT stop it — measured).
+    # γ=1 is exact in every context (the products are exact integers);
+    # the γ<1 tail/ssq caches are therefore float-tolerance across
+    # execution contexts, the repo-wide contract for decayed views.
     tail = jnp.float32(gamma) * (
         state.tail + live.astype(jnp.float32)
         - w_exp * expired.astype(jnp.float32))

@@ -48,23 +48,42 @@ class TestArchSmoke:
         assert not bool(jnp.isnan(logits).any())
 
     def test_one_train_step_finite_and_decreases(self, name):
-        """SGD step on one batch: finite grads, loss drops on re-eval."""
+        """SGD step on one batch: finite grads, loss drops on re-eval.
+
+        The step uses a geometric backoff (0.5, 0.25, 0.125 / ‖g‖) and
+        requires SOME scale to decrease the loss — the guarantee
+        gradient descent actually gives (the gradient is a descent
+        direction for sufficiently small steps; no fixed global scale
+        is safe for every curvature).  The backoff exists for jamba:
+        its mamba mixer's inner SSM RMSNorm (the Jamba paper's
+        stabilization trick) normalizes an O(0.01)-scale branch signal
+        at init, which amplifies the embed-ward gradient ~15× over the
+        other archs (the embed leaf is 56 of ‖g‖ = 60.7) and makes the
+        fixed 0.5 step overshoot along the embed direction specifically
+        (stepping embed alone RAISES the loss; every other leaf's step
+        lowers it; the full step decreases cleanly at 0.25).  A genuinely
+        broken gradient fails at every scale.
+        """
         a = Arch(name, reduced=True)
         params, _ = a.init_params(jax.random.PRNGKey(0))
         batch = _batch_for(a)
 
-        def loss_fn(p):
-            return a.loss(p, batch, remat=True)[0]
-
-        loss0, grads = jax.value_and_grad(loss_fn)(params)
+        loss_fn = jax.jit(lambda p: a.loss(p, batch, remat=True)[0])
+        loss0, grads = jax.value_and_grad(
+            lambda p: a.loss(p, batch, remat=True)[0])(params)
         gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
                              for g in jax.tree.leaves(grads)))
         assert np.isfinite(float(loss0)) and np.isfinite(float(gnorm))
-        lr = 0.5 / max(float(gnorm), 1.0)
-        params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
-                               params, grads)
-        loss1 = loss_fn(params2)
-        assert float(loss1) < float(loss0), (float(loss0), float(loss1))
+        losses = {}
+        for scale in (0.5, 0.25, 0.125):
+            lr = scale / max(float(gnorm), 1.0)
+            params2 = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                   params, grads)
+            losses[scale] = float(loss_fn(params2))
+            if losses[scale] < float(loss0):
+                break
+        assert min(losses.values()) < float(loss0), \
+            (name, float(loss0), losses)
 
 
 @pytest.mark.parametrize("name", ARCHS)

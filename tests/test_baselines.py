@@ -136,19 +136,40 @@ class TestFastVOA:
         np.testing.assert_allclose(est, m1, rtol=0.08)
 
     def test_voa_unbiased_small_case(self):
-        """Full-score VOA ≈ exact VOA on a tiny set with generous sampling."""
+        """Full-score VOA ≈ exact VOA on a tiny set with generous sampling.
+
+        The small case must carry SIGNAL: the original version of this
+        test drew 10 i.i.d. Gaussian points, whose true VOA spread
+        across points (std ≈ 0.008) is SMALLER than the seed-averaged
+        estimator noise (std ≈ 0.02–0.04, consistent with the verified
+        AMS variance) — the correlation assert was measuring noise and
+        failed deterministically at ~0.28 while the estimator itself was
+        fine (moment-level unbiasedness passes above, absolute error is
+        within its variance budget).  A near-collinear configuration
+        spans the statistic's real dynamic range instead: interior
+        points see bimodal {0, π} angles (VOA ≈ 0.2, near the 0.25 max),
+        endpoints see a single tight cone (VOA ≈ 0) — spread ≈ 0.08,
+        10× the noise, so correlation is a statement about the
+        implementation again (measured ≈ 0.99 at these budgets).
+        """
         from repro.baselines.fastvoa import fastvoa_score
-        X = self._tiny(n=10, d=4)
+        rng = np.random.default_rng(1)
+        n, d = 10, 4
+        X = np.zeros((n, d), np.float32)
+        X[:, 0] = np.arange(n, dtype=np.float32)        # collinear spine
+        X[:, 1:] += rng.normal(size=(n, d - 1)).astype(np.float32) * 0.15
         m1, m2 = self._exact_moments(X)
         voa = m2 - m1**2
+        assert voa.std() > 0.05          # the case really carries signal
         est = np.stack([
             np.asarray(fastvoa_score(X, t=600, s2=24, seed=s))
             for s in range(8)]).mean(0)
-        # Correlation across points + bounded absolute error.  The MOA2
-        # AMS estimate is χ²-heavy-tailed (rel-SD ≈ √2 per stream), so the
-        # bounds are set from its verified variance, not tighter.
-        assert np.corrcoef(voa, est)[0, 1] > 0.4
-        assert np.abs(est - voa).mean() < 0.08
+        assert np.corrcoef(voa, est)[0, 1] > 0.8
+        assert np.abs(est - voa).mean() < 0.05
+        # the two endpoints (lowest true VOA by an order of magnitude)
+        # must land in the estimator's bottom two — the ABOD decision
+        # the score exists for
+        assert set(np.argsort(est)[:2].tolist()) == {0, n - 1}
 
     def test_runs_at_paper_params(self):
         x, _ = _clustered_with_outliers(n=200, d=8, n_out=6)

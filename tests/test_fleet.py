@@ -1,0 +1,589 @@
+"""Differential-oracle suite for ``repro.fleet``.
+
+Every fleet op is validated against the single-tenant code it stacks:
+
+* **fleet-of-1** — T=1 with all-zero tenant ids must be BITWISE the
+  plain ``AceDataFilter`` / ``repro.core.sketch`` path (and the
+  windowed fleet-of-1 bitwise the ``repro.window`` ring).
+* **mixed batch ≡ per-tenant sequential** — routing one mixed batch
+  equals giving each tenant the full fixed-shape batch with its own
+  sub-mask through ``sketch.insert_buckets_masked`` (bitwise on counts,
+  n, μ AND the Welford moments — the per-tenant segment reductions sum
+  value sequences whose masked-out entries are exact float zeros).
+* **tenant isolation** — hypothesis property: traffic routed to one
+  tenant leaves every other tenant's state bitwise untouched, flat and
+  windowed (incl. per-tenant rotation clocks).
+* **sharded parity** — the tenant-sharded and composed
+  tenant×table-sharded jit/SPMD placements reproduce the single-device
+  results bitwise on a fake multi-device CPU mesh (subprocess; slow).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig
+from repro.data.pipeline import AceDataFilter
+from repro.fleet import (FleetConfig, FleetDataFilter, admit_thresholds,
+                         fleet_scores, init as fleet_init, insert_masked,
+                         mean_mu_fleet, tenant_view)
+from repro.fleet import window as fw
+from repro.window import ring
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _buckets(rng, B, K, L):
+    return jnp.asarray(rng.integers(0, 1 << K, size=(B, L)), jnp.int32)
+
+
+CFG = AceConfig(dim=16, num_bits=7, num_tables=6, seed=3,
+                welford_min_n=4.0)
+
+# Leaves of a WindowedAceState that are exact integers in every context
+# (counters, item counts, ring pointers) vs the γ-decayed float caches
+# whose cross-context contract is dtype tolerance when γ < 1 (traced
+# contexts may FMA the rotation's subtract-of-product — see ring.rotate).
+_WINDOW_INT_LEAVES = ("counts", "n", "cursor", "tick")
+
+
+def _assert_window_match(got, want, exact_floats: bool):
+    from conftest import assert_allclose_dtype
+    for f in ring.WindowedAceState._fields:
+        a, b = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        if exact_floats or f in _WINDOW_INT_LEAVES:
+            np.testing.assert_array_equal(a, b, err_msg=f)
+        else:
+            assert_allclose_dtype(a, b, err_msg=f)
+
+
+def _filled_fleet(rng, T, steps=4, B=23, cfg=CFG):
+    """A fleet + the per-tenant sequential oracle states, co-evolved."""
+    fs = fleet_init(FleetConfig(ace=cfg, num_tenants=T))
+    singles = [sk.init(cfg) for _ in range(T)]
+    for _ in range(steps):
+        buckets = _buckets(rng, B, cfg.num_bits, cfg.num_tables)
+        tids = jnp.asarray(rng.integers(0, T, size=(B,)), jnp.int32)
+        mask = jnp.asarray(rng.random(B) < 0.7)
+        fs = insert_masked(fs, tids, buckets, mask, cfg)
+        for t in range(T):
+            singles[t] = sk.insert_buckets_masked(
+                singles[t], buckets, jnp.logical_and(mask, tids == t), cfg)
+    return fs, singles
+
+
+class TestFleetOfOne:
+    def test_filter_bitwise_equals_single_tenant(self):
+        """FleetDataFilter(num_tenants=1) ≡ AceDataFilter, bitwise:
+        same keep/margin per step, same final counts/n/Welford."""
+        rng = np.random.default_rng(0)
+        d = 24
+        f1 = AceDataFilter(d_model=d, num_bits=6, num_tables=8,
+                           warmup_items=16.0, alpha=2.0)
+        ff = FleetDataFilter(d_model=d, num_tenants=1, num_bits=6,
+                             num_tables=8, warmup_items=16.0, alpha=2.0)
+        s1, w = f1.init()
+        sf, wf = ff.init()
+        assert bool(jnp.all(w == wf))
+        tids = jnp.zeros((10,), jnp.int32)
+        for i in range(6):
+            feat = jnp.asarray(rng.normal(size=(10, d + 1)), jnp.float32)
+            s1, k1, m1 = f1.step(s1, w, feat)
+            sf, k2, m2 = ff.step(sf, w, feat, tids)
+            assert bool(jnp.all(k1 == k2)), i
+            assert bool(jnp.all(m1 == m2)), i
+        assert bool(jnp.all(s1.counts == sf.counts[0]))
+        assert float(s1.n) == float(sf.n[0])
+        assert float(s1.welford_mean) == float(sf.welford_mean[0])
+        assert float(s1.welford_m2) == float(sf.welford_m2[0])
+
+    @pytest.mark.parametrize("gamma", [1.0, 0.8])
+    def test_windowed_fleet_of_one_bitwise(self, gamma):
+        """T=1 windowed fleet ≡ the plain epoch ring, rotation clock
+        included.  γ=1 (the hard window) is bitwise on every leaf —
+        every quantity is an exact integer in float32.  γ<1 keeps
+        counts/n/cursor/tick bitwise but compares the decayed float
+        caches (tail, ssq, Welford) at dtype tolerance: the ring side's
+        ``maybe_rotate`` cond is a traced context where XLA may FMA the
+        tail's subtract-of-product, rounding ≤1 ulp differently than
+        eager op-by-op (see ring.rotate)."""
+        rng = np.random.default_rng(1)
+        wc = ring.WindowConfig(ace=CFG, num_epochs=3, decay=gamma,
+                               rotate_every=2)
+        fs = fw.init_fleet_window(wc, 1)
+        one = ring.init_window(wc)
+        tids = jnp.zeros((15,), jnp.int32)
+        for _ in range(7):
+            buckets = _buckets(rng, 15, CFG.num_bits, CFG.num_tables)
+            mask = jnp.asarray(rng.random(15) < 0.8)
+            fs = fw.insert_current_fleet(fs, tids, buckets, mask, CFG,
+                                         gamma=gamma)
+            fs = fw.maybe_rotate_fleet(fs, 2, gamma, tenant_ids=tids)
+            one = ring.insert_current(one, buckets, mask, CFG,
+                                      gamma=gamma)
+            one = ring.maybe_rotate(one, 2, gamma)
+        _assert_window_match(fw.tenant_window_view(fs, 0), one,
+                             exact_floats=(gamma == 1.0))
+
+
+class TestMixedBatchVsSequential:
+    def test_flat_insert_bitwise(self):
+        """One mixed-batch ``insert_masked`` ≡ per-tenant sequential
+        ``sketch.insert_buckets_masked`` — bitwise counts/n/μ/M2."""
+        rng = np.random.default_rng(2)
+        T = 5
+        fs, singles = _filled_fleet(rng, T)
+        mus = mean_mu_fleet(fs)
+        for t in range(T):
+            tv = tenant_view(fs, t)
+            assert bool(jnp.all(tv.counts == singles[t].counts)), t
+            assert float(tv.n) == float(singles[t].n), t
+            assert float(tv.welford_mean) == \
+                float(singles[t].welford_mean), t
+            assert float(tv.welford_m2) == float(singles[t].welford_m2), t
+            assert float(mus[t]) == float(sk.mean_mu(singles[t])), t
+
+    def test_thresholds_route_each_tenants_own(self):
+        """admit_thresholds[t] ≡ sketch.admit_threshold(tenant t) bitwise,
+        including per-tenant warmup (−inf only for cold tenants)."""
+        rng = np.random.default_rng(3)
+        T = 4
+        fs, singles = _filled_fleet(rng, T, steps=2, B=11)
+        # starve tenant 0 completely: re-zero its slot
+        from repro.fleet import set_tenant
+        fs = set_tenant(fs, 0, sk.init(CFG))
+        singles[0] = sk.init(CFG)
+        th = admit_thresholds(fs, 2.0, 8.0)
+        for t in range(T):
+            assert float(th[t]) == \
+                float(sk.admit_threshold(singles[t], 2.0, 8.0)), t
+        assert float(th[0]) == -np.inf          # cold tenant still warming
+
+    def test_scores_match_per_tenant_lookup(self):
+        """fleet_scores ≡ sketch.lookup against each item's own tenant."""
+        rng = np.random.default_rng(4)
+        T = 5
+        fs, singles = _filled_fleet(rng, T)
+        B = 19
+        buckets = _buckets(rng, B, CFG.num_bits, CFG.num_tables)
+        tids = jnp.asarray(rng.integers(0, T, size=(B,)), jnp.int32)
+        got = fleet_scores(fs, tids, buckets)
+        for i in range(B):
+            want = sk.lookup(singles[int(tids[i])], buckets[i:i + 1])
+            assert float(got[i]) == float(want[0]), i
+
+    @pytest.mark.parametrize("gamma", [1.0, 0.7])
+    def test_windowed_mixed_vs_sequential_bitwise(self, gamma):
+        """Windowed fleet: mixed-batch inserts + per-tenant clocks ≡
+        per-tenant sequential ring ops — every leaf bitwise for the
+        hard window (γ=1), integer leaves bitwise + float caches at
+        dtype tolerance for γ<1 (cursor/tick included: a tenant's clock
+        only ticks on batches that carried its items)."""
+        rng = np.random.default_rng(5)
+        T = 4
+        wc = ring.WindowConfig(ace=CFG, num_epochs=3, decay=gamma,
+                               rotate_every=2)
+        fs = fw.init_fleet_window(wc, T)
+        singles = [ring.init_window(wc) for _ in range(T)]
+        for _ in range(9):
+            B = 17
+            buckets = _buckets(rng, B, CFG.num_bits, CFG.num_tables)
+            tids = jnp.asarray(rng.integers(0, T, size=(B,)), jnp.int32)
+            mask = jnp.asarray(rng.random(B) < 0.8)
+            fs = fw.insert_current_fleet(fs, tids, buckets, mask, CFG,
+                                         gamma=gamma)
+            fs = fw.maybe_rotate_fleet(fs, 2, gamma, tenant_ids=tids)
+            for t in range(T):
+                if bool(jnp.any(tids == t)):    # absent tenants: no tick
+                    singles[t] = ring.insert_current(
+                        singles[t], buckets,
+                        jnp.logical_and(mask, tids == t), CFG, gamma=gamma)
+                    singles[t] = ring.maybe_rotate(singles[t], 2, gamma)
+        for t in range(T):
+            _assert_window_match(fw.tenant_window_view(fs, t),
+                                 singles[t],
+                                 exact_floats=(gamma == 1.0))
+
+
+class TestTenantIsolation:
+    @settings(max_examples=15, deadline=None)
+    @given(T=st.integers(2, 7), B=st.integers(1, 40), seed=st.integers(0, 99))
+    def test_insert_leaves_other_tenants_bitwise_unchanged(self, T, B,
+                                                           seed):
+        """Hypothesis property: inserting a batch routed entirely to
+        tenant ``a`` leaves every other tenant's counts AND moments
+        bitwise unchanged."""
+        rng = np.random.default_rng(seed)
+        fs, _ = _filled_fleet(rng, T, steps=2, B=13)
+        a = int(rng.integers(0, T))
+        buckets = _buckets(rng, B, CFG.num_bits, CFG.num_tables)
+        tids = jnp.full((B,), a, jnp.int32)
+        mask = jnp.asarray(rng.random(B) < 0.9)
+        fs2 = insert_masked(fs, tids, buckets, mask, CFG)
+        for t in range(T):
+            if t == a:
+                continue
+            before, after = tenant_view(fs, t), tenant_view(fs2, t)
+            for x, y in zip(before, after):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                              err_msg=f"tenant {t}")
+
+    @settings(max_examples=10, deadline=None)
+    @given(T=st.integers(2, 5), steps=st.integers(1, 6),
+           seed=st.integers(0, 99))
+    def test_windowed_isolation_and_clocks(self, T, steps, seed):
+        """Windowed fleet: tenant ``a``'s traffic (inserts AND the
+        rotations its clock triggers) never perturbs tenant ``b``."""
+        rng = np.random.default_rng(seed)
+        wc = ring.WindowConfig(ace=CFG, num_epochs=3, decay=0.9,
+                               rotate_every=2)
+        fs = fw.init_fleet_window(wc, T)
+        a = int(rng.integers(0, T))
+        snap = jax.tree.map(lambda x: np.asarray(x), fs)
+        for _ in range(steps):
+            buckets = _buckets(rng, 9, CFG.num_bits, CFG.num_tables)
+            tids = jnp.full((9,), a, jnp.int32)
+            fs = fw.insert_current_fleet(
+                fs, tids, buckets, jnp.ones((9,), bool), CFG, gamma=0.9)
+            fs = fw.maybe_rotate_fleet(fs, 2, 0.9, tenant_ids=tids)
+        assert int(fs.tick[a]) == steps
+        for t in range(T):
+            if t == a:
+                continue
+            before = fw.tenant_window_view(
+                fw.WindowedFleetState(*(jnp.asarray(x) for x in snap)), t)
+            after = fw.tenant_window_view(fs, t)
+            for x, y in zip(before, after):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                              err_msg=f"tenant {t}")
+
+    def test_idle_tenant_parked_on_boundary_never_rerotates(self):
+        """Regression: a tenant whose tick sits ON a rotation boundary
+        (tick % R == 0) must NOT rotate again on later batches it is
+        absent from — the clock predicate is presence-gated, so pure
+        neighbour traffic can never cycle an idle tenant's cursor and
+        expire its history."""
+        wc = ring.WindowConfig(ace=CFG, num_epochs=3, decay=1.0,
+                               rotate_every=2)
+        fs = fw.init_fleet_window(wc, 2)
+        rng = np.random.default_rng(11)
+        ones = jnp.ones((9,), bool)
+        # tenant 0: exactly R=2 steps -> tick parked on the boundary
+        for _ in range(2):
+            buckets = _buckets(rng, 9, CFG.num_bits, CFG.num_tables)
+            tids = jnp.zeros((9,), jnp.int32)
+            fs = fw.insert_current_fleet(fs, tids, buckets, ones, CFG)
+            fs = fw.maybe_rotate_fleet(fs, 2, tenant_ids=tids)
+        assert int(fs.tick[0]) == 2 and int(fs.cursor[0]) == 1
+        snap0 = jax.tree.map(np.asarray, fw.tenant_window_view(fs, 0))
+        # tenant-1-only traffic: tenant 0 must stay bitwise frozen
+        for _ in range(3):
+            buckets = _buckets(rng, 9, CFG.num_bits, CFG.num_tables)
+            tids = jnp.ones((9,), jnp.int32)
+            fs = fw.insert_current_fleet(fs, tids, buckets, ones, CFG)
+            fs = fw.maybe_rotate_fleet(fs, 2, tenant_ids=tids)
+        for x, y in zip(snap0, fw.tenant_window_view(fs, 0)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert int(fs.cursor[0]) == 1          # no re-fire
+        assert float(jnp.sum(fs.n[0])) > 0     # history intact
+
+
+class TestValidationGuards:
+    def test_flat_offset_overflow_raises(self):
+        """T·L·2^K past the int32 offset range must fail loudly at
+        config/init time — the routed gather offsets would wrap and
+        silently corrupt high tenants."""
+        paper = AceConfig(dim=30, num_bits=15, num_tables=50)
+        FleetConfig(ace=paper, num_tenants=1310)       # still fits
+        with pytest.raises(ValueError, match="int32 offset"):
+            FleetConfig(ace=paper, num_tenants=2048)
+        with pytest.raises(ValueError, match="int32 offset"):
+            fw.init_fleet_window(ring.WindowConfig(
+                ace=paper, num_epochs=4, rotate_every=2), 512)
+
+    def test_run_rejects_tenant_ids_for_plain_filter(self):
+        """run() with a non-fleet filter must reject tenant_ids instead
+        of silently dropping them (and leaking the tenant buffer)."""
+        from repro.stream import StreamRunner
+        flat = AceDataFilter(d_model=8, num_bits=6, num_tables=8)
+        r = StreamRunner(flat, chunk_T=2)
+        state, w = r.init()
+        batches = [np.zeros((4, 9), np.float32)] * 2
+        tids = [np.zeros((4,), np.int32)] * 2
+        with pytest.raises(ValueError, match="not a fleet"):
+            r.run(state, w, batches, tenant_ids=tids)
+
+
+class TestFleetStreamRunner:
+    def _mk(self, T=4, B=8, CT=6, d=12):
+        from repro.stream import StreamRunner
+        ff = FleetDataFilter(d_model=d, num_tenants=T, num_bits=6,
+                             num_tables=8, warmup_items=8.0, alpha=2.0)
+        return ff, StreamRunner(ff, chunk_T=CT), T, B, CT, d
+
+    def test_chunk_equals_sequential_bitwise(self):
+        """One fleet scan chunk ≡ CT sequential ``step`` calls, every
+        state leaf bitwise; one executable."""
+        ff, runner, T, B, CT, d = self._mk()
+        rng = np.random.default_rng(6)
+        state, w = runner.init()
+        feats = jnp.asarray(rng.normal(size=(CT, B, d + 1)), jnp.float32)
+        tids = jnp.asarray(rng.integers(0, T, size=(CT, B)), jnp.int32)
+        seq, _ = ff.init()
+        for i in range(CT):
+            seq, _, _ = ff.step(seq, w, feats[i], tids[i])
+        out, summary = runner.consume(state, w, feats, tids)
+        for got, want in zip(out, seq):
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+        # second chunk: same executable
+        runner.consume(out, w, feats, tids)
+        assert runner.trace_count == 1
+
+    def test_fleet_summary_per_tenant_rows(self):
+        """FleetChunkSummary: per-tenant item/kept counts add up, n is
+        the per-tenant vector."""
+        from repro.stream import FleetChunkSummary, StreamRunner
+        T, B, CT, d = 4, 8, 6, 12
+        # warmup larger than the whole chunk: every verdict is "keep",
+        # so kept == items exactly (per-tenant thresholds stay -inf)
+        ff = FleetDataFilter(d_model=d, num_tenants=T, num_bits=6,
+                             num_tables=8, warmup_items=1e6, alpha=2.0)
+        runner = StreamRunner(ff, chunk_T=CT)
+        rng = np.random.default_rng(7)
+        state, w = runner.init()
+        feats = jnp.asarray(rng.normal(size=(CT, B, d + 1)), jnp.float32)
+        tids = jnp.asarray(rng.integers(0, T, size=(CT, B)), jnp.int32)
+        state, summary = runner.consume(state, w, feats, tids)
+        s = jax.device_get(summary)
+        assert isinstance(s, FleetChunkSummary)
+        assert s.per_tenant_items.shape == (T,)
+        assert s.per_tenant_items.sum() == CT * B
+        assert (s.per_tenant_kept <= s.per_tenant_items).all()
+        np.testing.assert_array_equal(s.n, np.asarray(state.n))
+        # warmup admits everything → kept == items on a cold fleet
+        assert s.kept_frac == 1.0
+
+    def test_tenant_ids_contract_validated(self):
+        ff, runner, T, B, CT, d = self._mk()
+        state, w = runner.init()
+        feats = jnp.zeros((CT, B, d + 1), jnp.float32)
+        with pytest.raises(AssertionError):
+            runner.consume(state, w, feats)            # missing tids
+        flat = AceDataFilter(d_model=d, num_bits=6, num_tables=8)
+        from repro.stream import StreamRunner
+        r2 = StreamRunner(flat, chunk_T=CT)
+        s2, w2 = r2.init()
+        with pytest.raises(AssertionError):
+            r2.consume(s2, w2, feats,
+                       jnp.zeros((CT, B), jnp.int32))  # spurious tids
+
+    def test_windowed_fleet_runner_rejected(self):
+        from repro.stream import StreamRunner
+        ff = FleetDataFilter(d_model=8, num_tenants=2)
+        with pytest.raises(NotImplementedError):
+            StreamRunner(ff, chunk_T=4, rotate_every=2)
+
+
+class TestFleetGuardrail:
+    def test_tenant_isolation_of_thresholds(self):
+        """A traffic regime admitted for tenant a must not move tenant
+        b's threshold: b's state stays bitwise frozen while a churns."""
+        from repro.serve.engine import Guardrail, GuardrailConfig
+        g = Guardrail(GuardrailConfig(d_model=12, num_bits=6,
+                                      num_tables=8, warmup_items=8.0,
+                                      num_tenants=3))
+        rng = np.random.default_rng(8)
+        emb = jnp.asarray(rng.normal(size=(8, 3, 12)), jnp.float32)
+        g.admit(emb, jnp.asarray([0, 0, 1, 1, 2, 2, 0, 1], jnp.int32))
+        b_before = jax.tree.map(np.asarray, tenant_view(g.state, 2))
+        for _ in range(4):
+            e = jnp.asarray(rng.normal(size=(8, 3, 12)), jnp.float32)
+            g.admit(e, jnp.zeros((8,), jnp.int32))     # tenant 0 only
+        assert g.trace_count == 1                      # one executable
+        b_after = tenant_view(g.state, 2)
+        for x, y in zip(b_before, b_after):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_kernel_path_matches_jnp_path(self):
+        """use_kernels=True fleet admission ≡ the jnp fleet admission
+        (same masks, bitwise states) across several mixed batches."""
+        from repro.serve.engine import Guardrail, GuardrailConfig
+        gc = GuardrailConfig(d_model=12, num_bits=6, num_tables=8,
+                             warmup_items=8.0, num_tenants=3)
+        gj, gk = Guardrail(gc), Guardrail(gc, use_kernels=True)
+        rng = np.random.default_rng(9)
+        for _ in range(3):
+            emb = jnp.asarray(rng.normal(size=(8, 3, 12)), jnp.float32)
+            tids = jnp.asarray(rng.integers(0, 3, size=(8,)), jnp.int32)
+            mj = gj.admit(emb, tids)
+            mk = gk.admit(emb, tids)
+            np.testing.assert_array_equal(mj, mk)
+        np.testing.assert_array_equal(np.asarray(gj.state.counts),
+                                      np.asarray(gk.state.counts))
+
+    def test_windowed_fleet_per_tenant_clocks(self):
+        """Per-tenant rotation clocks: only tenants that received
+        traffic tick; an idle tenant's cursor never moves."""
+        from repro.serve.engine import Guardrail, GuardrailConfig
+        g = Guardrail(GuardrailConfig(d_model=12, num_bits=6,
+                                      num_tables=8, warmup_items=8.0,
+                                      num_tenants=3, window_epochs=3,
+                                      rotate_every=2))
+        rng = np.random.default_rng(10)
+        for _ in range(5):
+            emb = jnp.asarray(rng.normal(size=(6, 3, 12)), jnp.float32)
+            g.admit(emb, jnp.asarray([0, 0, 0, 1, 1, 0], jnp.int32))
+        ticks = np.asarray(g.state.tick)
+        cursors = np.asarray(g.state.cursor)
+        assert ticks[0] == 5 and ticks[1] == 5 and ticks[2] == 0
+        assert cursors[2] == 0                       # idle: never rotated
+        assert cursors[0] == (5 // 2) % 3            # 2 rotations
+
+
+# ---------------------------------------------------------------------------
+# Sharded parity (fake multi-device CPU; subprocess — slow lane).
+# ---------------------------------------------------------------------------
+
+pytest_slow = pytest.mark.slow
+
+
+def run_py(code: str, devices: int = 2, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest_slow
+class TestShardedFleetParity:
+    def test_tenant_sharded_bitwise(self):
+        """jit/SPMD fleet filter steps on a tenant-sharded placement ≡
+        unplaced single-device, bitwise (tenants never couple, so the
+        tenant axis is collective-free)."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.fleet import FleetDataFilter
+            from repro.dist.sketch_parallel import fleet_shardings_for_layout
+
+            ff = FleetDataFilter(d_model=8, num_tenants=4, num_bits=6,
+                                 num_tables=8, warmup_items=8.0)
+            mesh = jax.make_mesh((2, 1), ("data", "model"))
+            state, w = ff.init()
+            rng = np.random.default_rng(0)
+            feats = [jnp.asarray(rng.normal(size=(12, 9)), jnp.float32)
+                     for _ in range(4)]
+            tids = [jnp.asarray(rng.integers(0, 4, size=(12,)), jnp.int32)
+                    for _ in range(4)]
+
+            ref = state
+            for f, t in zip(feats, tids):
+                ref, _, _ = ff.step(ref, w, f, t)
+
+            sh = fleet_shardings_for_layout(ff.ace_cfg, mesh, 4,
+                                            "tenant_sharded")
+            with jax.set_mesh(mesh):
+                st = jax.device_put(state, sh)
+                step = jax.jit(ff.step)
+                for f, t in zip(feats, tids):
+                    st, _, _ = step(st, w, f, t)
+            for got, want in zip(st, ref):
+                assert bool(jnp.all(jnp.asarray(got) == want)), "leaf differs"
+            print("TENANT_SHARDED_OK")
+        """)
+        assert "TENANT_SHARDED_OK" in out
+
+    def test_tenant_table_composed_bitwise(self):
+        """The composed tenant×table 2-D layout on a (2, 2) mesh stays
+        bitwise equal to single-device — tenant and L-axis sharding cut
+        orthogonal dims of the same (T, L, 2^K) array."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.fleet import FleetDataFilter
+            from repro.dist.sketch_parallel import fleet_shardings_for_layout
+
+            ff = FleetDataFilter(d_model=8, num_tenants=4, num_bits=6,
+                                 num_tables=8, warmup_items=8.0)
+            mesh = jax.make_mesh((2, 2), ("data", "model"))
+            state, w = ff.init()
+            rng = np.random.default_rng(1)
+            feats = [jnp.asarray(rng.normal(size=(12, 9)), jnp.float32)
+                     for _ in range(3)]
+            tids = [jnp.asarray(rng.integers(0, 4, size=(12,)), jnp.int32)
+                    for _ in range(3)]
+            ref = state
+            for f, t in zip(feats, tids):
+                ref, _, _ = ff.step(ref, w, f, t)
+            sh = fleet_shardings_for_layout(ff.ace_cfg, mesh, 4,
+                                            "tenant_table_sharded")
+            with jax.set_mesh(mesh):
+                st = jax.device_put(state, sh)
+                step = jax.jit(ff.step)
+                for f, t in zip(feats, tids):
+                    st, _, _ = step(st, w, f, t)
+            for got, want in zip(st, ref):
+                assert bool(jnp.all(jnp.asarray(got) == want)), "leaf differs"
+            print("COMPOSED_OK")
+        """, devices=4)
+        assert "COMPOSED_OK" in out
+
+    def test_fleet_runner_sharded_bitwise(self):
+        """StreamRunner(mesh, tenant_sharded) chunks ≡ unsharded chunks
+        bitwise — the same donated scan program in both placements."""
+        out = run_py("""
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.fleet import FleetDataFilter
+            from repro.stream import StreamRunner
+
+            ff = FleetDataFilter(d_model=8, num_tenants=4, num_bits=6,
+                                 num_tables=8, warmup_items=8.0)
+            rng = np.random.default_rng(2)
+            feats = jnp.asarray(rng.normal(size=(4, 12, 9)), jnp.float32)
+            tids = jnp.asarray(rng.integers(0, 4, size=(4, 12)), jnp.int32)
+
+            r0 = StreamRunner(ff, chunk_T=4)
+            s0, w = r0.init()
+            s0, sum0 = r0.consume(s0, w, feats, tids)
+
+            mesh = jax.make_mesh((2, 1), ("data", "model"))
+            with jax.set_mesh(mesh):
+                r1 = StreamRunner(ff, chunk_T=4, mesh=mesh,
+                                  sketch_layout="tenant_sharded")
+                s1, w1 = r1.init()
+                s1, sum1 = r1.consume(s1, w1, feats, tids)
+            for got, want in zip(s1, s0):
+                assert bool(jnp.all(jnp.asarray(got) == jnp.asarray(want)))
+            np.testing.assert_array_equal(np.asarray(sum1.per_tenant_kept),
+                                          np.asarray(sum0.per_tenant_kept))
+            print("RUNNER_SHARDED_OK")
+        """)
+        assert "RUNNER_SHARDED_OK" in out
+
+    def test_indivisible_tenants_raise(self):
+        out = run_py("""
+            import jax
+            from repro.core.sketch import AceConfig
+            from repro.dist.sketch_parallel import fleet_shardings_for_layout
+            cfg = AceConfig(dim=4, num_bits=4, num_tables=8, seed=0)
+            mesh = jax.make_mesh((2, 1), ("data", "model"))
+            try:
+                fleet_shardings_for_layout(cfg, mesh, 5, "tenant_sharded")
+            except ValueError as e:
+                assert "5" in str(e)
+                print("RAISED_OK")
+        """)
+        assert "RAISED_OK" in out

@@ -23,6 +23,7 @@ from repro.core.srp import SrpConfig, hash_buckets, make_projections
 from repro.kernels import ref as R
 from repro.kernels import ops
 from repro.kernels.ace_admit_fused import ace_admit_fused
+from repro.kernels.ace_fleet_score import ace_fleet_score
 from repro.kernels.ace_query import ace_query
 from repro.kernels.ace_score_fused import ace_score_fused
 from repro.kernels.ace_update import (HIST_MAX_BUCKETS, ace_update,
@@ -181,6 +182,35 @@ class TestKernelParityMatrix:
             jnp.broadcast_to(admit.astype(counts.dtype)[:, None],
                              buckets.shape))
         return nc, scores, admit, buckets
+
+    @pytest.mark.parametrize("hash_mode,interpret", MODES)
+    @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
+    @pytest.mark.parametrize("T", [1, 5])
+    def test_fleet_score(self, B, d, K, L, T, hash_mode, interpret):
+        """Fused multi-tenant scoring (one launch under dense; SRHT hash
+        kernel + jnp fleet gather under srht) ≡ the tenant-routed
+        reference, to float reduction order; T=1 with zero ids must also
+        equal the single-tenant fused score exactly (same reference)."""
+        cfg, w, x, _c, _b = self._data(B, d, K, L, hash_mode)
+        rng = np.random.default_rng(B + T)
+        counts = jnp.asarray(rng.integers(0, 9, size=(T, L, 1 << K)),
+                             jnp.int32)
+        tids = jnp.asarray(rng.integers(0, T, size=(B,)), jnp.int32)
+        if hash_mode == "srht":
+            from repro.fleet.state import FleetState, fleet_scores
+            st = FleetState(counts, jnp.zeros((T,)), jnp.zeros((T,)),
+                            jnp.zeros((T,)))
+            got = fleet_scores(st, tids,
+                               srht_hash(x, cfg, interpret=interpret))
+        else:
+            got = ace_fleet_score(counts, x, tids, w, cfg,
+                                  interpret=interpret)
+        want = R.ace_fleet_score_ref(counts, x, tids, w, cfg)
+        assert_allclose_dtype(got, want, rtol=1e-6)
+        if T == 1 and hash_mode == "dense":
+            single = ace_score_fused(counts[0], x, w, cfg,
+                                     interpret=interpret)
+            assert_allclose_dtype(got, single, rtol=1e-6)
 
     @pytest.mark.parametrize("hash_mode,interpret", MODES)
     @pytest.mark.parametrize("B,d,K,L", MATRIX_SHAPES)
@@ -412,6 +442,36 @@ class TestOpsDispatch:
             assert bool(jnp.all(mask_k == mask_j))
         assert bool(jnp.all(st_k.counts == st_j.counts))
         assert float(st_k.n) == float(st_j.n)
+        assert_allclose_dtype(st_k.welford_mean, st_j.welford_mean,
+                              rtol=1e-6)
+        assert_allclose_dtype(st_k.welford_m2, st_j.welford_m2,
+                              rtol=1e-5)
+
+    def test_ops_fleet_admit_matches_fleet_jnp_path(self):
+        """Kernel-path fleet admission ≡ hash→route→threshold→insert on
+        the pure-jnp fleet path, per-tenant Welford streams included."""
+        from repro.core.srp import hash_buckets
+        from repro.fleet import (FleetConfig, admit_thresholds,
+                                 fleet_scores, init, insert_masked)
+        cfg = AceConfig(dim=14, num_bits=7, num_tables=10, seed=9,
+                        welford_min_n=8.0)
+        rng = np.random.default_rng(15)
+        st_k = st_j = init(FleetConfig(ace=cfg, num_tenants=3))
+        from repro.core import sketch as sk
+        w = sk.make_params(cfg)
+        for i in range(3):
+            q = _x(24, 14, seed=3 + i)
+            tids = jnp.asarray(rng.integers(0, 3, size=(24,)), jnp.int32)
+            st_k, mask_k = ops.ace_fleet_admit(st_k, q, tids, w, cfg,
+                                               alpha=1.0,
+                                               warmup_items=16.0)
+            buckets = hash_buckets(q, w, cfg.srp)
+            scores = fleet_scores(st_j, tids, buckets)
+            mask_j = scores >= admit_thresholds(st_j, 1.0, 16.0)[tids]
+            st_j = insert_masked(st_j, tids, buckets, mask_j, cfg)
+            assert bool(jnp.all(mask_k == mask_j))
+        assert bool(jnp.all(st_k.counts == st_j.counts))
+        assert bool(jnp.all(st_k.n == st_j.n))
         assert_allclose_dtype(st_k.welford_mean, st_j.welford_mean,
                               rtol=1e-6)
         assert_allclose_dtype(st_k.welford_m2, st_j.welford_m2,

@@ -1,0 +1,230 @@
+"""CI perf-regression gate: diff fresh BENCH_*.json against baselines.
+
+Benchmarks in this repo run inside shared CI containers whose timing
+noise is brutal — the committed ``BENCH_fleet.json`` records rep
+speedups spanning 18.7x..77.4x for the SAME code.  A naive
+"fresh >= 0.9 * baseline" gate would flake weekly.  This gate is built
+so that noise alone can never fail it:
+
+1. **Gated metrics only.**  Only numeric leaves whose (dotted) name ends
+   in ``items_per_s`` or whose leaf name starts with ``speedup`` /
+   ``eff_bw`` are compared — all are higher-is-better throughput-shaped
+   numbers.  Config echo (batch sizes, bit widths) and latency/ms leaves
+   are ignored: configs are not regressions and the ms leaves are the
+   reciprocals of gated ones.
+
+2. **Best-of-reps fresh value.**  When several fresh files exist for one
+   benchmark (CI can run the bench N times), each file contributes its
+   value (median for list-valued leaves, the scalar otherwise) and the
+   gate takes the BEST across files.  A regression must reproduce in
+   every reflight to fail; one descheduled run cannot.
+
+3. **Adaptive noise floor.**  The pass threshold for a metric is
+
+       threshold = baseline * min(fail_ratio, spread * safety)
+
+   where ``spread`` is the baseline's own observed rep spread
+   (min_rep / median_rep over any ``rep_*`` list in that baseline file,
+   e.g. 18.67/60.25 = 0.31 for the fleet bench).  A benchmark that
+   demonstrably wobbles 3x in the container gets a 3x-wide gate; a
+   stable one gets the tight ``fail_ratio`` gate.  ``safety`` (< 1)
+   widens the observed spread a little: three committed reps
+   under-sample the true noise distribution.
+
+Failure conditions (exit 1):
+  - a gated metric's best fresh value is below its threshold,
+  - a gated metric present in the baseline is MISSING from the fresh
+    run (a silently-dropped benchmark is the stealthiest regression),
+  - a baseline benchmark has no fresh file at all.
+
+A fresh benchmark with no baseline is a NOTE, not a failure — new
+benches land before their baselines are blessed.  Exit 2 is reserved
+for usage/IO errors (unreadable JSON, empty dirs).  ``--report`` writes
+the full per-metric comparison as JSON for the CI artifact.
+
+Usage:
+    python scripts/bench_gate.py \
+        --baseline-dir benchmarks/baselines --fresh-dir . \
+        --report bench_gate_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+# Leaf-name patterns that make a numeric value a gated metric
+# (higher-is-better by construction of every BENCH writer in this repo).
+_GATED = re.compile(r"(^|\.)(items_per_s|speedup[^.]*|eff_bw[^.]*)$")
+# rep_* lists feed the adaptive noise floor, never the gate directly.
+_REP = re.compile(r"(^|\.)rep_[^.]*$")
+
+
+def _flatten(node, prefix=""):
+    """dict tree -> {dotted_path: leaf} for numeric / numeric-list leaves."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            path = f"{prefix}.{k}" if prefix else k
+            out.update(_flatten(v, path))
+    elif isinstance(node, bool):
+        pass
+    elif isinstance(node, (int, float)):
+        out[prefix] = float(node)
+    elif isinstance(node, list) and node and all(
+            isinstance(x, (int, float)) and not isinstance(x, bool)
+            for x in node):
+        out[prefix] = [float(x) for x in node]
+    return out
+
+
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def _value(leaf):
+    """Gate value of a leaf: median for rep lists, the scalar otherwise."""
+    return _median(leaf) if isinstance(leaf, list) else leaf
+
+
+def _spread_ratio(leaves) -> float:
+    """Observed baseline rep spread: min over rep_* lists of
+    min/median (1.0 when no rep list exists — no evidence of noise)."""
+    ratio = 1.0
+    for path, leaf in leaves.items():
+        if _REP.search(path) and isinstance(leaf, list):
+            med = _median(leaf)
+            if med > 0:
+                ratio = min(ratio, min(leaf) / med)
+    return ratio
+
+
+def _bench_name(path: str) -> str:
+    """BENCH_fleet.json / BENCH_fleet.rep2.json -> 'fleet'."""
+    stem = os.path.basename(path)
+    stem = re.sub(r"^BENCH_", "", stem)
+    stem = re.sub(r"\.json$", "", stem)
+    return stem.split(".")[0]
+
+
+def _load_dir(dirname: str):
+    """-> {bench_name: [flattened leaf dicts, one per file]}"""
+    out: dict = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise SystemExit(f"bench_gate: cannot read {path}: {e}")
+        out.setdefault(_bench_name(path), []).append(_flatten(data))
+    return out
+
+
+def compare(baselines: dict, fresh: dict, *, fail_ratio: float,
+            safety: float) -> dict:
+    """Pure comparison (tests drive this directly): -> report dict with
+    ``failures``, ``passes``, ``notes`` lists and an ``ok`` bool."""
+    failures, passes, notes = [], [], []
+
+    for bench, base_files in sorted(baselines.items()):
+        fresh_files = fresh.get(bench)
+        if not fresh_files:
+            failures.append({
+                "bench": bench, "metric": None,
+                "reason": "baseline benchmark has no fresh BENCH file"})
+            continue
+        # Baseline value per metric: median across baseline files.
+        base_metrics: dict = {}
+        spread = 1.0
+        for leaves in base_files:
+            spread = min(spread, _spread_ratio(leaves))
+            for path, leaf in leaves.items():
+                if _GATED.search(path):
+                    base_metrics.setdefault(path, []).append(_value(leaf))
+        floor_ratio = min(fail_ratio, spread * safety)
+        for path, vals in sorted(base_metrics.items()):
+            base_v = _median(vals)
+            fresh_vals = [_value(leaves[path]) for leaves in fresh_files
+                          if path in leaves]
+            if not fresh_vals:
+                failures.append({
+                    "bench": bench, "metric": path, "baseline": base_v,
+                    "reason": "metric missing from fresh run"})
+                continue
+            best = max(fresh_vals)              # best-of-reps (see module
+            threshold = base_v * floor_ratio    # docstring, items 2-3)
+            entry = {
+                "bench": bench, "metric": path, "baseline": base_v,
+                "fresh_best": best, "threshold": threshold,
+                "floor_ratio": floor_ratio, "baseline_spread": spread,
+            }
+            if best < threshold:
+                entry["reason"] = (
+                    f"best fresh {best:.4g} < threshold {threshold:.4g} "
+                    f"({floor_ratio:.2f} x baseline {base_v:.4g})")
+                failures.append(entry)
+            else:
+                passes.append(entry)
+
+    for bench in sorted(set(fresh) - set(baselines)):
+        notes.append({"bench": bench,
+                      "reason": "new benchmark — no baseline yet"})
+
+    return {"ok": not failures, "fail_ratio": fail_ratio,
+            "safety": safety, "failures": failures, "passes": passes,
+            "notes": notes}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Perf-regression gate over BENCH_*.json files.")
+    ap.add_argument("--baseline-dir", required=True)
+    ap.add_argument("--fresh-dir", required=True)
+    ap.add_argument("--report", default=None,
+                    help="write the full comparison JSON here")
+    ap.add_argument("--fail-ratio", type=float, default=0.5,
+                    help="max allowed fresh/baseline drop for stable "
+                         "benches (default 0.5)")
+    ap.add_argument("--safety", type=float, default=0.8,
+                    help="multiplier widening the observed baseline rep "
+                         "spread (default 0.8)")
+    args = ap.parse_args(argv)
+
+    baselines = _load_dir(args.baseline_dir)
+    fresh = _load_dir(args.fresh_dir)
+    if not baselines:
+        print(f"bench_gate: no BENCH_*.json under {args.baseline_dir}",
+              file=sys.stderr)
+        return 2
+    if not fresh:
+        print(f"bench_gate: no BENCH_*.json under {args.fresh_dir}",
+              file=sys.stderr)
+        return 2
+
+    report = compare(baselines, fresh, fail_ratio=args.fail_ratio,
+                     safety=args.safety)
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2)
+
+    for n in report["notes"]:
+        print(f"NOTE  {n['bench']}: {n['reason']}")
+    for p in report["passes"]:
+        print(f"PASS  {p['bench']}.{p['metric']}: "
+              f"{p['fresh_best']:.4g} vs baseline {p['baseline']:.4g} "
+              f"(floor {p['floor_ratio']:.2f})")
+    for fl in report["failures"]:
+        metric = fl.get("metric") or "<bench>"
+        print(f"FAIL  {fl['bench']}.{metric}: {fl['reason']}")
+    print(f"bench_gate: {len(report['passes'])} pass, "
+          f"{len(report['failures'])} fail, {len(report['notes'])} new")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

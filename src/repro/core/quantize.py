@@ -1,0 +1,294 @@
+"""Quantized count planes: narrow (int8/int16) counters + overflow escalation.
+
+ACE's memory pitch is "a detector is a few MB of counts" — but the repo's
+tables default to 4-byte counters, so every full-table sweep (the μ
+closed form), every gather, and every resident fleet/window table pays 4×
+the bandwidth and HBM the data needs.  The In-DRAM working-set counting
+line (PAPERS.md, arXiv 1902.04143) shows the classic fix: keep the plane
+in a NARROW dtype and *promote* the rare counter that overflows into a
+small side table, so accuracy is exact while the memory is set by the
+common case.
+
+This module is that fix for the ACE sketch algebra:
+
+* the **narrow plane** stores ``min(count, CAP)`` per bucket in int8 /
+  int16 (CAP = 127 / 32767 — the dtype max, so promotion fires at
+  exactly the saturation boundary);
+* the **escalation table** (:class:`EscTable`) holds the excess
+  ``count − CAP`` for the (few) promoted buckets as a fixed-capacity
+  sorted array of flat element offsets — fixed-shape, device-resident,
+  jit/scan/donation-safe like every other piece of sketch state;
+* the **logical value** of a bucket is ``narrow + excess`` everywhere a
+  count is read (scores, μ, merges), so estimates are EXACT past the
+  dtype max as long as the promoted set fits ``esc_capacity`` (overflow
+  beyond capacity is counted in ``lost`` — loud in diagnostics, never
+  silent corruption).
+
+Exactness contract (property-tested in tests/test_quantized_counts.py):
+below saturation the narrow plane IS the count array — inserts, deletes,
+merges, scores and μ are bitwise the float32/int32 oracle's, because the
+gathered integers and the float summation orders are identical.  At and
+past saturation, reads reconstruct the exact logical counts through the
+escalation table, so scores/μ stay exact (not approximate) while the
+plane stays narrow.
+
+The scatter (:func:`quantized_scatter`) is the one nontrivial op: a plain
+``.at[].add`` on a narrow dtype WRAPS at the dtype max (int8: 127+1 →
+−128) with no error, so the masked-insert hot path instead computes each
+touched bucket's exact post-value from (pre-narrow + pre-excess +
+within-batch collision multiplicity) and scatter-SETS the saturated
+value — every duplicate writes the same value, so the scatter is
+deterministic, and the per-item logical post-values come out for free
+(they are exactly the post-insert gathers every insert path already
+needs for its Welford fold).
+
+Scope: the escalation path is wired for the FLAT sketch
+(``repro.core.sketch.AceState``).  Window rings and fleet tables take
+narrow planes (the bandwidth/memory win — their count reads all go
+through ``astype(float32)`` gathers, which are dtype-generic), but their
+promotion is not wired: ``WindowConfig``/``FleetConfig`` reject
+``esc_capacity > 0`` loudly rather than silently wrapping.  See
+docs/ARCHITECTURE.md §7.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Free escalation slots carry this offset; int32 max sorts AFTER every
+# real flat offset (planes are validated flat-addressable, i.e. their
+# element count stays below int32 max), so the offs array stays sorted
+# with the live entries first and searchsorted lookups stay O(log C).
+SENTINEL = 2**31 - 1
+
+_NARROW = ("int8", "int16")
+
+
+def is_narrow(dtype) -> bool:
+    """True for the count dtypes that can saturate (int8/int16)."""
+    return jnp.dtype(dtype).name in _NARROW
+
+
+def cap_for(dtype) -> int:
+    """The saturation cap of a narrow plane — the dtype max itself, so
+    promotion fires at exactly 127 / 32767 (the tested contract)."""
+    return int(jnp.iinfo(jnp.dtype(dtype)).max)
+
+
+class EscTable(NamedTuple):
+    """Fixed-capacity overflow side table (a pytree — jit/scan safe).
+
+    offs: (C,) int32 — SORTED flat element offsets of promoted buckets;
+          free slots hold :data:`SENTINEL` (sorts last).
+    vals: (C,) int32 — excess above the narrow cap (> 0 for live slots,
+          0 for free ones).  logical = narrow + excess.
+    lost: ()  float32 — total excess dropped because the table was full
+          (0.0 while estimates are exact; diagnostics, never silent).
+    """
+
+    offs: jax.Array
+    vals: jax.Array
+    lost: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.offs.shape[0]
+
+
+def init_esc(capacity: int) -> EscTable:
+    if capacity < 1:
+        raise ValueError(f"esc capacity must be >= 1, got {capacity}")
+    return EscTable(
+        offs=jnp.full((capacity,), SENTINEL, jnp.int32),
+        vals=jnp.zeros((capacity,), jnp.int32),
+        lost=jnp.zeros((), jnp.float32),
+    )
+
+
+def esc_lookup(esc: EscTable, offs: jax.Array) -> jax.Array:
+    """Excess value at each flat offset (0 where not promoted).
+
+    One searchsorted against the sorted live prefix — offs any int32
+    shape, returns the same shape int32."""
+    C = esc.offs.shape[0]
+    idx = jnp.clip(jnp.searchsorted(esc.offs, offs), 0, C - 1) \
+        .astype(jnp.int32)
+    hit = jnp.take(esc.offs, idx) == offs
+    return jnp.where(hit, jnp.take(esc.vals, idx), 0)
+
+
+def gather_logical(plane: jax.Array, esc: EscTable,
+                   offs: jax.Array) -> jax.Array:
+    """Exact logical counts at flat element offsets: narrow + excess.
+
+    int32 out (same shape as ``offs``); callers ``astype(float32)`` in
+    the same position the unquantized paths cast their gathers, so the
+    downstream float sequences stay identical."""
+    nar = jnp.take(plane.reshape(-1), offs).astype(jnp.int32)
+    return nar + esc_lookup(esc, offs)
+
+
+def batch_scores_logical(plane: jax.Array, esc: EscTable,
+                         buckets: jax.Array) -> jax.Array:
+    """``sketch.batch_scores`` over the exact logical counts.
+
+    Same row-sum + ONE reciprocal 1/L multiply as the unquantized
+    helper (the repo-wide bitwise-parity convention); below saturation
+    the gathered integers are identical, so this IS batch_scores
+    bitwise."""
+    L, nbuckets = plane.shape
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+    offs = buckets + rows * nbuckets
+    g = gather_logical(plane, esc, offs).astype(jnp.float32)     # (B, L)
+    return jnp.sum(g, axis=-1) * jnp.float32(1.0 / L)
+
+
+def quantized_scatter(plane: jax.Array, esc: EscTable, offs: jax.Array,
+                      w: jax.Array):
+    """Exact saturating masked scatter into a narrow plane.
+
+    plane: (R, 2^K) narrow dtype; offs: (B, L) int32 flat ELEMENT
+    offsets (row·2^K + bucket); w: (B,) integer weights (0 = masked
+    out, +1 insert, −1 delete).  Returns ``(new_plane, new_esc, post)``
+    where ``post`` (B, L) int32 is each item's exact logical
+    POST-scatter value at its offsets — masked-out items included
+    (their buckets may still be bumped by colliding active items), which
+    is precisely the post-insert gather every insert path feeds its
+    Welford fold.
+
+    Algorithm (fixed-shape, no data-dependent gathers):
+
+    1. Within-batch multiplicity: two items share a flat offset only
+       when they share the COLUMN too (the row encodes the table index
+       j, and j is the column), so the collision structure is the
+       (B, B, L) equality mask and each offset's total batch delta is
+       ``madd[b, l] = Σ_b2 same[b, b2, l] · w[b2]``.
+    2. Exact post value ``V = pre_narrow + pre_excess + madd`` — a pure
+       function of the offset, so every colliding item computes the
+       SAME V and the narrow write can be a scatter-``set`` of
+       ``clip(V, dtype_min, CAP)`` (duplicates write equal values:
+       deterministic; untouched offsets rewrite their pre value: a
+       no-op).
+    3. One LEADER per touched offset (the first active item holding it)
+       maintains the escalation table: excess = max(V − CAP, 0)
+       overwrites the offset's live slot (0 frees it — deletes
+       un-promote), new promotions claim free slots in rank order, and
+       excess that finds no slot is added to ``lost`` instead of being
+       silently dropped.  The offs array is re-sorted (C is small) so
+       lookups stay binary-search.
+    """
+    dtype = plane.dtype
+    cap = cap_for(dtype)
+    lo = int(jnp.iinfo(dtype).min)
+    B, L = offs.shape
+    C = esc.offs.shape[0]
+    flat = plane.reshape(-1)
+
+    w_i = w.astype(jnp.int32)                                    # (B,)
+    active = w_i != 0
+    same = offs[:, None, :] == offs[None, :, :]                  # (B,B,L)
+    madd = jnp.sum(same * w_i[None, :, None], axis=1)            # (B,L)
+
+    pre_nar = jnp.take(flat, offs).astype(jnp.int32)             # (B,L)
+    pre_esc = esc_lookup(esc, offs)                              # (B,L)
+    post = pre_nar + pre_esc + madd                              # exact V
+
+    new_flat = flat.at[offs].set(
+        jnp.clip(post, lo, cap).astype(dtype))
+    new_plane = new_flat.reshape(plane.shape)
+
+    # -- leaders: first ACTIVE item per touched offset
+    bidx = jnp.arange(B, dtype=jnp.int32)
+    earlier = (bidx[None, :] < bidx[:, None])                    # (B,B)
+    prior = jnp.sum(same & active[None, :, None]
+                    & earlier[:, :, None], axis=1)               # (B,L)
+    leader = active[:, None] & (prior == 0)                      # (B,L)
+
+    offs_f = offs.reshape(-1)
+    lead_f = leader.reshape(-1)
+    exc_f = jnp.maximum(post, 0).reshape(-1)
+    exc_f = jnp.maximum(exc_f - cap, 0)                          # excess'
+
+    # 1) overwrite live slots (excess 0 frees the slot)
+    idx = jnp.clip(jnp.searchsorted(esc.offs, offs_f), 0, C - 1) \
+        .astype(jnp.int32)
+    hit = jnp.take(esc.offs, idx) == offs_f
+    upd = lead_f & hit
+    new_vals = esc.vals.at[jnp.where(upd, idx, C)].set(
+        exc_f, mode="drop")
+    new_offs = jnp.where(new_vals > 0, esc.offs, SENTINEL)
+
+    # 2) allocate free slots for fresh promotions, in rank order
+    need = lead_f & (~hit) & (exc_f > 0)
+    free = new_vals == 0                                         # (C,)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1                # (B·L,)
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1           # (C,)
+    slot_of_rank = jnp.full((C,), C, jnp.int32).at[
+        jnp.where(free, free_rank, C)].set(
+        jnp.arange(C, dtype=jnp.int32), mode="drop")
+    nfree = jnp.sum(free.astype(jnp.int32))
+    ok = need & (rank < nfree)
+    dest = jnp.where(ok, jnp.take(slot_of_rank,
+                                  jnp.clip(rank, 0, C - 1)), C)
+    new_offs = new_offs.at[dest].set(offs_f, mode="drop")
+    new_vals = new_vals.at[dest].set(exc_f, mode="drop")
+    dropped = jnp.sum(jnp.where(need & ~ok, exc_f, 0)
+                      .astype(jnp.float32))
+
+    # 3) restore the sorted invariant (free SENTINEL slots sort last)
+    order = jnp.argsort(new_offs)
+    new_esc = EscTable(offs=new_offs[order], vals=new_vals[order],
+                       lost=esc.lost + dropped)
+    return new_plane, new_esc, post
+
+
+def densify(plane: jax.Array, esc: EscTable) -> jax.Array:
+    """Exact int32 logical plane: narrow + scattered excess.
+
+    O(plane) — the merge/diagnostic path, never the per-item hot path."""
+    dense = plane.astype(jnp.int32).reshape(-1)
+    dense = dense.at[esc.offs].add(
+        jnp.where(esc.offs != SENTINEL, esc.vals, 0), mode="drop")
+    return dense.reshape(plane.shape)
+
+
+def sq_sum(plane: jax.Array, esc: EscTable) -> jax.Array:
+    """Σ logical² over the plane — the Eq. 11 closed-form numerator.
+
+    Narrow-plane sweep + per-slot correction ((nar+exc)² − nar²): below
+    saturation the correction terms are exact float zeros, so this is
+    bitwise ``jnp.sum(c*c)`` of the oracle plane."""
+    c = plane.astype(jnp.float32)
+    base = jnp.sum(c * c)
+    flat = plane.reshape(-1)
+    occ = esc.offs != SENTINEL
+    safe = jnp.clip(jnp.where(occ, esc.offs, 0), 0, flat.shape[0] - 1)
+    nar = jnp.take(flat, safe).astype(jnp.float32)
+    tot = nar + esc.vals.astype(jnp.float32)
+    corr = jnp.sum(jnp.where(occ, tot * tot - nar * nar, 0.0))
+    return base + corr
+
+
+def requantize(dense: jax.Array, capacity: int, dtype):
+    """int32 logical plane -> (narrow plane, EscTable).
+
+    The merge path: densify both sides, add exactly in int32, re-split
+    into narrow + excess.  The ``capacity`` largest excesses win slots
+    (top_k); any remainder lands in ``lost``."""
+    cap = cap_for(dtype)
+    lo = int(jnp.iinfo(dtype).min)
+    flat = dense.reshape(-1)
+    excess = jnp.maximum(flat - cap, 0)
+    vals, idx = jax.lax.top_k(excess, capacity)
+    keep = vals > 0
+    offs = jnp.where(keep, idx.astype(jnp.int32), SENTINEL)
+    vals = jnp.where(keep, vals, 0)
+    order = jnp.argsort(offs)
+    lost = jnp.sum(excess.astype(jnp.float32)) \
+        - jnp.sum(vals.astype(jnp.float32))
+    narrow = jnp.clip(flat, lo, cap).astype(dtype).reshape(dense.shape)
+    return narrow, EscTable(offs=offs[order], vals=vals[order],
+                            lost=lost)

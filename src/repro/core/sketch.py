@@ -25,11 +25,12 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize as qz
 from repro.core.srp import SrpConfig, hash_buckets, make_projections
 
 
@@ -42,12 +43,19 @@ class AceState(NamedTuple):
     welford_mean / welford_m2: () float32 — streaming mean/M2 of *insert-time*
             scores (for the σ estimate in the streaming threshold policy; the
             exact μ never uses these).
+    esc:    overflow escalation table for quantized (int8/int16) count
+            planes, or None (the default — unquantized sketches carry no
+            extra leaves, so every existing pytree contract is unchanged).
+            When present, ``counts`` stores ``min(count, dtype max)`` and
+            the exact logical count of a promoted bucket is
+            ``counts + esc`` (see repro.core.quantize).
     """
 
     counts: jax.Array
     n: jax.Array
     welford_mean: jax.Array   # streaming mean of RATES score/n (stationary)
     welford_m2: jax.Array
+    esc: Optional[qz.EscTable] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +73,27 @@ class AceConfig:
     hash_mode: str = "dense"    # "dense" | "srht" | "auto" — threaded into
                                 # .srp; part of the persisted-sketch
                                 # contract (see SrpConfig.hash_mode)
+    esc_capacity: int = 0       # > 0 enables exact overflow promotion for
+                                # narrow (int8/int16) count planes: that
+                                # many buckets may exceed the dtype max
+                                # before excess is dropped (and counted).
+                                # 0 = plain counters (narrow dtypes then
+                                # wrap past saturation, like any int add).
+
+    def __post_init__(self):
+        if self.esc_capacity < 0:
+            raise ValueError("esc_capacity must be >= 0, got "
+                             f"{self.esc_capacity}")
+        if self.esc_capacity > 0:
+            if not qz.is_narrow(self.counter_dtype):
+                raise ValueError(
+                    "esc_capacity > 0 (overflow promotion) requires a "
+                    "narrow count_dtype (int8/int16); got "
+                    f"{self.counter_dtype!r}")
+            if self.num_tables * (1 << self.num_bits) > qz.SENTINEL:
+                raise ValueError(
+                    "quantized planes must stay int32 flat-addressable: "
+                    f"L·2^K = {self.num_tables * (1 << self.num_bits)}")
 
     @property
     def srp(self) -> SrpConfig:
@@ -76,10 +105,22 @@ class AceConfig:
     def num_buckets(self) -> int:
         return 1 << self.num_bits
 
+    @property
+    def count_dtype(self) -> str:
+        """ISSUE/paper-facing alias of the stored ``counter_dtype``."""
+        return self.counter_dtype
+
+    @property
+    def quantized(self) -> bool:
+        """True when the sketch carries an overflow escalation table."""
+        return self.esc_capacity > 0
+
     def memory_bytes(self) -> int:
-        """The paper's headline number: L × 2^K × sizeof(counter)."""
+        """The paper's headline number: L × 2^K × sizeof(counter)
+        (plus the escalation side table when promotion is enabled)."""
         itemsize = jnp.dtype(self.counter_dtype).itemsize
-        return self.num_tables * self.num_buckets * itemsize
+        base = self.num_tables * self.num_buckets * itemsize
+        return base + self.esc_capacity * 8 + (4 if self.quantized else 0)
 
 
 def init(cfg: AceConfig) -> AceState:
@@ -89,7 +130,15 @@ def init(cfg: AceConfig) -> AceState:
         n=jnp.zeros((), jnp.float32),
         welford_mean=jnp.zeros((), jnp.float32),
         welford_m2=jnp.zeros((), jnp.float32),
+        esc=qz.init_esc(cfg.esc_capacity) if cfg.quantized else None,
     )
+
+
+def _flat_offsets(buckets: jax.Array, L: int, nbuckets: int) -> jax.Array:
+    """(B, L) bucket ids -> (B, L) flat element offsets j·2^K + bucket."""
+    rows = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+    return buckets + rows * nbuckets
 
 
 def make_params(cfg: AceConfig, dtype=jnp.float32) -> jax.Array:
@@ -127,6 +176,8 @@ def lookup(state: AceState, buckets: jax.Array) -> jax.Array:
 
     This is Ŝ(q, D) of Algorithm 1 (query phase).
     """
+    if state.esc is not None:
+        return qz.batch_scores_logical(state.counts, state.esc, buckets)
     return batch_scores(state.counts, buckets)
 
 
@@ -174,12 +225,25 @@ def insert_buckets(state: AceState, buckets: jax.Array,
     scoring x against D ∪ {x}.
     """
     L = cfg.num_tables
-    rows = jnp.broadcast_to(
-        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
-    new_counts = state.counts.at[rows, buckets].add(1)
+    if state.esc is not None:
+        offs = _flat_offsets(buckets, L, cfg.num_buckets)
+        new_counts, new_esc, post = qz.quantized_scatter(
+            state.counts, state.esc, offs,
+            jnp.ones((buckets.shape[0],), jnp.int32))
+        # post IS the post-insert gather (exact logical counts) — same
+        # row-sum + reciprocal mean as batch_scores, so below saturation
+        # this is bitwise the unquantized path.
+        scores = jnp.sum(post.astype(jnp.float32), axis=-1) \
+            * jnp.float32(1.0 / L)
+    else:
+        rows = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+        new_counts = state.counts.at[rows, buckets].add(1)
+        new_esc = None
 
-    # Post-insert scores of the batch items (vs the fully updated arrays).
-    scores = batch_scores(new_counts, buckets)                 # (B,)
+        # Post-insert scores of the batch items (vs the fully updated
+        # arrays).
+        scores = batch_scores(new_counts, buckets)             # (B,)
 
     # Welford over collision RATES score/n, not raw scores: raw insert-time
     # scores grow ~linearly with n (item i scores ≈ O(i)), which inflates σ
@@ -196,7 +260,7 @@ def insert_buckets(state: AceState, buckets: jax.Array,
         cfg.welford_min_n)
 
     return AceState(counts=new_counts, n=tot,
-                    welford_mean=new_mean, welford_m2=new_m2)
+                    welford_mean=new_mean, welford_m2=new_m2, esc=new_esc)
 
 
 def masked_batch_welford(state: AceState, scores: jax.Array,
@@ -249,20 +313,33 @@ def insert_buckets_masked(state: AceState, buckets: jax.Array,
     see Guardrail.admit).
     """
     L = cfg.num_tables
-    rows = jnp.broadcast_to(
-        jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
-    w_ctr = jnp.broadcast_to(
-        mask.astype(state.counts.dtype)[:, None], buckets.shape)
-    new_counts = state.counts.at[rows, buckets].add(w_ctr)
+    if state.esc is not None:
+        offs = _flat_offsets(buckets, L, cfg.num_buckets)
+        new_counts, new_esc, post = qz.quantized_scatter(
+            state.counts, state.esc, offs, mask.astype(jnp.int32))
+        # post holds every item's exact post-scatter logical counts —
+        # masked-out items included (colliding admits may bump their
+        # buckets) — which is exactly the batch_scores(new_counts, ·)
+        # gather of the unquantized path.
+        scores = jnp.sum(post.astype(jnp.float32), axis=-1) \
+            * jnp.float32(1.0 / L)
+    else:
+        rows = jnp.broadcast_to(
+            jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
+        w_ctr = jnp.broadcast_to(
+            mask.astype(state.counts.dtype)[:, None], buckets.shape)
+        new_counts = state.counts.at[rows, buckets].add(w_ctr)
+        new_esc = None
 
-    # Post-insert scores of ALL items vs the fully updated arrays (the
-    # masked-out items just don't contribute to the Welford fold below).
-    scores = batch_scores(new_counts, buckets)                  # (B,)
+        # Post-insert scores of ALL items vs the fully updated arrays
+        # (the masked-out items just don't contribute to the Welford fold
+        # below).
+        scores = batch_scores(new_counts, buckets)              # (B,)
 
     tot, new_mean, new_m2 = masked_batch_welford(
         state, scores, mask.astype(jnp.float32), cfg.welford_min_n)
     return AceState(counts=new_counts, n=tot,
-                    welford_mean=new_mean, welford_m2=new_m2)
+                    welford_mean=new_mean, welford_m2=new_m2, esc=new_esc)
 
 
 def delete_buckets(state: AceState, buckets: jax.Array,
@@ -271,7 +348,21 @@ def delete_buckets(state: AceState, buckets: jax.Array,
 
     Welford stats are *not* un-merged (not possible in one pass); the exact μ
     (``mean_mu``) is unaffected since it is a pure function of counts.
+
+    Quantized planes delete through the saturating scatter with weight
+    −1: a promoted bucket whose logical count drops back to the cap is
+    un-promoted (its escalation slot is freed).  Counts below the narrow
+    dtype's min clamp (they cannot arise from matched insert/delete
+    streams, which never go below 0).
     """
+    if state.esc is not None:
+        offs = _flat_offsets(buckets, cfg.num_tables, cfg.num_buckets)
+        new_counts, new_esc, _ = qz.quantized_scatter(
+            state.counts, state.esc, offs,
+            jnp.full((buckets.shape[0],), -1, jnp.int32))
+        return state._replace(
+            counts=new_counts, esc=new_esc,
+            n=state.n - jnp.asarray(buckets.shape[0], jnp.float32))
     rows = jnp.broadcast_to(
         jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
     new_counts = state.counts.at[rows, buckets].add(-1)
@@ -283,15 +374,35 @@ def merge(a: AceState, b: AceState) -> AceState:
     """Merge two sketches over disjoint data (counts add — CRDT style).
 
     Exact for counts/n; Welford streams merge by Chan's parallel rule.
+
+    Quantized sketches merge exactly: both sides densify to int32
+    logical planes, add, and requantize (narrow + fresh escalation
+    table).  Excess that no longer fits the escalation capacity is
+    accumulated into ``lost`` (plus both inputs' prior losses).
     """
     delta = b.welford_mean - a.welford_mean
     tot = a.n + b.n
     safe = jnp.maximum(tot, 1.0)
+    if (a.esc is None) != (b.esc is None):
+        raise ValueError("cannot merge a quantized sketch with an "
+                         "unquantized one")
+    if a.esc is not None:
+        if (a.esc.capacity != b.esc.capacity
+                or a.counts.dtype != b.counts.dtype):
+            raise ValueError("quantized merge requires matching "
+                             "count_dtype and esc_capacity")
+        dense = qz.densify(a.counts, a.esc) + qz.densify(b.counts, b.esc)
+        counts, esc = qz.requantize(dense, a.esc.capacity,
+                                    a.counts.dtype)
+        esc = esc._replace(lost=esc.lost + a.esc.lost + b.esc.lost)
+    else:
+        counts, esc = a.counts + b.counts, None
     return AceState(
-        counts=a.counts + b.counts,
+        counts=counts,
         n=tot,
         welford_mean=a.welford_mean + delta * b.n / safe,
         welford_m2=a.welford_m2 + b.welford_m2 + delta**2 * a.n * b.n / safe,
+        esc=esc,
     )
 
 
@@ -307,8 +418,10 @@ def mean_mu(state: AceState) -> jax.Array:
     A_j[b] items, so Σ_i A_j[H_j(x_i)] = Σ_b A_j[b]².
     """
     L = state.counts.shape[0]
-    c = state.counts.astype(jnp.float32)
     denom = jnp.maximum(state.n, 1.0) * L
+    if state.esc is not None:
+        return qz.sq_sum(state.counts, state.esc) / denom
+    c = state.counts.astype(jnp.float32)
     return jnp.sum(c * c) / denom
 
 

@@ -114,13 +114,19 @@ class AceDataFilter:
                                  # a stream you don't gate (benchmarks,
                                  # dashboards); default is filter mode
                                  # (anomalies never enter the sketch)
+    count_dtype: str = "int32"   # narrow planes ("int16"/"int8") cut the
+                                 # table and its gather bandwidth 2–4×
+    esc_capacity: int = 0        # > 0: exact overflow promotion
+                                 # (repro.core.quantize)
 
     @property
     def ace_cfg(self) -> AceConfig:
         return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
                          num_tables=self.num_tables, seed=29,
                          welford_min_n=self.warmup_items / 2,
-                         hash_mode=self.hash_mode)
+                         hash_mode=self.hash_mode,
+                         counter_dtype=self.count_dtype,
+                         esc_capacity=self.esc_capacity)
 
     def init(self):
         return sk.init(self.ace_cfg), sk.make_params(self.ace_cfg)

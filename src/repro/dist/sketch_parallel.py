@@ -57,6 +57,18 @@ from repro.dist.mesh import sketch_pspecs
 # Replicated layout (ex repro.core.distributed).
 # ---------------------------------------------------------------------------
 
+def _no_quantized(state: AceState, what: str) -> None:
+    """Trace-time guard: overflow-promoted (quantized) sketches are wired
+    for the replicated jit/SPMD layout only.  The shard_map specs and the
+    table-sharded flat offsets do not (yet) carry the escalation table;
+    fail loudly instead of silently dropping promoted excess."""
+    if getattr(state, "esc", None) is not None:
+        raise NotImplementedError(
+            f"{what} does not support quantized sketches "
+            "(esc_capacity > 0); use the replicated jit/SPMD layout or "
+            "an unquantized narrow-dtype sketch")
+
+
 def local_histogram(x: jax.Array, w: jax.Array, cfg: AceConfig) -> jax.Array:
     """Histogram of the local batch shard: (B_local, d) -> (L, 2^K)."""
     buckets = hash_buckets(x, w, cfg.srp)
@@ -70,6 +82,13 @@ def update_global(state: AceState, x: jax.Array, w: jax.Array,
     Inside shard_map: pass ``axis_names`` to psum the histogram.  Under plain
     jit/SPMD, call with axis_names=() and let sharding propagation reduce.
     """
+    if state.esc is not None:
+        # Quantized planes cannot merge by histogram-add (the narrow add
+        # would wrap at saturation): under plain jit/SPMD delegate to the
+        # exact saturating core path; under shard_map fail loudly.
+        if axis_names:
+            _no_quantized(state, "update_global under shard_map")
+        return sk.insert_buckets(state, hash_buckets(x, w, cfg.srp), cfg)
     hist = local_histogram(x, w, cfg)
     if axis_names:
         hist = jax.lax.psum(hist, axis_names)
@@ -112,6 +131,11 @@ def update_global_masked(state: AceState, x: jax.Array, w: jax.Array,
     the single-device path (→ bitwise parity when ``axis_names`` is
     empty, float32-round-off otherwise).
     """
+    if state.esc is not None:
+        if axis_names:
+            _no_quantized(state, "update_global_masked under shard_map")
+        return sk.insert_buckets_masked(
+            state, hash_buckets(x, w, cfg.srp), mask, cfg)
     buckets = hash_buckets(x, w, cfg.srp)
     rows = jnp.broadcast_to(
         jnp.arange(cfg.num_tables, dtype=jnp.int32)[None, :], buckets.shape)
@@ -229,6 +253,7 @@ def update_table_sharded(state: AceState, x: jax.Array, w: jax.Array,
     float psum for the Welford score stream and, when the batch is also
     sharded, the histogram psum over ``data_axes``.
     """
+    _no_quantized(state, "update_table_sharded")
     l_local = cfg.num_tables // num_shards
     buckets = _local_buckets(x, w, cfg, table_axis, num_shards)  # (B, Ll)
     rows = jnp.broadcast_to(
@@ -288,6 +313,7 @@ def update_table_sharded_masked(state: AceState, x: jax.Array,
     exactly-representable integers, and the masked-moment formulas match
     term for term (asserted by tests/test_guardrail_admit.py).
     """
+    _no_quantized(state, "update_table_sharded_masked")
     l_local = cfg.num_tables // num_shards
     buckets = _local_buckets(x, w, cfg, table_axis, num_shards)  # (B, Ll)
     rows = jnp.broadcast_to(
@@ -323,6 +349,7 @@ def score_table_sharded(state: AceState, q: jax.Array, w: jax.Array,
 
     4·B bytes cross ``table_axis`` per call — independent of K and L, which
     is what makes the K=18+/L=200+ regime servable."""
+    _no_quantized(state, "score_table_sharded")
     buckets = _local_buckets(q, w, cfg, table_axis, num_shards)
     l_local = cfg.num_tables // num_shards
     rows = jnp.broadcast_to(
@@ -337,6 +364,7 @@ def score_table_sharded(state: AceState, q: jax.Array, w: jax.Array,
 def mean_mu_table_sharded(state: AceState, cfg: AceConfig, *,
                           table_axis: str) -> jax.Array:
     """Exact μ (Eq. 11 closed form) from per-shard partial Σ‖A_j‖²."""
+    _no_quantized(state, "mean_mu_table_sharded")
     c = state.counts.astype(jnp.float32)
     ssq = jax.lax.psum(jnp.sum(c * c), table_axis)
     return ssq / (jnp.maximum(state.n, 1.0) * cfg.num_tables)
@@ -432,10 +460,20 @@ def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
     stateful host wrapper share it instead of re-growing the same
     if/elif (+ divisibility validation) each."""
     if layout == "table_sharded":
+        if cfg.esc_capacity > 0:
+            raise NotImplementedError(
+                "quantized sketches (esc_capacity > 0) only support the "
+                "replicated layout; the table-sharded flat offsets do "
+                "not carry the escalation table")
         table_shard_info(cfg, mesh, table_axis)
         return table_sharded_shardings(mesh, table_axis)
     if layout == "replicated":
-        return sketch_shardings(mesh)
+        tree = sketch_shardings(mesh)
+        if cfg.esc_capacity > 0:
+            from repro.core.quantize import EscTable
+            rep = NamedSharding(mesh, P())
+            tree = tree._replace(esc=EscTable(rep, rep, rep))
+        return tree
     raise ValueError(f"unknown sketch layout {layout!r} "
                      "(want 'replicated' or 'table_sharded')")
 

@@ -45,6 +45,10 @@ class FleetDataFilter:
     bias_const: float = 0.25
     hash_mode: str = "dense"
     insert_all: bool = False    # detector mode (see AceDataFilter)
+    count_dtype: str = "int32"  # narrow fleet planes: the (T·L, 2^K)
+                                # table is the dominant HBM resident at
+                                # production T — int16/int8 cut it 2–4×
+                                # (promotion stays flat-sketch only)
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -53,7 +57,8 @@ class FleetDataFilter:
         return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
                          num_tables=self.num_tables, seed=29,
                          welford_min_n=self.warmup_items / 2,
-                         hash_mode=self.hash_mode)
+                         hash_mode=self.hash_mode,
+                         counter_dtype=self.count_dtype)
 
     @property
     def fleet_cfg(self) -> FleetConfig:

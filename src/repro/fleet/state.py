@@ -116,6 +116,12 @@ class FleetConfig:
                 f"num_tenants must be >= 1, got {self.num_tenants}")
         check_flat_addressable(self.num_tenants * self.ace.num_tables,
                                self.ace.num_buckets, "FleetConfig")
+        if self.ace.esc_capacity > 0:
+            raise NotImplementedError(
+                "overflow promotion (esc_capacity > 0) is wired for the "
+                "flat sketch only; fleet tables take narrow count dtypes "
+                "without an escalation table (exact below saturation). "
+                "See docs/ARCHITECTURE.md §7.")
 
     def memory_bytes(self) -> int:
         """The fleet HBM bill: T × the paper's per-detector table."""

@@ -153,9 +153,6 @@ def insert_current_fleet(state: WindowedFleetState, tenant_ids: jax.Array,
     iota_j = jnp.arange(L, dtype=jnp.int32)[None, :]
     ring_rows = (tenant_ids[:, None] * (E * L)
                  + state.cursor[tenant_ids][:, None] * L + iota_j)
-    maskf = mask.astype(jnp.float32)
-    onehot = _tenant_onehot(tenant_ids, T)                       # (T, B)
-    present = (jnp.sum(onehot, axis=1) > 0)                      # (T,)
 
     if pre_sums is None:
         pre_sums = window_table_sums_fleet(state, tenant_ids, buckets)
@@ -167,10 +164,31 @@ def insert_current_fleet(state: WindowedFleetState, tenant_ids: jax.Array,
     new_ring = state.counts.reshape(T * E * L, nbuckets) \
         .at[ring_rows, buckets].add(w_ctr).reshape(state.counts.shape)
 
-    # -- post-insert windowed sums/scores (tails unchanged)
+    # -- post-insert windowed sums (tails unchanged)
     live_post = jnp.sum(
         new_ring.reshape(T * E * L, nbuckets)[ring_rows, buckets]
         .astype(jnp.float32), axis=-1)
+    return _apply_insert_stats(state, new_ring, tenant_ids, mask, cfg,
+                               gamma, tail_sums, live_pre, live_post)
+
+
+def _apply_insert_stats(state: WindowedFleetState, new_ring: jax.Array,
+                        tenant_ids: jax.Array, mask: jax.Array,
+                        cfg: AceConfig, gamma: float,
+                        tail_sums: jax.Array, live_pre: jax.Array,
+                        live_post: jax.Array) -> WindowedFleetState:
+    """Per-tenant ssq/Welford/tick advance for an already-scattered ring.
+
+    The stats half of ``insert_current_fleet``, shared verbatim with the
+    fused ``ace_fleet_window_admit`` kernel path (which performs the
+    hash/gather/threshold/scatter in one Pallas launch and hands the
+    kernel's tail/live sums here) — ONE home for the fold, so the two
+    ingest paths cannot drift.
+    """
+    T, E, L, nbuckets = state.counts.shape
+    maskf = mask.astype(jnp.float32)
+    onehot = _tenant_onehot(tenant_ids, T)                       # (T, B)
+    present = (jnp.sum(onehot, axis=1) > 0)                      # (T,)
     scores = ring.score_live(tail_sums, live_post, L)
 
     def seg(v):   # (B,) -> (T,) per-tenant masked sums

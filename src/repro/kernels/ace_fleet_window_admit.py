@@ -1,0 +1,269 @@
+"""Pallas TPU kernel: fused fleet×window admission — hash + tenant/epoch
+routed gathers + γ-combine + μ−ασ threshold + masked live-epoch insert in
+ONE kernel launch.
+
+The one hot combination the ROADMAP still listed as multi-pass: a
+windowed FLEET admission (repro.fleet.window) used to cost a hash launch
+plus four separate jnp HBM passes over the resident (T·E·L, 2^K) ring
+(tail gather, live gather, scatter, post gather).  This kernel welds the
+per-item dataflow of ``engine._admit_impl``'s fleet-window branch into
+the ``ace_admit_fused`` template:
+
+    proj      = q @ W                       (MXU, accumulated over d tiles)
+    buckets   = pack(sign(proj))            (MXU)
+    tail_sums = Σ_j tail[tid·L + j, b_j]          (f32 γ-weighted tails)
+    live_pre  = Σ_j ring[tid·E·L + cur·L + j, b_j]  (live epoch)
+    score     = (tail_sums + live_pre)·(1/L)  — the γ-combine at the
+                ring's own decay (the tail IS the γ-weighted history;
+                same literal combine as ring.score_live)
+    admit     = score >= thr[tid]           (per-tenant μ−ασ score-space
+                thresholds, routed in as a lane-broadcast block)
+    ring[tid·E·L + cur·L + j, b_j] += admit (masked scatter, ring ALIASED
+                                             in VMEM — updated in place)
+
+Routing metadata rides in as lane-broadcast (B, 128) int32 blocks (the
+``ace_fleet_score`` idiom): the tenant id and the precomputed live row
+offset ``row0 = tid·E·L + cursor[tid]·L`` — cursor indirection costs one
+host-free jnp gather in the wrapper, not a kernel loop.
+
+    HBM reads : q + W + thresholds/ids (B·3·4) + ring and tails (resident)
+    HBM writes: sm block (B·128·4: score/admit/tail/live columns) +
+                bucket ids (B·L·4, re-exported for the stats epilogue in
+                ops.ace_fleet_window_admit) — the ring never round-trips.
+
+Scoring is strictly PRE-insert (gathers materialise before the scatter
+loop).  The per-tenant ssq/Welford/tick folds stay OUTSIDE the kernel in
+``fleet.window._apply_insert_stats`` — the same single-homed epilogue as
+the jnp path, fed from the kernel's exported sums (the ``ops.ace_admit``
+Welford-epilogue precedent).
+
+Grid: (d/bk,) — the whole (padded) batch is one tile so the masked
+insert runs after every row's score in one program.  VMEM bounds
+T·E·L·2^K on the non-interpret path (~14 MB guard below): the serving
+regime (K≈10–13, modest T·E) fits; past it, the jnp path is the right
+tool — ``ops`` keeps both behind one entry point.  Narrow (int8/int16)
+rings pass straight through: gathers upcast, the masked RMW adds in the
+ring's own dtype (exact below saturation — the quantized-plane
+contract; promotion is flat-sketch only, see repro.core.quantize).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.srp import SrpConfig
+from repro.kernels import runtime
+from repro.kernels.runtime import resolve_interpret
+from repro.kernels.srp_hash import make_pack_matrix, _round_up
+
+
+def _kernel(q_ref, w_ref, pack_ref, tid_ref, row0_ref, thr_ref,
+            ring_in_ref, tail_ref, ring_out_ref, sm_ref, buckets_ref,
+            acc_ref, *, nk: int, B: int, L: int, nbuckets: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # Touch the alias so the in-place dataflow is explicit
+        # (ace_admit_fused idiom): ring_out_ref IS ring_in_ref's buffer.
+        ring_out_ref[0, 0] = ring_in_ref[0, 0]
+
+    acc_ref[...] += jnp.dot(
+        q_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        Bp = acc_ref.shape[0]
+        bits = (acc_ref[...] >= 0.0).astype(jnp.float32)
+        buckets = jnp.dot(bits, pack_ref[...],
+                          preferred_element_type=jnp.float32).astype(jnp.int32)
+        buckets_ref[...] = buckets
+
+        iota_j = jax.lax.broadcasted_iota(jnp.int32, (Bp, L), 1)
+        tids = tid_ref[...][:, :L]                     # lane-broadcast
+        row0 = row0_ref[...][:, :L]                    # tid·E·L + cur·L
+
+        # γ-weighted tail sums (f32 tails — the decayed history view).
+        offs_tail = buckets[:, :L] + (tids * L + iota_j) * nbuckets
+        tail_flat = tail_ref[...].reshape(-1)
+        tail_sums = jnp.sum(jnp.take(tail_flat, offs_tail, axis=0),
+                            axis=-1)                               # (Bp,)
+
+        # Live-epoch sums from PRE-insert counts: this gather
+        # materialises before any scatter below mutates the (aliased)
+        # ring buffer.
+        offs_live = buckets[:, :L] + (row0 + iota_j) * nbuckets
+        ring_flat = ring_in_ref[...].reshape(-1)
+        live_pre = jnp.sum(
+            jnp.take(ring_flat, offs_live, axis=0).astype(jnp.float32),
+            axis=-1)                                               # (Bp,)
+
+        # The canonical windowed combine: one add, ONE reciprocal 1/L
+        # (ring.score_live's literal sequence).
+        scores = (tail_sums + live_pre) * jnp.float32(1.0 / L)
+
+        # Pad rows (>= B) hash garbage — never admit them.
+        valid = jax.lax.broadcasted_iota(
+            jnp.int32, (Bp, 1), 0).reshape(Bp) < B
+        thr = thr_ref[...][:, 0]                       # per-item routed
+        admit = jnp.logical_and(scores >= thr, valid)
+        admitf = jnp.where(admit, 1.0, 0.0).astype(jnp.float32)
+
+        col = jax.lax.broadcasted_iota(jnp.int32, sm_ref.shape, 1)
+        sm_ref[...] = jnp.where(
+            col == 0, scores[:, None],
+            jnp.where(col == 1, admitf[:, None],
+                      jnp.where(col == 2, tail_sums[:, None],
+                                jnp.where(col == 3, live_pre[:, None],
+                                          0.0))))
+
+        # Masked insert: scalar RMW over the LIVE rows only (t < B·L),
+        # each item scattering into its own tenant's live-epoch rows.
+        def body(t, _):
+            b = t // L
+            j = t % L
+            row = row0_ref[b, 0] + j
+            idx = buckets_ref[b, j]
+            w_b = sm_ref[b, 1]
+            c = ring_out_ref[row, pl.dslice(idx, 1)]
+            ring_out_ref[row, pl.dslice(idx, 1)] = \
+                c + w_b.astype(c.dtype)
+            return 0
+
+        jax.lax.fori_loop(0, B * L, body, 0)
+
+
+# d-tile candidates for bk="auto"; first entry is the no-bench fallback.
+BK_CANDIDATES = (512, 256, 1024)
+
+
+def ace_fleet_window_admit_fused(ring_counts: jax.Array, tail: jax.Array,
+                                 cursor: jax.Array, q: jax.Array,
+                                 tenant_ids: jax.Array, w: jax.Array,
+                                 thresholds: jax.Array, cfg: SrpConfig,
+                                 bk: int | str = 512,
+                                 interpret: bool | None = None):
+    """One-launch fleet×window admission step (counts half).
+
+    ring_counts (T, E, L, 2^K), tail (T, L, 2^K) f32, cursor (T,) int32,
+    q (B, d), tenant_ids (B,) int32 in [0, T), w (d, P),
+    thresholds (T,) float32 (per-tenant score-space, −inf admits all) ->
+        (new_ring (T, E, L, 2^K) — masked live-epoch scatter (aliased),
+         scores (B,) float32    — PRE-insert windowed γ-combine,
+         admit (B,) bool,
+         buckets (B, L) int32   — the one hash, re-exported,
+         tail_sums (B,) float32, live_pre (B,) float32 — the scoring
+         gathers, re-exported so the ssq/Welford epilogue
+         (fleet.window._apply_insert_stats) never re-gathers the ring).
+
+    ``bk="auto"`` autotunes the d-tile via ``runtime.autotune`` — same
+    per-(shape, backend) cache and trace-time fallback as ``srp_hash``.
+    Autotune timing mutates a SCRATCH copy of the ring, not the caller's
+    buffer (the kernel aliases its ring input in place).
+    """
+    interpret = resolve_interpret(interpret)
+    if bk == "auto":
+        shape_key = (ring_counts.shape, q.shape, str(ring_counts.dtype))
+        traced = isinstance(q, jax.core.Tracer) or isinstance(
+            ring_counts, jax.core.Tracer)
+        bench = None if traced else (
+            lambda cand: _admit_fused_impl(
+                # copy: the impl donates/aliases the ring buffer.
+                jnp.array(ring_counts), tail, cursor, q, tenant_ids, w,
+                thresholds, cfg, cand[0], interpret)[1])
+        (bk,) = (runtime.autotune(
+            "ace_fleet_window_admit", shape_key, interpret,
+            [(c,) for c in BK_CANDIDATES], bench_fn=bench))
+    return _admit_fused_impl(ring_counts, tail, cursor, q, tenant_ids,
+                             w, thresholds, cfg, bk, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "bk", "interpret"))
+def _admit_fused_impl(ring_counts: jax.Array, tail: jax.Array,
+                      cursor: jax.Array, q: jax.Array,
+                      tenant_ids: jax.Array, w: jax.Array,
+                      thresholds: jax.Array, cfg: SrpConfig,
+                      bk: int, interpret: bool):
+    B, d = q.shape
+    P = cfg.padded_projections
+    T, E, L, nbuckets = ring_counts.shape
+    assert w.shape == (d, P) and L == cfg.num_tables
+    assert tenant_ids.shape == (B,), (tenant_ids.shape, B)
+    assert tail.shape == (T, L, nbuckets) and cursor.shape == (T,)
+    from repro.fleet.state import check_flat_addressable
+    check_flat_addressable(T * E * L, nbuckets, "ace_fleet_window_admit")
+
+    Bp = _round_up(B, 8)
+    bk_ = min(bk, _round_up(d, 128))
+    dp = _round_up(d, bk_)
+    lp = _round_up(L, 128)
+    # The whole batch is ONE tile (the masked insert must run after every
+    # row's pre-insert score), and the ring + tails are VMEM-resident:
+    vmem = 4 * (Bp * bk_ + bk_ * P + P * lp + Bp * P
+                + 4 * Bp * 128 + Bp * lp) \
+        + T * E * L * nbuckets * jnp.dtype(ring_counts.dtype).itemsize \
+        + T * L * nbuckets * 4
+    if not interpret and vmem > 14 * 1024 * 1024:
+        raise ValueError(
+            f"ace_fleet_window_admit: T·E·L·2^K=({T},{E},{L},{nbuckets}) "
+            f"at B={B} needs ~{vmem >> 20} MB VMEM — over the ~14 MB "
+            "budget; use the jnp fleet-window path (ops falls back per "
+            "hash_mode) or shrink the resident ring")
+    qp = jnp.pad(q, ((0, Bp - B), (0, dp - d)))
+    wp = jnp.pad(w, ((0, dp - d), (0, 0)))
+    pack = jnp.asarray(make_pack_matrix(cfg, lp))
+    nk = dp // bk_
+
+    # Routing metadata as lane-broadcast blocks; pad rows route to
+    # tenant 0 row-offset 0 with a +inf threshold (belt and braces: the
+    # in-kernel valid guard already blocks pad admits).
+    tidp = jnp.pad(tenant_ids.astype(jnp.int32), (0, Bp - B))
+    row0 = (tenant_ids.astype(jnp.int32) * (E * L)
+            + cursor[tenant_ids] * L)
+    row0p = jnp.pad(row0, (0, Bp - B))
+    thr_b = jnp.pad(thresholds[tenant_ids].astype(jnp.float32),
+                    (0, Bp - B), constant_values=jnp.inf)
+    tid2d = jnp.broadcast_to(tidp[:, None], (Bp, 128))
+    row02d = jnp.broadcast_to(row0p[:, None], (Bp, 128))
+    thr2d = jnp.broadcast_to(thr_b[:, None], (Bp, 128))
+
+    new_ring, sm, buckets = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, B=B, L=L, nbuckets=nbuckets),
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((Bp, bk_), lambda k: (0, k)),
+            pl.BlockSpec((bk_, P), lambda k: (k, 0)),
+            pl.BlockSpec((P, lp), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, 128), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, 128), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, 128), lambda k: (0, 0)),
+            pl.BlockSpec((T * E * L, nbuckets), lambda k: (0, 0)),
+            pl.BlockSpec((T * L, nbuckets), lambda k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T * E * L, nbuckets), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, 128), lambda k: (0, 0)),
+            pl.BlockSpec((Bp, lp), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T * E * L, nbuckets), ring_counts.dtype),
+            jax.ShapeDtypeStruct((Bp, 128), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, lp), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Bp, P), jnp.float32)],
+        input_output_aliases={6: 0},
+        interpret=interpret,
+    )(qp, wp, pack, tid2d, row02d, thr2d,
+      ring_counts.reshape(T * E * L, nbuckets),
+      tail.reshape(T * L, nbuckets))
+    return (new_ring.reshape(T, E, L, nbuckets),
+            sm[:B, 0], sm[:B, 1] > 0.0, buckets[:B, :L],
+            sm[:B, 2], sm[:B, 3])

@@ -69,6 +69,10 @@ def ace_update(state: AceState, buckets: jax.Array,
     space fits the VPU sweep), the sequential scalar RMW loop otherwise —
     see ``repro.kernels.ace_update.choose_mode``.
     """
+    if state.esc is not None:
+        # Quantized planes must scatter through the exact saturating
+        # path (a narrow in-kernel RMW add would wrap at the cap).
+        return _sk.insert_buckets(state, buckets, cfg)
     new_counts = _u.ace_update(state.counts, buckets, mode="auto")
     gathered = _q.ace_query(new_counts, buckets)
     scores = jnp.mean(gathered, axis=-1)
@@ -88,6 +92,10 @@ def ace_update(state: AceState, buckets: jax.Array,
 
 def ace_query(state: AceState, buckets: jax.Array) -> jax.Array:
     """(B, L) bucket ids -> (B,) scores via the Pallas gather kernel."""
+    if state.esc is not None:
+        # Promoted buckets read through the escalation table (jnp path;
+        # the narrow-plane gather alone would clip at the dtype cap).
+        return _sk.lookup(state, buckets)
     return jnp.mean(_q.ace_query(state.counts, buckets), axis=-1)
 
 
@@ -98,8 +106,8 @@ def ace_score(state: AceState, q: jax.Array, w: jax.Array,
     Dense mode: one all-in-one Pallas launch.  SRHT mode: the SRHT hash
     kernel + the gather kernel (two launches, still one hash).
     """
-    if resolve_hash_mode(cfg.srp) == "srht":
-        return ace_query(state, _sh.srht_hash(q, cfg.srp))
+    if resolve_hash_mode(cfg.srp) == "srht" or state.esc is not None:
+        return ace_query(state, hash_dispatch(q, w, cfg.srp))
     return _f.ace_score_fused(state.counts, q, w, cfg.srp)
 
 
@@ -131,11 +139,12 @@ def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
     scoring, per-tenant thresholds and the one-scatter mixed-batch
     insert delegate to the shared ``repro.fleet.state`` helpers — the
     same single-homed dataflow as the jnp path, so kernel-path and jnp
-    admissions agree bitwise downstream of the bucket draw.  (There is
-    deliberately no all-in-one Pallas fleet admission: the masked
-    insert would need the whole (T·L, 2^K) fleet aliased in VMEM,
-    which only fits toy T — the gather-only ``ace_fleet_score`` kernel
-    is the fused piece worth having.)  Returns (new_state, admit (B,)).
+    admissions agree bitwise downstream of the bucket draw.  (The FLAT
+    fleet keeps the composed form; the all-in-one Pallas admission
+    exists for the fleet×WINDOW combination — see
+    ``ace_fleet_window_admit`` — where the extra tail+live passes made
+    the fusion worth the VMEM-resident ring.)  Returns
+    (new_state, admit (B,)).
     """
     from repro.fleet import state as _fls
     buckets = hash_dispatch(q, w, cfg.srp)
@@ -143,6 +152,62 @@ def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
     admit = scores >= _fls.admit_thresholds(
         fstate, alpha, warmup_items)[tenant_ids]
     new_state = _fls.insert_masked(fstate, tenant_ids, buckets, admit, cfg)
+    return new_state, admit
+
+
+def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
+                           w: jax.Array, cfg: AceConfig, *, gamma: float,
+                           alpha: float, warmup_items: float,
+                           rotate_every: int = 0):
+    """Kernel-path fleet×window admission: ONE Pallas launch for the hot
+    combination that used to cost a hash launch plus four jnp HBM passes.
+
+    Dense mode runs ``ace_fleet_window_admit_fused`` (hash →
+    tenant+epoch offset gathers → γ-combine → per-tenant μ−ασ threshold
+    → masked live-epoch insert, ring aliased in VMEM); the per-tenant
+    ssq/Welford/tick folds run as the shared jnp epilogue
+    (``fleet.window._apply_insert_stats`` — the same single-homed code
+    the jnp path uses) over the kernel's exported sums, then the
+    presence-gated rotation clocks fire.  SRHT mode hashes with the
+    SRHT kernel and delegates the rest to the jnp fleet-window helpers
+    — still one hash.  Returns (new_state, admit (B,) bool).
+    """
+    from repro.fleet import window as fw
+    from repro.kernels import ace_fleet_window_admit as _fwa
+    from repro.window import ring
+    thr_t = fw.window_admit_thresholds(state, gamma, alpha, warmup_items)
+    if resolve_hash_mode(cfg.srp) == "srht":
+        buckets = _sh.srht_hash(q, cfg.srp)
+        pre = fw.window_table_sums_fleet(state, tenant_ids, buckets)
+        scores = ring.score_live(pre[0], pre[1], cfg.num_tables)
+        admit = scores >= thr_t[tenant_ids]
+        new_state = fw.insert_current_fleet(
+            state, tenant_ids, buckets, admit, cfg, gamma=gamma,
+            pre_sums=pre)
+        new_state = fw.maybe_rotate_fleet(new_state, rotate_every, gamma,
+                                          tenant_ids=tenant_ids)
+        return new_state, admit
+
+    new_ring, _scores, admit, buckets, tail_sums, live_pre = \
+        _fwa.ace_fleet_window_admit_fused(
+            state.counts, state.tail, state.cursor, q, tenant_ids, w,
+            thr_t, cfg.srp)
+
+    # Stats epilogue over POST-insert live sums (O(B·L) gather from the
+    # new ring — no second hash, no tail/live re-gather; the
+    # ops.ace_admit Welford-epilogue precedent).
+    T, E, L, nbuckets = state.counts.shape
+    iota_j = jnp.arange(L, dtype=jnp.int32)[None, :]
+    ring_rows = (tenant_ids[:, None] * (E * L)
+                 + state.cursor[tenant_ids][:, None] * L + iota_j)
+    live_post = jnp.sum(
+        new_ring.reshape(T * E * L, nbuckets)[ring_rows, buckets]
+        .astype(jnp.float32), axis=-1)
+    new_state = fw._apply_insert_stats(
+        state, new_ring, tenant_ids, admit, cfg, gamma,
+        tail_sums, live_pre, live_post)
+    new_state = fw.maybe_rotate_fleet(new_state, rotate_every, gamma,
+                                      tenant_ids=tenant_ids)
     return new_state, admit
 
 
@@ -209,9 +274,12 @@ def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
     ids — no re-hash.  Returns (new_state, admit_mask (B,) bool).
     """
     thresh = _sk.admit_threshold(state, alpha, warmup_items)
-    if resolve_hash_mode(cfg.srp) == "srht":
-        buckets = _sh.srht_hash(q, cfg.srp)
-        scores = _sk.batch_scores(state.counts, buckets)
+    if resolve_hash_mode(cfg.srp) == "srht" or state.esc is not None:
+        # SRHT hash kernel, or a quantized plane (whose saturating
+        # scatter + escalation reads live in the jnp helpers): one
+        # kernel/jnp hash, then the shared exact dataflow.
+        buckets = hash_dispatch(q, w, cfg.srp)
+        scores = _sk.lookup(state, buckets)
         admit = scores >= thresh
         new_state = _sk.insert_buckets_masked(state, buckets, admit, cfg)
         return new_state, admit

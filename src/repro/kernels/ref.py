@@ -76,6 +76,40 @@ def ace_fleet_score_ref(counts: jax.Array, q: jax.Array,
     return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
 
 
+def ace_fleet_window_admit_ref(ring_counts: jax.Array, tail: jax.Array,
+                               cursor: jax.Array, q: jax.Array,
+                               tenant_ids: jax.Array, w: jax.Array,
+                               thresholds: jax.Array, cfg: SrpConfig):
+    """Fused fleet×window admission: hash once, tenant/epoch-routed tail +
+    live gathers, γ-combine score, per-tenant threshold, masked
+    live-epoch scatter.
+
+    Mirrors ``ace_fleet_window_admit_fused``'s contract — the composed
+    flat-admit → window-combine → fleet-score reference, built from the
+    same literal sequences as ``repro.fleet.window``'s helpers (tail
+    gather at row tid·L + j, live gather at tid·E·L + cursor·L + j, one
+    add + ONE reciprocal 1/L).  Returns (new_ring, scores, admit,
+    buckets, tail_sums, live_pre)."""
+    T, E, L, nbuckets = ring_counts.shape
+    buckets = hash_buckets(q, w, cfg)
+    iota_j = jnp.arange(L, dtype=jnp.int32)[None, :]
+    tail_rows = tenant_ids[:, None] * L + iota_j
+    tail_sums = jnp.sum(
+        tail.reshape(T * L, nbuckets)[tail_rows, buckets], axis=-1)
+    ring_rows = (tenant_ids[:, None] * (E * L)
+                 + cursor[tenant_ids][:, None] * L + iota_j)
+    flat = ring_counts.reshape(T * E * L, nbuckets)
+    live_pre = jnp.sum(flat[ring_rows, buckets].astype(jnp.float32),
+                       axis=-1)
+    scores = (tail_sums + live_pre) * jnp.float32(1.0 / L)
+    admit = scores >= thresholds[tenant_ids]
+    w_ctr = jnp.broadcast_to(
+        admit.astype(ring_counts.dtype)[:, None], buckets.shape)
+    new_ring = flat.at[ring_rows, buckets].add(w_ctr) \
+        .reshape(ring_counts.shape)
+    return new_ring, scores, admit, buckets, tail_sums, live_pre
+
+
 def ace_admit_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
                   thresh: jax.Array, cfg: SrpConfig):
     """Fused admission: hash once, score pre-insert, threshold, masked add.

@@ -21,10 +21,23 @@ Resolution order:
 An explicit ``interpret=True/False`` argument always wins (tests pin it;
 the VMEM-budget check in ``ace_admit_fused`` keys off the resolved
 value).
+
+Also home of the tile-size autotuner (:func:`autotune`): kernel wrappers
+that accept ``bm="auto"``/``bk="auto"`` time a few tile candidates once
+and cache the winner per ``(kernel, shape, backend)``.  The backend is
+part of the key — and "interpret" is a backend of its own — because a
+tile size timed under the Pallas interpreter on CPU says NOTHING about
+Mosaic on TPU: before the keying fix, one interpret-mode warmup call
+could poison the cache with a CPU-tuned tile that every subsequent TPU
+call then silently inherited.  The cache is also invalidated wholesale
+when the probed default backend changes mid-process (e.g. a TPU runtime
+initialised after a CPU-only import), so stale entries from the old
+probe can never leak into the new one.
 """
 from __future__ import annotations
 
 import os
+import time
 
 _ENV = "REPRO_PALLAS_INTERPRET"
 
@@ -44,3 +57,84 @@ def resolve_interpret(interpret: bool | None) -> bool:
     if interpret is None:
         return default_interpret()
     return bool(interpret)
+
+
+# ---------------------------------------------------------------------------
+# Tile-size autotuner.
+# ---------------------------------------------------------------------------
+
+# (kernel_name, shape_key, backend_key) -> winning candidate.  backend_key
+# is "interpret" for interpreter runs, else the probed jax backend name —
+# NEVER share entries across the two (see module docstring).
+_AUTOTUNE_CACHE: dict = {}
+_PROBED_BACKEND: str | None = None
+
+
+def _backend_key(interpret: bool) -> str:
+    import jax
+
+    return "interpret" if interpret else jax.default_backend()
+
+
+def _check_backend_probe() -> None:
+    """Invalidate the whole cache if the probed default backend changed
+    (a late-initialised TPU runtime, a test reconfiguring platforms)."""
+    global _PROBED_BACKEND
+    import jax
+
+    probe = jax.default_backend()
+    if _PROBED_BACKEND is None:
+        _PROBED_BACKEND = probe
+    elif _PROBED_BACKEND != probe:
+        _AUTOTUNE_CACHE.clear()
+        _PROBED_BACKEND = probe
+
+
+def autotune(kernel_name: str, shape_key: tuple, interpret: bool,
+             candidates, bench_fn=None, reps: int = 3):
+    """Pick (and cache) the fastest tile candidate for one kernel/shape.
+
+    ``candidates`` is a non-empty sequence of opaque tile params (e.g.
+    ``(bm, bk)`` tuples); ``bench_fn(candidate)`` runs the kernel eagerly
+    with that tiling and returns something with ``block_until_ready`` (a
+    jax array or pytree leaf).  The winner is cached under
+    ``(kernel_name, shape_key, backend)`` — min-of-``reps`` timing, so a
+    single descheduling blip can't crown a loser.  With ``bench_fn=None``
+    (or under tracing, where timing is impossible — callers must pass
+    concrete operands or fall back before calling) the first candidate
+    is returned WITHOUT caching, so a degraded call can never pin the
+    default into the cache.
+    """
+    import jax
+
+    candidates = list(candidates)
+    if not candidates:
+        raise ValueError("autotune needs at least one candidate")
+    _check_backend_probe()
+    key = (kernel_name, tuple(shape_key), _backend_key(interpret))
+    if key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    if bench_fn is None:
+        return candidates[0]
+    best, best_t = None, None
+    for cand in candidates:
+        try:
+            jax.block_until_ready(bench_fn(cand))  # compile warmup
+            t = min(_time_one(bench_fn, cand) for _ in range(reps))
+        except Exception:
+            continue   # a candidate that fails to lower just loses
+        if best_t is None or t < best_t:
+            best, best_t = cand, t
+    if best is None:
+        best = candidates[0]   # nothing timed — don't cache a guess
+        return best
+    _AUTOTUNE_CACHE[key] = best
+    return best
+
+
+def _time_one(bench_fn, cand) -> float:
+    import jax
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(bench_fn(cand))
+    return time.perf_counter() - t0

@@ -28,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.srp import SrpConfig
+from repro.kernels import runtime
 from repro.kernels.runtime import resolve_interpret
 
 
@@ -66,10 +67,15 @@ def _kernel(x_ref, w_ref, pack_ref, out_ref, acc_ref, *, nk: int):
         out_ref[...] = bucket.astype(jnp.int32)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
+# (bm, bk) tile candidates for bm/bk="auto"; the FIRST entry is the
+# documented default — it is what degraded autotune calls (tracing, no
+# timable operands) fall back to without caching.
+TILE_CANDIDATES = ((256, 512), (128, 512), (512, 512),
+                   (256, 256), (256, 1024))
+
+
 def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig,
-             bm: int = 256, bk: int = 512,
+             bm: int | str = 256, bk: int | str = 512,
              interpret: bool | None = None) -> jax.Array:
     """(B, d) @ (d, P) -> (B, L) int32 bucket ids in [0, 2^K).
 
@@ -77,8 +83,31 @@ def srp_hash(x: jax.Array, w: jax.Array, cfg: SrpConfig,
     ``repro.kernels.runtime`` resolver (env var / backend probe), so TPU
     runs get the Mosaic lowering without flag-plumbing and benchmarks
     cannot silently time interpret mode.
+
+    ``bm="auto"``/``bk="auto"`` pick the tile pair via
+    :func:`repro.kernels.runtime.autotune` — timed once eagerly per
+    ``(shape, backend)`` and cached.  Under tracing (operands are
+    Tracers) timing is impossible, so the call uses the cached winner if
+    one exists, else the default tiles WITHOUT caching — an interpret or
+    traced call can never pin a tile choice for the real backend.
     """
     interpret = resolve_interpret(interpret)
+    if bm == "auto" or bk == "auto":
+        shape_key = (x.shape, w.shape, str(x.dtype))
+        traced = isinstance(x, jax.core.Tracer) or isinstance(
+            w, jax.core.Tracer)
+        bench = None if traced else (
+            lambda cand: _srp_hash_impl(x, w, cfg, cand[0], cand[1],
+                                        interpret))
+        bm, bk = runtime.autotune("srp_hash", shape_key, interpret,
+                                  TILE_CANDIDATES, bench_fn=bench)
+    return _srp_hash_impl(x, w, cfg, bm, bk, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
+def _srp_hash_impl(x: jax.Array, w: jax.Array, cfg: SrpConfig,
+                   bm: int, bk: int, interpret: bool) -> jax.Array:
     B, d = x.shape
     P = cfg.padded_projections
     assert w.shape == (d, P), (w.shape, (d, P))

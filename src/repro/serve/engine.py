@@ -40,6 +40,12 @@ class GuardrailConfig:
     # scored / thresholded / inserted against its own tenant's state
     # (per-tenant warmup, per-tenant drift — isolation is bitwise).
     num_tenants: int = 1        # 1 = the classic single-tenant guardrail
+    # Quantized count planes (repro.core.quantize): narrow count dtypes
+    # cut the resident table (and every gather's bandwidth) 2–4×.
+    # esc_capacity > 0 additionally enables exact overflow promotion —
+    # flat (window_epochs == 1, num_tenants == 1) guardrails only.
+    count_dtype: str = "int32"  # "float32" | "int32" | "int16" | "int8"
+    esc_capacity: int = 0
 
 
 class Guardrail:
@@ -98,7 +104,9 @@ class Guardrail:
                                  num_bits=gcfg.num_bits,
                                  num_tables=gcfg.num_tables, seed=41,
                                  welford_min_n=gcfg.warmup_items / 2,
-                                 hash_mode=gcfg.hash_mode)
+                                 hash_mode=gcfg.hash_mode,
+                                 counter_dtype=gcfg.count_dtype,
+                                 esc_capacity=gcfg.esc_capacity)
         self.windowed = gcfg.window_epochs > 1
         self.multi_tenant = gcfg.num_tenants > 1
         if self.multi_tenant:
@@ -197,10 +205,17 @@ class Guardrail:
                 # live-epoch scatter, then the per-tenant rotation
                 # clocks — mirrors the single-ring windowed branch below
                 if self.use_kernels:
+                    # the ONE all-in-one launch (hash + routed gathers +
+                    # γ-combine + threshold + masked insert welded) —
+                    # rotation clocks included in the dispatch
                     from repro.kernels import ops as kops
-                    buckets = kops.hash_dispatch(feat, w, cfg.srp)
-                else:
-                    buckets = hash_buckets(feat, w, cfg.srp)
+                    return kops.ace_fleet_window_admit(
+                        state, feat, tenant_ids, w, cfg,
+                        gamma=self.gcfg.window_decay,
+                        alpha=self.gcfg.alpha,
+                        warmup_items=self.gcfg.warmup_items,
+                        rotate_every=self.gcfg.rotate_every)
+                buckets = hash_buckets(feat, w, cfg.srp)
                 pre = fw.window_table_sums_fleet(state, tenant_ids,
                                                  buckets)
                 from repro.window import ring

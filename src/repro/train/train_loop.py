@@ -171,13 +171,26 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
         count, so flat and windowed filter states coexist."""
         if sketch_layout is None or st is None:
             return st
-        if len(st) == 4:
-            pspecs = sketch_pspecs(sketch_layout)
-        else:
+        if "tail" in st._fields:   # windowed epoch ring
             from repro.dist.mesh import window_pspecs
             pspecs = window_pspecs(sketch_layout)
-        return type(st)(*(jax.lax.with_sharding_constraint(leaf, ps)
-                          for leaf, ps in zip(st, pspecs)))
+            return type(st)(*(jax.lax.with_sharding_constraint(leaf, ps)
+                              for leaf, ps in zip(st, pspecs)))
+        pspecs = sketch_pspecs(sketch_layout)
+        core = [jax.lax.with_sharding_constraint(leaf, ps)
+                for leaf, ps in zip(
+                    (st.counts, st.n, st.welford_mean, st.welford_m2),
+                    pspecs)]
+        esc = st.esc
+        if esc is not None:
+            if sketch_layout != "replicated":
+                raise NotImplementedError(
+                    "quantized filter sketches only support the "
+                    "replicated layout")
+            from jax.sharding import PartitionSpec
+            esc = type(esc)(*(jax.lax.with_sharding_constraint(
+                leaf, PartitionSpec()) for leaf in esc))
+        return type(st)(*core, esc=esc)
 
     def loss_fn(params, batch):
         return arch.loss(params, batch, remat=tcfg.remat,

@@ -136,6 +136,12 @@ class WindowConfig:
             raise ValueError(f"num_epochs must be >= 1, got {self.num_epochs}")
         if not (0.0 < self.decay <= 1.0):
             raise ValueError(f"decay must be in (0, 1], got {self.decay}")
+        if self.ace.esc_capacity > 0:
+            raise NotImplementedError(
+                "overflow promotion (esc_capacity > 0) is wired for the "
+                "flat sketch only; window rings take narrow count dtypes "
+                "without an escalation table (exact below saturation). "
+                "See docs/ARCHITECTURE.md §7.")
 
     def memory_bytes(self) -> int:
         """The window's HBM bill: E epochs + the f32 tail view."""
@@ -147,6 +153,10 @@ class WindowConfig:
 def init(cfg: AceConfig, num_epochs: int) -> WindowedAceState:
     if num_epochs < 1:
         raise ValueError(f"num_epochs must be >= 1, got {num_epochs}")
+    if cfg.esc_capacity > 0:
+        raise NotImplementedError(
+            "overflow promotion (esc_capacity > 0) is flat-sketch only; "
+            "window rings take narrow count dtypes without promotion")
     return WindowedAceState(
         counts=jnp.zeros((num_epochs, cfg.num_tables, cfg.num_buckets),
                          dtype=jnp.dtype(cfg.counter_dtype)),

@@ -1,0 +1,183 @@
+"""Perf-regression gate tests: the gate must catch real regressions and
+must NEVER flake on container timing noise alone.
+
+Drives ``scripts/bench_gate.py`` (loaded by file path — scripts/ is not
+a package) through synthetic BENCH JSON fixtures shaped like the real
+committed ones: nested section dicts, ``rep_*`` spread lists, config
+echo keys that must be ignored.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_SCRIPT = (pathlib.Path(__file__).resolve().parent.parent
+           / "scripts" / "bench_gate.py")
+
+
+def _load_gate():
+    spec = importlib.util.spec_from_file_location("bench_gate", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+gate = _load_gate()
+
+# Shaped like the committed BENCH_fleet.json: section dicts, a rep list
+# whose spread (18.67/60.25 = 0.31) documents real container noise.
+BASE_FLEET = {
+    "num_tenants": 64, "batch": 64, "num_bits": 10,
+    "legacy_loop": {"items_per_s": 850.0, "median_step_ms": 75.0},
+    "fleet_scan": {"items_per_s": 51000.0, "median_chunk_ms": 20.0,
+                   "trace_count": 1},
+    "speedup_scan": 60.25,
+    "rep_speedups_scan": [18.67, 60.25, 77.41],
+}
+
+
+def _write(dirpath, name, payload):
+    dirpath.mkdir(parents=True, exist_ok=True)
+    (dirpath / name).write_text(json.dumps(payload))
+
+
+def _run(tmp_path, base, fresh, **kw):
+    bdir, fdir = tmp_path / "base", tmp_path / "fresh"
+    for name, payload in base.items():
+        _write(bdir, name, payload)
+    for name, payload in fresh.items():
+        _write(fdir, name, payload)
+    report = tmp_path / "report.json"
+    rc = gate.main(["--baseline-dir", str(bdir), "--fresh-dir", str(fdir),
+                    "--report", str(report)]
+                   + [str(a) for a in kw.pop("extra", [])])
+    return rc, json.loads(report.read_text())
+
+
+class TestGateVerdicts:
+    def test_true_regression_fails(self, tmp_path):
+        fresh = {"legacy_loop": {"items_per_s": 840.0},
+                 "fleet_scan": {"items_per_s": 900.0},   # 57x drop
+                 "speedup_scan": 1.1,
+                 "rep_speedups_scan": [1.1]}
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": BASE_FLEET},
+                          {"BENCH_fleet.json": fresh})
+        assert rc == 1 and not report["ok"]
+        failed = {f["metric"] for f in report["failures"]}
+        assert "fleet_scan.items_per_s" in failed
+        assert "speedup_scan" in failed
+        # the stable metric passed — failures are per-metric, not per-file
+        assert any(p["metric"] == "legacy_loop.items_per_s"
+                   for p in report["passes"])
+
+    def test_container_noise_alone_passes(self, tmp_path):
+        # Fresh run lands at the BOTTOM of the baseline's own observed
+        # rep spread (18.67 of median 60.25).  The adaptive floor
+        # (0.31 * 0.8 = 0.248) must absorb it — this exact shape is what
+        # a naive 0.9x gate would flake on weekly.
+        fresh = {"legacy_loop": {"items_per_s": 850.0},
+                 "fleet_scan": {"items_per_s": 16000.0},
+                 "speedup_scan": 18.8,
+                 "rep_speedups_scan": [18.8]}
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": BASE_FLEET},
+                          {"BENCH_fleet.json": fresh})
+        assert rc == 0 and report["ok"], report["failures"]
+        floor = report["passes"][0]["floor_ratio"]
+        assert floor < 0.5   # spread-derived, tighter than fail_ratio
+
+    def test_stable_bench_gets_tight_floor(self, tmp_path):
+        # No rep_* list in the baseline -> no noise evidence -> the gate
+        # uses fail_ratio itself, and a 2.5x drop fails.
+        base = {"fleet_scan": {"items_per_s": 50000.0}}
+        fresh = {"fleet_scan": {"items_per_s": 20000.0}}
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": base},
+                          {"BENCH_fleet.json": fresh})
+        assert rc == 1
+        assert report["failures"][0]["floor_ratio"] == pytest.approx(0.5)
+
+    def test_missing_metric_fails(self, tmp_path):
+        fresh = dict(BASE_FLEET)
+        del fresh["speedup_scan"]          # silently-dropped benchmark
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": BASE_FLEET},
+                          {"BENCH_fleet.json": fresh})
+        assert rc == 1
+        assert any(f["metric"] == "speedup_scan"
+                   and "missing" in f["reason"]
+                   for f in report["failures"])
+
+    def test_missing_fresh_file_fails(self, tmp_path):
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": BASE_FLEET,
+                           "BENCH_window.json": {"speedup": 5.0}},
+                          {"BENCH_fleet.json": BASE_FLEET})
+        assert rc == 1
+        assert any(f["bench"] == "window" and f["metric"] is None
+                   for f in report["failures"])
+
+    def test_new_benchmark_is_note_not_failure(self, tmp_path):
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": BASE_FLEET},
+                          {"BENCH_fleet.json": BASE_FLEET,
+                           "BENCH_shiny.json": {"items_per_s": 1.0}})
+        assert rc == 0 and report["ok"]
+        assert [n["bench"] for n in report["notes"]] == ["shiny"]
+
+    def test_best_of_reps_absorbs_one_bad_run(self, tmp_path):
+        # Two fresh reps of the same bench: one descheduled, one fine.
+        # Best-of-reps must pass.
+        good = {"fleet_scan": {"items_per_s": 52000.0}, "speedup_scan": 61.0,
+                "legacy_loop": {"items_per_s": 850.0},
+                "rep_speedups_scan": [61.0]}
+        bad = {"fleet_scan": {"items_per_s": 400.0}, "speedup_scan": 0.5,
+               "legacy_loop": {"items_per_s": 850.0},
+               "rep_speedups_scan": [0.5]}
+        rc, report = _run(tmp_path,
+                          {"BENCH_fleet.json": BASE_FLEET},
+                          {"BENCH_fleet.json": bad,
+                           "BENCH_fleet.rep2.json": good})
+        assert rc == 0, report["failures"]
+
+
+class TestGateMechanics:
+    def test_config_echo_keys_not_gated(self):
+        leaves = gate._flatten(BASE_FLEET)
+        gated = sorted(p for p in leaves if gate._GATED.search(p))
+        assert gated == ["fleet_scan.items_per_s",
+                         "legacy_loop.items_per_s", "speedup_scan"]
+        # ms latencies, trace counts, config echo: all ignored
+        assert "num_tenants" in leaves
+        assert not gate._GATED.search("fleet_scan.median_chunk_ms")
+        assert not gate._GATED.search("fleet_scan.trace_count")
+
+    def test_eff_bw_metrics_are_gated(self):
+        assert gate._GATED.search("eff_bw_win")
+        assert gate._GATED.search("dtype_sweep.eff_bw_ratio_int8")
+        assert gate._GATED.search("speedup_step")
+
+    def test_rep_list_value_is_median(self):
+        assert gate._value([18.67, 77.41, 60.25]) == 60.25
+        assert gate._value(42.0) == 42.0
+
+    def test_spread_ratio_from_rep_lists(self):
+        leaves = gate._flatten(BASE_FLEET)
+        assert gate._spread_ratio(leaves) == pytest.approx(
+            18.67 / 60.25, rel=1e-6)
+        assert gate._spread_ratio({"items_per_s": 5.0}) == 1.0
+
+    def test_bench_name_parsing(self):
+        assert gate._bench_name("BENCH_fleet.json") == "fleet"
+        assert gate._bench_name("/a/b/BENCH_fleet.rep2.json") == "fleet"
+
+    def test_empty_dirs_exit_2(self, tmp_path):
+        (tmp_path / "e1").mkdir()
+        (tmp_path / "e2").mkdir()
+        rc = gate.main(["--baseline-dir", str(tmp_path / "e1"),
+                        "--fresh-dir", str(tmp_path / "e2")])
+        assert rc == 2

@@ -1,0 +1,129 @@
+"""Degraded-mode serving throughput: healthy vs health-masked admission.
+
+The resilience story (repro.resilience) promises that a guardrail losing
+tables to corruption keeps serving from the healthy remainder with the
+same hot-path contract — one executable per mode, one host transfer per
+batch, no per-call retrace.  This bench puts a number on the price:
+``items_per_s`` through ``Guardrail.admit`` on the healthy path vs the
+degraded path (⌈L/4⌉ tables masked out of scoring), plus the quarantine
+tax of a stream carrying a fixed fraction of non-finite rows.
+
+Both paths are timed over the SAME pre-generated batches with the same
+warmed executables; the degraded run flips the serving mask host-side
+exactly as ``health_check`` would (a second cached jit executable — the
+switch itself costs no syncs, which ``trace_count`` asserts here).
+
+Emits a ``BENCH_resilience.json`` (or ``--json PATH``) so the perf gate
+(scripts/bench_gate.py) can hold the degraded-mode throughput floor.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.resilience_bench [--smoke] [--json P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import Guardrail, GuardrailConfig
+
+
+def _batches(n_batches: int, batch: int, seq: int, d_model: int,
+             nan_frac: float = 0.0, seed: int = 0) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        e = rng.normal(size=(batch, seq, d_model)).astype(np.float32)
+        if nan_frac > 0:
+            bad = rng.random(batch) < nan_frac
+            e[bad] = np.nan
+        out.append(e)
+    return out
+
+
+def _time_admits(g: Guardrail, batches: list[np.ndarray],
+                 iters: int) -> float:
+    """items/s of the warmed admit program over the batch set."""
+    jbs = [jnp.asarray(b) for b in batches]
+    g.admit(jbs[0])                                   # warm the executable
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        for jb in jbs:
+            g.admit(jb)
+    dt = time.perf_counter() - t0
+    return iters * len(jbs) * jbs[0].shape[0] / dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shapes (small K/L/batch)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default BENCH_resilience.json)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        batch, seq, d_model = 32, 2, 16
+        num_bits, num_tables = 5, 8
+        n_batches, iters = 8, 3
+    else:
+        batch, seq, d_model = 256, 8, 64
+        num_bits, num_tables = 13, 32
+        n_batches, iters = 16, 5
+
+    gcfg = GuardrailConfig(d_model=d_model, num_bits=num_bits,
+                           num_tables=num_tables, warmup_items=64.0)
+    clean = _batches(n_batches, batch, seq, d_model)
+    dirty = _batches(n_batches, batch, seq, d_model, nan_frac=0.1, seed=1)
+    masked_tables = -(-num_tables // 4)               # ⌈L/4⌉
+    mask = np.ones(num_tables, np.float32)
+    mask[:masked_tables] = 0.0
+
+    # healthy path
+    g = Guardrail(gcfg)
+    healthy_ips = _time_admits(g, clean, iters)
+    healthy_traces = g.trace_count
+
+    # degraded path: same guardrail, serving mask flipped host-side the
+    # way health_check would set it — ONE extra trace, then cached
+    g._table_mask = jnp.asarray(mask)
+    degraded_ips = _time_admits(g, clean, iters)
+    assert g.trace_count == healthy_traces + 1, (
+        "degraded executable must be a single extra cached trace, got "
+        f"{g.trace_count - healthy_traces}")
+
+    # quarantine tax: healthy mask, 10% non-finite rows in every batch
+    g._table_mask = None
+    quarantine_ips = _time_admits(g, dirty, iters)
+    assert g.trace_count == healthy_traces + 1, \
+        "quarantined batches must reuse the healthy executable"
+    assert g.quarantined > 0, "dirty stream produced no quarantined rows"
+
+    report = {
+        "batch": batch,
+        "seq": seq,
+        "d_model": d_model,
+        "num_bits": num_bits,
+        "num_tables": num_tables,
+        "masked_tables": masked_tables,
+        "n_batches": n_batches,
+        "iters": iters,
+        "healthy": {"items_per_s": healthy_ips},
+        "degraded": {"items_per_s": degraded_ips},
+        "quarantine": {"items_per_s": quarantine_ips,
+                       "quarantined_rows": int(g.quarantined)},
+        "degraded_over_healthy": degraded_ips / healthy_ips,
+        "trace_counts": {"total": g.trace_count},
+    }
+    path = args.json or "BENCH_resilience.json"
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Chaos-drill driver: inject the full fault menu against a live
+guardrail + checkpoint stack and emit a machine-readable resilience
+report (``RESILIENCE.json``) — the CI chaos lane's artifact.
+
+The drill is the repro.resilience lifecycle end to end, in order:
+
+1. serve a clean stream (baseline admit behaviour);
+2. quarantine — NaN/Inf request rows must be sanitized, counted, and
+   answered by the fail policy;
+3. corrupt — bit-flip count tables, verify ``health_check`` localises
+   exactly the flipped tables and degrades scoring to the healthy rest;
+4. repair — re-zero the corrupted tables, re-warm them on live traffic,
+   and confirm the guardrail returns to the healthy executable;
+5. checkpoints — tear the newest checkpoint and confirm
+   ``restore_latest`` falls back to the newest intact step.
+
+Every stage appends pass/fail + evidence to the report; the script exits
+non-zero if any stage fails, so the chaos lane is a gate, not a log.
+
+Usage:
+    PYTHONPATH=src python scripts/chaos_report.py [--json RESILIENCE.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import resilience as rz
+from repro.serve.engine import Guardrail, GuardrailConfig
+from repro.train import checkpoint as ck
+
+D_MODEL, NUM_BITS, NUM_TABLES = 16, 6, 8
+BATCH, SEQ, WARMUP = 32, 2, 64.0
+
+
+def _embeds(rng, n=BATCH):
+    return rng.normal(size=(n, SEQ, D_MODEL)).astype(np.float32)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="RESILIENCE.json")
+    args = ap.parse_args()
+    rng = np.random.default_rng(0)
+    stages = []
+
+    def stage(name, ok, **evidence):
+        stages.append({"stage": name, "ok": bool(ok), **evidence})
+        print(f"[{'ok' if ok else 'FAIL'}] {name}: {evidence}")
+
+    g = Guardrail(GuardrailConfig(d_model=D_MODEL, num_bits=NUM_BITS,
+                                  num_tables=NUM_TABLES,
+                                  warmup_items=WARMUP))
+
+    # 1. clean baseline — warm past warmup so thresholds are armed
+    for _ in range(4):
+        g.admit(jnp.asarray(_embeds(rng)))
+    base_report = jax.device_get(rz.health_check(g.state))
+    stage("baseline", bool(np.asarray(base_report.ok)),
+          n=float(np.asarray(g.state.n)))
+
+    # 2. quarantine: corrupted rows sanitized + counted, policy-answered
+    e = _embeds(rng)
+    bad = rng.random(BATCH) < 0.25
+    e[bad] = np.inf
+    before = g.quarantined
+    verdict = g.admit(jnp.asarray(e))
+    quarantined = g.quarantined - before
+    clean_report = jax.device_get(rz.health_check(g.state))
+    stage("quarantine",
+          quarantined == int(bad.sum()) and bool(np.asarray(clean_report.ok))
+          and bool(verdict[bad].all()),  # default policy is fail_open
+          injected=int(bad.sum()), quarantined=quarantined)
+
+    # 3. corrupt tables -> health_check localises them, guardrail degrades
+    flip_tables = [1, NUM_TABLES - 2]
+    counts = g.state.counts
+    for t in flip_tables:
+        counts = rz.flip_count_bits(counts, jax.random.PRNGKey(t),
+                                    num_flips=3, tables=(t,))
+    g.state = g.state._replace(counts=counts)
+    report = g.health_check()
+    table_ok = np.asarray(report.table_ok, bool)
+    localised = set(np.nonzero(~table_ok)[0].tolist()) == set(flip_tables)
+    still_serving = bool(
+        g.admit(jnp.asarray(_embeds(rng))).shape == (BATCH,))
+    stage("degrade", localised and g.degraded and still_serving,
+          flipped=flip_tables,
+          masked=np.nonzero(~table_ok)[0].tolist())
+
+    # 4. repair + re-warm back to the healthy executable
+    g.repair()
+    repaired_ok = bool(np.asarray(
+        jax.device_get(rz.health_check(g.state, g._repair_offsets)).ok))
+    while g.degraded:
+        g.admit(jnp.asarray(_embeds(rng)))
+        g.health_check()
+    stage("repair", repaired_ok and not g.degraded,
+          rewarmed_n=float(np.asarray(g.state.n)))
+
+    # 5. checkpoint tear -> CRC-verified fallback restore
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"sketch": g.state, "w": g.w}
+        ck.save(d, 100, tree, keep=5)
+        for _ in range(2):
+            g.admit(jnp.asarray(_embeds(rng)))
+        ck.save(d, 200, {"sketch": g.state, "w": g.w}, keep=5)
+        rz.tear_checkpoint(d, 200, mode="truncate")
+        mgr = ck.CheckpointManager(d, keep=5)
+        restored, manifest = mgr.restore_latest(tree)
+        fell_back = manifest is not None and manifest["step"] == 100
+        stage("checkpoint_fallback", bool(fell_back),
+              intact_step=None if manifest is None else manifest["step"])
+
+    ok = all(s["ok"] for s in stages)
+    out = {"ok": ok, "stages": stages,
+           "quarantined_total": int(g.quarantined)}
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"report -> {args.json} (ok={ok})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -131,19 +131,26 @@ def gather_logical(plane: jax.Array, esc: EscTable,
 
 
 def batch_scores_logical(plane: jax.Array, esc: EscTable,
-                         buckets: jax.Array) -> jax.Array:
+                         buckets: jax.Array,
+                         table_mask: jax.Array | None = None) -> jax.Array:
     """``sketch.batch_scores`` over the exact logical counts.
 
     Same row-sum + ONE reciprocal 1/L multiply as the unquantized
     helper (the repo-wide bitwise-parity convention); below saturation
     the gathered integers are identical, so this IS batch_scores
-    bitwise."""
+    bitwise.  ``table_mask`` (L,) averages over healthy tables only —
+    same Python-level branch as ``sketch.batch_scores``, so the unmasked
+    program never sees the mask."""
     L, nbuckets = plane.shape
     rows = jnp.broadcast_to(
         jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
     offs = buckets + rows * nbuckets
     g = gather_logical(plane, esc, offs).astype(jnp.float32)     # (B, L)
-    return jnp.sum(g, axis=-1) * jnp.float32(1.0 / L)
+    if table_mask is None:
+        return jnp.sum(g, axis=-1) * jnp.float32(1.0 / L)
+    maskf = table_mask.astype(jnp.float32)
+    nh = jnp.maximum(jnp.sum(maskf), 1.0)
+    return jnp.sum(g * maskf, axis=-1) * (1.0 / nh)
 
 
 def quantized_scatter(plane: jax.Array, esc: EscTable, offs: jax.Array,

@@ -152,7 +152,8 @@ def make_params(cfg: AceConfig, dtype=jnp.float32) -> jax.Array:
 # reference path and stays pure-jnp.
 # ---------------------------------------------------------------------------
 
-def batch_scores(counts: jax.Array, buckets: jax.Array) -> jax.Array:
+def batch_scores(counts: jax.Array, buckets: jax.Array,
+                 table_mask: jax.Array | None = None) -> jax.Array:
     """Scores of a batch of bucket ids vs a counts array: (B, L) -> (B,).
 
     The rows-broadcast gather + reciprocal-multiply mean.  The mean over
@@ -163,22 +164,51 @@ def batch_scores(counts: jax.Array, buckets: jax.Array) -> jax.Array:
     post-insert Welford gather goes through THIS helper (or mirrors its
     constant, where table-sharding makes the gather structurally
     different) so the formula exists once.
+
+    ``table_mask`` (L,) 0/1 float32 restricts the mean to HEALTHY tables
+    (repro.resilience): score = Σ_j m_j·c_j / max(Σ_j m_j, 1) — the L−k
+    surviving tables are an unbiased estimator of the same Ŝ(q, D)
+    (Theorem 1 holds for any subset of the independent tables).  The
+    ``None`` default is a Python-level branch so the unmasked program is
+    untouched — the bitwise parity contracts above never see the mask.
     """
     L = counts.shape[0]
     rows = jnp.broadcast_to(
         jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
     gathered = counts[rows, buckets].astype(jnp.float32)         # (B, L)
-    return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+    if table_mask is None:
+        return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+    return masked_table_mean(gathered, table_mask)
 
 
-def lookup(state: AceState, buckets: jax.Array) -> jax.Array:
+def masked_table_mean(gathered: jax.Array,
+                      table_mask: jax.Array) -> jax.Array:
+    """Mean of a (..., L) gather over the healthy tables only.
+
+    THE degraded-mode combine (single home, like the 1/L reciprocal of
+    the healthy paths): masked sum × reciprocal of the healthy-table
+    count.  A corrupted table contributes an exact float 0.0 (mask 0 ×
+    finite gather — inject.py never writes NaN into count planes, bit
+    flips yield huge-but-finite integers), so the healthy tables'
+    summation values are identical to an oracle sketch that never held
+    the corrupted tables.
+    """
+    maskf = table_mask.astype(jnp.float32)
+    nh = jnp.maximum(jnp.sum(maskf), 1.0)
+    return jnp.sum(gathered * maskf, axis=-1) * (1.0 / nh)
+
+
+def lookup(state: AceState, buckets: jax.Array,
+           table_mask: jax.Array | None = None) -> jax.Array:
     """counts[j, buckets[., j]] averaged over j.  (B, L) -> (B,) float32.
 
-    This is Ŝ(q, D) of Algorithm 1 (query phase).
+    This is Ŝ(q, D) of Algorithm 1 (query phase).  ``table_mask``
+    averages over healthy tables only (see ``batch_scores``).
     """
     if state.esc is not None:
-        return qz.batch_scores_logical(state.counts, state.esc, buckets)
-    return batch_scores(state.counts, buckets)
+        return qz.batch_scores_logical(state.counts, state.esc, buckets,
+                                       table_mask=table_mask)
+    return batch_scores(state.counts, buckets, table_mask=table_mask)
 
 
 def histogram(buckets: jax.Array, cfg: AceConfig) -> jax.Array:
@@ -410,19 +440,35 @@ def merge(a: AceState, b: AceState) -> AceState:
 # Statistics of the sketch.
 # ---------------------------------------------------------------------------
 
-def mean_mu(state: AceState) -> jax.Array:
+def mean_mu(state: AceState,
+            table_mask: jax.Array | None = None) -> jax.Array:
     """Exact dataset mean score  μ = Σ‖A_j‖² / (n·L)  (≡ paper Eq. 11 stream).
 
     Proof sketch: Algorithm 1 maintains n·μ = Σ_i Ŝ(x_i, D); item i in bucket
     b of array j contributes A_j[b]/L once per array, and bucket b holds
     A_j[b] items, so Σ_i A_j[H_j(x_i)] = Σ_b A_j[b]².
+
+    ``table_mask`` (L,) restricts the closed form to healthy tables:
+    μ = Σ_{j healthy} ‖A_j‖² / (n · num_healthy).  Each healthy table's
+    counts still sum to n (conservation is per table), so per-table the
+    formula is unchanged — only the mean over tables shrinks.  The
+    masked path sweeps a densified plane for quantized sketches
+    (degraded mode only — never the healthy hot path).
     """
     L = state.counts.shape[0]
-    denom = jnp.maximum(state.n, 1.0) * L
-    if state.esc is not None:
-        return qz.sq_sum(state.counts, state.esc) / denom
-    c = state.counts.astype(jnp.float32)
-    return jnp.sum(c * c) / denom
+    if table_mask is None:
+        denom = jnp.maximum(state.n, 1.0) * L
+        if state.esc is not None:
+            return qz.sq_sum(state.counts, state.esc) / denom
+        c = state.counts.astype(jnp.float32)
+        return jnp.sum(c * c) / denom
+    maskf = table_mask.astype(jnp.float32)
+    nh = jnp.maximum(jnp.sum(maskf), 1.0)
+    dense = (qz.densify(state.counts, state.esc)
+             if state.esc is not None else state.counts)
+    c = dense.astype(jnp.float32)
+    per_table = jnp.sum(c * c, axis=1)                           # (L,)
+    return jnp.sum(per_table * maskf) / (jnp.maximum(state.n, 1.0) * nh)
 
 
 def mu_sequential_increment(state: AceState, buckets_one: jax.Array,
@@ -443,9 +489,10 @@ def mu_sequential_increment(state: AceState, buckets_one: jax.Array,
     return new_state, new_mu
 
 
-def mean_rate(state: AceState) -> jax.Array:
+def mean_rate(state: AceState,
+              table_mask: jax.Array | None = None) -> jax.Array:
     """Exact mean collision RATE  μ/n  (scale-free across stream growth)."""
-    return mean_mu(state) / jnp.maximum(state.n, 1.0)
+    return mean_mu(state, table_mask=table_mask) / jnp.maximum(state.n, 1.0)
 
 
 def sigma_welford(state: AceState) -> jax.Array:
@@ -454,7 +501,8 @@ def sigma_welford(state: AceState) -> jax.Array:
 
 
 def admit_threshold(state: AceState, alpha: float,
-                    warmup_items: float) -> jax.Array:
+                    warmup_items: float,
+                    table_mask: jax.Array | None = None) -> jax.Array:
     """Score-space admission threshold: admit iff  score >= threshold.
 
     The μ−ασ rule lives in rate space (rate = score/n); multiplying both
@@ -463,9 +511,14 @@ def admit_threshold(state: AceState, alpha: float,
     admit kernel consumes.  During warmup (n < warmup_items) the
     threshold is −inf: everything is admitted.  Pure device scalar ops —
     no host sync.
+
+    ``table_mask`` keeps the threshold consistent with masked scores:
+    masked μ over the same healthy subset the scores average over (the
+    Welford σ stream is a scalar over batch means — table-independent,
+    so it needs no masking).
     """
-    t = (mean_rate(state) - alpha * sigma_welford(state)) \
-        * jnp.maximum(state.n, 1.0)
+    t = (mean_rate(state, table_mask=table_mask)
+         - alpha * sigma_welford(state)) * jnp.maximum(state.n, 1.0)
     return jnp.where(state.n >= warmup_items, t, -jnp.inf)
 
 

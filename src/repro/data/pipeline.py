@@ -136,7 +136,7 @@ class AceDataFilter:
         (see ``mean_embed_features``)."""
         return mean_embed_features(embeds, self.bias_const)
 
-    def step(self, state, w, feat):
+    def step(self, state, w, feat, table_mask=None):
         """One filter step over precomputed features: hash ONCE, score from
         the same bucket ids, threshold on-device, masked insert.
 
@@ -147,6 +147,19 @@ class AceDataFilter:
         the filter path compiled into ``train_step`` — ONE implementation
         for both, so chunked and per-batch ingest stay equivalent by
         construction.
+
+        Entry-point sanitization (repro.resilience): rows with non-finite
+        features are zeroed before hashing, never kept, never inserted
+        (even under ``insert_all``), and marked with ``margin = −inf`` so
+        drivers can count them as quarantined.  The pre-fix behaviour
+        silently inserted them at one bucket per table, skewing counts
+        and ssq/μ forever — training data fails CLOSED (garbage must not
+        train or enter the sketch).  For all-finite batches the
+        sanitization is bitwise identity.
+
+        ``table_mask`` (L,) f32, when given, scores and thresholds over
+        healthy tables only (the repro.resilience degraded mode); None
+        traces no mask code.
 
         The decision matches the pre-rewrite μ−ασ rate-space rule moved to
         score space via ``sk.admit_threshold`` (multiply both sides by
@@ -162,12 +175,16 @@ class AceDataFilter:
         (the hand-rolled block ignored it).
         """
         cfg = self.ace_cfg
+        finite = jnp.all(jnp.isfinite(feat), axis=-1)
+        feat = jnp.where(finite[:, None], feat, 0.0)
         buckets = srp.hash_buckets(feat, w, cfg.srp)   # the ONE hash
-        scores = sk.lookup(state, buckets)             # same bucket ids
-        thresh = sk.admit_threshold(state, self.alpha, self.warmup_items)
-        keep = scores >= thresh
-        margin = scores - thresh
-        ins = jnp.ones_like(keep) if self.insert_all else keep
+        scores = sk.lookup(state, buckets,             # same bucket ids
+                           table_mask=table_mask)
+        thresh = sk.admit_threshold(state, self.alpha, self.warmup_items,
+                                    table_mask=table_mask)
+        keep = jnp.logical_and(scores >= thresh, finite)
+        margin = jnp.where(finite, scores - thresh, -jnp.inf)
+        ins = finite if self.insert_all else keep
         new_state = sk.insert_buckets_masked(state, buckets, ins, cfg)
         return new_state, keep, margin
 

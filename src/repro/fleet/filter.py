@@ -75,22 +75,32 @@ class FleetDataFilter:
         from repro.data.pipeline import mean_embed_features
         return mean_embed_features(embeds, self.bias_const)
 
-    def step(self, state: FleetState, w, feat, tenant_ids):
+    def step(self, state: FleetState, w, feat, tenant_ids,
+             table_mask=None):
         """hash ONCE → tenant-routed score → per-tenant μ−ασ threshold →
         one mixed-batch masked insert.
 
         Returns (new_state, keep (B,) bool, margin (B,) float32); the
         scan body of ``StreamRunner`` when the filter is a fleet.
         ``tenant_ids`` (B,) int32 in [0, T).
+
+        Non-finite feature rows are sanitized at entry exactly like
+        ``AceDataFilter.step`` (zeroed pre-hash, never kept/inserted,
+        ``margin = −inf``); ``table_mask`` (T, L) f32 scores and
+        thresholds each tenant over its healthy tables only.
         """
         cfg = self.ace_cfg
+        finite = jnp.all(jnp.isfinite(feat), axis=-1)
+        feat = jnp.where(finite[:, None], feat, 0.0)
         buckets = srp.hash_buckets(feat, w, cfg.srp)   # the ONE hash
-        scores = fl.fleet_scores(state, tenant_ids, buckets)
+        scores = fl.fleet_scores(state, tenant_ids, buckets,
+                                 table_mask=table_mask)
         thresh = fl.admit_thresholds(
-            state, self.alpha, self.warmup_items)[tenant_ids]
-        keep = scores >= thresh
-        margin = scores - thresh
-        ins = jnp.ones_like(keep) if self.insert_all else keep
+            state, self.alpha, self.warmup_items,
+            table_mask=table_mask)[tenant_ids]
+        keep = jnp.logical_and(scores >= thresh, finite)
+        margin = jnp.where(finite, scores - thresh, -jnp.inf)
+        ins = finite if self.insert_all else keep
         new_state = fl.insert_masked(state, tenant_ids, buckets, ins, cfg)
         return new_state, keep, margin
 

@@ -194,16 +194,27 @@ def fleet_table_gather(counts: jax.Array, tenant_ids: jax.Array,
 
 
 def fleet_scores(state: FleetState, tenant_ids: jax.Array,
-                 buckets: jax.Array) -> jax.Array:
+                 buckets: jax.Array,
+                 table_mask: jax.Array | None = None) -> jax.Array:
     """Each item's Ŝ(q, D_tenant) vs its OWN tenant's sketch: (B,) f32.
 
     Same row-sum + ONE reciprocal 1/L multiply sequence as
     ``sketch.batch_scores`` (the bitwise-parity convention every score
     path in the repo shares).
+
+    ``table_mask`` (T, L) 0/1 restricts each item's mean to ITS OWN
+    tenant's healthy tables: item i averages over
+    Σ_j mask[tid_i, j] tables — per-tenant degradation, routed by the
+    same tenant_ids gather as everything else.  Python-level ``None``
+    branch keeps the healthy program untouched.
     """
     L = state.counts.shape[1]
     gathered = fleet_table_gather(state.counts, tenant_ids, buckets)
-    return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+    if table_mask is None:
+        return jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+    maskf = table_mask.astype(jnp.float32)[tenant_ids]           # (B, L)
+    nh = jnp.maximum(jnp.sum(maskf, axis=-1), 1.0)               # (B,)
+    return jnp.sum(gathered * maskf, axis=-1) * (1.0 / nh)
 
 
 def _tenant_onehot(tenant_ids: jax.Array, num_tenants: int) -> jax.Array:
@@ -289,16 +300,29 @@ def insert_masked(state: FleetState, tenant_ids: jax.Array,
 # elementwise ops as the repro.core.sketch scalars (bitwise per tenant).
 # ---------------------------------------------------------------------------
 
-def mean_mu_fleet(state: FleetState) -> jax.Array:
-    """(T,) exact per-tenant μ = Σ‖A_j‖² / (n·L) (Eq. 11 closed form)."""
+def mean_mu_fleet(state: FleetState,
+                  table_mask: jax.Array | None = None) -> jax.Array:
+    """(T,) exact per-tenant μ = Σ‖A_j‖² / (n·L) (Eq. 11 closed form).
+
+    ``table_mask`` (T, L) restricts each tenant's table mean to its
+    healthy tables (μ_t = Σ_{j healthy} ‖A_tj‖² / (n_t · nh_t))."""
     L = state.counts.shape[1]
     c = state.counts.astype(jnp.float32)
-    return jnp.sum(c * c, axis=(1, 2)) / (jnp.maximum(state.n, 1.0) * L)
+    if table_mask is None:
+        return jnp.sum(c * c, axis=(1, 2)) \
+            / (jnp.maximum(state.n, 1.0) * L)
+    maskf = table_mask.astype(jnp.float32)                       # (T, L)
+    nh = jnp.maximum(jnp.sum(maskf, axis=1), 1.0)                # (T,)
+    per_table = jnp.sum(c * c, axis=2)                           # (T, L)
+    return jnp.sum(per_table * maskf, axis=1) \
+        / (jnp.maximum(state.n, 1.0) * nh)
 
 
-def mean_rate_fleet(state: FleetState) -> jax.Array:
+def mean_rate_fleet(state: FleetState,
+                    table_mask: jax.Array | None = None) -> jax.Array:
     """(T,) exact per-tenant mean collision rate μ/n."""
-    return mean_mu_fleet(state) / jnp.maximum(state.n, 1.0)
+    return mean_mu_fleet(state, table_mask=table_mask) \
+        / jnp.maximum(state.n, 1.0)
 
 
 def sigma_welford_fleet(state: FleetState) -> jax.Array:
@@ -307,16 +331,20 @@ def sigma_welford_fleet(state: FleetState) -> jax.Array:
 
 
 def admit_thresholds(state: FleetState, alpha: float,
-                     warmup_items: float) -> jax.Array:
+                     warmup_items: float,
+                     table_mask: jax.Array | None = None) -> jax.Array:
     """(T,) per-tenant score-space admission thresholds.
 
     ``sketch.admit_threshold`` vectorised over the tenant axis — same
     formula sequence (rate − ασ, moved to score space by max(n, 1),
     −inf during each tenant's OWN warmup), so each component is bitwise
     the single-tenant threshold.  Route to items with
-    ``admit_thresholds(...)[tenant_ids]``.
+    ``admit_thresholds(...)[tenant_ids]``.  ``table_mask`` (T, L) keeps
+    each tenant's threshold consistent with its masked scores (the σ
+    stream is per tenant but table-independent — no masking needed).
     """
-    t = (mean_rate_fleet(state) - alpha * sigma_welford_fleet(state)) \
+    t = (mean_rate_fleet(state, table_mask=table_mask)
+         - alpha * sigma_welford_fleet(state)) \
         * jnp.maximum(state.n, 1.0)
     return jnp.where(state.n >= warmup_items, t, -jnp.inf)
 

@@ -97,39 +97,59 @@ def set_tenant_window(state: WindowedFleetState, t: int,
 # ---------------------------------------------------------------------------
 
 def window_table_sums_fleet(state: WindowedFleetState,
-                            tenant_ids: jax.Array, buckets: jax.Array):
+                            tenant_ids: jax.Array, buckets: jax.Array,
+                            table_mask: jax.Array | None = None):
     """Per-item (tail_sums, live_sums), each vs the item's OWN tenant's
     ring — the fleet analogue of ``ring.window_table_sums`` (same
-    gathered integers, same row-sum order → bitwise per tenant)."""
+    gathered integers, same row-sum order → bitwise per tenant).
+    ``table_mask`` (T, L) zeroes each item's corrupted tables out of
+    both row-sums, routed by tenant_ids (degraded mode; the ``None``
+    branch keeps the healthy program untouched)."""
     T, E, L, nbuckets = state.counts.shape
     iota_j = jnp.arange(L, dtype=jnp.int32)[None, :]
     tail_rows = tenant_ids[:, None] * L + iota_j                 # (B, L)
     tail_flat = state.tail.reshape(T * L, nbuckets)
-    tail_sums = jnp.sum(tail_flat[tail_rows, buckets], axis=-1)
     ring_rows = (tenant_ids[:, None] * (E * L)
                  + state.cursor[tenant_ids][:, None] * L + iota_j)
     flat = state.counts.reshape(T * E * L, nbuckets)
-    live_sums = jnp.sum(flat[ring_rows, buckets].astype(jnp.float32),
-                        axis=-1)
-    return tail_sums, live_sums
+    tail_g = tail_flat[tail_rows, buckets]                       # (B, L)
+    live_g = flat[ring_rows, buckets].astype(jnp.float32)        # (B, L)
+    if table_mask is not None:
+        maskf = table_mask.astype(jnp.float32)[tenant_ids]       # (B, L)
+        tail_g = tail_g * maskf
+        live_g = live_g * maskf
+    return jnp.sum(tail_g, axis=-1), jnp.sum(live_g, axis=-1)
 
 
 def window_fleet_scores(state: WindowedFleetState, tenant_ids: jax.Array,
-                        buckets: jax.Array) -> jax.Array:
+                        buckets: jax.Array,
+                        table_mask: jax.Array | None = None) -> jax.Array:
     """(B,) windowed scores, each item vs its own tenant's window."""
     tail_sums, live_sums = window_table_sums_fleet(
-        state, tenant_ids, buckets)
-    return ring.score_live(tail_sums, live_sums, state.counts.shape[2])
+        state, tenant_ids, buckets, table_mask=table_mask)
+    if table_mask is None:
+        return ring.score_live(tail_sums, live_sums,
+                               state.counts.shape[2])
+    maskf = table_mask.astype(jnp.float32)[tenant_ids]           # (B, L)
+    nh = jnp.maximum(jnp.sum(maskf, axis=-1), 1.0)               # (B,)
+    return (tail_sums + live_sums) * (1.0 / nh)
 
 
 def window_admit_thresholds(state: WindowedFleetState, gamma: float,
-                            alpha: float,
-                            warmup_items: float) -> jax.Array:
+                            alpha: float, warmup_items: float,
+                            table_mask: jax.Array | None = None
+                            ) -> jax.Array:
     """(T,) per-tenant windowed μ−ασ thresholds —
     ``ring.admit_threshold_windowed`` vmapped over the tenant axis (the
-    per-tenant component is the identical elementwise formula)."""
-    return jax.vmap(lambda s: ring.admit_threshold_windowed(
-        s, gamma, alpha, warmup_items))(WindowedAceState(*state))
+    per-tenant component is the identical elementwise formula).
+    ``table_mask`` (T, L) vmaps alongside the state so each tenant's
+    threshold averages over its own healthy tables."""
+    if table_mask is None:
+        return jax.vmap(lambda s: ring.admit_threshold_windowed(
+            s, gamma, alpha, warmup_items))(WindowedAceState(*state))
+    return jax.vmap(lambda s, m: ring.admit_threshold_windowed(
+        s, gamma, alpha, warmup_items, table_mask=m))(
+        WindowedAceState(*state), table_mask)
 
 
 # ---------------------------------------------------------------------------

@@ -46,9 +46,13 @@ from repro.kernels.runtime import resolve_interpret
 from repro.kernels.srp_hash import make_pack_matrix, _round_up
 
 
-def _kernel(q_ref, w_ref, pack_ref, thresh_ref, counts_in_ref,
-            counts_out_ref, sm_ref, buckets_ref, acc_ref,
-            *, nk: int, B: int, L: int, nbuckets: int):
+def _kernel(q_ref, w_ref, pack_ref, thresh_ref, counts_in_ref, *rest,
+            nk: int, B: int, L: int, nbuckets: int, gated: bool):
+    if gated:
+        im_ref, counts_out_ref, sm_ref, buckets_ref, acc_ref = rest
+    else:
+        im_ref = None
+        counts_out_ref, sm_ref, buckets_ref, acc_ref = rest
     k = pl.program_id(0)
 
     @pl.when(k == 0)
@@ -81,6 +85,10 @@ def _kernel(q_ref, w_ref, pack_ref, thresh_ref, counts_in_ref,
         valid = jax.lax.broadcasted_iota(
             jnp.int32, (Bp, 1), 0).reshape(Bp) < B
         admit = jnp.logical_and(scores >= thresh_ref[0, 0], valid)
+        if gated:
+            # quarantine gate: rows the caller sanitized out (non-finite
+            # features) must neither admit nor insert
+            admit = jnp.logical_and(admit, im_ref[...][:, 0] > 0.0)
         admitf = jnp.where(admit, 1.0, 0.0).astype(jnp.float32)
 
         col = jax.lax.broadcasted_iota(jnp.int32, sm_ref.shape, 1)
@@ -108,7 +116,8 @@ def _kernel(q_ref, w_ref, pack_ref, thresh_ref, counts_in_ref,
 @functools.partial(jax.jit, static_argnames=("cfg", "bk", "interpret"))
 def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
                     thresh: jax.Array, cfg: SrpConfig, bk: int = 512,
-                    interpret: bool | None = None):
+                    interpret: bool | None = None,
+                    item_mask: jax.Array | None = None):
     """One-launch guardrail admission step.
 
     counts (L, 2^K), q (B, d), w (d, P), thresh () float32 (score-space,
@@ -118,6 +127,10 @@ def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
          admit (B,) bool,
          buckets (B, L) int32 — the one hash, re-exported so the Welford
          epilogue never hashes again).
+
+    ``item_mask`` (B,) bool, when given, gates admission per row: masked
+    rows (the caller's quarantined non-finite inputs) neither admit nor
+    insert, still in the one launch (a lane-broadcast operand + one AND).
     """
     interpret = resolve_interpret(interpret)
     B, d = q.shape
@@ -147,17 +160,26 @@ def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
     pack = jnp.asarray(make_pack_matrix(cfg, lp))
     nk = dp // bk_
     thresh_arr = jnp.asarray(thresh, jnp.float32).reshape(1, 1)
+    gated = item_mask is not None
+
+    in_specs = [
+        pl.BlockSpec((Bp, bk_), lambda k: (0, k)),
+        pl.BlockSpec((bk_, P), lambda k: (k, 0)),
+        pl.BlockSpec((P, lp), lambda k: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((L, nbuckets), lambda k: (0, 0)),
+    ]
+    operands = [qp, wp, pack, thresh_arr, counts]
+    if gated:
+        imp = jnp.pad(item_mask.astype(jnp.float32), (0, Bp - B))
+        operands.append(jnp.broadcast_to(imp[:, None], (Bp, 128)))
+        in_specs.append(pl.BlockSpec((Bp, 128), lambda k: (0, 0)))
 
     new_counts, sm, buckets = pl.pallas_call(
-        functools.partial(_kernel, nk=nk, B=B, L=L, nbuckets=nbuckets),
+        functools.partial(_kernel, nk=nk, B=B, L=L, nbuckets=nbuckets,
+                          gated=gated),
         grid=(nk,),
-        in_specs=[
-            pl.BlockSpec((Bp, bk_), lambda k: (0, k)),
-            pl.BlockSpec((bk_, P), lambda k: (k, 0)),
-            pl.BlockSpec((P, lp), lambda k: (0, 0)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((L, nbuckets), lambda k: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((L, nbuckets), lambda k: (0, 0)),
             pl.BlockSpec((Bp, 128), lambda k: (0, 0)),
@@ -171,5 +193,5 @@ def ace_admit_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
         scratch_shapes=[pltpu.VMEM((Bp, P), jnp.float32)],
         input_output_aliases={4: 0},
         interpret=interpret,
-    )(qp, wp, pack, thresh_arr, counts)
+    )(*operands)
     return (new_counts, sm[:B, 0], sm[:B, 1] > 0.0, buckets[:B, :L])

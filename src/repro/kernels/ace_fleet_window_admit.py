@@ -150,7 +150,8 @@ def ace_fleet_window_admit_fused(ring_counts: jax.Array, tail: jax.Array,
                                  tenant_ids: jax.Array, w: jax.Array,
                                  thresholds: jax.Array, cfg: SrpConfig,
                                  bk: int | str = 512,
-                                 interpret: bool | None = None):
+                                 interpret: bool | None = None,
+                                 item_mask: jax.Array | None = None):
     """One-launch fleet×window admission step (counts half).
 
     ring_counts (T, E, L, 2^K), tail (T, L, 2^K) f32, cursor (T,) int32,
@@ -168,6 +169,10 @@ def ace_fleet_window_admit_fused(ring_counts: jax.Array, tail: jax.Array,
     per-(shape, backend) cache and trace-time fallback as ``srp_hash``.
     Autotune timing mutates a SCRATCH copy of the ring, not the caller's
     buffer (the kernel aliases its ring input in place).
+
+    ``item_mask`` (B,) bool gates admission per row at zero extra kernel
+    cost: the threshold routing is already per-item, so quarantined rows
+    simply ride in with a +inf threshold (never admit, never insert).
     """
     interpret = resolve_interpret(interpret)
     if bk == "auto":
@@ -178,12 +183,14 @@ def ace_fleet_window_admit_fused(ring_counts: jax.Array, tail: jax.Array,
             lambda cand: _admit_fused_impl(
                 # copy: the impl donates/aliases the ring buffer.
                 jnp.array(ring_counts), tail, cursor, q, tenant_ids, w,
-                thresholds, cfg, cand[0], interpret)[1])
+                thresholds, cfg, cand[0], interpret,
+                item_mask=item_mask)[1])
         (bk,) = (runtime.autotune(
             "ace_fleet_window_admit", shape_key, interpret,
             [(c,) for c in BK_CANDIDATES], bench_fn=bench))
     return _admit_fused_impl(ring_counts, tail, cursor, q, tenant_ids,
-                             w, thresholds, cfg, bk, interpret)
+                             w, thresholds, cfg, bk, interpret,
+                             item_mask=item_mask)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "bk", "interpret"))
@@ -191,7 +198,8 @@ def _admit_fused_impl(ring_counts: jax.Array, tail: jax.Array,
                       cursor: jax.Array, q: jax.Array,
                       tenant_ids: jax.Array, w: jax.Array,
                       thresholds: jax.Array, cfg: SrpConfig,
-                      bk: int, interpret: bool):
+                      bk: int, interpret: bool,
+                      item_mask: jax.Array | None = None):
     B, d = q.shape
     P = cfg.padded_projections
     T, E, L, nbuckets = ring_counts.shape
@@ -229,8 +237,12 @@ def _admit_fused_impl(ring_counts: jax.Array, tail: jax.Array,
     row0 = (tenant_ids.astype(jnp.int32) * (E * L)
             + cursor[tenant_ids] * L)
     row0p = jnp.pad(row0, (0, Bp - B))
-    thr_b = jnp.pad(thresholds[tenant_ids].astype(jnp.float32),
-                    (0, Bp - B), constant_values=jnp.inf)
+    thr_i = thresholds[tenant_ids].astype(jnp.float32)
+    if item_mask is not None:
+        # quarantine gate at zero kernel cost: a masked row's threshold
+        # becomes +inf, so it can neither admit nor insert
+        thr_i = jnp.where(item_mask, thr_i, jnp.inf)
+    thr_b = jnp.pad(thr_i, (0, Bp - B), constant_values=jnp.inf)
     tid2d = jnp.broadcast_to(tidp[:, None], (Bp, 128))
     row02d = jnp.broadcast_to(row0p[:, None], (Bp, 128))
     thr2d = jnp.broadcast_to(thr_b[:, None], (Bp, 128))

@@ -48,8 +48,13 @@ def flat_table_gather(counts: jax.Array, buckets: jax.Array,
     return jnp.take(flat, offs, axis=0).astype(jnp.float32)       # (B, L)
 
 
-def _kernel(q_ref, w_ref, pack_ref, counts_ref, out_ref, acc_ref,
-            *, nk: int, L: int, nbuckets: int):
+def _kernel(q_ref, w_ref, pack_ref, counts_ref, *rest,
+            nk: int, L: int, nbuckets: int, weighted: bool):
+    if weighted:
+        tw_ref, out_ref, acc_ref = rest
+    else:
+        out_ref, acc_ref = rest
+        tw_ref = None
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -68,17 +73,31 @@ def _kernel(q_ref, w_ref, pack_ref, counts_ref, out_ref, acc_ref,
         buckets = jnp.dot(bits, pack_ref[...],
                           preferred_element_type=jnp.float32).astype(jnp.int32)
         gathered = flat_table_gather(counts_ref[...], buckets, L, nbuckets)
-        # reciprocal multiply, not `/ L` — same parity convention as
-        # sketch.batch_scores and the fused admit kernel
-        score = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
+        if weighted:
+            # degraded-mode combine: the caller bakes the health mask AND
+            # its 1/num_healthy normaliser into table_weights, so the
+            # kernel applies NO 1/L of its own
+            tw = tw_ref[...][0, :L]
+            score = jnp.sum(gathered * tw[None, :], axis=-1)
+        else:
+            # reciprocal multiply, not `/ L` — same parity convention as
+            # sketch.batch_scores and the fused admit kernel
+            score = jnp.sum(gathered, axis=-1) * jnp.float32(1.0 / L)
         out_ref[...] = jnp.broadcast_to(score[:, None], out_ref.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "bm", "bk", "interpret"))
 def ace_score_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
                     cfg: SrpConfig, bm: int = 128, bk: int = 512,
-                    interpret: bool | None = None) -> jax.Array:
-    """counts (L, 2^K), q (B, d), w (d, P) -> scores (B,) float32."""
+                    interpret: bool | None = None,
+                    table_weights: jax.Array | None = None) -> jax.Array:
+    """counts (L, 2^K), q (B, d), w (d, P) -> scores (B,) float32.
+
+    ``table_weights`` (L,) float32, when given, replaces the 1/L mean
+    with the weighted combine ``Σ_j tw_j · gathered_j`` — the degraded
+    health-mask path (the caller normalises tw, typically
+    mask/num_healthy).  ``None`` compiles the unchanged healthy kernel.
+    """
     interpret = resolve_interpret(interpret)
     B, d = q.shape
     P = cfg.padded_projections
@@ -93,19 +112,29 @@ def ace_score_fused(counts: jax.Array, q: jax.Array, w: jax.Array,
     lp = _round_up(L, 128)
     pack = jnp.asarray(make_pack_matrix(cfg, lp))
     nb, nk = Bp // bm_, dp // bk_
+    weighted = table_weights is not None
+
+    in_specs = [
+        pl.BlockSpec((bm_, bk_), lambda i, k: (i, k)),
+        pl.BlockSpec((bk_, P), lambda i, k: (k, 0)),
+        pl.BlockSpec((P, lp), lambda i, k: (0, 0)),
+        pl.BlockSpec((L, nbuckets), lambda i, k: (0, 0)),
+    ]
+    operands = [qp, wp, pack, counts]
+    if weighted:
+        twp = jnp.pad(table_weights.astype(jnp.float32)[None, :],
+                      ((0, 0), (0, lp - L)))
+        in_specs.append(pl.BlockSpec((1, lp), lambda i, k: (0, 0)))
+        operands.append(twp)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, nk=nk, L=L, nbuckets=nbuckets),
+        functools.partial(_kernel, nk=nk, L=L, nbuckets=nbuckets,
+                          weighted=weighted),
         grid=(nb, nk),
-        in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda i, k: (i, k)),
-            pl.BlockSpec((bk_, P), lambda i, k: (k, 0)),
-            pl.BlockSpec((P, lp), lambda i, k: (0, 0)),
-            pl.BlockSpec((L, nbuckets), lambda i, k: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, 128), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, 128), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm_, P), jnp.float32)],
         interpret=interpret,
-    )(qp, wp, pack, counts)
+    )(*operands)
     return out[:B, 0]

@@ -64,11 +64,14 @@ def choose_mode(E: int, L: int) -> str:
 
 
 def _weighted_table_sums(counts, buckets, weights, *, E, L, nbuckets,
-                         mode):
+                         mode, table_weights=None):
     """Σ_e w_e · Σ_j C_e[j, b_j]  for a (bm, L) bucket block -> (bm,).
 
     Shared by both the kernel body and (via ref) the oracles; the
-    canonical summation order lives HERE once.
+    canonical summation order lives HERE once.  ``table_weights`` (L,)
+    scales each table's gathered column before the row-sum — the
+    degraded health-mask combine (None leaves the healthy sums
+    untouched).
     """
     rows_off = jax.lax.broadcasted_iota(
         jnp.int32, (buckets.shape[0], L), 1) * nbuckets
@@ -81,8 +84,10 @@ def _weighted_table_sums(counts, buckets, weights, *, E, L, nbuckets,
         gathered = jnp.take(flat, offs, axis=0).astype(jnp.float32)
         acc = jnp.zeros(buckets.shape[:1], jnp.float32)
         for e in range(E):   # ring-index order (parity contract)
-            acc = acc + weights[e] * jnp.sum(
-                gathered[:, e * L:(e + 1) * L], axis=-1)
+            g = gathered[:, e * L:(e + 1) * L]
+            if table_weights is not None:
+                g = g * table_weights[None, :]
+            acc = acc + weights[e] * jnp.sum(g, axis=-1)
         return acc
     # unroll: E independent flattened single-epoch gathers
     acc = jnp.zeros(buckets.shape[:1], jnp.float32)
@@ -90,17 +95,31 @@ def _weighted_table_sums(counts, buckets, weights, *, E, L, nbuckets,
         flat_e = counts[e].reshape(L * nbuckets)
         g = jnp.take(flat_e, buckets + rows_off,
                      axis=0).astype(jnp.float32)
+        if table_weights is not None:
+            g = g * table_weights[None, :]
         acc = acc + weights[e] * jnp.sum(g, axis=-1)
     return acc
 
 
-def _kernel(buckets_ref, w_ref, counts_ref, out_ref, *, E, L, nbuckets,
-            mode):
+def _kernel(buckets_ref, w_ref, counts_ref, *rest, E, L, nbuckets,
+            mode, weighted):
+    if weighted:
+        tw_ref, out_ref = rest
+        tw = tw_ref[...][0, :L]
+    else:
+        (out_ref,) = rest
+        tw = None
     buckets = buckets_ref[...]
     weights = [w_ref[0, e] for e in range(E)]
     acc = _weighted_table_sums(counts_ref[...], buckets, weights,
-                               E=E, L=L, nbuckets=nbuckets, mode=mode)
-    score = acc * jnp.float32(1.0 / L)
+                               E=E, L=L, nbuckets=nbuckets, mode=mode,
+                               table_weights=tw)
+    if weighted:
+        # degraded combine: the caller bakes the 1/num_healthy normaliser
+        # into table_weights, so no 1/L here
+        score = acc
+    else:
+        score = acc * jnp.float32(1.0 / L)
     out_ref[...] = jnp.broadcast_to(score[:, None], out_ref.shape)
 
 
@@ -109,12 +128,18 @@ def _kernel(buckets_ref, w_ref, counts_ref, out_ref, *, E, L, nbuckets,
 def ace_window_combine(counts: jax.Array, buckets: jax.Array,
                        weights: jax.Array,
                        interpret: bool | None = None, mode: str = "auto",
-                       bm: int = 1024) -> jax.Array:
+                       bm: int = 1024,
+                       table_weights: jax.Array | None = None) -> jax.Array:
     """counts (E, L, 2^K), buckets (B, L), weights (E,) -> (B,) scores.
 
     ``weights`` is the γ^age epoch-weight vector (a traced array — the
     ring cursor moves every rotation, and re-tracing per cursor position
-    would defeat the one-executable contract)."""
+    would defeat the one-executable contract).
+
+    ``table_weights`` (L,) float32, when given, scales each table's
+    column and REPLACES the 1/L mean (the caller bakes the health mask
+    and its 1/num_healthy normaliser in — the degraded-mode contract
+    shared with ``ace_score_fused``)."""
     interpret = resolve_interpret(interpret)
     E, L, nbuckets = counts.shape
     B = buckets.shape[0]
@@ -131,17 +156,28 @@ def ace_window_combine(counts: jax.Array, buckets: jax.Array,
     # lane-pad the weights row so the (1, E) block is VPU-addressable
     Ep = ((E + 127) // 128) * 128
     wp = jnp.pad(weights.astype(jnp.float32)[None, :], ((0, 0), (0, Ep - E)))
+    weighted = table_weights is not None
+
+    in_specs = [
+        pl.BlockSpec((bm_, L), lambda i: (i, 0)),
+        pl.BlockSpec((1, Ep), lambda i: (0, 0)),
+        pl.BlockSpec((E, L, nbuckets), lambda i: (0, 0, 0)),
+    ]
+    operands = [bp, wp, counts]
+    if weighted:
+        Lp = ((L + 127) // 128) * 128
+        twp = jnp.pad(table_weights.astype(jnp.float32)[None, :],
+                      ((0, 0), (0, Lp - L)))
+        in_specs.append(pl.BlockSpec((1, Lp), lambda i: (0, 0)))
+        operands.append(twp)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, E=E, L=L, nbuckets=nbuckets, mode=mode),
+        functools.partial(_kernel, E=E, L=L, nbuckets=nbuckets, mode=mode,
+                          weighted=weighted),
         grid=(Bp // bm_,),
-        in_specs=[
-            pl.BlockSpec((bm_, L), lambda i: (i, 0)),
-            pl.BlockSpec((1, Ep), lambda i: (0, 0)),
-            pl.BlockSpec((E, L, nbuckets), lambda i: (0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm_, 128), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, 128), jnp.float32),
         interpret=interpret,
-    )(bp, wp, counts)
+    )(*operands)
     return out[:B, 0]

@@ -90,29 +90,52 @@ def ace_update(state: AceState, buckets: jax.Array,
         welford_m2=state.welford_m2 + m2_b + delta**2 * n * b / safe)
 
 
-def ace_query(state: AceState, buckets: jax.Array) -> jax.Array:
+def _mask_weights(table_mask: jax.Array) -> jax.Array:
+    """(… L) 0/1 health mask -> kernel ``table_weights``: mask baked with
+    its own 1/num_healthy normaliser (the degraded-combine contract of
+    ``ace_score_fused`` / ``ace_window_combine``)."""
+    maskf = table_mask.astype(jnp.float32)
+    return maskf / jnp.maximum(jnp.sum(maskf, axis=-1, keepdims=True), 1.0)
+
+
+def ace_query(state: AceState, buckets: jax.Array,
+              table_mask: jax.Array | None = None) -> jax.Array:
     """(B, L) bucket ids -> (B,) scores via the Pallas gather kernel."""
     if state.esc is not None:
         # Promoted buckets read through the escalation table (jnp path;
         # the narrow-plane gather alone would clip at the dtype cap).
-        return _sk.lookup(state, buckets)
-    return jnp.mean(_q.ace_query(state.counts, buckets), axis=-1)
+        return _sk.lookup(state, buckets, table_mask=table_mask)
+    gathered = _q.ace_query(state.counts, buckets)
+    if table_mask is None:
+        return jnp.mean(gathered, axis=-1)
+    return _sk.masked_table_mean(gathered, table_mask)
 
 
 def ace_score(state: AceState, q: jax.Array, w: jax.Array,
-              cfg: AceConfig) -> jax.Array:
+              cfg: AceConfig,
+              table_mask: jax.Array | None = None) -> jax.Array:
     """Fused hash+lookup+mean scoring of raw query vectors.
 
     Dense mode: one all-in-one Pallas launch.  SRHT mode: the SRHT hash
     kernel + the gather kernel (two launches, still one hash).
+
+    ``table_mask`` (L,) scores over healthy tables only: the dense
+    kernel takes the mask as its weighted-combine operand (still one
+    launch); the srht/esc paths thread it through the shared jnp
+    helpers.
     """
     if resolve_hash_mode(cfg.srp) == "srht" or state.esc is not None:
-        return ace_query(state, hash_dispatch(q, w, cfg.srp))
-    return _f.ace_score_fused(state.counts, q, w, cfg.srp)
+        return ace_query(state, hash_dispatch(q, w, cfg.srp),
+                         table_mask=table_mask)
+    if table_mask is None:
+        return _f.ace_score_fused(state.counts, q, w, cfg.srp)
+    return _f.ace_score_fused(state.counts, q, w, cfg.srp,
+                              table_weights=_mask_weights(table_mask))
 
 
 def ace_fleet_score(fstate, q: jax.Array, tenant_ids: jax.Array,
-                    w: jax.Array, cfg: AceConfig) -> jax.Array:
+                    w: jax.Array, cfg: AceConfig,
+                    table_mask: jax.Array | None = None) -> jax.Array:
     """Fused multi-tenant scoring of raw query vectors: each item of the
     mixed batch scores against ITS OWN tenant's tables
     (``repro.fleet.FleetState``), one hash for the whole batch.
@@ -123,15 +146,20 @@ def ace_fleet_score(fstate, q: jax.Array, tenant_ids: jax.Array,
     still one hash) — the ``ace_admit`` SRHT precedent.
     """
     from repro.fleet import state as _fls
-    if resolve_hash_mode(cfg.srp) == "srht":
-        buckets = _sh.srht_hash(q, cfg.srp)
-        return _fls.fleet_scores(fstate, tenant_ids, buckets)
+    if resolve_hash_mode(cfg.srp) == "srht" or table_mask is not None:
+        # SRHT hash, or a degraded fleet (the masked per-tenant combine
+        # lives in the shared jnp helper): one kernel hash, jnp gather.
+        buckets = hash_dispatch(q, w, cfg.srp)
+        return _fls.fleet_scores(fstate, tenant_ids, buckets,
+                                 table_mask=table_mask)
     return _fl.ace_fleet_score(fstate.counts, q, tenant_ids, w, cfg.srp)
 
 
 def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
                     w: jax.Array, cfg: AceConfig, *, alpha: float,
-                    warmup_items: float):
+                    warmup_items: float,
+                    table_mask: jax.Array | None = None,
+                    item_mask: jax.Array | None = None):
     """Kernel-path multi-tenant admission: ONE hash, no host syncs.
 
     The fleet analogue of ``ace_admit``: the single hash runs through
@@ -148,9 +176,13 @@ def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
     """
     from repro.fleet import state as _fls
     buckets = hash_dispatch(q, w, cfg.srp)
-    scores = _fls.fleet_scores(fstate, tenant_ids, buckets)
+    scores = _fls.fleet_scores(fstate, tenant_ids, buckets,
+                               table_mask=table_mask)
     admit = scores >= _fls.admit_thresholds(
-        fstate, alpha, warmup_items)[tenant_ids]
+        fstate, alpha, warmup_items, table_mask=table_mask)[tenant_ids]
+    if item_mask is not None:
+        # quarantined rows neither admit nor insert
+        admit = jnp.logical_and(admit, item_mask)
     new_state = _fls.insert_masked(fstate, tenant_ids, buckets, admit, cfg)
     return new_state, admit
 
@@ -158,7 +190,9 @@ def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
 def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
                            w: jax.Array, cfg: AceConfig, *, gamma: float,
                            alpha: float, warmup_items: float,
-                           rotate_every: int = 0):
+                           rotate_every: int = 0,
+                           table_mask: jax.Array | None = None,
+                           item_mask: jax.Array | None = None):
     """Kernel-path fleet×window admission: ONE Pallas launch for the hot
     combination that used to cost a hash launch plus four jnp HBM passes.
 
@@ -175,12 +209,25 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
     from repro.fleet import window as fw
     from repro.kernels import ace_fleet_window_admit as _fwa
     from repro.window import ring
-    thr_t = fw.window_admit_thresholds(state, gamma, alpha, warmup_items)
-    if resolve_hash_mode(cfg.srp) == "srht":
-        buckets = _sh.srht_hash(q, cfg.srp)
+    thr_t = fw.window_admit_thresholds(state, gamma, alpha, warmup_items,
+                                       table_mask=table_mask)
+    if resolve_hash_mode(cfg.srp) == "srht" or table_mask is not None:
+        # SRHT hash, or a degraded fleet: one kernel hash, the rest of
+        # the admission through the shared jnp helpers.  The masked path
+        # scores over healthy tables but the insert's ssq increment must
+        # see the TRUE (unmasked) sums — so degraded mode pays a second
+        # pair of gathers; acceptable off the healthy hot path (its
+        # throughput is gated separately in benchmarks/resilience).
+        buckets = hash_dispatch(q, w, cfg.srp)
         pre = fw.window_table_sums_fleet(state, tenant_ids, buckets)
-        scores = ring.score_live(pre[0], pre[1], cfg.num_tables)
+        if table_mask is None:
+            scores = ring.score_live(pre[0], pre[1], cfg.num_tables)
+        else:
+            scores = fw.window_fleet_scores(state, tenant_ids, buckets,
+                                            table_mask=table_mask)
         admit = scores >= thr_t[tenant_ids]
+        if item_mask is not None:
+            admit = jnp.logical_and(admit, item_mask)
         new_state = fw.insert_current_fleet(
             state, tenant_ids, buckets, admit, cfg, gamma=gamma,
             pre_sums=pre)
@@ -191,7 +238,7 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
     new_ring, _scores, admit, buckets, tail_sums, live_pre = \
         _fwa.ace_fleet_window_admit_fused(
             state.counts, state.tail, state.cursor, q, tenant_ids, w,
-            thr_t, cfg.srp)
+            thr_t, cfg.srp, item_mask=item_mask)
 
     # Stats epilogue over POST-insert live sums (O(B·L) gather from the
     # new ring — no second hash, no tail/live re-gather; the
@@ -212,7 +259,8 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
 
 
 def ace_window_score(wstate, buckets: jax.Array, gamma: float,
-                     mode: str = "auto") -> jax.Array:
+                     mode: str = "auto",
+                     table_mask: jax.Array | None = None) -> jax.Array:
     """Windowed Ŝ(q): (B, L) bucket ids scored against a
     ``repro.window.WindowedAceState`` epoch ring via the fused
     ``ace_window_combine`` kernel (one launch; E-way weighted gather +
@@ -226,13 +274,19 @@ def ace_window_score(wstate, buckets: jax.Array, gamma: float,
     from repro.window.ring import epoch_weights
     E = wstate.counts.shape[0]
     weights = epoch_weights(wstate.cursor, E, gamma)
+    if table_mask is None:
+        return _wc.ace_window_combine(wstate.counts, buckets, weights,
+                                      mode=mode)
     return _wc.ace_window_combine(wstate.counts, buckets, weights,
-                                  mode=mode)
+                                  mode=mode,
+                                  table_weights=_mask_weights(table_mask))
 
 
 def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
                        *, gamma: float, alpha: float, warmup_items: float,
-                       rotate_every: int = 0):
+                       rotate_every: int = 0,
+                       table_mask: jax.Array | None = None,
+                       item_mask: jax.Array | None = None):
     """Kernel-path windowed admission: ONE hash, no host syncs.
 
     The windowed analogue of ``ace_admit``: the single hash runs through
@@ -251,9 +305,19 @@ def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
     from repro.window import ring
     buckets = hash_dispatch(q, w, cfg.srp)
     tail_sums, live_sums = ring.window_table_sums(wstate, buckets)
-    scores = ring.score_live(tail_sums, live_sums, cfg.num_tables)
+    if table_mask is None:
+        scores = ring.score_live(tail_sums, live_sums, cfg.num_tables)
+    else:
+        # degraded: masked gathers for the DECISION, unmasked sums for
+        # the insert's ssq increment (which must see the true counts)
+        mt, ml = ring.window_table_sums(wstate, buckets,
+                                        table_mask=table_mask)
+        scores = ring.score_live(mt, ml, cfg.num_tables,
+                                 table_mask=table_mask)
     admit = scores >= ring.admit_threshold_windowed(
-        wstate, gamma, alpha, warmup_items)
+        wstate, gamma, alpha, warmup_items, table_mask=table_mask)
+    if item_mask is not None:
+        admit = jnp.logical_and(admit, item_mask)
     new_state = ring.insert_current(wstate, buckets, admit, cfg,
                                     gamma=gamma,
                                     pre_sums=(tail_sums, live_sums))
@@ -262,7 +326,9 @@ def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
 
 
 def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
-              *, alpha: float, warmup_items: float):
+              *, alpha: float, warmup_items: float,
+              table_mask: jax.Array | None = None,
+              item_mask: jax.Array | None = None):
     """Fused guardrail admission: ONE hash, no host syncs.
 
     The μ−ασ threshold is computed on-device from the state scalars
@@ -273,19 +339,24 @@ def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
     helpers.  Both fold the Welford stream from the one set of bucket
     ids — no re-hash.  Returns (new_state, admit_mask (B,) bool).
     """
-    thresh = _sk.admit_threshold(state, alpha, warmup_items)
-    if resolve_hash_mode(cfg.srp) == "srht" or state.esc is not None:
-        # SRHT hash kernel, or a quantized plane (whose saturating
-        # scatter + escalation reads live in the jnp helpers): one
-        # kernel/jnp hash, then the shared exact dataflow.
+    thresh = _sk.admit_threshold(state, alpha, warmup_items,
+                                 table_mask=table_mask)
+    if (resolve_hash_mode(cfg.srp) == "srht" or state.esc is not None
+            or table_mask is not None):
+        # SRHT hash kernel, a quantized plane (whose saturating scatter
+        # + escalation reads live in the jnp helpers), or a degraded
+        # sketch (masked combine): one kernel/jnp hash, then the shared
+        # exact dataflow.
         buckets = hash_dispatch(q, w, cfg.srp)
-        scores = _sk.lookup(state, buckets)
+        scores = _sk.lookup(state, buckets, table_mask=table_mask)
         admit = scores >= thresh
+        if item_mask is not None:
+            admit = jnp.logical_and(admit, item_mask)
         new_state = _sk.insert_buckets_masked(state, buckets, admit, cfg)
         return new_state, admit
 
     new_counts, _scores, admit, buckets = _a.ace_admit_fused(
-        state.counts, q, w, thresh, cfg.srp)
+        state.counts, q, w, thresh, cfg.srp, item_mask=item_mask)
 
     # Welford epilogue over POST-insert scores of the admitted items —
     # shared helpers with sketch.insert_buckets_masked (O(B·L) gather, no

@@ -33,14 +33,24 @@ def ace_query_ref(counts: jax.Array, buckets: jax.Array) -> jax.Array:
 
 
 def ace_score_ref(counts: jax.Array, q: jax.Array, w: jax.Array,
-                  cfg: SrpConfig) -> jax.Array:
-    """Fused hash+lookup+mean: (B, d) queries -> (B,) scores."""
+                  cfg: SrpConfig,
+                  table_weights: jax.Array | None = None) -> jax.Array:
+    """Fused hash+lookup+mean: (B, d) queries -> (B,) scores.
+
+    ``table_weights`` mirrors the kernel's degraded combine: the weighted
+    sum Σ_j tw_j · gathered_j with NO 1/L (the caller bakes the
+    health-mask normaliser into tw)."""
     buckets = hash_buckets(q, w, cfg)
-    return jnp.mean(ace_query_ref(counts, buckets), axis=-1)
+    gathered = ace_query_ref(counts, buckets)
+    if table_weights is None:
+        return jnp.mean(gathered, axis=-1)
+    return jnp.sum(gathered * table_weights[None, :], axis=-1)
 
 
 def ace_window_combine_ref(counts: jax.Array, buckets: jax.Array,
-                           weights: jax.Array) -> jax.Array:
+                           weights: jax.Array,
+                           table_weights: jax.Array | None = None
+                           ) -> jax.Array:
     """Windowed scoring: counts (E, L, 2^K), buckets (B, L), weights (E,)
     -> (B,) scores.
 
@@ -49,13 +59,18 @@ def ace_window_combine_ref(counts: jax.Array, buckets: jax.Array,
     final 1/L reciprocal multiply — the same sequence as
     ``repro.window.score_windowed``); kernel-vs-ref comparisons are
     float-tolerance like every score-emitting kernel (the in-kernel
-    L-reduction may reassociate).
+    L-reduction may reassociate).  ``table_weights`` mirrors the kernel's
+    degraded combine (per-table scaling, no 1/L).
     """
     E, L = counts.shape[0], counts.shape[1]
     acc = jnp.zeros(buckets.shape[:1], jnp.float32)
     for e in range(E):
-        acc = acc + weights[e] * jnp.sum(
-            ace_query_ref(counts[e], buckets), axis=-1)
+        g = ace_query_ref(counts[e], buckets)
+        if table_weights is not None:
+            g = g * table_weights[None, :]
+        acc = acc + weights[e] * jnp.sum(g, axis=-1)
+    if table_weights is not None:
+        return acc
     return acc * jnp.float32(1.0 / L)
 
 

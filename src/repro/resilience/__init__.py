@@ -1,0 +1,46 @@
+"""Self-healing ACE fleets: fault injection, health invariants, repair.
+
+The sketch's pitch — a few MB of counts replaces stored data — makes that
+tiny state a single point of failure: one NaN batch poisons the Welford
+moments, one flipped bit corrupts every later μ−ασ decision, and a torn
+checkpoint propagates silently.  ACE's L independent tables are
+redundancy we already own (the same argument that makes in-DRAM flow
+tables viable at line rate), so this package turns failures into
+detectable, maskable, repairable events:
+
+* ``health``  — fixed-shape jitted invariant checks over every state
+                type, returning per-table (and per-tenant) health masks
+                plus repair ops that re-zero a corrupted table while the
+                other L−1 keep serving.
+* ``inject``  — deterministic fault injectors (NaN/Inf batches, count
+                bit flips, saturation, poisoned moments, torn
+                checkpoints, stalled steps) for the chaos suite.
+
+The health masks feed the ``table_mask`` parameter threaded through
+every scoring op (``sketch.batch_scores`` → ``kernels.ops``): degraded
+scoring means over healthy tables only, an unbiased estimator of the
+same Ŝ(q, D) (Theorem 1 holds for any subset of the independent
+tables).  See docs/ARCHITECTURE.md §8.
+"""
+from repro.resilience.inject import (  # noqa: F401
+    corrupt_embeddings,
+    flip_count_bits,
+    poison_moments,
+    saturate_table,
+    stall_step,
+    tear_checkpoint,
+)
+from repro.resilience.health import (  # noqa: F401
+    HealthReport,
+    check_ace,
+    check_fleet,
+    check_fleet_window,
+    check_window,
+    health_check,
+    repair_ace,
+    repair_fleet,
+    repair_fleet_window,
+    repair_moments,
+    repair_window,
+    serving_mask,
+)

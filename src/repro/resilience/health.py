@@ -1,0 +1,326 @@
+"""On-device sketch health invariants + table repair ops.
+
+Every ACE state type carries enough redundancy to AUDIT itself on
+device: inserts are unit scatter-adds, so each table's counts must sum
+to exactly the number of items inserted (conservation — integer-valued
+float32, exact below 2^24); Welford M2 is a sum of squares (≥ 0 and
+finite); ring cursors/ticks live in known ranges; escalation tables keep
+their sorted/live-slot invariants.  ``health_check`` evaluates all of
+them as ONE fixed-shape jitted program and returns a
+:class:`HealthReport` of device booleans — a per-table mask, never a
+host branch, so the serving stack can keep the decision on device and
+only sync at health/repair boundaries it already owns.
+
+Invariants checked (see docs/ARCHITECTURE.md §8 for the full table):
+
+=====================  ====================================================
+invariant              definition
+=====================  ====================================================
+count conservation     Σ_b counts[j, b] == n  per table j (per tenant, per
+                       epoch), up to the repair offset / quantized ``lost``
+                       slack
+count range            every counter ≥ 0 (unit inserts can never go
+                       negative; a flipped sign bit can)
+moment sanity          n, welford_mean finite; welford_m2 finite and ≥ 0;
+                       n ≥ 0
+tail/ssq sanity        tail finite per table; ssq finite and ≥ 0
+cursor/tick bounds     0 ≤ cursor < E; tick ≥ 0
+esc consistency        offs sorted; live slots have vals > 0 and real
+                       offsets; free (SENTINEL) slots have vals == 0;
+                       lost finite and ≥ 0
+=====================  ====================================================
+
+Repair (``repair_*``): zero the corrupted tables' planes while the
+healthy L−k keep serving.  Flat/fleet sketches return a ``repair
+offset`` per table — the n at repair time — because their counts never
+expire: afterwards conservation reads Σ counts[j] == n − offset[j], and
+``health_check`` accepts the offsets.  Window rings need NO offsets:
+a repaired (zeroed) table violates conservation only until the epochs
+it was zeroed in expire, so the table naturally re-warms and the mask
+lifts within one window — the self-healing property the chaos suite
+asserts.  Poisoned moments are repaired separately
+(:func:`repair_moments`): the streams re-zero and re-accumulate (the
+exact μ never uses them, so scores are unaffected).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+from repro.core.sketch import AceState
+from repro.fleet.state import FleetState
+from repro.fleet.window import WindowedFleetState
+from repro.window.ring import WindowedAceState
+
+
+class HealthReport(NamedTuple):
+    """Device-boolean health verdicts (a pytree — jit/scan safe).
+
+    table_ok:   per-table conservation+range mask — (L,) for flat and
+                windowed sketches, (T, L) for fleets.  THE serving mask:
+                scoring ops take it (via :func:`serving_mask`) as their
+                ``table_mask``.
+    moments_ok: scalar (or (T,) per tenant) — finite n/mean/M2, M2 ≥ 0.
+    struct_ok:  scalar (or (T,)) — cursor/tick bounds, tail/ssq sanity,
+                escalation-table slot consistency.
+    ok:         all of the above (scalar or (T,)).
+    """
+
+    table_ok: jax.Array
+    moments_ok: jax.Array
+    struct_ok: jax.Array
+    ok: jax.Array
+
+
+def _finite(*xs) -> jax.Array:
+    acc = jnp.asarray(True)
+    for x in xs:
+        acc = jnp.logical_and(acc, jnp.all(jnp.isfinite(x)))
+    return acc
+
+
+def _esc_ok(esc: Optional[qz.EscTable]) -> jax.Array:
+    """Escalation-table slot invariants (True when no esc)."""
+    if esc is None:
+        return jnp.asarray(True)
+    offs, vals = esc.offs, esc.vals
+    sorted_ok = jnp.all(offs[1:] >= offs[:-1])
+    live = offs != qz.SENTINEL
+    slots_ok = jnp.all(jnp.where(live, vals > 0, vals == 0))
+    lost_ok = jnp.logical_and(jnp.isfinite(esc.lost), esc.lost >= 0.0)
+    return sorted_ok & slots_ok & lost_ok
+
+
+def check_ace(state: AceState,
+              repair_offsets: jax.Array | None = None) -> HealthReport:
+    """Health of a flat ``AceState``: (L,) table mask + scalar verdicts.
+
+    ``repair_offsets`` (L,) float32 — per-table n-at-repair bookkeeping
+    (0 where never repaired); conservation then reads
+    Σ counts[j] == n − offset[j].  Quantized planes audit the DENSIFIED
+    logical counts, with ``esc.lost`` as downward slack (dropped excess
+    legitimately leaves the plane).
+    """
+    L = state.counts.shape[0]
+    if state.esc is not None:
+        dense = qz.densify(state.counts, state.esc)
+        slack = state.esc.lost
+    else:
+        dense = state.counts
+        slack = jnp.zeros((), jnp.float32)
+    c = dense.astype(jnp.float32)
+    sums = jnp.sum(c, axis=1)                                    # (L,)
+    expected = state.n - (repair_offsets if repair_offsets is not None
+                          else jnp.zeros((L,), jnp.float32))
+    conserve = jnp.logical_and(sums <= expected,
+                               sums >= expected - slack)
+    nonneg = jnp.all(dense >= 0, axis=1)
+    table_ok = jnp.logical_and(conserve, nonneg)
+
+    moments_ok = jnp.logical_and(
+        _finite(state.n, state.welford_mean, state.welford_m2),
+        jnp.logical_and(state.welford_m2 >= 0.0, state.n >= 0.0))
+    struct_ok = _esc_ok(state.esc)
+    ok = jnp.all(table_ok) & moments_ok & struct_ok
+    return HealthReport(table_ok=table_ok, moments_ok=moments_ok,
+                        struct_ok=struct_ok, ok=ok)
+
+
+def check_window(state: WindowedAceState) -> HealthReport:
+    """Health of a ``WindowedAceState`` ring: (L,) table mask.
+
+    Conservation holds per table PER EPOCH (each epoch is its own flat
+    sketch); a table is healthy only if every epoch of it conserves.
+    No repair offsets: a repaired table's deficit expires with the
+    epochs it was zeroed in (≤ E rotations — the self-healing window).
+    """
+    E, L, _ = state.counts.shape
+    c = state.counts.astype(jnp.float32)
+    sums = jnp.sum(c, axis=2)                                    # (E, L)
+    conserve = jnp.all(sums <= state.n[:, None], axis=0)         # (L,)
+    nonneg = jnp.all(state.counts >= 0, axis=(0, 2))             # (L,)
+    tail_ok = jnp.all(jnp.isfinite(state.tail), axis=1)          # (L,)
+    table_ok = conserve & nonneg & tail_ok
+
+    moments_ok = jnp.logical_and(
+        _finite(state.n, state.welford_mean, state.welford_m2),
+        jnp.logical_and(jnp.all(state.welford_m2 >= 0.0),
+                        jnp.all(state.n >= 0.0)))
+    struct_ok = (
+        (state.cursor >= 0) & (state.cursor < E) & (state.tick >= 0)
+        & jnp.isfinite(state.ssq) & (state.ssq >= 0.0))
+    ok = jnp.all(table_ok) & moments_ok & struct_ok
+    return HealthReport(table_ok=table_ok, moments_ok=moments_ok,
+                        struct_ok=struct_ok, ok=ok)
+
+
+def check_fleet(state: FleetState,
+                repair_offsets: jax.Array | None = None) -> HealthReport:
+    """Health of a ``FleetState``: (T, L) table mask + (T,) verdicts."""
+    T, L, _ = state.counts.shape
+    c = state.counts.astype(jnp.float32)
+    sums = jnp.sum(c, axis=2)                                    # (T, L)
+    expected = state.n[:, None] - (
+        repair_offsets if repair_offsets is not None
+        else jnp.zeros((T, L), jnp.float32))
+    conserve = sums == expected
+    nonneg = jnp.all(state.counts >= 0, axis=2)                  # (T, L)
+    table_ok = conserve & nonneg
+
+    moments_ok = (
+        jnp.isfinite(state.n) & jnp.isfinite(state.welford_mean)
+        & jnp.isfinite(state.welford_m2)
+        & (state.welford_m2 >= 0.0) & (state.n >= 0.0))          # (T,)
+    struct_ok = jnp.ones((T,), bool)
+    ok = jnp.all(table_ok, axis=1) & moments_ok & struct_ok      # (T,)
+    return HealthReport(table_ok=table_ok, moments_ok=moments_ok,
+                        struct_ok=struct_ok, ok=ok)
+
+
+def check_fleet_window(state: WindowedFleetState) -> HealthReport:
+    """Health of a ``WindowedFleetState``: (T, L) table mask + (T,)."""
+    T, E, L, _ = state.counts.shape
+    c = state.counts.astype(jnp.float32)
+    sums = jnp.sum(c, axis=3)                                    # (T, E, L)
+    conserve = jnp.all(sums <= state.n[:, :, None], axis=1)      # (T, L)
+    nonneg = jnp.all(state.counts >= 0, axis=(1, 3))             # (T, L)
+    tail_ok = jnp.all(jnp.isfinite(state.tail), axis=2)          # (T, L)
+    table_ok = conserve & nonneg & tail_ok
+
+    moments_ok = (
+        jnp.all(jnp.isfinite(state.n), axis=1)
+        & jnp.all(jnp.isfinite(state.welford_mean), axis=1)
+        & jnp.all(jnp.isfinite(state.welford_m2), axis=1)
+        & jnp.all(state.welford_m2 >= 0.0, axis=1)
+        & jnp.all(state.n >= 0.0, axis=1))                       # (T,)
+    struct_ok = (
+        (state.cursor >= 0) & (state.cursor < E) & (state.tick >= 0)
+        & jnp.isfinite(state.ssq) & (state.ssq >= 0.0))          # (T,)
+    ok = jnp.all(table_ok, axis=1) & moments_ok & struct_ok
+    return HealthReport(table_ok=table_ok, moments_ok=moments_ok,
+                        struct_ok=struct_ok, ok=ok)
+
+
+def health_check(state, repair_offsets: jax.Array | None = None
+                 ) -> HealthReport:
+    """Type-dispatching invariant audit — ONE fixed-shape jitted program
+    per state type (the dispatch is Python-level on the pytree class,
+    resolved at trace time; nothing here branches on device values)."""
+    if isinstance(state, WindowedFleetState):
+        return check_fleet_window(state)
+    if isinstance(state, FleetState):
+        return check_fleet(state, repair_offsets)
+    if isinstance(state, WindowedAceState):
+        return check_window(state)
+    if isinstance(state, AceState):
+        return check_ace(state, repair_offsets)
+    raise TypeError(f"health_check: unknown state type {type(state)!r}")
+
+
+def serving_mask(report: HealthReport) -> jax.Array:
+    """The report's table mask as the float32 ``table_mask`` every
+    scoring op takes ((L,) or (T, L))."""
+    return report.table_ok.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Repair: re-zero corrupted tables; the healthy L−k keep serving.
+# ---------------------------------------------------------------------------
+
+def repair_ace(state: AceState, table_ok: jax.Array,
+               repair_offsets: jax.Array | None = None):
+    """Zero the corrupted tables of a flat sketch.
+
+    Returns ``(new_state, new_offsets)``: corrupted tables' planes
+    re-zero (and their escalation slots free), and their repair offset
+    is set to the CURRENT n so conservation re-reads
+    Σ counts[j] == n − offset[j] — the table re-warms from the live
+    stream while the healthy tables' counts, n, and moments are
+    bitwise untouched.
+    """
+    L = state.counts.shape[0]
+    okf = table_ok.astype(state.counts.dtype)
+    new_counts = state.counts * okf[:, None]
+    old = (repair_offsets if repair_offsets is not None
+           else jnp.zeros((L,), jnp.float32))
+    new_offsets = jnp.where(table_ok, old, state.n)
+    esc = state.esc
+    if esc is not None:
+        # free every escalation slot whose offset lands in a zeroed
+        # table (offset // 2^K = flat row = table index for flat planes)
+        nbuckets = state.counts.shape[1]
+        slot_table = jnp.clip(esc.offs // nbuckets, 0, L - 1)
+        keep = jnp.logical_or(esc.offs == qz.SENTINEL,
+                              jnp.take(table_ok, slot_table))
+        offs = jnp.where(keep, esc.offs, qz.SENTINEL)
+        vals = jnp.where(keep, esc.vals, 0)
+        order = jnp.argsort(offs)
+        esc = qz.EscTable(offs=offs[order], vals=vals[order],
+                          lost=esc.lost)
+    return state._replace(counts=new_counts, esc=esc), new_offsets
+
+
+def repair_window(state: WindowedAceState,
+                  table_ok: jax.Array) -> WindowedAceState:
+    """Zero the corrupted tables of a window ring — every epoch AND the
+    tail row — and re-anchor ssq from the surviving planes.
+
+    No offsets: the zeroed tables' conservation deficit expires with
+    their epochs (≤ E rotations), after which ``check_window`` passes
+    again and the serving mask lifts — self-healing within one window.
+    """
+    okc = table_ok.astype(state.counts.dtype)
+    new_counts = state.counts * okc[None, :, None]
+    new_tail = state.tail * table_ok.astype(jnp.float32)[:, None]
+    live = jax.lax.dynamic_index_in_dim(
+        new_counts, state.cursor, axis=0, keepdims=False)
+    cw = new_tail + live.astype(jnp.float32)
+    return state._replace(counts=new_counts, tail=new_tail,
+                          ssq=jnp.sum(cw * cw))
+
+
+def repair_fleet(state: FleetState, table_ok: jax.Array,
+                 repair_offsets: jax.Array | None = None):
+    """Zero corrupted (tenant, table) planes of a fleet; returns
+    ``(new_state, new_offsets)`` with (T, L) offsets (the fleet analogue
+    of :func:`repair_ace` — untouched tenants stay bitwise identical)."""
+    T, L, _ = state.counts.shape
+    okf = table_ok.astype(state.counts.dtype)
+    new_counts = state.counts * okf[:, :, None]
+    old = (repair_offsets if repair_offsets is not None
+           else jnp.zeros((T, L), jnp.float32))
+    new_offsets = jnp.where(table_ok, old, state.n[:, None])
+    return state._replace(counts=new_counts), new_offsets
+
+
+def repair_fleet_window(state: WindowedFleetState,
+                        table_ok: jax.Array) -> WindowedFleetState:
+    """Zero corrupted (tenant, table) ring planes + tail rows and
+    re-anchor the per-tenant ssq streams (see :func:`repair_window`)."""
+    T, E, L, _ = state.counts.shape
+    okc = table_ok.astype(state.counts.dtype)
+    new_counts = state.counts * okc[:, None, :, None]
+    new_tail = state.tail * table_ok.astype(jnp.float32)[:, :, None]
+    tidx = jnp.arange(T, dtype=jnp.int32)
+    live = new_counts[tidx, state.cursor]                # (T, L, 2^K)
+    cw = new_tail + live.astype(jnp.float32)
+    return state._replace(counts=new_counts, tail=new_tail,
+                          ssq=jnp.sum(cw * cw, axis=(1, 2)))
+
+
+def repair_moments(state):
+    """Re-zero poisoned Welford streams (any state type).
+
+    The σ stream restarts from zero and re-accumulates from live
+    traffic; the exact μ (Eq. 11 closed form) never used the stream, so
+    scores are unaffected.  During re-accumulation μ−ασ runs with σ≈0 —
+    a conservative (tight) threshold; the ``welford_min_n`` cold-start
+    gate does not re-arm (n is preserved), so the stream re-converges
+    within one batch-count on the order of the original warmup.
+    """
+    return state._replace(
+        welford_mean=jnp.zeros_like(state.welford_mean),
+        welford_m2=jnp.zeros_like(state.welford_m2))

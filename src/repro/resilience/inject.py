@@ -1,0 +1,169 @@
+"""Deterministic fault injectors for the chaos suite.
+
+Every injector is seeded (``jax.random`` keys or explicit positions) so a
+chaos test is a REPLAYABLE program, not a fuzzer: the same seed produces
+the same corruption, the same health verdict, and the same degraded
+scores — which is what lets the suite assert exact oracle parity on the
+surviving tables.
+
+Faults modelled (one injector each; see docs/ARCHITECTURE.md §8):
+
+* poisoned input     — :func:`corrupt_embeddings` (NaN/Inf feature rows)
+* memory corruption  — :func:`flip_count_bits` (bitcast single-bit flips
+                       in count planes, any counter dtype) and
+                       :func:`saturate_table` (stuck-at-max plane)
+* moment poisoning   — :func:`poison_moments` (NaN / negative M2)
+* torn checkpoint    — :func:`tear_checkpoint` (truncate or byte-flip a
+                       saved step's array blob on disk)
+* straggler          — :func:`stall_step` (rewind a ``StepTimer`` so its
+                       next tick reads as an SLO breach, no real sleep)
+
+Injectors that touch device state are pure (state in, state out) and
+jit-safe except for the Python-level dtype dispatch; the disk/host ones
+(:func:`tear_checkpoint`, :func:`stall_step`) mutate exactly the object
+they are handed.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def corrupt_embeddings(x: jax.Array, key: jax.Array, frac: float = 0.1,
+                       kind: str = "nan"):
+    """Poison a fraction of feature rows with non-finite values.
+
+    Returns ``(corrupted, bad_rows)`` where ``bad_rows`` is the (B,) bool
+    mask of poisoned rows (the ground truth the sanitizers must match).
+    ``kind``: ``"nan"``, ``"inf"``, or ``"mixed"`` (alternating, so a
+    single test covers both encodings).
+    """
+    if kind not in ("nan", "inf", "mixed"):
+        raise ValueError(f"unknown kind {kind!r}")
+    B = x.shape[0]
+    row = (B,) + (1,) * (x.ndim - 1)      # rows broadcast over trailing dims
+    bad_rows = jax.random.uniform(key, (B,)) < frac
+    if kind == "nan":
+        poison = jnp.full_like(x, jnp.nan)
+    elif kind == "inf":
+        poison = jnp.full_like(x, jnp.inf)
+    else:
+        alt = jnp.where(jnp.arange(B) % 2 == 0, jnp.nan, jnp.inf)
+        poison = jnp.broadcast_to(alt.reshape(row), x.shape).astype(x.dtype)
+    return jnp.where(bad_rows.reshape(row), poison, x), bad_rows
+
+
+def _bits_of(dtype) -> tuple:
+    """(unsigned view dtype, bit width) for a counter/plane dtype."""
+    dt = jnp.dtype(dtype)
+    return {1: (jnp.uint8, 8), 2: (jnp.uint16, 16),
+            4: (jnp.uint32, 32)}[dt.itemsize]
+
+
+def flip_count_bits(counts: jax.Array, key: jax.Array, num_flips: int = 1,
+                    tables: Sequence[int] | None = None) -> jax.Array:
+    """Flip ``num_flips`` random bits in a count plane (any shape whose
+    leading axis — or the axis before the bucket axis — indexes tables).
+
+    Works on every counter dtype via an unsigned bitcast (int8/int16/int32
+    and the float32 tail/ring planes alike), so a sign- or high-bit flip
+    produces exactly the garbage real memory corruption would.  When
+    ``tables`` is given, flips land only in those leading-index slices
+    (deterministic blast radius — the chaos test bounds corruption to
+    ⌈L/4⌉ tables).
+    """
+    view_dtype, width = _bits_of(counts.dtype)
+    flat = counts.reshape(-1).view(view_dtype) \
+        if isinstance(counts, np.ndarray) else \
+        jax.lax.bitcast_convert_type(counts.reshape(-1), view_dtype)
+    kf, kl, kb, kw = jax.random.split(key, 4)
+    if tables is None:
+        idx = jax.random.randint(kf, (num_flips,), 0, flat.shape[0])
+    else:
+        # restrict flips to the chosen table slices.  The table axis is
+        # the one before the bucket axis for every count layout: (L, B)
+        # flat, (E, L, B) windowed, (T, L, B) fleet, (T, E, L, B)
+        # fleet-window — leading tenant/epoch axes are drawn uniformly.
+        *lead, L, buckets = counts.shape
+        nlead = int(np.prod(lead)) if lead else 1
+        t = jax.random.choice(kf, jnp.asarray(list(tables), jnp.int32),
+                              (num_flips,))
+        li = jax.random.randint(kl, (num_flips,), 0, nlead)
+        off = jax.random.randint(kb, (num_flips,), 0, buckets)
+        idx = (li * L + t) * buckets + off
+    bit = jax.random.randint(kw, (num_flips,), 0, width)
+    mask = (jnp.ones((), view_dtype) << bit.astype(view_dtype))
+    flipped = flat.at[idx].set(flat[idx] ^ mask)
+    out = jax.lax.bitcast_convert_type(flipped, counts.dtype)
+    return out.reshape(counts.shape)
+
+
+def saturate_table(counts: jax.Array, table: int) -> jax.Array:
+    """Stuck-at-max fault: every counter of one table pinned to the
+    dtype's maximum (int) or 2^31 (float planes) — the saturation
+    signature of a runaway scatter or a shorted accumulator."""
+    if jnp.issubdtype(counts.dtype, jnp.floating):
+        top = jnp.asarray(2.0**31, counts.dtype)
+    else:
+        top = jnp.asarray(jnp.iinfo(counts.dtype).max, counts.dtype)
+    sat = jnp.full(counts.shape[1:], top, counts.dtype)
+    return counts.at[table].set(sat)
+
+
+def poison_moments(state, kind: str = "nan"):
+    """Corrupt the Welford stream of any ACE state type.
+
+    ``"nan"`` poisons mean and M2 with NaN (the organic failure mode —
+    one non-finite rate propagates through the fold forever);
+    ``"neg"`` flips M2's sign (the bit-flip failure mode — M2 is a sum
+    of squares, so any negative value is impossible).
+    """
+    if kind == "nan":
+        return state._replace(
+            welford_mean=jnp.full_like(state.welford_mean, jnp.nan),
+            welford_m2=jnp.full_like(state.welford_m2, jnp.nan))
+    if kind == "neg":
+        return state._replace(
+            welford_m2=-jnp.abs(state.welford_m2) - 1.0)
+    raise ValueError(f"unknown kind {kind!r}")
+
+
+def tear_checkpoint(ckpt_dir: str, step: int, mode: str = "truncate",
+                    nbytes: int = 64, seed: int = 0) -> str:
+    """Corrupt a saved checkpoint step ON DISK (the preemption /
+    bad-sector model).  Returns the path of the torn blob.
+
+    ``"truncate"`` chops the last ``nbytes`` off ``arrays.npz`` (a write
+    torn mid-flight — past the atomic-rename guarantee, i.e. media
+    failure after a successful save); ``"flip"`` XOR-flips ``nbytes``
+    random bytes in place (silent bit rot).  Either way the manifest
+    stays intact, so only checksum verification can catch it.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:010d}", "arrays.npz")
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(size - nbytes, 0))
+    elif mode == "flip":
+        rng = np.random.default_rng(seed)
+        offsets = rng.integers(0, size, size=nbytes)
+        with open(path, "r+b") as f:
+            for off in offsets:
+                f.seek(int(off))
+                b = f.read(1)
+                f.seek(int(off))
+                f.write(bytes([b[0] ^ 0xFF]))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return path
+
+
+def stall_step(timer, seconds: float) -> None:
+    """Make a ``StepTimer``'s next ``tick()`` observe a ``seconds``-long
+    step without sleeping: rewind its last-tick anchor.  The chaos suite
+    uses this to drive the straggler path deterministically."""
+    timer._last -= seconds

@@ -46,6 +46,14 @@ class GuardrailConfig:
     # flat (window_epochs == 1, num_tenants == 1) guardrails only.
     count_dtype: str = "int32"  # "float32" | "int32" | "int16" | "int8"
     esc_capacity: int = 0
+    # Quarantine fail policy (repro.resilience): requests whose features
+    # are non-finite are sanitized OUT of the sketch (never scored
+    # against real counts, never inserted, counted in
+    # ``Guardrail.quarantined``) and their admit verdict comes from this
+    # policy instead: "fail_open" admits them downstream (availability
+    # first), "fail_closed" rejects them (integrity first).  Multi-tenant
+    # guardrails accept a per-tenant tuple of length num_tenants.
+    fail_policy: str | tuple = "fail_open"
 
 
 class Guardrail:
@@ -154,6 +162,31 @@ class Guardrail:
             raise ValueError("use_kernels admission is single-device; "
                              "drop the mesh or use the jnp path")
         self.use_kernels = use_kernels
+        # Per-tenant quarantine fail policy (resilience): a scalar policy
+        # broadcasts to every tenant; a tuple must cover each tenant.
+        pol = gcfg.fail_policy
+        if isinstance(pol, str):
+            pol = (pol,) * max(gcfg.num_tenants, 1)
+        if len(pol) != max(gcfg.num_tenants, 1):
+            raise ValueError(
+                f"fail_policy tuple has {len(pol)} entries for "
+                f"{gcfg.num_tenants} tenants")
+        bad = [p for p in pol if p not in ("fail_open", "fail_closed")]
+        if bad:
+            raise ValueError(f"unknown fail_policy {bad[0]!r} — expected "
+                             "'fail_open' or 'fail_closed'")
+        self._fail_open = np.array([p == "fail_open" for p in pol])
+        # Host-side health/degradation state (repro.resilience).  The
+        # serving table mask is None on the healthy path — the mask code
+        # is then never traced, keeping the healthy executable untouched
+        # — and a device (L,)/(T, L) float mask while degraded (a SECOND
+        # cached executable, switched host-side with zero hot-path
+        # syncs).
+        self.quarantined = 0          # total non-finite rows seen
+        self._table_mask = None       # device f32 serving mask | None
+        self._repair_offsets = None   # flat/fleet per-table n-at-repair
+        self._rewarm_admits = 0       # windowed repair re-warm countdown
+        self._rewarming = None        # host bool mask of re-warming tables
         self.trace_count = 0          # incremented at TRACE time only
         # The incoming state is dead the moment admit() rebinds it, so
         # donate it: the masked insert updates the counts buffer in place
@@ -191,11 +224,46 @@ class Guardrail:
         return mean_embed_features(embeds, self.gcfg.bias_const)
 
     def _admit_impl(self, state: sk.AceState, w: jax.Array,
-                    embeds: jax.Array, tenant_ids=None):
-        """The whole admission step as one traced device program."""
+                    embeds: jax.Array, tenant_ids=None, table_mask=None):
+        """The whole admission step as one traced device program.
+
+        Entry-point sanitization (repro.resilience): rows whose features
+        are non-finite are zeroed BEFORE hashing (NaN·0 would re-poison
+        anything downstream), barred from admission AND insertion
+        (``item_mask`` — the silent fail-open bug this replaces admitted
+        them into one bucket per table, skewing ssq/μ forever), and
+        reported back so the host can count them as quarantined; their
+        returned verdict is the per-tenant fail policy's.  For all-finite
+        batches the sanitization is bitwise identity.
+
+        ``table_mask`` ((L,) or (T, L) f32 health mask) scores over
+        healthy tables only; None (the healthy path) never traces any
+        mask code — the degraded program is a separate cached executable.
+        """
         self.trace_count += 1
         cfg = self.ace_cfg
         feat = self._features(embeds)
+        finite = jnp.all(jnp.isfinite(feat), axis=-1)         # (B,)
+        feat = jnp.where(finite[:, None], feat, 0.0)
+        new_state, admit = self._admit_branches(
+            state, w, feat, finite, tenant_ids, table_mask)
+        if self.multi_tenant:
+            fail_open = jnp.asarray(self._fail_open)[tenant_ids]
+        else:
+            fail_open = jnp.asarray(bool(self._fail_open[0]))
+        final = jnp.where(finite, admit, fail_open)
+        # ONE packed (2, B) transfer: verdicts + the quarantine mask.
+        return new_state, jnp.stack([final, finite])
+
+    def _admit_branches(self, state, w, feat, finite, tenant_ids,
+                        table_mask):
+        """Score → threshold → masked insert for every sketch flavour.
+
+        ``finite`` rides into each branch as the item mask: quarantined
+        rows never admit and never insert (the fused kernels gate them
+        in-launch; the jnp paths AND them out of the insert mask).
+        """
+        cfg = self.ace_cfg
         if self.multi_tenant:
             from repro.fleet import state as fl
             from repro.fleet import window as fw
@@ -214,15 +282,26 @@ class Guardrail:
                         gamma=self.gcfg.window_decay,
                         alpha=self.gcfg.alpha,
                         warmup_items=self.gcfg.warmup_items,
-                        rotate_every=self.gcfg.rotate_every)
+                        rotate_every=self.gcfg.rotate_every,
+                        table_mask=table_mask, item_mask=finite)
                 buckets = hash_buckets(feat, w, cfg.srp)
                 pre = fw.window_table_sums_fleet(state, tenant_ids,
                                                  buckets)
                 from repro.window import ring
-                scores = ring.score_live(pre[0], pre[1], cfg.num_tables)
+                if table_mask is None:
+                    scores = ring.score_live(pre[0], pre[1],
+                                             cfg.num_tables)
+                else:
+                    # degraded: masked combine for the DECISION; the
+                    # insert's ssq increment keeps the true sums (pre)
+                    scores = fw.window_fleet_scores(
+                        state, tenant_ids, buckets,
+                        table_mask=table_mask)
                 admit = scores >= fw.window_admit_thresholds(
                     state, self.gcfg.window_decay, self.gcfg.alpha,
-                    self.gcfg.warmup_items)[tenant_ids]
+                    self.gcfg.warmup_items,
+                    table_mask=table_mask)[tenant_ids]
+                admit = jnp.logical_and(admit, finite)
                 new_state = fw.insert_current_fleet(
                     state, tenant_ids, buckets, admit, cfg,
                     gamma=self.gcfg.window_decay, pre_sums=pre)
@@ -235,12 +314,15 @@ class Guardrail:
                 return kops.ace_fleet_admit(
                     state, feat, tenant_ids, w, cfg,
                     alpha=self.gcfg.alpha,
-                    warmup_items=self.gcfg.warmup_items)
+                    warmup_items=self.gcfg.warmup_items,
+                    table_mask=table_mask, item_mask=finite)
             buckets = hash_buckets(feat, w, cfg.srp)   # the ONE hash
-            scores = fl.fleet_scores(state, tenant_ids, buckets)
+            scores = fl.fleet_scores(state, tenant_ids, buckets,
+                                     table_mask=table_mask)
             admit = scores >= fl.admit_thresholds(
-                state, self.gcfg.alpha,
-                self.gcfg.warmup_items)[tenant_ids]
+                state, self.gcfg.alpha, self.gcfg.warmup_items,
+                table_mask=table_mask)[tenant_ids]
+            admit = jnp.logical_and(admit, finite)
             new_state = fl.insert_masked(state, tenant_ids, buckets,
                                          admit, cfg)
             return new_state, admit
@@ -252,15 +334,25 @@ class Guardrail:
                     state, feat, w, cfg, gamma=self.gcfg.window_decay,
                     alpha=self.gcfg.alpha,
                     warmup_items=self.gcfg.warmup_items,
-                    rotate_every=self.gcfg.rotate_every)
+                    rotate_every=self.gcfg.rotate_every,
+                    table_mask=table_mask, item_mask=finite)
             buckets = hash_buckets(feat, w, cfg.srp)   # the ONE hash
             # tail + live gathers (the live one is the flat path's own)
             tail_sums, live_sums = ring.window_table_sums(state, buckets)
-            scores = ring.score_live(tail_sums, live_sums,
-                                     cfg.num_tables)
+            if table_mask is None:
+                scores = ring.score_live(tail_sums, live_sums,
+                                         cfg.num_tables)
+            else:
+                # degraded: masked gathers for the DECISION; the
+                # insert's ssq increment keeps the true (unmasked) sums
+                mt, ml = ring.window_table_sums(state, buckets,
+                                                table_mask=table_mask)
+                scores = ring.score_live(mt, ml, cfg.num_tables,
+                                         table_mask=table_mask)
             admit = scores >= ring.admit_threshold_windowed(
                 state, self.gcfg.window_decay, self.gcfg.alpha,
-                self.gcfg.warmup_items)
+                self.gcfg.warmup_items, table_mask=table_mask)
+            admit = jnp.logical_and(admit, finite)
             new_state = ring.insert_current(
                 state, buckets, admit, cfg,
                 gamma=self.gcfg.window_decay,
@@ -275,11 +367,16 @@ class Guardrail:
             from repro.kernels import ops as kops
             return kops.ace_admit(state, feat, w, cfg,
                                   alpha=self.gcfg.alpha,
-                                  warmup_items=self.gcfg.warmup_items)
+                                  warmup_items=self.gcfg.warmup_items,
+                                  table_mask=table_mask,
+                                  item_mask=finite)
         buckets = hash_buckets(feat, w, cfg.srp)       # the ONE hash
-        scores = sk.lookup(state, buckets)             # same bucket ids
+        scores = sk.lookup(state, buckets,             # same bucket ids
+                           table_mask=table_mask)
         admit = scores >= sk.admit_threshold(
-            state, self.gcfg.alpha, self.gcfg.warmup_items)
+            state, self.gcfg.alpha, self.gcfg.warmup_items,
+            table_mask=table_mask)
+        admit = jnp.logical_and(admit, finite)
         new_state = sk.insert_buckets_masked(state, buckets, admit, cfg)
         return new_state, admit
 
@@ -287,21 +384,109 @@ class Guardrail:
               tenant_ids: jax.Array | None = None) -> np.ndarray:
         """(B, S, D) request embeddings -> (B,) bool admitted; admits update
         the sketch (the serving distribution drifts with traffic — the
-        paper's dynamic-update property).  One host transfer: the mask.
+        paper's dynamic-update property).  One host transfer: the packed
+        verdict+quarantine block.
 
         Multi-tenant guardrails additionally take ``tenant_ids`` (B,)
-        int32 routing each request to its own tenant's sketch."""
+        int32 routing each request to its own tenant's sketch.
+
+        Non-finite rows are quarantined (sanitized out of the sketch,
+        counted in ``self.quarantined``) and answered per
+        ``gcfg.fail_policy``; while ``self.degraded`` the decision runs
+        over healthy tables only — both with zero additional host syncs
+        (the health mask is a device arg of a second cached executable,
+        the quarantine count rides the one existing transfer)."""
         if self.multi_tenant:
             if tenant_ids is None:
                 raise ValueError("multi-tenant guardrail needs tenant_ids")
-            self.state, admit = self._admit(
+            self.state, packed = self._admit(
                 self.state, self.w, embeds,
-                jnp.asarray(tenant_ids, jnp.int32))
+                jnp.asarray(tenant_ids, jnp.int32), self._table_mask)
         else:
             if tenant_ids is not None:
                 raise ValueError("tenant_ids given but num_tenants == 1")
-            self.state, admit = self._admit(self.state, self.w, embeds)
-        return np.asarray(admit)
+            self.state, packed = self._admit(self.state, self.w, embeds,
+                                             None, self._table_mask)
+        out = np.asarray(packed)          # the ONE device→host transfer
+        self.quarantined += int((~out[1]).sum())
+        if self._rewarm_admits > 0:
+            self._rewarm_admits -= 1      # host arithmetic, no syncs
+        return out[0].astype(bool)
+
+    @property
+    def degraded(self) -> bool:
+        """True while the serving mask excludes any table (health_check
+        found corruption, or a repair is still re-warming)."""
+        return self._table_mask is not None
+
+    def health_check(self):
+        """Audit the sketch invariants (repro.resilience.health_check)
+        and refresh the serving table mask.  A control-plane call: it
+        syncs the report to the host (the hot path never does).
+
+        Returns the host-side ``HealthReport``.  Tables failing their
+        invariants — or repaired tables still re-warming — are excluded
+        from scoring on subsequent ``admit`` calls via the degraded
+        executable; once every table passes again (and the re-warm
+        window has elapsed) the mask drops back to None and the original
+        healthy executable resumes.
+        """
+        from repro import resilience as rz
+        report = rz.health_check(self.state, self._repair_offsets)
+        host = jax.device_get(report)
+        table_ok = np.asarray(host.table_ok, bool)
+        serving = table_ok.copy()
+        if self._repair_offsets is not None:
+            # flat/fleet re-warm gate: a repaired table rejoins once it
+            # has re-absorbed a warmup's worth of the live stream
+            offs = np.asarray(jax.device_get(self._repair_offsets))
+            n = np.asarray(jax.device_get(self.state.n), np.float32)
+            seen = (n[..., None] if offs.ndim == n.ndim + 1 else n) - offs
+            # only repaired tables (offset > 0) carry the re-warm gate
+            serving &= (offs == 0) | (seen >= self.gcfg.warmup_items)
+        if self._rewarm_admits > 0:
+            # windowed re-warm gate: repaired ring tables stay masked
+            # until the zeroed epochs have fully expired
+            serving &= ~self._rewarming
+        if serving.all():
+            self._table_mask = None
+        else:
+            self._table_mask = jnp.asarray(serving, jnp.float32)
+        return host
+
+    def repair(self):
+        """Re-zero every table failing its invariants (and any poisoned
+        Welford stream) while the healthy tables keep serving — the
+        repro.resilience repair ops, wired to this guardrail's sketch
+        flavour.  Control-plane: syncs, retains the degraded mask over
+        the repaired tables until they re-warm (flat/fleet: a warmup's
+        worth of stream, tracked via repair offsets; windowed: one full
+        ring of rotations, tracked host-side).  Returns the host-side
+        pre-repair ``HealthReport``.
+        """
+        from repro import resilience as rz
+        report = rz.health_check(self.state, self._repair_offsets)
+        host = jax.device_get(report)
+        table_ok = report.table_ok
+        if self.multi_tenant and self.windowed:
+            self.state = rz.repair_fleet_window(self.state, table_ok)
+        elif self.multi_tenant:
+            self.state, self._repair_offsets = rz.repair_fleet(
+                self.state, table_ok, self._repair_offsets)
+        elif self.windowed:
+            self.state = rz.repair_window(self.state, table_ok)
+        else:
+            self.state, self._repair_offsets = rz.repair_ace(
+                self.state, table_ok, self._repair_offsets)
+        if self.windowed and not np.asarray(host.table_ok, bool).all():
+            # E·rotate_every admits flush every zeroed epoch out
+            self._rewarm_admits = (self.gcfg.window_epochs
+                                   * self.gcfg.rotate_every)
+            self._rewarming = ~np.asarray(host.table_ok, bool)
+        if not np.asarray(host.moments_ok, bool).all():
+            self.state = rz.repair_moments(self.state)
+        self.health_check()
+        return host
 
 
 def _to_host(x: jax.Array) -> np.ndarray:

@@ -72,6 +72,11 @@ class ChunkSummary(NamedTuple):
     topk_margin: (k,) float32 — score − threshold (most negative = most
                  anomalous; +inf while the sketch is in warmup).
     n:           () float32 — sketch item count after the chunk.
+    quarantined: () int32 — non-finite feature rows sanitized at the
+                 filter entry point (margin = −inf; counted among the
+                 anomalies, never inserted).
+    degraded:    () bool — True when the chunk was scored with a health
+                 mask (some tables excluded — repro.resilience).
     """
 
     kept_frac: jax.Array
@@ -80,6 +85,8 @@ class ChunkSummary(NamedTuple):
     topk_item: jax.Array
     topk_margin: jax.Array
     n: jax.Array
+    quarantined: jax.Array
+    degraded: jax.Array
 
 
 class FleetChunkSummary(NamedTuple):
@@ -92,6 +99,9 @@ class FleetChunkSummary(NamedTuple):
     per_tenant_kept:  (T,) float32 — of those, how many were kept.
     n:                (T,) float32 — each tenant's sketch n after the
                       chunk (replaces the scalar n of the flat summary).
+    quarantined:      () int32 — sanitized non-finite rows (see
+                      ``ChunkSummary``).
+    degraded:         () bool — chunk scored under a health mask.
     """
 
     kept_frac: jax.Array
@@ -102,6 +112,8 @@ class FleetChunkSummary(NamedTuple):
     per_tenant_items: jax.Array
     per_tenant_kept: jax.Array
     n: jax.Array
+    quarantined: jax.Array
+    degraded: jax.Array
 
 
 class StreamRunner:
@@ -193,7 +205,8 @@ class StreamRunner:
                              for leaf, sh in zip(state, self._shardings)))
 
     def _consume_impl(self, state: AceState, w: jax.Array,
-                      feats: jax.Array, tenant_ids=None):
+                      feats: jax.Array, tenant_ids=None,
+                      table_mask=None):
         self.trace_count += 1
         T, B = feats.shape[0], feats.shape[1]
         R = self.rotate_every
@@ -205,16 +218,17 @@ class StreamRunner:
             def fstep(carry, xs):
                 feat, tids = xs
                 new_state, keep, margin = self.filt.step(
-                    carry, w, feat, tids)
+                    carry, w, feat, tids, table_mask=table_mask)
                 return self._constrain(new_state), (keep, margin)
 
             state, (keeps, margins) = jax.lax.scan(
                 fstep, state, (feats, tenant_ids))
             return self._fleet_summary(state, keeps, margins,
-                                       tenant_ids, T, B)
+                                       tenant_ids, T, B, table_mask)
 
         def step(carry, feat):
-            new_state, keep, margin = self.filt.step(carry, w, feat)
+            new_state, keep, margin = self.filt.step(
+                carry, w, feat, table_mask=table_mask)
             return self._constrain(new_state), (keep, margin)
 
         if R and T % R == 0:
@@ -267,12 +281,18 @@ class StreamRunner:
             topk_margin=-neg,
             # windowed carries hold per-epoch (E,) counts — report the
             # ring total so the summary shape is layout-independent
-            n=state.n if state.n.ndim == 0 else jnp.sum(state.n))
+            n=state.n if state.n.ndim == 0 else jnp.sum(state.n),
+            # −inf margins uniquely mark sanitized rows (warmup margins
+            # are +inf, real margins finite) — count them without
+            # changing the filter step protocol
+            quarantined=jnp.sum(jnp.isneginf(margins)).astype(jnp.int32),
+            degraded=jnp.asarray(table_mask is not None))
         if self.return_masks:
             return state, summary, keeps
         return state, summary
 
-    def _fleet_summary(self, state, keeps, margins, tenant_ids, T, B):
+    def _fleet_summary(self, state, keeps, margins, tenant_ids, T, B,
+                       table_mask=None):
         """Per-tenant summary rows from the scan outputs — all device
         reductions, one transfer with the rest of the summary."""
         from repro.fleet.state import per_tenant_counts
@@ -291,28 +311,38 @@ class StreamRunner:
                 tids_flat, jnp.ones_like(tids_flat), nt),
             per_tenant_kept=per_tenant_counts(
                 tids_flat, keepf.reshape(-1), nt),
-            n=state.n)
+            n=state.n,
+            quarantined=jnp.sum(jnp.isneginf(margins)).astype(jnp.int32),
+            degraded=jnp.asarray(table_mask is not None))
         if self.return_masks:
             return state, summary, keeps
         return state, summary
 
     def consume(self, state: AceState, w: jax.Array, feats: jax.Array,
-                tenant_ids: jax.Array | None = None):
+                tenant_ids: jax.Array | None = None,
+                table_mask: jax.Array | None = None):
         """One chunk: feats (T, B, d) features (d = filter's dim+1 when
         produced by ``AceDataFilter.features``), plus the (T, B) int32
         tenant-id plane when the filter is a fleet.  Returns
         (new_state, summary[, keeps]) — all still on device; pull the
-        summary with ONE ``jax.device_get`` when the host needs it."""
+        summary with ONE ``jax.device_get`` when the host needs it.
+
+        ``table_mask`` ((L,) or (T, L) f32, repro.resilience serving
+        mask) scores the chunk over healthy tables only and stamps the
+        summary ``degraded``.  None (the healthy default) traces no mask
+        code — the degraded program is a SECOND cached executable
+        (distinct treedef), so flipping back and forth costs no retrace
+        and no extra host syncs."""
         assert feats.ndim == 3 and feats.shape[0] == self.chunk_T, \
             (feats.shape, self.chunk_T)
         if self.is_fleet:
             assert tenant_ids is not None and \
                 tenant_ids.shape == feats.shape[:2], \
                 "fleet filters need a (T, B) tenant_ids plane"
-            return self._consume(state, w, feats, tenant_ids)
+            return self._consume(state, w, feats, tenant_ids, table_mask)
         assert tenant_ids is None, \
             "tenant_ids given but the filter is not a fleet"
-        return self._consume(state, w, feats)
+        return self._consume(state, w, feats, None, table_mask)
 
     def run(self, state: AceState, w: jax.Array,
             batches: Iterable[np.ndarray], tenant_ids=None):

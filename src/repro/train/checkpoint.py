@@ -10,6 +10,13 @@ Design for multi-pod (DESIGN.md §4):
 * Writes are atomic (tmp + rename) so a preemption mid-write never corrupts
   the latest checkpoint; ``keep`` bounds disk usage; ``latest_step`` scans
   the directory for restart-after-failure.
+* Integrity (repro.resilience): the manifest records a CRC32 per leaf;
+  ``restore`` verifies every leaf against it and raises
+  ``CheckpointCorruptError`` on mismatch (or on an unreadable/torn npz),
+  and ``CheckpointManager.restore_latest`` falls back to the NEWEST intact
+  step — a torn write or a flipped bit costs one checkpoint interval, not
+  a silently-wrong resume.  Manifests predating the checksum field verify
+  as intact (backward compatible).
 
 At true 1000-node scale the npz would become per-shard files keyed by the
 PartitionSpec (same manifest schema, one blob per shard); the single-blob
@@ -24,9 +31,21 @@ import re
 import shutil
 import tempfile
 import time
+import zipfile
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed integrity verification (bad CRC, torn npz,
+    missing leaf).  ``CheckpointManager.restore_latest`` catches this and
+    falls back to the next-newest intact step."""
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def _flatten_with_names(tree):
@@ -49,6 +68,10 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
         "names": names,
         "time": time.time(),
         "extra": extra or {},
+        # per-leaf CRC32 over the raw bytes: restore verifies these, and
+        # restore_latest uses them to skip torn/flipped checkpoints
+        "checksums": [_leaf_crc(arrays[f"a{i}"])
+                      for i in range(len(leaves))],
     }
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
@@ -96,12 +119,31 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     ``shardings``: optional pytree of NamedSharding (same structure) — each
     leaf is device_put to it, resharding to the CURRENT mesh regardless of
     the topology that saved it.
+
+    Raises ``CheckpointCorruptError`` when the npz is torn/unreadable or
+    any leaf's CRC32 disagrees with the manifest (checksum-less legacy
+    manifests skip verification).
     """
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        arrays = [z[f"a{i}"] for i in range(len(manifest["names"]))]
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = [z[f"a{i}"] for i in range(len(manifest["names"]))]
+    except (OSError, ValueError, KeyError, EOFError,
+            zipfile.BadZipFile) as e:
+        # torn write, truncated zip member, missing leaf — all corrupt
+        raise CheckpointCorruptError(
+            f"step {step}: unreadable arrays.npz ({e})") from e
+    checksums = manifest.get("checksums")
+    if checksums is not None:
+        for i, (arr, want) in enumerate(zip(arrays, checksums)):
+            got = _leaf_crc(arr)
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf a{i} ({manifest['names'][i]}) "
+                    f"CRC mismatch (manifest {want:#010x}, "
+                    f"file {got:#010x})")
 
     names, like_leaves, treedef = _flatten_with_names(like_tree)
     if names != manifest["names"]:
@@ -132,8 +174,18 @@ class CheckpointManager:
         return save(self.ckpt_dir, step, tree, extra=extra, keep=self.keep)
 
     def restore_latest(self, like_tree, shardings=None):
-        step = latest_step(self.ckpt_dir)
-        if step is None:
-            return None, None
-        tree, manifest = restore(self.ckpt_dir, step, like_tree, shardings)
-        return tree, manifest
+        """Restore the newest INTACT checkpoint.
+
+        Steps are tried newest-first; a step that fails integrity
+        verification (``CheckpointCorruptError``) is skipped and the next
+        older one is tried — so a torn write or flipped bit costs one
+        checkpoint interval of progress instead of a corrupt resume.
+        Returns (None, None) when no intact checkpoint exists."""
+        for step in reversed(all_steps(self.ckpt_dir)):
+            try:
+                tree, manifest = restore(self.ckpt_dir, step, like_tree,
+                                         shardings)
+            except CheckpointCorruptError:
+                continue
+            return tree, manifest
+        return None, None

@@ -56,6 +56,12 @@ class TrainConfig:
     monitor_feature_dim: int = 32
     ckpt_dir: str | None = None
     ckpt_interval: int = 200
+    step_slo_seconds: float = 120.0  # host straggler SLO (StepTimer);
+                                     # breaches ride the metrics stream
+    max_rollbacks: int = 3           # bounded monitor-tripped rollbacks
+                                     # per train() call (0 disables)
+    rollback_backoff: float = 0.0    # seconds slept before the k-th
+                                     # rollback (linear: k × backoff)
     seed: int = 0
 
 
@@ -274,6 +280,10 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
             monitor = monitor._replace(ace=constrain_sketch(monitor.ace))
             metrics["grad_anomaly"] = is_anom.astype(jnp.float32)
             metrics["grad_score"] = score
+            # rides the existing per-step metrics pull — the rollback
+            # decision costs the driver zero extra host syncs
+            metrics["rollback_needed"] = gm.rollback_needed(
+                monitor).astype(jnp.float32)
             new_params, new_opt = jax.tree.map(
                 lambda new, old: jnp.where(is_anom, old, new),
                 (new_params, new_opt), (state.params, state.opt_state))
@@ -355,11 +365,12 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
 
         pb_step = jax.jit(_tail_step)
 
-    timer = StepTimer(slo_seconds=120.0)
+    timer = StepTimer(slo_seconds=tcfg.step_slo_seconds)
     history = []
+    rollbacks = 0
 
     def run_step(jbatch, keep=None, saveable=True):
-        nonlocal state
+        nonlocal state, rollbacks
         metrics = {}
         if keep is not None:
             mask = jbatch.get("mask",
@@ -372,6 +383,32 @@ def train(arch: Arch, tcfg: TrainConfig, stream: DataStream,
         metrics.update(step_metrics)
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics["straggler_breach"] = float(timer.tick())
+        metrics["straggler_breaches_total"] = float(timer.breaches)
+        # ---- monitor-tripped rollback: ``max_consecutive`` anomalous
+        # steps in a row means skipping updates is no longer containing
+        # the fault — restore the newest INTACT checkpoint (corrupt ones
+        # are skipped via CRC verification, see checkpoint.restore_latest)
+        # and rewind the data stream with it.  Bounded retries with
+        # linear backoff; with no checkpoint (or budget spent) the trip
+        # counter is cleared so training continues in skip-updates mode
+        # instead of re-tripping every step.
+        if metrics.get("rollback_needed", 0.0) >= 1.0:
+            rolled = False
+            if mgr is not None and rollbacks < tcfg.max_rollbacks:
+                rollbacks += 1
+                if tcfg.rollback_backoff > 0:
+                    time.sleep(tcfg.rollback_backoff * rollbacks)
+                restored, manifest = mgr.restore_latest(state)
+                if restored is not None:
+                    state = restored
+                    stream.load_state_dict(
+                        {"step": manifest["extra"]["data_step"]})
+                    rolled = True
+            metrics["rollback"] = float(rolled)
+            if not rolled and state.monitor is not None:
+                state = state._replace(monitor=state.monitor._replace(
+                    consecutive=jnp.zeros_like(
+                        state.monitor.consecutive)))
         history.append(metrics)
         step = int(state.step)
         # ``saveable`` is False for non-final steps of a prefilter chunk:

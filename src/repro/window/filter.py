@@ -79,24 +79,35 @@ class WindowedAceFilter:
         from repro.data.pipeline import mean_embed_features
         return mean_embed_features(embeds, self.bias_const)
 
-    def step(self, state: WindowedAceState, w, feat):
+    def step(self, state: WindowedAceState, w, feat, table_mask=None):
         """hash ONCE → window-combined score → window-combined μ−ασ
         threshold → masked insert into the live epoch.
 
         Returns (new_state, keep (B,) bool, margin (B,) float32); the
         scan body of ``StreamRunner`` when the filter is windowed.
-        Rotation is the driver's job (see module docstring)."""
+        Rotation is the driver's job (see module docstring).
+
+        Non-finite feature rows are sanitized at entry exactly like
+        ``AceDataFilter.step``: zeroed pre-hash, never kept/inserted,
+        ``margin = −inf``.  ``table_mask`` (L,) f32 restricts the
+        DECISION (score + threshold) to healthy tables; the insert still
+        folds the true unmasked ``pre_sums`` so the ssq invariant keeps
+        tracking the physical ring contents."""
         cfg = self.ace_cfg
+        finite = jnp.all(jnp.isfinite(feat), axis=-1)
+        feat = jnp.where(finite[:, None], feat, 0.0)
         buckets = srp.hash_buckets(feat, w, cfg.srp)   # the ONE hash
         # tail + live gathers: the live one is the flat sketch's own
         # score gather; the tail one is the whole windowing surcharge
         tail_sums, live_sums = ring.window_table_sums(state, buckets)
-        scores = ring.score_live(tail_sums, live_sums, cfg.num_tables)
+        scores = ring.score_live(tail_sums, live_sums, cfg.num_tables,
+                                 table_mask=table_mask)
         thresh = ring.admit_threshold_windowed(
-            state, self.decay, self.alpha, self.warmup_items)
-        keep = scores >= thresh
-        margin = scores - thresh
-        ins = jnp.ones_like(keep) if self.insert_all else keep
+            state, self.decay, self.alpha, self.warmup_items,
+            table_mask=table_mask)
+        keep = jnp.logical_and(scores >= thresh, finite)
+        margin = jnp.where(finite, scores - thresh, -jnp.inf)
+        ins = finite if self.insert_all else keep
         # the scoring gathers double as the ssq increment's ⟨h, C_w⟩ input
         new_state = ring.insert_current(
             state, buckets, ins, cfg, gamma=self.decay,

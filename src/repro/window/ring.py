@@ -267,7 +267,8 @@ def live_epoch(state: WindowedAceState) -> AceState:
     )
 
 
-def window_table_sums(state: WindowedAceState, buckets: jax.Array):
+def window_table_sums(state: WindowedAceState, buckets: jax.Array,
+                      table_mask: jax.Array | None = None):
     """Hot-path windowed table sums, split by provenance:
 
         tail_sums[i] = Σ_j tail[j, b_ij]         (frozen between rotations)
@@ -280,27 +281,44 @@ def window_table_sums(state: WindowedAceState, buckets: jax.Array):
     poorly, and slab-slicing the epoch copies (L, 2^K) per step).
     Returns (tail_sums, live_sums), both (B,) integer-valued float32
     (tail exactly so only when γ=1).
+
+    ``table_mask`` (L,) zeroes corrupted tables out of BOTH row-sums —
+    the Python-level ``None`` branch keeps the healthy program untouched
+    (the repo-wide degraded-mode convention, see
+    ``sketch.batch_scores``).  The caller pairs this with the masked
+    ``score_live`` combine, which divides by the healthy count.
     """
     E, L, nbuckets = state.counts.shape
     rows = jnp.broadcast_to(
         jnp.arange(L, dtype=jnp.int32)[None, :], buckets.shape)
-    tail_sums = jnp.sum(state.tail[rows, buckets], axis=-1)
     ring_rows = rows + state.cursor * L
     flat = state.counts.reshape(E * L, nbuckets)
-    live_sums = jnp.sum(flat[ring_rows, buckets].astype(jnp.float32),
-                        axis=-1)
-    return tail_sums, live_sums
+    tail_g = state.tail[rows, buckets]                           # (B, L)
+    live_g = flat[ring_rows, buckets].astype(jnp.float32)        # (B, L)
+    if table_mask is not None:
+        maskf = table_mask.astype(jnp.float32)
+        tail_g = tail_g * maskf
+        live_g = live_g * maskf
+    return jnp.sum(tail_g, axis=-1), jnp.sum(live_g, axis=-1)
 
 
 def score_live(tail_sums: jax.Array, live_sums: jax.Array,
-               num_tables: int) -> jax.Array:
+               num_tables: int,
+               table_mask: jax.Array | None = None) -> jax.Array:
     """(tail_sums, live_sums) -> (B,) windowed scores.
 
     The canonical combine: one add, ONE reciprocal multiply by 1/L
     (same literal constant as ``sketch.batch_scores``).  With E=1 the
     tail is identically zero and ``0.0 + x`` is exact, so this is
-    ``batch_scores`` bitwise."""
-    return (tail_sums + live_sums) * jnp.float32(1.0 / num_tables)
+    ``batch_scores`` bitwise.
+
+    With ``table_mask`` the sums are assumed already masked (from the
+    masked ``window_table_sums``) and the reciprocal is 1/num_healthy —
+    the degraded-mode mean over surviving tables."""
+    if table_mask is None:
+        return (tail_sums + live_sums) * jnp.float32(1.0 / num_tables)
+    nh = jnp.maximum(jnp.sum(table_mask.astype(jnp.float32)), 1.0)
+    return (tail_sums + live_sums) * (1.0 / nh)
 
 
 def score_combined(state: WindowedAceState,
@@ -493,7 +511,8 @@ def combined_n(state: WindowedAceState, gamma: float) -> jax.Array:
     return jnp.sum(w * state.n)
 
 
-def mean_mu_windowed(state: WindowedAceState, gamma: float) -> jax.Array:
+def mean_mu_windowed(state: WindowedAceState, gamma: float,
+                     table_mask: jax.Array | None = None) -> jax.Array:
     """γ-generalised Eq. 11 closed form:  μ_w = ‖C_w‖² / (n_w · L).
 
     For γ=1 this is EXACT — C_w is the merged counts and the derivation
@@ -502,10 +521,22 @@ def mean_mu_windowed(state: WindowedAceState, gamma: float) -> jax.Array:
     contribution decays with both members' ages).  ‖C_w‖² is the
     maintained ``state.ssq`` stream (O(1) at query time; re-anchored
     from the tail at every rotation), never an O(L·2^K) sweep on the
-    per-step path."""
+    per-step path.
+
+    ``table_mask`` (degraded mode only) cannot use the scalar ssq — it
+    recomputes per-table squared norms from the epochs via
+    ``decayed_counts`` (a full-table sweep, acceptable off the healthy
+    hot path) and means over the healthy tables."""
     L = state.counts.shape[1]
-    denom = jnp.maximum(combined_n(state, gamma), 1.0) * L
-    return state.ssq / denom
+    if table_mask is None:
+        denom = jnp.maximum(combined_n(state, gamma), 1.0) * L
+        return state.ssq / denom
+    maskf = table_mask.astype(jnp.float32)
+    nh = jnp.maximum(jnp.sum(maskf), 1.0)
+    cw = decayed_counts(state, gamma)                            # (L, 2^K)
+    per_table = jnp.sum(cw * cw, axis=1)                         # (L,)
+    denom = jnp.maximum(combined_n(state, gamma), 1.0) * nh
+    return jnp.sum(per_table * maskf) / denom
 
 
 def sigma_windowed(state: WindowedAceState, gamma: float) -> jax.Array:
@@ -542,8 +573,9 @@ def combined_moments(state: WindowedAceState, gamma: float):
 
 
 def admit_threshold_windowed(state: WindowedAceState, gamma: float,
-                             alpha: float,
-                             warmup_items: float) -> jax.Array:
+                             alpha: float, warmup_items: float,
+                             table_mask: jax.Array | None = None
+                             ) -> jax.Array:
     """Score-space admission threshold from WINDOW-combined moments.
 
     Mirrors ``sketch.admit_threshold`` operation-for-operation (rate =
@@ -556,7 +588,8 @@ def admit_threshold_windowed(state: WindowedAceState, gamma: float,
     scalar ops — no host sync.
     """
     n_w = combined_n(state, gamma)
-    rate = mean_mu_windowed(state, gamma) / jnp.maximum(n_w, 1.0)
+    rate = mean_mu_windowed(state, gamma, table_mask=table_mask) \
+        / jnp.maximum(n_w, 1.0)
     t = (rate - alpha * sigma_windowed(state, gamma)) \
         * jnp.maximum(n_w, 1.0)
     return jnp.where(n_w >= warmup_items, t, -jnp.inf)

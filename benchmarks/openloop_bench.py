@@ -1,0 +1,262 @@
+"""Open-loop (Poisson-arrival) serving benchmark for the front end.
+
+Closed-loop throughput benches (``guardrail_latency`` etc.) answer "how
+fast can the device go" — they issue the next batch when the last one
+returns, so an overloaded system just slows its own offered rate and
+every latency number looks fine.  Production traffic is OPEN loop: the
+world offers requests at its own rate, and the only honest questions
+are "what latency do served requests see" and "how much is shed" as the
+offered load crosses saturation.
+
+This bench measures both, against ``repro.serve.frontend.FrontEnd``:
+
+1. **Device capacity**: closed-loop items/s through the warmed
+   ``Guardrail.admit`` at the front end's batch shape (the gated
+   throughput metric — ``rep_items_per_s`` feeds the perf gate's
+   noise floor).
+2. **Front-end capacity**: closed-loop requests/s through the FULL
+   ``submit`` + ``pump`` path — per-request Python batching overhead
+   included.  THIS is the saturation point the open-loop offered
+   rates are scaled from: the front end, not the device, is what the
+   Poisson arrivals actually hit, and on small CPU shapes the two can
+   differ by orders of magnitude.  (Ungated: it measures the driver
+   loop as much as the code.)
+3. **Open loop**: seeded Poisson arrivals at 0.5x / 1.0x / 2.0x
+   front-end capacity.  Each load point reports served throughput,
+   shed rate (queue-full + deadline, per the bounded-queue /
+   deadline-aware design), and p50/p99/p999 latency of SERVED
+   requests.
+
+The claim under test (asserted here, not just reported): with a
+bounded queue and deadline shedding, p999 stays BOUNDED at 2x
+saturation — overload converts to measured shed rate instead of
+divergent latency.  The structural bound is
+
+    deadline_slack + service_time + max_wait + scheduling_slop
+
+(a served request never waits past its deadline by construction; the
+gate asserts against 3x the measured service time for container noise).
+
+Latency leaves are ``*_ms`` (ungated: load-dependent); only
+``capacity.items_per_s`` is a gated metric.  Open-loop served rates are
+named ``served_items_per_s`` — deliberately OUTSIDE the gate's pattern,
+since at sub-saturation loads they echo the offered rate, not the code.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.openloop_bench [--smoke] [--json P]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import Guardrail, GuardrailConfig
+from repro.serve.frontend import FrontEnd, FrontEndConfig
+
+LOADS = (0.5, 1.0, 2.0)
+
+
+def _build(smoke: bool):
+    if smoke:
+        B, S, D = 32, 2, 16
+        num_bits, num_tables, T = 5, 8, 4
+    else:
+        B, S, D = 256, 4, 64
+        num_bits, num_tables, T = 13, 32, 8
+    policies = tuple("fail_open" if t % 2 == 0 else "fail_closed"
+                     for t in range(T))
+    g = Guardrail(GuardrailConfig(d_model=D, num_bits=num_bits,
+                                  num_tables=num_tables,
+                                  warmup_items=64.0, num_tenants=T,
+                                  fail_policy=policies))
+    # deadline/max_wait stay at the FrontEndConfig defaults (50ms/5ms):
+    # at 0.5x load a full batch accumulates within max_wait, so the
+    # sub-saturation point runs efficient full batches, while 2x
+    # overload is absorbed by the queue bound + deadline shedding
+    fcfg = FrontEndConfig(batch_size=B, seq=S, d_model=D,
+                          max_queue=4 * B)
+    return g, fcfg, T
+
+
+def _capacity(g, fcfg, T, reps: int, n_batches: int):
+    """Closed-loop items/s of the warmed admit program (the gated
+    device-throughput metric)."""
+    rng = np.random.default_rng(0)
+    B, S, D = fcfg.batch_size, fcfg.seq, fcfg.d_model
+    embeds = [jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+              for _ in range(n_batches)]
+    tenants = jnp.asarray(rng.integers(0, T, size=B), jnp.int32)
+    g.admit(embeds[0], tenants)                   # warm the executable
+    rep_ips = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for e in embeds:
+            np.asarray(g.admit(e, tenants))
+        dt = time.perf_counter() - t0
+        rep_ips.append(n_batches * B / dt)
+    return max(rep_ips), rep_ips
+
+
+def _frontend_capacity(g, fcfg, T, n_req: int) -> float:
+    """Closed-loop requests/s through the full submit+pump path.
+
+    This is the true saturation point of open-loop serving: every
+    request pays the per-request Python cost (ticket, shape check,
+    batch assembly) on top of its share of a device batch.  Deadlines
+    are set far beyond the run length so nothing sheds — the measured
+    rate is pure service capacity."""
+    rng = np.random.default_rng(7)
+    pool = [rng.normal(size=(fcfg.seq, fcfg.d_model)).astype(np.float32)
+            for _ in range(64)]
+    fe = FrontEnd(g, fcfg)
+    t0 = time.perf_counter()
+    for k in range(n_req):
+        fe.submit(pool[k % len(pool)], tenant=k % T, deadline=60.0)
+        if fe.ready():
+            fe.pump()
+    fe.drain()
+    wall = time.perf_counter() - t0
+    assert fe.served == n_req, (fe.metrics(), n_req)
+    return n_req / wall
+
+
+def _open_loop(g, fcfg, T, rate: float, n_req: int, seed: int):
+    """Offer ``n_req`` requests at Poisson rate ``rate`` (req/s) against
+    a fresh FrontEnd; real clock, seeded arrivals.
+
+    Open-loop honesty (wrk2's coordinated-omission rule): every request
+    is accountable from its SCHEDULED arrival, not from whenever the
+    driver thread got around to submitting it.  Deadlines anchor to the
+    scheduled arrival (a request delayed by backlog has already burned
+    slack), and reported latency = completion - scheduled arrival."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_req))
+    pool = [rng.normal(size=(fcfg.seq, fcfg.d_model)).astype(np.float32)
+            for _ in range(64)]
+    fe = FrontEnd(g, fcfg)
+    tickets = []
+    clk = time.perf_counter
+    t0 = clk()
+    for k in range(n_req):
+        while clk() - t0 < arrivals[k]:
+            if fe.ready():
+                fe.pump()
+            else:
+                ahead = arrivals[k] - (clk() - t0)
+                if ahead > 0.0005:
+                    time.sleep(min(ahead, 0.002))
+        # remaining slack measured from the scheduled arrival: negative
+        # slack = already hopeless on submit, shed at the next pump
+        slack = fcfg.default_deadline - max(0.0, clk() - t0 - arrivals[k])
+        tickets.append((fe.submit(pool[k % len(pool)], tenant=k % T,
+                                  deadline=slack), arrivals[k]))
+        if fe.ready():
+            fe.pump()
+    t_end = clk()
+    while fe.queue_len and clk() - t_end < 1.0:   # bounded tail drain
+        fe.pump(force=True)
+    wall = clk() - t0
+    lat = np.array([tk.t_done - t0 - sched for tk, sched in tickets
+                    if tk.status == "served"])
+    m = fe.metrics()
+    assert m["served"] + m["shed_queue_full"] + m["shed_deadline"] \
+        + fe.queue_len == n_req
+    pct = (lambda q: float(np.percentile(lat, q) * 1e3)) if len(lat) \
+        else (lambda q: float("nan"))
+    return {
+        "offered_per_s": rate,
+        "n_requests": n_req,
+        "served_items_per_s": m["served"] / wall,
+        "shed_rate": m["shed_rate"],
+        "shed_queue_full": m["shed_queue_full"],
+        "shed_deadline": m["shed_deadline"],
+        "p50_ms": pct(50), "p99_ms": pct(99), "p999_ms": pct(99.9),
+        "est_service_ms": m["est_service_s"] * 1e3,
+    }
+
+
+def run(csv_rows: list | None = None, smoke: bool = False,
+        json_path: str | None = None) -> dict:
+    g, fcfg, T = _build(smoke)
+    cap, rep_ips = _capacity(g, fcfg, T, reps=3,
+                             n_batches=6 if smoke else 12)
+    fe_cap = _frontend_capacity(g, fcfg, T,
+                                n_req=1500 if smoke else 6000)
+    traces_after_cap = g.trace_count
+
+    points = {}
+    for ratio in LOADS:
+        rate = ratio * fe_cap
+        n_req = int(min(max(400, rate * (1.0 if smoke else 2.0)),
+                        40_000 if smoke else 200_000))
+        points[f"x{ratio}"] = dict(offered_ratio=ratio,
+                                   **_open_loop(g, fcfg, T, rate,
+                                                n_req, seed=int(ratio * 10)))
+    # mixed-size batches (padded partials) must reuse the SAME admit
+    # executable — shape-stable serving is the whole point of padding
+    assert g.trace_count == traces_after_cap, (
+        f"open-loop serving retraced admit: {g.trace_count} vs "
+        f"{traces_after_cap}")
+
+    over = points[f"x{LOADS[-1]}"]
+    assert over["shed_rate"] > 0.05, (
+        "2x saturation produced no measurable shedding: "
+        f"{over['shed_rate']}")
+    svc = max(over["est_service_ms"], 0.1)
+    bound_ms = fcfg.default_deadline * 1e3 + 3.0 * svc \
+        + fcfg.max_wait * 1e3 + 20.0
+    assert over["p999_ms"] <= bound_ms, (
+        f"p999 {over['p999_ms']:.2f}ms exceeds structural bound "
+        f"{bound_ms:.2f}ms at 2x saturation — latency diverged instead "
+        "of shedding")
+
+    report = {
+        "batch": fcfg.batch_size, "seq": fcfg.seq,
+        "d_model": fcfg.d_model, "num_tenants": T,
+        "max_queue": fcfg.max_queue,
+        "deadline_ms": fcfg.default_deadline * 1e3,
+        "max_wait_ms": fcfg.max_wait * 1e3,
+        "capacity": {"items_per_s": cap, "rep_items_per_s": rep_ips},
+        "frontend_capacity_req_per_s": fe_cap,
+        "open_loop": points,
+        "p999_bound_ms": bound_ms,
+        "trace_counts": {"total": g.trace_count},
+    }
+    if csv_rows is not None:
+        csv_rows.append(
+            f"openloop_capacity,{1e6 * fcfg.batch_size / cap:.2f},"
+            f"{cap:.0f}")
+        csv_rows.append(
+            f"openloop_2x_shed,0,{over['shed_rate']:.3f}")
+    print(f"  device capacity {cap:.0f} items/s  front-end capacity "
+          f"{fe_cap:.0f} req/s")
+    for name, pt in points.items():
+        print(f"  {name}: offered {pt['offered_per_s']:.0f}/s  served "
+              f"{pt['served_items_per_s']:.0f}/s  shed "
+              f"{pt['shed_rate']:.1%}  p50 {pt['p50_ms']:.2f}ms  "
+              f"p99 {pt['p99_ms']:.2f}ms  p999 {pt['p999_ms']:.2f}ms")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI shapes (small K/L/batch, short loads)")
+    ap.add_argument("--json", default=None,
+                    help="output path (default BENCH_openloop[.smoke].json)")
+    args = ap.parse_args()
+    default = "BENCH_openloop.smoke.json" if args.smoke \
+        else "BENCH_openloop.json"
+    report = run(smoke=args.smoke, json_path=args.json or default)
+    print(json.dumps(report, indent=2))
+
+
+if __name__ == "__main__":
+    main()

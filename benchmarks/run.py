@@ -27,8 +27,9 @@ def main() -> None:
     from benchmarks import (dist_throughput, fig1_discriminative,
                             fig3_5_variance, fleet_throughput,
                             guardrail_latency, memory_table,
-                            stream_throughput, table3_5_comparison,
-                            throughput, window_throughput)
+                            openloop_bench, stream_throughput,
+                            table3_5_comparison, throughput,
+                            window_throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -57,6 +58,8 @@ def main() -> None:
         "window": lambda: window_throughput.run(
             csv_rows, smoke=args.quick),
         "fleet": lambda: fleet_throughput.run(
+            csv_rows, smoke=args.quick),
+        "openloop": lambda: openloop_bench.run(
             csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:

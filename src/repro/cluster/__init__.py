@@ -1,0 +1,40 @@
+"""repro.cluster — fault-tolerant multi-host fleet serving.
+
+The sketch's mergeability (counts add, moments merge by Chan's rule)
+makes a peer's copy a valid warm restore, so host failure becomes a
+degraded-but-serving event instead of an outage:
+
+* tenants shard across hosts by rendezvous hashing (``shard`` —
+  minimal movement on any membership change),
+* each host gossips its owned tenants' sketches at epoch boundaries
+  and checkpoints them with CRCs (``gossip`` + ``train.checkpoint``),
+* heartbeat-timeout failure detection re-shards a dead host's tenants
+  onto survivors, warm-restored from the last intact gossip/checkpoint
+  — every candidate health-checked before install (``membership``,
+  ``node``),
+* declared-dead hosts re-enter through attempt-bounded exponential
+  backoff (``membership.RejoinPolicy``).
+
+Control traffic rides the coordination-service KV store every
+``jax.distributed`` launch already has (``kv``); the hot path stays
+the unchanged single-host fleet scan, ownership-masked.  The open-loop
+serving front end lives in ``repro.serve.frontend``.  See
+docs/ARCHITECTURE.md §9.
+"""
+from repro.cluster.gossip import (GossipBus, SnapshotCorrupt,
+                                  pack_snapshot, snapshot_healthy,
+                                  unpack_snapshot)
+from repro.cluster.kv import DistributedStore, MemStore
+from repro.cluster.membership import (FailureDetector, HeartbeatWriter,
+                                      MembershipConfig, RejoinPolicy)
+from repro.cluster.node import ClusterConfig, ClusterNode
+from repro.cluster.shard import (ShardMap, rendezvous_owner, with_host,
+                                 without_host)
+
+__all__ = [
+    "ClusterConfig", "ClusterNode", "DistributedStore", "FailureDetector",
+    "GossipBus", "HeartbeatWriter", "MemStore", "MembershipConfig",
+    "RejoinPolicy", "ShardMap", "SnapshotCorrupt", "pack_snapshot",
+    "rendezvous_owner", "snapshot_healthy", "unpack_snapshot",
+    "with_host", "without_host",
+]

@@ -1,0 +1,158 @@
+"""Epoch-boundary sketch gossip: serialize, CRC-frame, publish, adopt.
+
+Mergeability is the whole story here: an ACE sketch is a CRDT (counts
+add, moments merge by Chan's rule), so a PEER'S COPY of a tenant's
+sketch is not a cache — it is a valid warm restore point.  Each host
+publishes its owned tenants' sketches once per epoch (a few KB per
+tenant at smoke shapes, ``AceConfig.memory_bytes`` each at paper
+shapes); when a host dies, the survivors adopt its tenants from the
+last gossiped snapshot, losing at most the partial epoch since the
+last publish — no replay log, no quorum, no transfer of the live
+stream.
+
+Integrity is layered the same way PR 7's checkpoints are:
+
+1. transport: every array in a snapshot carries a CRC32 in the framing
+   manifest; a torn or bit-flipped BLOB fails :class:`SnapshotCorrupt`
+   at unpack.
+2. semantics: a sketch corrupted BEFORE serialization has valid CRCs,
+   so adoption additionally runs every candidate through
+   ``repro.resilience.health_check`` (count conservation per table,
+   finite moments) and refuses to merge or install one that fails —
+   a poisoned peer cannot infect the survivors.
+
+Publishing flips an epoch pointer LAST (blob under ``gossip/<host>/<e>``,
+then ``gossip/<host>/latest`` ← e), so a reader following the pointer
+never sees a half-written blob even on a store with no transactions.
+"""
+from __future__ import annotations
+
+import io
+import json
+import zlib
+
+import numpy as np
+
+from repro.core.sketch import AceState
+from repro.fleet.state import FleetState
+
+
+class SnapshotCorrupt(RuntimeError):
+    """A gossiped snapshot failed CRC/framing verification."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def pack_snapshot(state: FleetState, tenants, epoch: int) -> bytes:
+    """Serialize ``tenants``' rows of a host-side fleet into one
+    CRC-framed npz blob.  ``state`` leaves must be host numpy (callers
+    ``jax.device_get`` once per epoch — this is control plane)."""
+    tenants = [int(t) for t in tenants]
+    counts = np.ascontiguousarray(
+        np.asarray(state.counts)[tenants])            # (t, L, 2^K)
+    stats = np.stack([np.asarray(state.n)[tenants],
+                      np.asarray(state.welford_mean)[tenants],
+                      np.asarray(state.welford_m2)[tenants]]
+                     ).astype(np.float32)             # (3, t)
+    manifest = {
+        "epoch": int(epoch),
+        "tenants": tenants,
+        "count_dtype": str(counts.dtype),
+        "crc_counts": _crc(counts),
+        "crc_stats": _crc(stats),
+    }
+    buf = io.BytesIO()
+    np.savez(buf, counts=counts, stats=stats,
+             manifest=np.frombuffer(json.dumps(manifest).encode(),
+                                    np.uint8))
+    return buf.getvalue()
+
+
+def unpack_snapshot(blob: bytes) -> tuple[int, dict[int, AceState]]:
+    """(epoch, tenant → AceState).  Raises :class:`SnapshotCorrupt` on
+    any framing/CRC mismatch — transport corruption stops HERE, before
+    any state is constructed."""
+    try:
+        with np.load(io.BytesIO(blob)) as z:
+            manifest = json.loads(bytes(z["manifest"]).decode())
+            counts, stats = z["counts"], z["stats"]
+    except Exception as e:
+        raise SnapshotCorrupt(f"unreadable snapshot blob ({e})") from e
+    if (_crc(counts) != manifest["crc_counts"]
+            or _crc(stats) != manifest["crc_stats"]):
+        raise SnapshotCorrupt("snapshot CRC mismatch")
+    if counts.shape[0] != len(manifest["tenants"]) \
+            or stats.shape != (3, len(manifest["tenants"])):
+        raise SnapshotCorrupt("snapshot shape/manifest mismatch")
+    states = {}
+    for i, t in enumerate(manifest["tenants"]):
+        states[int(t)] = AceState(
+            counts=counts[i], n=np.float32(stats[0, i]),
+            welford_mean=np.float32(stats[1, i]),
+            welford_m2=np.float32(stats[2, i]))
+    return int(manifest["epoch"]), states
+
+
+def snapshot_healthy(ace: AceState) -> bool:
+    """Semantic validation gate (runs BEFORE any merge/install): the
+    repro.resilience invariants — per-table count conservation against
+    n, finite moments.  A bit-flip applied before serialization has
+    valid CRCs and fails exactly here."""
+    import jax.numpy as jnp
+
+    from repro import resilience as rz
+    dev = AceState(counts=jnp.asarray(ace.counts),
+                   n=jnp.asarray(ace.n, jnp.float32),
+                   welford_mean=jnp.asarray(ace.welford_mean, jnp.float32),
+                   welford_m2=jnp.asarray(ace.welford_m2, jnp.float32))
+    report = rz.health_check(dev)
+    return bool(np.asarray(report.ok))
+
+
+class GossipBus:
+    """Per-host publish/fetch of epoch snapshots over a ControlStore.
+
+    ``keep`` epochs stay resident per host (older blobs are deleted at
+    publish time — the store is a mailbox, not an archive);
+    ``published_bytes`` accounts the control-plane traffic so the bench
+    and docs can put a number on gossip cost per epoch.
+    """
+
+    def __init__(self, store, host: str, keep: int = 2):
+        self._store = store
+        self._host = host
+        self._keep = max(int(keep), 1)
+        self.published_bytes = 0
+        self.published_epochs = 0
+
+    def publish(self, epoch: int, state: FleetState, tenants) -> int:
+        """Publish owned tenants' sketches for ``epoch``; returns blob
+        bytes (the per-epoch gossip bill)."""
+        blob = pack_snapshot(state, tenants, epoch)
+        self._store.set_bytes(f"gossip/{self._host}/{epoch}", blob)
+        # pointer flips LAST — readers never chase a half-written blob
+        self._store.set(f"gossip/{self._host}/latest", str(epoch))
+        self._store.delete(f"gossip/{self._host}/{epoch - self._keep}")
+        self.published_bytes += len(blob)
+        self.published_epochs += 1
+        return len(blob)
+
+    def latest(self, host: str) -> tuple[int, dict[int, AceState]] | None:
+        """The newest intact snapshot a peer published, or None.  A
+        corrupt newest blob falls back to the previous kept epoch —
+        same newest-intact-first discipline as ``restore_latest``."""
+        ptr = self._store.get(f"gossip/{host}/latest")
+        if ptr is None:
+            return None
+        epoch = int(ptr)
+        for e in range(epoch, epoch - self._keep, -1):
+            blob = self._store.get_bytes(f"gossip/{host}/{e}")
+            if blob is None:
+                continue
+            try:
+                return unpack_snapshot(blob)
+            except SnapshotCorrupt:
+                continue
+        return None

@@ -1,0 +1,112 @@
+"""Control-plane key/value store for the cluster (repro.cluster).
+
+Heartbeats, shard maps, join requests, and gossiped sketches all ride a
+tiny string/bytes KV interface with exactly two implementations:
+
+* :class:`MemStore` — an in-process dict (thread-safe).  Every cluster
+  state machine (failure detection, re-shard, gossip, rejoin backoff)
+  is unit-testable single-process against it, with a fake clock.
+* :class:`DistributedStore` — the coordination-service KV store every
+  ``jax.distributed.initialize()`` process already has (the same
+  service that serves device enumeration), via
+  ``jax._src.distributed.global_state.client``.  No extra server, no
+  extra port: if the cluster can run a multi-process jax program at
+  all, it has this store.
+
+The interface is deliberately last-writer-wins with non-blocking reads
+(`get` returns None on absence): every cluster protocol on top is
+designed so that a torn read is indistinguishable from a slightly
+stale one — heartbeats are monotonic sequence numbers, shard maps are
+versioned and self-describing, gossip blobs are CRC-framed and
+published under epoch-stamped keys with a pointer flipped last.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class MemStore:
+    """In-process ControlStore — the unit-test double (thread-safe)."""
+
+    def __init__(self):
+        self._data: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def set(self, key: str, value: str) -> None:
+        self.set_bytes(key, value.encode())
+
+    def set_bytes(self, key: str, value: bytes) -> None:
+        with self._lock:
+            self._data[key] = bytes(value)
+
+    def get(self, key: str) -> str | None:
+        b = self.get_bytes(key)
+        return None if b is None else b.decode()
+
+    def get_bytes(self, key: str) -> bytes | None:
+        with self._lock:
+            return self._data.get(key)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def keys(self, prefix: str) -> list[str]:
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+
+class DistributedStore:
+    """ControlStore over the jax.distributed coordination-service KV.
+
+    Requires ``jax.distributed.initialize()`` to have run in this
+    process.  Reads are best-effort non-blocking: the service only
+    exposes a blocking get, so ``get`` polls with a short timeout and
+    maps NOT_FOUND/DEADLINE onto None (absence and not-yet-written are
+    the same thing to every protocol built on this store).
+    """
+
+    def __init__(self, timeout_ms: int = 200):
+        from jax._src import distributed
+
+        client = distributed.global_state.client
+        if client is None:
+            raise RuntimeError(
+                "DistributedStore needs jax.distributed.initialize() "
+                "to have run in this process (no coordination client)")
+        self._client = client
+        self._timeout_ms = int(timeout_ms)
+
+    def set(self, key: str, value: str) -> None:
+        self._client.key_value_set(key, value, allow_overwrite=True)
+
+    def set_bytes(self, key: str, value: bytes) -> None:
+        self._client.key_value_set_bytes(key, bytes(value),
+                                         allow_overwrite=True)
+
+    def get(self, key: str) -> str | None:
+        try:
+            return self._client.blocking_key_value_get(
+                key, self._timeout_ms)
+        except Exception:           # NOT_FOUND / DEADLINE_EXCEEDED
+            return None
+
+    def get_bytes(self, key: str) -> bytes | None:
+        try:
+            return self._client.blocking_key_value_get_bytes(
+                key, self._timeout_ms)
+        except Exception:
+            return None
+
+    def delete(self, key: str) -> None:
+        try:
+            self._client.key_value_delete(key)
+        except Exception:
+            pass                    # deleting an absent key is a no-op
+
+    def keys(self, prefix: str) -> list[str]:
+        try:
+            entries = self._client.key_value_dir_get(prefix)
+        except Exception:
+            return []
+        return sorted(k for k, _ in entries)

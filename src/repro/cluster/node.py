@@ -1,0 +1,322 @@
+"""ClusterNode: one host's slice of a fault-tolerant multi-host fleet.
+
+Every host holds a FULL (T, L, 2^K) fleet allocation — at the paper's
+4 MB/tenant that is cheap next to the model it guards — but serves only
+the tenants the current :class:`~repro.cluster.shard.ShardMap` assigns
+it; ownership is pure routing (``StreamRunner``'s ``tenant_mask``), so
+"elastic re-sharding" never reshapes device buffers, it re-points
+requests and warm-restores rows.  This is exactly the shape
+``train/fault.py`` designed for: topology lives OUTSIDE the state, so
+any host can adopt any tenant's sketch without resharding anything.
+
+The control plane is deliberately boring and synchronous — three
+host-side calls the serving loop interleaves between chunks:
+
+* ``ingest_chunk``: the hot path.  One donated scan program per chunk
+  (unchanged from single-host serving), heartbeat piggy-backed, epoch
+  boundaries publish gossip + (every ``ckpt_every_epochs``) a CRC'd
+  checkpoint.
+* ``control_step``: poll heartbeats; the acting coordinator (lowest
+  live host id) publishes a successor shard map when someone died;
+  everyone applies newer maps, adopting gained tenants from the dead
+  host's last gossiped snapshot and/or newest intact checkpoint —
+  whichever intact candidate has seen more stream (max n) — each
+  candidate gated by ``resilience.health_check`` before it touches the
+  fleet.
+* ``try_rejoin``: a host the cluster declared dead (or a cold restart)
+  re-enters through attempt-bounded exponential backoff
+  (:class:`~repro.cluster.membership.RejoinPolicy`) — it requests
+  admission, the coordinator re-adds it, and HRW moves back only the
+  tenants it wins.
+
+Failure cost, end to end: a dead host's tenants lose at most the
+partial epoch since its last gossip publish; every surviving tenant's
+state is BITWISE untouched (tenant isolation + ownership masking), so
+survivors' scores stay parity-exact with a never-failed run — the
+chaos test in tests/test_cluster_multiprocess.py holds both properties
+over two real killed-and-rehomed ``jax.distributed`` processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.gossip import GossipBus, snapshot_healthy
+from repro.cluster.membership import (FailureDetector, HeartbeatWriter,
+                                      MembershipConfig, RejoinPolicy)
+from repro.cluster.shard import ShardMap, with_host, without_host
+from repro.core import srp
+from repro.core.sketch import AceState
+from repro.fleet import state as fl
+from repro.fleet.filter import FleetDataFilter
+from repro.stream.runner import StreamRunner
+from repro.train import checkpoint as ckpt
+
+_MAP_KEY = "shardmap"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Static per-host cluster configuration (every host gets the same
+    values except ``host_id``)."""
+
+    host_id: str
+    hosts: tuple[str, ...]            # the configured host universe
+    num_tenants: int
+    d_model: int = 16
+    num_bits: int = 6
+    num_tables: int = 8
+    alpha: float = 4.0
+    warmup_items: float = 64.0
+    hash_mode: str = "dense"
+    insert_all: bool = False
+    count_dtype: str = "int32"
+    chunk_T: int = 8                  # scan steps per ingest chunk
+    epoch_chunks: int = 2             # chunks per epoch (gossip cadence)
+    gossip_keep: int = 2
+    ckpt_root: str | None = None      # shared fs root; None = no ckpts
+    ckpt_every_epochs: int = 1
+    ckpt_keep: int = 3
+    membership: MembershipConfig = MembershipConfig()
+
+    def __post_init__(self):
+        if self.host_id not in self.hosts:
+            raise ValueError(
+                f"host_id {self.host_id!r} not in hosts {self.hosts}")
+        if self.epoch_chunks < 1:
+            raise ValueError("epoch_chunks must be >= 1")
+
+
+class ClusterNode:
+    """One host of the fleet cluster (see module docstring)."""
+
+    def __init__(self, cfg: ClusterConfig, store,
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.store = store
+        self.clock = clock
+        self.filt = FleetDataFilter(
+            d_model=cfg.d_model, num_tenants=cfg.num_tenants,
+            num_bits=cfg.num_bits, num_tables=cfg.num_tables,
+            alpha=cfg.alpha, warmup_items=cfg.warmup_items,
+            hash_mode=cfg.hash_mode, insert_all=cfg.insert_all,
+            count_dtype=cfg.count_dtype)
+        self.runner = StreamRunner(self.filt, chunk_T=cfg.chunk_T,
+                                   return_masks=True)
+        self.state, self.w = self.runner.init()
+        self.map = ShardMap(version=0, hosts=cfg.hosts,
+                            num_tenants=cfg.num_tenants)
+        self._mask = jnp.asarray(self.map.tenant_mask(cfg.host_id))
+        self.heartbeat = HeartbeatWriter(store, cfg.host_id,
+                                         cfg.membership, clock)
+        self.detector = FailureDetector(store, cfg.membership, clock)
+        self.gossip = GossipBus(store, cfg.host_id, keep=cfg.gossip_keep)
+        self.chunk_idx = 0
+        self.epoch = 0
+        self.adoptions: list[dict] = []   # observability + test probes
+        self.heartbeat.beat()
+        # v0 is derivable by every host from the config, but publishing
+        # it seeds the store for late joiners and external observers.
+        if self.coordinator:
+            self._publish_map(self.map)
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def coordinator(self) -> bool:
+        """Acting coordinator = lowest host id in the CURRENT map (no
+        election: the map totally orders the candidates, and the
+        detector retires a dead coordinator like any other host)."""
+        return self.map.hosts[0] == self.cfg.host_id
+
+    def owned(self) -> tuple[int, ...]:
+        return self.map.owned_by(self.cfg.host_id)
+
+    # -- hot path ----------------------------------------------------------
+
+    def ingest_chunk(self, feats, tenant_ids):
+        """Serve one (chunk_T, B, d+1) feature chunk of mixed-tenant
+        batches.  Returns (summary, keeps) — still on device.  Epoch
+        boundaries (every ``epoch_chunks`` chunks) publish gossip and
+        checkpoints; the chunk program itself is the unchanged
+        single-host fleet scan, ownership-masked."""
+        self.heartbeat.maybe_beat()
+        self.state, summary, keeps = self.runner.consume(
+            self.state, self.w, jnp.asarray(feats),
+            jnp.asarray(tenant_ids, jnp.int32), tenant_mask=self._mask)
+        self.chunk_idx += 1
+        if self.chunk_idx % self.cfg.epoch_chunks == 0:
+            self._epoch_boundary()
+        return summary, keeps
+
+    def probe_scores(self, feats, tenant_ids) -> np.ndarray:
+        """Score WITHOUT inserting (read-only serving probe — the test
+        hook for masked-score parity while degraded)."""
+        buckets = srp.hash_buckets(jnp.asarray(feats), self.w,
+                                   self.filt.ace_cfg.srp)
+        return np.asarray(fl.fleet_scores(
+            self.state, jnp.asarray(tenant_ids, jnp.int32), buckets))
+
+    def _epoch_boundary(self) -> None:
+        self.epoch += 1
+        host_state = jax.device_get(self.state)
+        self.gossip.publish(self.epoch, host_state, self.owned())
+        if (self.cfg.ckpt_root
+                and self.epoch % self.cfg.ckpt_every_epochs == 0):
+            ckpt.save(self._ckpt_dir(self.cfg.host_id), self.epoch,
+                      self.state, keep=self.cfg.ckpt_keep)
+
+    # -- control plane -----------------------------------------------------
+
+    def control_step(self) -> list[str]:
+        """One failure-detection/re-shard turn; returns hosts newly
+        declared dead this turn (already re-sharded away if this node
+        is the acting coordinator)."""
+        self.heartbeat.maybe_beat()
+        self._apply_newer_map()
+        peers = [h for h in self.map.hosts if h != self.cfg.host_id]
+        dead = self.detector.poll(peers)
+        if dead:
+            alive = [h for h in self.map.hosts if h not in dead]
+            # the acting coordinator AFTER the deaths publishes — so a
+            # dead coordinator cannot block its own replacement
+            if alive and alive[0] == self.cfg.host_id:
+                new_map = self.map
+                for h in dead:
+                    new_map = without_host(new_map, h)
+                self._publish_map(new_map)
+                self._apply_newer_map()
+        if self.coordinator:
+            self._admit_joiners()
+        return dead
+
+    def request_rejoin(self) -> None:
+        self.store.set(f"join/{self.cfg.host_id}", str(self.map.version))
+
+    def try_rejoin(self, policy: RejoinPolicy | None = None,
+                   sleep=time.sleep) -> bool:
+        """Re-enter the cluster after being declared dead: request
+        admission and wait with attempt-bounded exponential backoff
+        until a map containing this host appears.  Returns False when
+        the attempt budget is exhausted (stay out; don't flap)."""
+        policy = policy or RejoinPolicy()
+        while True:
+            self._apply_newer_map()
+            if self.cfg.host_id in self.map.hosts:
+                policy.reset()
+                return True
+            delay = policy.next_delay()
+            if delay is None:
+                return False
+            self.request_rejoin()
+            self.heartbeat.beat()     # prove liveness to the admitter
+            sleep(delay)
+
+    def _admit_joiners(self) -> None:
+        for host in self.cfg.hosts:
+            if host in self.map.hosts:
+                continue
+            if self.store.get(f"join/{host}") is None:
+                continue
+            self.detector.forget(host)     # fresh grace window
+            self._publish_map(with_host(self.map, host))
+            self.store.delete(f"join/{host}")
+            self._apply_newer_map()
+
+    def _publish_map(self, m: ShardMap) -> None:
+        cur = self._read_map()
+        if cur is None or m.version > cur.version:
+            self.store.set(_MAP_KEY, m.to_json())
+
+    def _read_map(self) -> ShardMap | None:
+        blob = self.store.get(_MAP_KEY)
+        return None if blob is None else ShardMap.from_json(blob)
+
+    def _apply_newer_map(self) -> None:
+        m = self._read_map()
+        if m is None or m.version <= self.map.version:
+            return
+        prev = self.map
+        old_owned = set(prev.owned_by(self.cfg.host_id))
+        self.map = m
+        for host in set(prev.hosts) - set(m.hosts):
+            self.detector.forget(host)
+        gained = sorted(set(self.owned()) - old_owned)
+        if gained:
+            by_prev: dict[str, list[int]] = {}
+            for t in gained:
+                by_prev.setdefault(prev.owner_of(t), []).append(t)
+            for prev_host, tenants in by_prev.items():
+                if prev_host != self.cfg.host_id:
+                    self._adopt(tenants, prev_host)
+        self._mask = jnp.asarray(self.map.tenant_mask(self.cfg.host_id))
+
+    # -- adoption (warm restore of re-homed tenants) -----------------------
+
+    def _adopt(self, tenants, prev_host: str) -> None:
+        """Install ``tenants``' sketches from ``prev_host``'s last
+        gossiped snapshot and/or newest intact checkpoint — per tenant,
+        the intact candidate that has absorbed the most stream (max n)
+        wins; candidates failing ``resilience.health_check`` are
+        refused (never merged, never installed).  With no intact
+        candidate the tenant cold-starts (zero row + fresh warmup) —
+        degraded, still serving."""
+        snap = self.gossip.latest(prev_host)
+        peer_ckpt = self._restore_peer_ckpt(prev_host)
+        for t in tenants:
+            cands = []
+            if snap is not None and t in snap[1]:
+                ace = snap[1][t]
+                if snapshot_healthy(ace):
+                    cands.append(("gossip", snap[0], ace))
+            if peer_ckpt is not None:
+                epoch, fleet = peer_ckpt
+                ace = AceState(counts=np.asarray(fleet.counts[t]),
+                               n=np.float32(fleet.n[t]),
+                               welford_mean=np.float32(
+                                   fleet.welford_mean[t]),
+                               welford_m2=np.float32(fleet.welford_m2[t]))
+                if snapshot_healthy(ace):
+                    cands.append(("checkpoint", epoch, ace))
+            record = {"tenant": t, "from_host": prev_host,
+                      "at_epoch": self.epoch, "at_chunk": self.chunk_idx,
+                      "map_version": self.map.version}
+            if not cands:
+                self.adoptions.append({**record, "source": "cold",
+                                       "source_epoch": None, "n": 0.0})
+                continue
+            source, src_epoch, ace = max(cands,
+                                         key=lambda c: float(c[2].n))
+            self.state = fl.set_tenant(self.state, t, AceState(
+                counts=jnp.asarray(ace.counts).astype(
+                    self.state.counts.dtype),
+                n=jnp.asarray(ace.n, jnp.float32),
+                welford_mean=jnp.asarray(ace.welford_mean, jnp.float32),
+                welford_m2=jnp.asarray(ace.welford_m2, jnp.float32)))
+            self.adoptions.append({**record, "source": source,
+                                   "source_epoch": src_epoch,
+                                   "n": float(ace.n)})
+
+    def _restore_peer_ckpt(self, host: str):
+        """(epoch, host-side FleetState) from ``host``'s newest INTACT
+        checkpoint (PR 7's CRC path: torn/flipped steps are skipped,
+        numeric step order — satellite-fixed — picks true-newest), or
+        None.  Checkpoints live on a shared filesystem root; a
+        deployment without one simply leans on gossip alone."""
+        if not self.cfg.ckpt_root:
+            return None
+        mgr = ckpt.CheckpointManager(self._ckpt_dir(host),
+                                     keep=self.cfg.ckpt_keep)
+        like = fl.init(self.filt.fleet_cfg)
+        tree, manifest = mgr.restore_latest(like)
+        if tree is None:
+            return None
+        return int(manifest["step"]), jax.device_get(tree)
+
+    def _ckpt_dir(self, host: str) -> str:
+        import os
+        return os.path.join(self.cfg.ckpt_root, host)

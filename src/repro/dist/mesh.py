@@ -37,6 +37,25 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_host_local_mesh(table_axis: str = "model"):
+    """A mesh over THIS process's local devices only (repro.cluster).
+
+    Tenant-sharded fleets are collective-free across tenants, so a
+    multi-host cluster keeps every hot-path program host-local: each
+    host serves its owned tenants on its own devices and the only
+    cross-host traffic is the epoch-boundary gossip (host-side bytes,
+    not collectives).  A GLOBAL mesh under ``jax.distributed`` would
+    instead make every ``Guardrail.admit`` a cross-host SPMD program —
+    all hosts lock-stepped on every batch, which is exactly the
+    coupling a host-failure-tolerant fleet cannot afford.  1-D
+    (``table_axis``,) so ``fleet_pspecs("table_sharded")`` composes
+    when a host has several local devices; a single-device host gets
+    the trivial mesh (layouts all collapse to replicated).
+    """
+    local = jax.local_devices()
+    return jax.sharding.Mesh(local, (table_axis,))
+
+
 def rules_for(mesh, *, long_context: bool = False) -> dict:
     """Logical-axis -> mesh-axis rules for this mesh.
 

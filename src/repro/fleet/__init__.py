@@ -13,8 +13,8 @@ epoch rings with per-tenant rotation clocks), and
 from repro.fleet.state import (FleetConfig, FleetState, admit_thresholds,
                                fleet_scores, fleet_table_gather,
                                from_states, init, insert_masked,
-                               mean_mu_fleet, per_tenant_counts,
-                               set_tenant, tenant_view)
+                               mean_mu_fleet, merge_fleet, per_tenant_counts,
+                               promote_fleet, set_tenant, tenant_view)
 from repro.fleet.filter import FleetDataFilter
 from repro.fleet.window import (WindowedFleetState, init_fleet_window,
                                 insert_current_fleet, maybe_rotate_fleet,
@@ -25,8 +25,8 @@ __all__ = [
     "FleetConfig", "FleetState", "FleetDataFilter", "WindowedFleetState",
     "admit_thresholds", "fleet_scores", "fleet_table_gather",
     "from_states", "init", "init_fleet_window", "insert_current_fleet",
-    "insert_masked", "maybe_rotate_fleet", "mean_mu_fleet",
-    "per_tenant_counts", "set_tenant", "tenant_view",
+    "insert_masked", "maybe_rotate_fleet", "mean_mu_fleet", "merge_fleet",
+    "per_tenant_counts", "promote_fleet", "set_tenant", "tenant_view",
     "tenant_window_view", "window_admit_thresholds",
     "window_fleet_scores",
 ]

@@ -76,7 +76,7 @@ class FleetDataFilter:
         return mean_embed_features(embeds, self.bias_const)
 
     def step(self, state: FleetState, w, feat, tenant_ids,
-             table_mask=None):
+             table_mask=None, tenant_mask=None):
         """hash ONCE → tenant-routed score → per-tenant μ−ασ threshold →
         one mixed-batch masked insert.
 
@@ -88,6 +88,15 @@ class FleetDataFilter:
         ``AceDataFilter.step`` (zeroed pre-hash, never kept/inserted,
         ``margin = −inf``); ``table_mask`` (T, L) f32 scores and
         thresholds each tenant over its healthy tables only.
+
+        ``tenant_mask`` (T,) f32 is the OWNERSHIP mask (repro.cluster):
+        items routed to a tenant this replica does not own are neither
+        kept nor inserted — a misrouted request right after a re-shard
+        must never mutate a non-authoritative copy, or a later gossip
+        merge would double-count it.  Misrouted rows still report a
+        finite margin (they were scored), just ``keep=False``; ``None``
+        (single-host default) traces no ownership code at all, keeping
+        the existing program bitwise untouched.
         """
         cfg = self.ace_cfg
         finite = jnp.all(jnp.isfinite(feat), axis=-1)
@@ -101,6 +110,10 @@ class FleetDataFilter:
         keep = jnp.logical_and(scores >= thresh, finite)
         margin = jnp.where(finite, scores - thresh, -jnp.inf)
         ins = finite if self.insert_all else keep
+        if tenant_mask is not None:
+            owned = tenant_mask[tenant_ids] > 0        # (B,)
+            keep = jnp.logical_and(keep, owned)
+            ins = jnp.logical_and(ins, owned)
         new_state = fl.insert_masked(state, tenant_ids, buckets, ins, cfg)
         return new_state, keep, margin
 

@@ -157,6 +157,50 @@ def set_tenant(state: FleetState, t: int, ace: AceState) -> FleetState:
     )
 
 
+def promote_fleet(state: FleetState, dtype=jnp.int32) -> FleetState:
+    """Widen a fleet's count planes to ``dtype`` (default int32).
+
+    The cross-host promotion point (repro.cluster): narrow int8/int16
+    planes are exact below saturation per host, but ADDING two hosts'
+    planes in the narrow dtype would wrap silently — gossip merges
+    therefore promote first and add in the wide dtype.  Stats are
+    untouched (they are float and dtype-independent).
+    """
+    return state._replace(counts=state.counts.astype(jnp.dtype(dtype)))
+
+
+def merge_fleet(a: FleetState, b: FleetState) -> FleetState:
+    """Merge two fleets over disjoint data — ``sketch.merge`` vectorised
+    over the tenant axis (counts add CRDT-style, Welford streams by
+    Chan's parallel rule applied elementwise to the (T,) stat vectors —
+    per tenant these are literally the same float ops as the scalar
+    merge, so merging tenant-by-tenant via ``sketch.merge`` is bitwise
+    identical; tests/test_cluster.py asserts it).
+
+    Counts always add in int32: narrow (int8/int16) planes would wrap
+    at their dtype cap, so ``merge_fleet(a8, b8)`` ≡
+    ``merge_fleet(promote_fleet(a8), promote_fleet(b8))`` by
+    construction — the merge-then-promote ≡ promote-then-merge
+    differential oracle.  Requantize the result back down only if every
+    bucket provably fits (the caller knows its stream); the merged fleet
+    defaults to staying wide.
+    """
+    if a.counts.shape != b.counts.shape:
+        raise ValueError(f"fleet shape mismatch: {a.counts.shape} vs "
+                         f"{b.counts.shape}")
+    counts = (a.counts.astype(jnp.int32) + b.counts.astype(jnp.int32))
+    delta = b.welford_mean - a.welford_mean                    # (T,)
+    tot = a.n + b.n
+    safe = jnp.maximum(tot, 1.0)
+    return FleetState(
+        counts=counts,
+        n=tot,
+        welford_mean=a.welford_mean + delta * b.n / safe,
+        welford_m2=(a.welford_m2 + b.welford_m2
+                    + delta**2 * a.n * b.n / safe),
+    )
+
+
 def from_states(states: Sequence[AceState]) -> FleetState:
     """Stack existing single-tenant sketches into a fleet."""
     return FleetState(

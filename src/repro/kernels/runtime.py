@@ -33,13 +33,53 @@ call then silently inherited.  The cache is also invalidated wholesale
 when the probed default backend changes mid-process (e.g. a TPU runtime
 initialised after a CPU-only import), so stale entries from the old
 probe can never leak into the new one.
+
+Multi-process safety (repro.cluster): the backend probe is memoized to
+run ONCE per process at first kernel use — never at import, never per
+call — because ``jax.default_backend()`` initialises the backend, and a
+subprocess host probing before its ``jax.distributed.initialize()``
+would bind a local-only runtime.  Winners optionally persist across
+processes via ``REPRO_AUTOTUNE_CACHE_DIR``: one json file per key,
+written atomically (tmp + ``os.replace``), so concurrent subprocess
+hosts sharing the directory can never read a torn entry — last writer
+wins, every intermediate state is a valid cache.
 """
 from __future__ import annotations
 
+import json
 import os
+import tempfile
 import time
 
 _ENV = "REPRO_PALLAS_INTERPRET"
+_CACHE_DIR_ENV = "REPRO_AUTOTUNE_CACHE_DIR"
+
+# Memoized jax.default_backend() probe.  Probing is not free under a
+# multi-process launch: jax.default_backend() INITIALISES the backend,
+# and a subprocess host that probes before its jax.distributed
+# .initialize() call silently binds a local-only runtime — so the probe
+# must run exactly once per process, at first kernel use (after the
+# launcher has initialised distributed), never per call.  Tests that
+# reconfigure platforms reset it via :func:`reset_runtime_state`.
+_PROBED_BACKEND: str | None = None
+
+
+def probe_backend() -> str:
+    """The memoized once-per-process jax.default_backend() probe."""
+    global _PROBED_BACKEND
+    if _PROBED_BACKEND is None:
+        import jax
+
+        _PROBED_BACKEND = jax.default_backend()
+    return _PROBED_BACKEND
+
+
+def reset_runtime_state() -> None:
+    """Forget the memoized backend probe and the in-memory autotune
+    cache (tests reconfiguring platforms; NOT needed in production)."""
+    global _PROBED_BACKEND
+    _PROBED_BACKEND = None
+    _AUTOTUNE_CACHE.clear()
 
 
 def default_interpret() -> bool:
@@ -47,9 +87,7 @@ def default_interpret() -> bool:
     env = os.environ.get(_ENV)
     if env is not None:
         return env != "0"
-    import jax
-
-    return jax.default_backend() != "tpu"
+    return probe_backend() != "tpu"
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
@@ -67,27 +105,84 @@ def resolve_interpret(interpret: bool | None) -> bool:
 # is "interpret" for interpreter runs, else the probed jax backend name —
 # NEVER share entries across the two (see module docstring).
 _AUTOTUNE_CACHE: dict = {}
-_PROBED_BACKEND: str | None = None
 
 
 def _backend_key(interpret: bool) -> str:
-    import jax
-
-    return "interpret" if interpret else jax.default_backend()
+    return "interpret" if interpret else probe_backend()
 
 
 def _check_backend_probe() -> None:
     """Invalidate the whole cache if the probed default backend changed
-    (a late-initialised TPU runtime, a test reconfiguring platforms)."""
+    (a late-initialised TPU runtime, a test reconfiguring platforms).
+    The probe itself is the memoized once-per-process one — this re-reads
+    jax.default_backend() only when the backend was already initialised,
+    so it can never initialise a backend early in a subprocess host."""
     global _PROBED_BACKEND
+    if _PROBED_BACKEND is None:
+        probe_backend()               # seed the once-per-process probe
+        return
     import jax
 
     probe = jax.default_backend()
-    if _PROBED_BACKEND is None:
-        _PROBED_BACKEND = probe
-    elif _PROBED_BACKEND != probe:
+    if _PROBED_BACKEND != probe:
         _AUTOTUNE_CACHE.clear()
         _PROBED_BACKEND = probe
+
+
+# ---------------------------------------------------------------------------
+# Optional cross-process persistence: REPRO_AUTOTUNE_CACHE_DIR names a
+# directory where each (kernel, shape, backend) winner lives in its OWN
+# json file, written atomically (tmp in the same dir + os.replace).
+# Multi-process launches share one directory safely: concurrent writers
+# of the same key each produce a valid file and the last rename wins;
+# readers either see a complete file or no file — never a torn one.
+# A single shared mutable file would instead interleave writes from
+# subprocess hosts (the race this replaces).  Unreadable entries are
+# ignored (same as a cache miss), so a crashed writer costs one re-tune.
+# ---------------------------------------------------------------------------
+
+def _cache_file(key: tuple) -> str | None:
+    root = os.environ.get(_CACHE_DIR_ENV)
+    if not root:
+        return None
+    import hashlib
+
+    h = hashlib.sha256(repr(key).encode()).hexdigest()[:24]
+    return os.path.join(root, f"tune_{h}.json")
+
+
+def _load_persistent(key: tuple):
+    path = _cache_file(key)
+    if path is None or not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            entry = json.load(f)
+        if entry.get("key") != _jsonable_key(key):
+            return None               # hash collision / stale schema
+        winner = entry["winner"]
+        return tuple(winner) if isinstance(winner, list) else winner
+    except (OSError, ValueError, KeyError):
+        return None                   # torn/foreign file == miss
+
+
+def _store_persistent(key: tuple, winner) -> None:
+    path = _cache_file(key)
+    if path is None:
+        return
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=".tune_tmp_")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"key": _jsonable_key(key), "winner": winner}, f)
+        os.replace(tmp, path)         # atomic on POSIX
+    except OSError:
+        pass                          # persistence is best-effort
+
+
+def _jsonable_key(key: tuple):
+    return json.loads(json.dumps(key))
 
 
 def autotune(kernel_name: str, shape_key: tuple, interpret: bool,
@@ -114,6 +209,10 @@ def autotune(kernel_name: str, shape_key: tuple, interpret: bool,
     key = (kernel_name, tuple(shape_key), _backend_key(interpret))
     if key in _AUTOTUNE_CACHE:
         return _AUTOTUNE_CACHE[key]
+    persisted = _load_persistent(key)
+    if persisted is not None and persisted in candidates:
+        _AUTOTUNE_CACHE[key] = persisted
+        return persisted
     if bench_fn is None:
         return candidates[0]
     best, best_t = None, None
@@ -129,6 +228,7 @@ def autotune(kernel_name: str, shape_key: tuple, interpret: bool,
         best = candidates[0]   # nothing timed — don't cache a guess
         return best
     _AUTOTUNE_CACHE[key] = best
+    _store_persistent(key, best)
     return best
 
 

@@ -419,6 +419,16 @@ class Guardrail:
         found corruption, or a repair is still re-warming)."""
         return self._table_mask is not None
 
+    @property
+    def fail_open_mask(self) -> np.ndarray:
+        """(T,) host bool — True where the tenant's quarantine/shedding
+        policy is fail_open (shed ⇒ admit), False for fail_closed
+        (shed ⇒ reject).  The open-loop front end
+        (``repro.serve.frontend``) reads this to answer load-shed
+        requests with each tenant's OWN policy — the same verdict a
+        quarantined row of that tenant gets."""
+        return self._fail_open.copy()
+
     def health_check(self):
         """Audit the sketch invariants (repro.resilience.health_check)
         and refresh the serving table mask.  A control-plane call: it

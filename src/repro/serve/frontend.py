@@ -1,0 +1,218 @@
+"""Open-loop serving front end: bounded queues, deadlines, load shedding.
+
+``Guardrail.admit`` is a fixed-shape batch program; production traffic
+is not — requests arrive one at a time, from many tenants, at whatever
+rate the world offers.  Closed-loop benchmarks (issue the next batch
+when the last returns) hide everything that matters about that gap:
+an overloaded closed loop just slows its own offered rate, while an
+overloaded OPEN loop grows a queue without bound and every request's
+latency diverges.  This front end makes overload a measured, bounded
+event instead:
+
+* **Coalescing**: requests queue and are served as mixed-tenant
+  batches of the guardrail's fixed shape ``B`` — short batches pad
+  with NaN rows, which the guardrail's quarantine path already
+  sanitizes (padding is never inserted into any sketch; the pad rows
+  are subtracted from the quarantine stat via ``pad_rows``).
+* **Bounded queue**: at most ``max_queue`` requests wait; beyond that,
+  arrivals shed immediately (tail drop).  Queue memory AND worst-case
+  queueing delay are both bounded by construction.
+* **Deadlines**: every request carries an absolute deadline
+  (``submit`` time + slack).  ``pump`` sheds, BEFORE serving, any
+  request that could not make its deadline even if it rode the very
+  next batch (measured EWMA service time) — the batch never wastes
+  capacity on requests that are already dead on arrival at the device.
+* **Policy-honoring shedding**: a shed request is answered with its
+  tenant's ``fail_policy`` — fail_open tenants shed to ADMIT (availability
+  over filtering: an overloaded guardrail must not take the product
+  down), fail_closed tenants shed to REJECT (a security-critical
+  tenant would rather drop traffic than let unscreened items through).
+  Same verdict a quarantined row of that tenant gets — one policy,
+  every degraded path.
+
+Single-threaded by design: ``submit``/``pump`` are called from one
+serving loop (or the Poisson bench, ``benchmarks/openloop_bench.py``);
+the clock is injectable so every shedding decision is unit-testable
+with a fake clock.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontEndConfig:
+    batch_size: int                  # the guardrail's fixed batch shape
+    seq: int                         # fixed (S, D) request embed shape
+    d_model: int
+    max_queue: int = 256             # bounded: beyond this, tail-drop
+    default_deadline: float = 0.050  # seconds of slack per request
+    max_wait: float = 0.005          # serve a partial batch after this
+    service_ewma: float = 0.3        # EWMA weight of the newest sample
+
+    def __post_init__(self):
+        if self.batch_size < 1 or self.max_queue < 1:
+            raise ValueError("batch_size and max_queue must be >= 1")
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One request's lifecycle: queued → served | shed."""
+
+    tenant: int
+    deadline: float                  # absolute, front-end clock
+    t_submit: float
+    status: str = "queued"           # queued | served | shed
+    admitted: bool | None = None
+    reason: str | None = None        # queue_full | deadline (shed only)
+    t_done: float | None = None
+
+    @property
+    def latency(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+
+class FrontEnd:
+    """Open-loop request batcher in front of one ``Guardrail``."""
+
+    def __init__(self, guardrail, cfg: FrontEndConfig,
+                 clock=time.perf_counter):
+        self.g = guardrail
+        self.cfg = cfg
+        self.clock = clock
+        self._q: collections.deque[tuple[Ticket, np.ndarray]] = \
+            collections.deque()
+        self._est_service: float | None = None   # EWMA sec per batch
+        self.submitted = 0
+        self.served = 0
+        self.shed_queue_full = 0
+        self.shed_deadline = 0
+        self.pad_rows = 0        # NaN pad rows fed to the guardrail —
+        #                          subtract from g.quarantined for the
+        #                          true dirty-traffic count
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, embed: np.ndarray, tenant: int = 0,
+               deadline: float | None = None) -> Ticket:
+        """Enqueue one (S, D) request.  Never blocks: a full queue sheds
+        immediately (the bounded-queue contract)."""
+        now = self.clock()
+        slack = self.cfg.default_deadline if deadline is None else deadline
+        t = Ticket(tenant=int(tenant), deadline=now + slack, t_submit=now)
+        self.submitted += 1
+        if len(self._q) >= self.cfg.max_queue:
+            self._shed(t, "queue_full")
+            return t
+        embed = np.asarray(embed, np.float32)
+        if embed.shape != (self.cfg.seq, self.cfg.d_model):
+            raise ValueError(f"request embed shape {embed.shape} != "
+                             f"({self.cfg.seq}, {self.cfg.d_model})")
+        self._q.append((t, embed))
+        return t
+
+    def _shed(self, ticket: Ticket, reason: str) -> None:
+        mask = self.g.fail_open_mask
+        fail_open = bool(mask[ticket.tenant if len(mask) > 1 else 0])
+        ticket.status = "shed"
+        ticket.reason = reason
+        ticket.admitted = fail_open           # fail_open ⇒ shed-to-admit
+        ticket.t_done = self.clock()
+        if reason == "queue_full":
+            self.shed_queue_full += 1
+        else:
+            self.shed_deadline += 1
+
+    # -- service -----------------------------------------------------------
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._q)
+
+    @property
+    def est_service(self) -> float:
+        """EWMA seconds per served batch (0.0 until first measurement)."""
+        return self._est_service or 0.0
+
+    def ready(self) -> bool:
+        """A batch is due: the queue fills the fixed shape, or the
+        oldest waiter has been queued for ``max_wait``."""
+        if not self._q:
+            return False
+        return (len(self._q) >= self.cfg.batch_size
+                or self.clock() - self._q[0][0].t_submit
+                >= self.cfg.max_wait)
+
+    def pump(self, force: bool = False) -> int:
+        """Serve at most one batch.  Returns requests served (0 when the
+        batch is not due yet).  Deadline-aware: requests that cannot
+        make their deadline even on the NEXT batch are shed first, so
+        device capacity is never spent on already-lost requests."""
+        now = self.clock()
+        est = self.est_service
+        while self._q:
+            ticket, _ = self._q[0]
+            if now + est > ticket.deadline:
+                self._q.popleft()
+                self._shed(ticket, "deadline")
+            else:
+                break
+        if not self._q or not (force or self.ready()):
+            return 0
+        take = min(self.cfg.batch_size, len(self._q))
+        batch = [self._q.popleft() for _ in range(take)]
+        B = self.cfg.batch_size
+        embeds = np.full((B, self.cfg.seq, self.cfg.d_model), np.nan,
+                         np.float32)
+        tenants = np.zeros(B, np.int32)
+        for i, (tk, e) in enumerate(batch):
+            embeds[i] = e
+            tenants[i] = tk.tenant
+        self.pad_rows += B - take
+        t0 = self.clock()
+        if getattr(self.g, "multi_tenant", False):
+            verdicts = self.g.admit(jnp.asarray(embeds),
+                                    jnp.asarray(tenants))
+        else:
+            verdicts = self.g.admit(jnp.asarray(embeds))
+        verdicts = np.asarray(verdicts)   # ONE packed transfer — per-
+        #                                   element device reads would
+        #                                   cost a sync per request
+        dt = self.clock() - t0
+        w = self.cfg.service_ewma
+        self._est_service = dt if self._est_service is None \
+            else (1 - w) * self._est_service + w * dt
+        done = self.clock()
+        for i, (tk, _) in enumerate(batch):
+            tk.status = "served"
+            tk.admitted = bool(verdicts[i])
+            tk.t_done = done
+        self.served += take
+        return take
+
+    def drain(self) -> int:
+        """Serve everything still queued (partial final batch forced)."""
+        total = 0
+        while self._q:
+            total += self.pump(force=True)
+        return total
+
+    # -- observability -----------------------------------------------------
+
+    def metrics(self) -> dict:
+        shed = self.shed_queue_full + self.shed_deadline
+        return {
+            "submitted": self.submitted,
+            "served": self.served,
+            "shed_queue_full": self.shed_queue_full,
+            "shed_deadline": self.shed_deadline,
+            "shed_rate": shed / max(self.submitted, 1),
+            "queue_len": self.queue_len,
+            "est_service_s": self.est_service,
+            "pad_rows": self.pad_rows,
+        }

@@ -102,6 +102,9 @@ class FleetChunkSummary(NamedTuple):
     quarantined:      () int32 — sanitized non-finite rows (see
                       ``ChunkSummary``).
     degraded:         () bool — chunk scored under a health mask.
+    misrouted:        () int32 — items routed to tenants outside the
+                      replica's ownership mask (repro.cluster): scored
+                      but never kept/inserted.  0 when no tenant_mask.
     """
 
     kept_frac: jax.Array
@@ -114,6 +117,7 @@ class FleetChunkSummary(NamedTuple):
     n: jax.Array
     quarantined: jax.Array
     degraded: jax.Array
+    misrouted: jax.Array
 
 
 class StreamRunner:
@@ -206,7 +210,7 @@ class StreamRunner:
 
     def _consume_impl(self, state: AceState, w: jax.Array,
                       feats: jax.Array, tenant_ids=None,
-                      table_mask=None):
+                      table_mask=None, tenant_mask=None):
         self.trace_count += 1
         T, B = feats.shape[0], feats.shape[1]
         R = self.rotate_every
@@ -218,13 +222,15 @@ class StreamRunner:
             def fstep(carry, xs):
                 feat, tids = xs
                 new_state, keep, margin = self.filt.step(
-                    carry, w, feat, tids, table_mask=table_mask)
+                    carry, w, feat, tids, table_mask=table_mask,
+                    tenant_mask=tenant_mask)
                 return self._constrain(new_state), (keep, margin)
 
             state, (keeps, margins) = jax.lax.scan(
                 fstep, state, (feats, tenant_ids))
             return self._fleet_summary(state, keeps, margins,
-                                       tenant_ids, T, B, table_mask)
+                                       tenant_ids, T, B, table_mask,
+                                       tenant_mask)
 
         def step(carry, feat):
             new_state, keep, margin = self.filt.step(
@@ -292,7 +298,7 @@ class StreamRunner:
         return state, summary
 
     def _fleet_summary(self, state, keeps, margins, tenant_ids, T, B,
-                       table_mask=None):
+                       table_mask=None, tenant_mask=None):
         """Per-tenant summary rows from the scan outputs — all device
         reductions, one transfer with the rest of the summary."""
         from repro.fleet.state import per_tenant_counts
@@ -301,6 +307,11 @@ class StreamRunner:
         k = min(self.topk, T * B)
         neg, idx = jax.lax.top_k(-margins.reshape(-1), k)
         tids_flat = tenant_ids.reshape(-1)
+        if tenant_mask is None:
+            misrouted = jnp.zeros((), jnp.int32)
+        else:
+            misrouted = jnp.sum(
+                (tenant_mask[tids_flat] <= 0).astype(jnp.int32))
         summary = FleetChunkSummary(
             kept_frac=jnp.mean(keepf),
             anom_counts=jnp.sum(1 - keeps.astype(jnp.int32), axis=1),
@@ -313,14 +324,16 @@ class StreamRunner:
                 tids_flat, keepf.reshape(-1), nt),
             n=state.n,
             quarantined=jnp.sum(jnp.isneginf(margins)).astype(jnp.int32),
-            degraded=jnp.asarray(table_mask is not None))
+            degraded=jnp.asarray(table_mask is not None),
+            misrouted=misrouted)
         if self.return_masks:
             return state, summary, keeps
         return state, summary
 
     def consume(self, state: AceState, w: jax.Array, feats: jax.Array,
                 tenant_ids: jax.Array | None = None,
-                table_mask: jax.Array | None = None):
+                table_mask: jax.Array | None = None,
+                tenant_mask: jax.Array | None = None):
         """One chunk: feats (T, B, d) features (d = filter's dim+1 when
         produced by ``AceDataFilter.features``), plus the (T, B) int32
         tenant-id plane when the filter is a fleet.  Returns
@@ -332,16 +345,25 @@ class StreamRunner:
         summary ``degraded``.  None (the healthy default) traces no mask
         code — the degraded program is a SECOND cached executable
         (distinct treedef), so flipping back and forth costs no retrace
-        and no extra host syncs."""
+        and no extra host syncs.
+
+        ``tenant_mask`` ((T,) f32, repro.cluster ownership mask, fleet
+        filters only): items of unowned tenants are scored but never
+        kept/inserted and counted in the summary's ``misrouted`` — a
+        re-shard updates the mask VALUE host-side with no retrace (same
+        treedef), and None keeps the single-host program untouched."""
         assert feats.ndim == 3 and feats.shape[0] == self.chunk_T, \
             (feats.shape, self.chunk_T)
         if self.is_fleet:
             assert tenant_ids is not None and \
                 tenant_ids.shape == feats.shape[:2], \
                 "fleet filters need a (T, B) tenant_ids plane"
-            return self._consume(state, w, feats, tenant_ids, table_mask)
+            return self._consume(state, w, feats, tenant_ids, table_mask,
+                                 tenant_mask)
         assert tenant_ids is None, \
             "tenant_ids given but the filter is not a fleet"
+        assert tenant_mask is None, \
+            "tenant_mask needs a fleet filter"
         return self._consume(state, w, feats, None, table_mask)
 
     def run(self, state: AceState, w: jax.Array,

@@ -90,22 +90,61 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
 
 
 def _gc(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(all_steps(ckpt_dir))
-    for s in steps[:-keep] if keep > 0 else []:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
-                      ignore_errors=True)
+    if keep <= 0:
+        return
+    keep_names = {name for _, name in _step_dirs(ckpt_dir)[-keep:]}
+    for name in os.listdir(ckpt_dir):
+        if (re.fullmatch(r"step_(\d+)", name)
+                and name not in keep_names
+                and os.path.exists(os.path.join(ckpt_dir, name,
+                                                "manifest.json"))):
+            shutil.rmtree(os.path.join(ckpt_dir, name),
+                          ignore_errors=True)
+
+
+def _step_dirs(ckpt_dir: str) -> list[tuple[int, str]]:
+    """(step, dirname) pairs sorted STEP-NUMERICALLY, not by name.
+
+    Restore and GC resolve a step through this scan instead of
+    reconstructing ``step_{step:010d}``: a directory written without
+    zero padding (an older writer, a hand-copied checkpoint) is then a
+    first-class checkpoint rather than listed-but-unrestorable — before
+    this, ``restore_latest`` after a crash would hit ``step_9`` with a
+    FileNotFoundError (not the CheckpointCorruptError it catches) and
+    die instead of resuming, and ``_gc`` would silently never reclaim
+    it.  Lexicographically ``step_9`` also sorts AFTER ``step_10``, so
+    any name-ordered consumer would resume from the older step; sorting
+    the parsed integers here is what keeps "latest" meaning newest.
+    When one step has both a padded and an unpadded directory the
+    padded (canonical-writer) one wins.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return []
+    found: dict[int, str] = {}
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not (m and os.path.exists(os.path.join(ckpt_dir, name,
+                                                  "manifest.json"))):
+            continue
+        step = int(m.group(1))
+        prev = found.get(step)
+        if prev is None or name == f"step_{step:010d}":
+            found[step] = name
+    return sorted(found.items())
+
+
+def _resolve_step_dir(ckpt_dir: str, step: int) -> str:
+    canonical = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if os.path.exists(os.path.join(canonical, "manifest.json")):
+        return canonical
+    for s, name in _step_dirs(ckpt_dir):
+        if s == step:
+            return os.path.join(ckpt_dir, name)
+    return canonical   # let restore() raise its usual error
 
 
 def all_steps(ckpt_dir: str) -> list[int]:
-    if not os.path.isdir(ckpt_dir):
-        return []
-    out = []
-    for name in os.listdir(ckpt_dir):
-        m = re.fullmatch(r"step_(\d+)", name)
-        if m and os.path.exists(os.path.join(ckpt_dir, name,
-                                             "manifest.json")):
-            out.append(int(m.group(1)))
-    return sorted(out)
+    return [s for s, _ in _step_dirs(ckpt_dir)]
 
 
 def latest_step(ckpt_dir: str) -> int | None:
@@ -124,7 +163,7 @@ def restore(ckpt_dir: str, step: int, like_tree, shardings=None):
     any leaf's CRC32 disagrees with the manifest (checksum-less legacy
     manifests skip verification).
     """
-    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    path = _resolve_step_dir(ckpt_dir, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     try:

@@ -1,0 +1,766 @@
+"""repro.cluster unit tests — single-process, fake clocks, MemStore.
+
+Covers the whole control plane without spawning processes: rendezvous
+sharding (determinism, partition, minimal movement), heartbeat /
+failure detection / rejoin backoff, gossip framing + the layered
+integrity gates (CRC at transport, health_check at semantics), node
+failover (gossip adoption, checkpoint fallback incl. torn-newest,
+cold start, rejoin), the open-loop front end's shedding contracts,
+and the satellite regressions: numeric checkpoint-step ordering,
+autotuner persistent cache, and the quantized fleet merge oracles.
+
+The two-REAL-process properties (KV over jax.distributed, the chaos
+host-kill/re-shard acceptance test) live in
+tests/test_cluster_multiprocess.py.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, ClusterNode, FailureDetector,
+                           GossipBus, HeartbeatWriter, MemStore,
+                           MembershipConfig, RejoinPolicy, ShardMap,
+                           SnapshotCorrupt, pack_snapshot,
+                           rendezvous_owner, snapshot_healthy,
+                           unpack_snapshot, with_host, without_host)
+from repro.core import sketch as sk
+from repro.core.sketch import AceState
+from repro.fleet import state as fl
+from repro.fleet.filter import FleetDataFilter
+from repro.resilience import inject
+from repro.train import checkpoint as ckpt
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+class TestShardMap:
+    HOSTS = ("h0", "h1", "h2", "h3")
+
+    def test_partition_and_determinism(self):
+        m = ShardMap(version=0, hosts=self.HOSTS, num_tenants=64)
+        owned = [m.owned_by(h) for h in self.HOSTS]
+        flat = sorted(t for o in owned for t in o)
+        assert flat == list(range(64))          # exact partition
+        m2 = ShardMap(version=5, hosts=self.HOSTS, num_tenants=64)
+        assert [m2.owned_by(h) for h in self.HOSTS] == owned
+        # rendezvous_owner agrees with the map
+        for t in range(64):
+            assert m.owner_of(t) == rendezvous_owner(t, self.HOSTS)
+
+    def test_rough_balance(self):
+        m = ShardMap(version=0, hosts=self.HOSTS, num_tenants=256)
+        sizes = [len(m.owned_by(h)) for h in self.HOSTS]
+        assert min(sizes) >= 256 // len(self.HOSTS) // 3
+
+    def test_minimal_movement_on_death(self):
+        m = ShardMap(version=0, hosts=self.HOSTS, num_tenants=64)
+        dead = "h2"
+        m2 = without_host(m, dead)
+        assert m2.version == 1 and dead not in m2.hosts
+        for t in range(64):
+            if m.owner_of(t) != dead:
+                # survivors' tenants never move
+                assert m2.owner_of(t) == m.owner_of(t)
+            else:
+                assert m2.owner_of(t) != dead
+
+    def test_minimal_movement_on_join(self):
+        small = ShardMap(version=0, hosts=("h0", "h1"), num_tenants=64)
+        grown = with_host(small, "h2")
+        assert grown.version == 1
+        for t in range(64):
+            if grown.owner_of(t) != "h2":
+                # only the joiner's winnings move
+                assert grown.owner_of(t) == small.owner_of(t)
+
+    def test_rejoin_restores_original_split(self):
+        m = ShardMap(version=0, hosts=self.HOSTS, num_tenants=64)
+        back = with_host(without_host(m, "h1"), "h1")
+        for t in range(64):
+            assert back.owner_of(t) == m.owner_of(t)
+
+    def test_tenant_mask(self):
+        m = ShardMap(version=0, hosts=("h0", "h1"), num_tenants=16)
+        masks = np.stack([m.tenant_mask(h) for h in m.hosts])
+        assert masks.dtype == np.float32
+        assert np.array_equal(masks.sum(axis=0), np.ones(16))
+        for h in m.hosts:
+            assert set(np.nonzero(m.tenant_mask(h))[0]) == \
+                set(m.owned_by(h))
+
+    def test_json_roundtrip(self):
+        m = ShardMap(version=7, hosts=self.HOSTS, num_tenants=64)
+        m2 = ShardMap.from_json(m.to_json())
+        assert m2 == m
+
+    def test_duplicate_hosts_rejected(self):
+        with pytest.raises(ValueError):
+            ShardMap(version=0, hosts=("h0", "h0"), num_tenants=4)
+
+
+# ---------------------------------------------------------------------------
+# membership
+# ---------------------------------------------------------------------------
+
+class TestMembership:
+    def _pair(self, interval=0.2, timeout=1.0):
+        clock = FakeClock()
+        store = MemStore()
+        cfg = MembershipConfig(heartbeat_interval=interval,
+                               failure_timeout=timeout)
+        return clock, store, cfg
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            MembershipConfig(heartbeat_interval=1.0, failure_timeout=0.5)
+
+    def test_maybe_beat_rate_limits(self):
+        clock, store, cfg = self._pair()
+        hb = HeartbeatWriter(store, "h0", cfg, clock)
+        assert hb.maybe_beat()
+        assert not hb.maybe_beat()          # same instant: rate-limited
+        clock.advance(0.25)
+        assert hb.maybe_beat()
+        assert store.get("hb/h0") == "2"
+
+    def test_detector_death_and_grace(self):
+        clock, store, cfg = self._pair()
+        hb = HeartbeatWriter(store, "h1", cfg, clock)
+        det = FailureDetector(store, cfg, clock)
+        hb.beat()
+        assert det.poll(["h1"]) == []
+        clock.advance(0.9)
+        assert det.poll(["h1"]) == []       # inside timeout
+        clock.advance(0.2)
+        assert det.poll(["h1"]) == ["h1"]   # silence > timeout ⇒ dead
+        hb.beat()                           # value changes ⇒ alive again
+        assert det.poll(["h1"]) == []
+        # a host never seen at all gets a grace window, not instant death
+        assert det.poll(["ghost"]) == []
+        clock.advance(1.1)
+        assert det.poll(["ghost"]) == ["ghost"]
+
+    def test_detector_forget_restarts_grace(self):
+        clock, store, cfg = self._pair()
+        hb = HeartbeatWriter(store, "h1", cfg, clock)
+        det = FailureDetector(store, cfg, clock)
+        hb.beat()
+        assert det.poll(["h1"]) == []       # first observation
+        clock.advance(1.1)
+        assert det.poll(["h1"]) == ["h1"]
+        det.forget("h1")
+        assert det.poll(["h1"]) == []       # stale value, fresh window
+
+    def test_rejoin_policy_bounded_backoff(self):
+        pol = RejoinPolicy(max_attempts=4, base_delay=0.1, max_delay=0.5)
+        delays = [pol.next_delay() for _ in range(5)]
+        assert delays == [0.1, 0.2, 0.4, 0.5, None]
+        pol.reset()
+        assert pol.next_delay() == 0.1
+
+
+# ---------------------------------------------------------------------------
+# gossip
+# ---------------------------------------------------------------------------
+
+def _small_filter(count_dtype="int32", num_tenants=4, insert_all=True):
+    return FleetDataFilter(d_model=6, num_tenants=num_tenants, num_bits=5,
+                           num_tables=4, warmup_items=16.0,
+                           insert_all=insert_all, count_dtype=count_dtype)
+
+
+def _feed(filt, state, w, tenants, n_batches, seed, B=16):
+    """Feed each tenant ``n_batches`` single-tenant batches (dense,
+    deterministic by (seed, tenant, index))."""
+    for t in tenants:
+        for i in range(n_batches):
+            rng = np.random.default_rng(seed + 7919 * t + i)
+            x = rng.normal(size=(B, 1, filt.d_model)).astype(np.float32)
+            feat = filt.features(jnp.asarray(x))
+            state, _, _ = filt.step(state, w,
+                                    feat, jnp.full((B,), t, jnp.int32))
+    return state
+
+
+def _tenant(state, t, dtype=jnp.int32):
+    return AceState(counts=jnp.asarray(state.counts[t]).astype(dtype),
+                    n=jnp.asarray(state.n[t]),
+                    welford_mean=jnp.asarray(state.welford_mean[t]),
+                    welford_m2=jnp.asarray(state.welford_m2[t]))
+
+
+class TestGossip:
+    def _state(self, count_dtype="int32"):
+        filt = _small_filter(count_dtype)
+        state, w = filt.init()
+        state = _feed(filt, state, w, range(4), 2, seed=0)
+        return jax.device_get(state)
+
+    def test_pack_unpack_roundtrip_bitwise(self):
+        host = self._state()
+        blob = pack_snapshot(host, [1, 3], epoch=5)
+        epoch, states = unpack_snapshot(blob)
+        assert epoch == 5 and set(states) == {1, 3}
+        for t in (1, 3):
+            assert np.array_equal(states[t].counts, host.counts[t])
+            assert states[t].n == np.float32(host.n[t])
+            assert states[t].welford_mean == np.float32(
+                host.welford_mean[t])
+            assert states[t].welford_m2 == np.float32(host.welford_m2[t])
+
+    def test_narrow_dtype_preserved(self):
+        host = self._state("int8")
+        _, states = unpack_snapshot(pack_snapshot(host, [0], epoch=1))
+        assert states[0].counts.dtype == np.int8
+
+    def test_truncated_blob_rejected(self):
+        blob = pack_snapshot(self._state(), [0, 1], epoch=1)
+        with pytest.raises(SnapshotCorrupt):
+            unpack_snapshot(blob[:-40])
+
+    def test_flipped_byte_rejected_by_crc(self):
+        blob = bytearray(pack_snapshot(self._state(), [0, 1], epoch=1))
+        # flip one payload byte mid-blob; framing may still parse, the
+        # CRC must catch it
+        blob[len(blob) // 2] ^= 0xFF
+        with pytest.raises(SnapshotCorrupt):
+            unpack_snapshot(bytes(blob))
+
+    def test_preserialization_bitflip_passes_crc_fails_health(self):
+        """Satellite 3: a sketch corrupted BEFORE serialization has
+        valid CRCs — only the semantic gate can refuse it."""
+        host = self._state()
+        good = _tenant(host, 0)
+        assert snapshot_healthy(good)
+        bad = good._replace(counts=inject.flip_count_bits(
+            good.counts, jax.random.PRNGKey(0), num_flips=4))
+        blob = pack_snapshot(
+            jax.device_get(fl.set_tenant(jnp_fleet(host), 0, bad)),
+            [0], epoch=2)
+        _, states = unpack_snapshot(blob)       # CRC passes: no error
+        assert not snapshot_healthy(states[0])  # health gate refuses
+
+    def test_bus_publish_fetch_and_retention(self):
+        store = MemStore()
+        bus = GossipBus(store, "h0", keep=2)
+        host = self._state()
+        for e in range(1, 5):
+            bus.publish(e, host, [0, 1])
+        assert bus.published_epochs == 4 and bus.published_bytes > 0
+        got = bus.latest("h0")
+        assert got is not None and got[0] == 4
+        # only `keep` epochs stay resident
+        blobs = [k for k in store.keys("gossip/h0/") if not
+                 k.endswith("latest")]
+        assert sorted(blobs) == ["gossip/h0/3", "gossip/h0/4"]
+
+    def test_bus_corrupt_newest_falls_back(self):
+        store = MemStore()
+        bus = GossipBus(store, "h0", keep=2)
+        host = self._state()
+        bus.publish(1, host, [0])
+        bus.publish(2, host, [0, 1])
+        store.set_bytes("gossip/h0/2",
+                        b"garbage" + os.urandom(64))
+        epoch, states = bus.latest("h0")
+        assert epoch == 1 and set(states) == {0}
+
+    def test_bus_unknown_host(self):
+        assert GossipBus(MemStore(), "h0").latest("nobody") is None
+
+
+def jnp_fleet(host_state):
+    return jax.tree.map(jnp.asarray, host_state)
+
+
+# ---------------------------------------------------------------------------
+# quantized fleet merge (satellite 3)
+# ---------------------------------------------------------------------------
+
+class TestQuantizedFleetMerge:
+    @pytest.mark.parametrize("dtype", ["int8", "int16", "int32"])
+    def test_merge_promote_commutes_bitwise(self, dtype):
+        filt = _small_filter(dtype)
+        state0, w = filt.init()
+        a = _feed(filt, state0, w, range(4), 2, seed=10)
+        b = _feed(filt, state0, w, range(4), 3, seed=20)
+        m1 = fl.promote_fleet(fl.merge_fleet(a, b))
+        m2 = fl.merge_fleet(fl.promote_fleet(a), fl.promote_fleet(b))
+        for x, y in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+            assert x.dtype == y.dtype
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+    @pytest.mark.parametrize("dtype", ["int8", "int16"])
+    def test_merge_matches_per_tenant_sketch_merge(self, dtype):
+        filt = _small_filter(dtype)
+        state0, w = filt.init()
+        a = _feed(filt, state0, w, range(4), 2, seed=10)
+        b = _feed(filt, state0, w, range(4), 3, seed=20)
+        m = fl.merge_fleet(a, b)
+        assert m.counts.dtype == jnp.int32
+        for t in range(4):
+            ref = sk.merge(_tenant(a, t), _tenant(b, t))
+            assert np.array_equal(np.asarray(m.counts[t]),
+                                  np.asarray(ref.counts))
+            assert float(m.n[t]) == float(ref.n)
+            assert float(m.welford_mean[t]) == float(ref.welford_mean)
+            assert float(m.welford_m2[t]) == float(ref.welford_m2)
+
+    def test_merge_equals_union_stream_counts(self):
+        """insert_all streams: merged counts/n must EXACTLY equal the
+        fleet that absorbed both streams (scatter-adds commute)."""
+        filt = _small_filter("int16")
+        state0, w = filt.init()
+        a = _feed(filt, state0, w, range(4), 2, seed=10)
+        b = _feed(filt, state0, w, range(4), 3, seed=20)
+        both = _feed(_small_filter("int16"), state0, w, range(4), 2,
+                     seed=10)
+        both = _feed(filt, both, w, range(4), 3, seed=20)
+        m = fl.merge_fleet(a, b)
+        assert np.array_equal(np.asarray(m.counts),
+                              np.asarray(both.counts).astype(np.int32))
+        assert np.array_equal(np.asarray(m.n), np.asarray(both.n))
+        # moments are NOT compared: the Welford stream tracks scores,
+        # and stream b's scores differ when a's items are already in
+        # the sketch — only counts/n are stream-order invariants
+
+    def test_merge_shape_mismatch_rejected(self):
+        a, _ = _small_filter("int8").init()
+        b, _ = _small_filter("int8", num_tenants=2).init()
+        with pytest.raises(ValueError):
+            fl.merge_fleet(a, b)
+
+    def test_merged_passes_health_check(self):
+        filt = _small_filter("int8")
+        state0, w = filt.init()
+        a = _feed(filt, state0, w, range(4), 2, seed=10)
+        b = _feed(filt, state0, w, range(4), 3, seed=20)
+        m = jax.device_get(fl.merge_fleet(a, b))
+        for t in range(4):
+            assert snapshot_healthy(_tenant(jnp_fleet(m), t))
+
+
+# ---------------------------------------------------------------------------
+# node failover (MemStore + fake clock)
+# ---------------------------------------------------------------------------
+
+def _cluster_cfg(host, tmp_path=None, **kw):
+    base = dict(
+        host_id=host, hosts=("h0", "h1"), num_tenants=8, d_model=6,
+        num_bits=5, num_tables=4, warmup_items=16.0, insert_all=True,
+        chunk_T=4, epoch_chunks=2,
+        ckpt_root=str(tmp_path) if tmp_path is not None else None,
+        membership=MembershipConfig(heartbeat_interval=0.2,
+                                    failure_timeout=1.0))
+    base.update(kw)
+    return ClusterConfig(**base)
+
+
+def _chunk_for(node, seed):
+    """One (chunk_T, B, d+1) chunk of single-tenant-dense batches over
+    the node's owned tenants."""
+    owned = node.owned()
+    B, d = 8, node.cfg.d_model
+    embeds, tids = [], []
+    for j in range(node.cfg.chunk_T):
+        t = owned[j % len(owned)]
+        rng = np.random.default_rng(seed * 1000 + t)
+        embeds.append(rng.normal(size=(B, 1, d)).astype(np.float32))
+        tids.append(np.full((B,), t, np.int32))
+    feats = node.filt.features(jnp.asarray(np.concatenate(embeds)))
+    feats = feats.reshape(node.cfg.chunk_T, B, d + 1)
+    return feats, np.stack(tids)
+
+
+def _run_epochs(node, n_epochs, seed0=0):
+    for i in range(n_epochs * node.cfg.epoch_chunks):
+        node.ingest_chunk(*_chunk_for(node, seed0 + i))
+
+
+class TestNodeFailover:
+    def _two_nodes(self, tmp_path, **kw):
+        store = MemStore()
+        clock = FakeClock()
+        n0 = ClusterNode(_cluster_cfg("h0", tmp_path, **kw), store, clock)
+        n1 = ClusterNode(_cluster_cfg("h1", tmp_path, **kw), store, clock)
+        return store, clock, n0, n1
+
+    def _kill_and_detect(self, clock, n0):
+        """Advance past the failure timeout (h1 silent) and run control
+        steps until h0 owns everything."""
+        clock.advance(0.5)
+        n0.control_step()      # observes h1's last value
+        clock.advance(1.2)
+        dead = n0.control_step()
+        assert dead == ["h1"]
+        assert len(n0.owned()) == n0.cfg.num_tenants
+        return dead
+
+    def test_gossip_adoption_exact_n(self, tmp_path):
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n0, 2)
+        _run_epochs(n1, 2)
+        h1_state = jax.device_get(n1.state)
+        self._kill_and_detect(clock, n0)
+        adopted = {a["tenant"]: a for a in n0.adoptions}
+        assert set(adopted) == set(
+            ShardMap(0, ("h0", "h1"), 8).owned_by("h1"))
+        host0 = jax.device_get(n0.state)
+        for t, rec in adopted.items():
+            assert rec["source"] == "gossip"
+            assert rec["source_epoch"] == 2
+            assert float(host0.n[t]) == float(h1_state.n[t])
+            assert np.array_equal(host0.counts[t], h1_state.counts[t])
+        # misrouted accounting: requests for adopted tenants now serve
+        _, keeps = n0.ingest_chunk(*_chunk_for(n0, 99))
+        assert keeps.shape == (n0.cfg.chunk_T, 8)
+
+    def test_checkpoint_fallback_with_torn_newest(self, tmp_path):
+        """Gossip gone + newest checkpoint torn ⇒ adoption restores
+        from the newest INTACT checkpoint (PR 7's CRC path)."""
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n1, 3)     # checkpoints at epochs 1, 2, 3
+        for k in list(store.keys("gossip/h1/")):
+            store.delete(k)
+        inject.tear_checkpoint(os.path.join(str(tmp_path), "h1"), 3)
+        self._kill_and_detect(clock, n0)
+        for rec in n0.adoptions:
+            assert rec["source"] == "checkpoint"
+            assert rec["source_epoch"] == 2    # newest INTACT
+            assert rec["n"] > 0
+
+    def test_unhealthy_gossip_rejected_before_merge(self, tmp_path):
+        """Satellite 3: a bit-flipped (pre-serialization) gossiped
+        sketch passes CRC but is refused by health_check — adoption
+        falls back to the checkpoint."""
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n1, 2)
+        bad_counts = np.array(jax.device_get(n1.state).counts)
+        for t in n1.owned():        # corrupt EVERY owned tenant's row
+            bad_counts[t] = np.asarray(inject.flip_count_bits(
+                jnp.asarray(bad_counts[t]), jax.random.PRNGKey(t),
+                num_flips=2))
+        bad = jax.device_get(n1.state)._replace(counts=bad_counts)
+        n1.gossip.publish(3, bad, n1.owned())   # poisoned publish
+        self._kill_and_detect(clock, n0)
+        assert n0.adoptions
+        for rec in n0.adoptions:
+            assert rec["source"] == "checkpoint"
+
+    def test_cold_start_when_no_candidates(self, tmp_path):
+        store, clock, n0, n1 = self._two_nodes(None)   # no ckpt_root
+        self._kill_and_detect(clock, n0)               # before any epoch
+        assert n0.adoptions
+        for rec in n0.adoptions:
+            assert rec["source"] == "cold" and rec["n"] == 0.0
+        # degraded but serving: the adopted tenants still take traffic
+        n0.ingest_chunk(*_chunk_for(n0, 5))
+
+    def test_rejoin_with_backoff(self, tmp_path):
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n0, 1)
+        _run_epochs(n1, 1)
+        self._kill_and_detect(clock, n0)
+        # fresh process, same identity, rejoining
+        n1b = ClusterNode(_cluster_cfg("h1", tmp_path), store, clock)
+        sleeps = []
+
+        def sleep(d):
+            sleeps.append(d)
+            n0.control_step()      # coordinator runs while we wait
+
+        assert n1b.try_rejoin(RejoinPolicy(max_attempts=3,
+                                           base_delay=0.1), sleep)
+        assert sleeps and sleeps[0] == 0.1
+        assert n1b.map.version == n0.map.version
+        assert set(n0.owned()) | set(n1b.owned()) == set(range(8))
+        assert not (set(n0.owned()) & set(n1b.owned()))
+        # rejoiner adopted its won-back tenants from the survivor
+        assert {a["tenant"] for a in n1b.adoptions} == set(n1b.owned())
+
+    def test_rejoin_budget_exhausted(self):
+        store = MemStore()
+        clock = FakeClock()
+        n1 = ClusterNode(_cluster_cfg("h1"), store, clock)
+        n1.map = without_host(n1.map, "h1")   # declared dead, nobody admits
+        assert not n1.try_rejoin(RejoinPolicy(max_attempts=2),
+                                 sleep=lambda d: None)
+
+    def test_dead_coordinator_replaced(self, tmp_path):
+        """h0 (the coordinator) dies: h1 must publish the successor map
+        itself — the lowest LIVE host acts, not the configured one."""
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n0, 1)
+        clock.advance(0.5)
+        n1.control_step()
+        clock.advance(1.2)
+        dead = n1.control_step()
+        assert dead == ["h0"]
+        assert n1.coordinator
+        assert len(n1.owned()) == n1.cfg.num_tenants
+
+
+# ---------------------------------------------------------------------------
+# open-loop front end
+# ---------------------------------------------------------------------------
+
+class TestFrontEnd:
+    def _mk(self, clock, policies=("fail_open", "fail_closed"), **kw):
+        from repro.serve.engine import Guardrail, GuardrailConfig
+        from repro.serve.frontend import FrontEnd, FrontEndConfig
+        gcfg = GuardrailConfig(d_model=6, num_bits=5, num_tables=4,
+                               warmup_items=16.0,
+                               num_tenants=len(policies),
+                               fail_policy=policies)
+        g = Guardrail(gcfg)
+        fcfg = FrontEndConfig(batch_size=4, seq=2, d_model=6, **kw)
+        return g, FrontEnd(g, fcfg, clock=clock)
+
+    def _embed(self, seed=0):
+        return np.random.default_rng(seed).normal(
+            size=(2, 6)).astype(np.float32)
+
+    def test_full_batches_serve_all(self):
+        clock = FakeClock()
+        _, fe = self._mk(clock)
+        tickets = [fe.submit(self._embed(i), tenant=i % 2)
+                   for i in range(8)]
+        while fe.ready():
+            fe.pump()
+        assert all(t.status == "served" for t in tickets)
+        assert fe.metrics()["served"] == 8
+        assert fe.metrics()["shed_rate"] == 0.0
+
+    def test_queue_is_bounded_and_sheds_by_policy(self):
+        clock = FakeClock()
+        _, fe = self._mk(clock, max_queue=6)
+        tickets = [fe.submit(self._embed(i), tenant=i % 2)
+                   for i in range(20)]
+        assert fe.queue_len == 6                 # bounded, never more
+        shed = [t for t in tickets if t.status == "shed"]
+        assert len(shed) == 14
+        assert all(t.reason == "queue_full" for t in shed)
+        for t in shed:   # fail_open tenant 0 ⇒ admit, fail_closed ⇒ reject
+            assert t.admitted is (t.tenant == 0)
+        fe.drain()
+        assert fe.served == 6
+        assert fe.metrics()["shed_queue_full"] == 14
+
+    def test_deadline_shed_before_serving(self):
+        clock = FakeClock()
+        _, fe = self._mk(clock)
+        # seed the service-time estimate with one served batch
+        for i in range(4):
+            fe.submit(self._embed(i), tenant=0)
+        fe.pump()
+        est = fe.est_service
+        late = fe.submit(self._embed(9), tenant=1, deadline=0.001)
+        ok = fe.submit(self._embed(10), tenant=0, deadline=60.0)
+        clock.advance(0.002 + est)               # late is now hopeless
+        fe.pump(force=True)
+        assert late.status == "shed" and late.reason == "deadline"
+        assert late.admitted is False            # fail_closed tenant
+        assert ok.status == "served"
+        assert fe.metrics()["shed_deadline"] == 1
+
+    def test_partial_batch_after_max_wait(self):
+        clock = FakeClock()
+        _, fe = self._mk(clock, max_wait=0.005)
+        t = fe.submit(self._embed(), tenant=0, deadline=60.0)
+        assert not fe.ready()
+        clock.advance(0.006)
+        assert fe.ready()
+        assert fe.pump() == 1
+        assert t.status == "served"
+
+    def test_pad_rows_match_guardrail_quarantine(self):
+        clock = FakeClock()
+        g, fe = self._mk(clock)
+        for i in range(5):                       # 1 full + 1 partial batch
+            fe.submit(self._embed(i), tenant=0, deadline=60.0)
+        fe.drain()
+        assert fe.pad_rows == 3
+        assert int(g.quarantined) == fe.pad_rows  # pads, nothing else
+
+    def test_latency_accounting(self):
+        clock = FakeClock()
+        _, fe = self._mk(clock)
+        t = fe.submit(self._embed(), tenant=0, deadline=60.0)
+        clock.advance(0.004)
+        fe.pump(force=True)
+        assert t.latency is not None and t.latency >= 0.004
+
+    def test_bad_shape_rejected(self):
+        clock = FakeClock()
+        _, fe = self._mk(clock)
+        with pytest.raises(ValueError):
+            fe.submit(np.zeros((3, 6), np.float32))
+
+    def test_single_tenant_guardrail(self):
+        from repro.serve.engine import Guardrail, GuardrailConfig
+        from repro.serve.frontend import FrontEnd, FrontEndConfig
+        clock = FakeClock()
+        g = Guardrail(GuardrailConfig(d_model=6, num_bits=5, num_tables=4,
+                                      warmup_items=16.0,
+                                      fail_policy="fail_closed"))
+        fe = FrontEnd(g, FrontEndConfig(batch_size=4, seq=2, d_model=6,
+                                        max_queue=2), clock=clock)
+        tickets = [fe.submit(self._embed(i)) for i in range(4)]
+        shed = [t for t in tickets if t.status == "shed"]
+        assert len(shed) == 2
+        assert all(t.admitted is False for t in shed)   # fail_closed
+        fe.drain()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint step ordering (satellite 1 regression)
+# ---------------------------------------------------------------------------
+
+class TestCheckpointStepOrdering:
+    def _tree(self, v):
+        return {"x": np.full((4,), v, np.float32)}
+
+    def test_numeric_not_lexicographic(self, tmp_path):
+        d = str(tmp_path)
+        for step in (2, 9, 10):
+            ckpt.save(d, step, self._tree(step))
+        # strip the zero padding: lexicographically "step_10" < "step_2"
+        for step in (2, 9):
+            os.rename(os.path.join(d, f"step_{step:010d}"),
+                      os.path.join(d, f"step_{step}"))
+        assert ckpt.all_steps(d) == [2, 9, 10]
+        assert ckpt.latest_step(d) == 10
+        tree, manifest = ckpt.CheckpointManager(d).restore_latest(
+            self._tree(0))
+        assert manifest["step"] == 10
+        assert float(np.asarray(tree["x"])[0]) == 10.0
+
+    def test_restore_resolves_unpadded_dirs(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 9, self._tree(9))
+        os.rename(os.path.join(d, f"step_{9:010d}"),
+                  os.path.join(d, "step_9"))
+        tree, manifest = ckpt.restore(d, 9, self._tree(0))
+        assert manifest["step"] == 9
+
+    def test_torn_newest_falls_back_across_unpadded(self, tmp_path):
+        d = str(tmp_path)
+        for step in (9, 10):
+            ckpt.save(d, step, self._tree(step))
+        os.rename(os.path.join(d, f"step_{9:010d}"),
+                  os.path.join(d, "step_9"))
+        inject.tear_checkpoint(d, 10)
+        tree, manifest = ckpt.CheckpointManager(d).restore_latest(
+            self._tree(0))
+        assert manifest["step"] == 9
+
+    def test_gc_keeps_numeric_newest(self, tmp_path):
+        d = str(tmp_path)
+        for step in (2, 9):
+            ckpt.save(d, step, self._tree(step))
+        for step in (2, 9):
+            os.rename(os.path.join(d, f"step_{step:010d}"),
+                      os.path.join(d, f"step_{step}"))
+        ckpt.save(d, 10, self._tree(10), keep=2)
+        assert ckpt.all_steps(d) == [9, 10]   # step 2 collected, 9 kept
+        assert not os.path.exists(os.path.join(d, "step_2"))
+
+
+# ---------------------------------------------------------------------------
+# autotune persistent cache (satellite 2)
+# ---------------------------------------------------------------------------
+
+class TestAutotunePersistentCache:
+    @pytest.fixture(autouse=True)
+    def _isolate(self, tmp_path, monkeypatch):
+        from repro.kernels import runtime as rt
+        saved_cache = dict(rt._AUTOTUNE_CACHE)
+        saved_probe = rt._PROBED_BACKEND
+        rt._AUTOTUNE_CACHE.clear()
+        monkeypatch.setenv(rt._CACHE_DIR_ENV, str(tmp_path))
+        yield
+        rt._AUTOTUNE_CACHE.clear()
+        rt._AUTOTUNE_CACHE.update(saved_cache)
+        rt._PROBED_BACKEND = saved_probe
+
+    @staticmethod
+    def _slow_bench(times):
+        import time as _t
+
+        def bench(c):
+            _t.sleep(times[c])
+            return jnp.zeros(())
+
+        return bench
+
+    def test_winner_persists_across_cache_clear(self):
+        from repro.kernels import runtime as rt
+        calls = []
+
+        def bench(c):
+            calls.append(c)
+            return self._slow_bench({8: 0.003, 16: 0.0, 32: 0.003})(c)
+
+        assert rt.autotune("unit", ("persist",), True,
+                           [8, 16, 32], bench, reps=1) == 16
+        assert calls
+        n_calls = len(calls)
+        rt._AUTOTUNE_CACHE.clear()              # "new process"
+        # bench_fn=None would normally return the first candidate; the
+        # persisted winner must short-circuit it without re-benching
+        assert rt.autotune("unit", ("persist",), True,
+                           [8, 16, 32], None) == 16
+        assert len(calls) == n_calls
+
+    def test_corrupt_cache_file_is_a_miss(self, tmp_path):
+        from repro.kernels import runtime as rt
+        rt.autotune("unit", ("corrupt",), True, [4, 8],
+                    self._slow_bench({4: 0.0, 8: 0.003}), reps=1)
+        files = [f for f in os.listdir(tmp_path) if f.startswith("tune_")]
+        assert files
+        for f in files:
+            with open(os.path.join(tmp_path, f), "w") as fh:
+                fh.write("{not json")
+        rt._AUTOTUNE_CACHE.clear()
+        assert rt.autotune("unit", ("corrupt",), True,
+                           [4, 8], None) == 4   # default, no crash
+
+    def test_stale_winner_outside_candidates_ignored(self):
+        from repro.kernels import runtime as rt
+        rt.autotune("unit", ("stale",), True, [8, 16],
+                    self._slow_bench({8: 0.0, 16: 0.003}), reps=1)
+        rt._AUTOTUNE_CACHE.clear()
+        # candidate space changed (new jax version, new shapes): the
+        # persisted winner 8 is gone — must re-pick, not crash
+        assert rt.autotune("unit", ("stale",), True, [32, 64], None) == 32
+
+    def test_no_env_no_files(self, tmp_path, monkeypatch):
+        from repro.kernels import runtime as rt
+        monkeypatch.delenv(rt._CACHE_DIR_ENV, raising=False)
+        rt.autotune("unit", ("noenv",), True, [4, 8],
+                    self._slow_bench({4: 0.0, 8: 0.001}), reps=1)
+        assert not any(f.startswith("tune_")
+                       for f in os.listdir(tmp_path))
+
+    def test_probe_backend_memoized(self):
+        from repro.kernels import runtime as rt
+        rt.reset_runtime_state()
+        b1 = rt.probe_backend()
+        assert b1 == jax.default_backend()
+        assert rt.probe_backend() is b1

@@ -27,9 +27,9 @@ def main() -> None:
     from benchmarks import (dist_throughput, fig1_discriminative,
                             fig3_5_variance, fleet_throughput,
                             guardrail_latency, memory_table,
-                            openloop_bench, stream_throughput,
-                            table3_5_comparison, throughput,
-                            window_throughput)
+                            openloop_bench, quantile_bench,
+                            stream_throughput, table3_5_comparison,
+                            throughput, window_throughput)
     try:
         from benchmarks import roofline_report
     except ImportError:
@@ -60,6 +60,8 @@ def main() -> None:
         "fleet": lambda: fleet_throughput.run(
             csv_rows, smoke=args.quick),
         "openloop": lambda: openloop_bench.run(
+            csv_rows, smoke=args.quick),
+        "quantile": lambda: quantile_bench.run(
             csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:

@@ -45,10 +45,16 @@ def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
-def pack_snapshot(state: FleetState, tenants, epoch: int) -> bytes:
+def pack_snapshot(state: FleetState, tenants, epoch: int,
+                  map_version: int = 0) -> bytes:
     """Serialize ``tenants``' rows of a host-side fleet into one
     CRC-framed npz blob.  ``state`` leaves must be host numpy (callers
-    ``jax.device_get`` once per epoch — this is control plane)."""
+    ``jax.device_get`` once per epoch — this is control plane).
+
+    ``map_version`` stamps the shard-map regime the publisher believed
+    it owned these tenants under — the fencing token a revived host
+    with a stale map cannot forge (it can only hold an OLD version).
+    """
     tenants = [int(t) for t in tenants]
     counts = np.ascontiguousarray(
         np.asarray(state.counts)[tenants])            # (t, L, 2^K)
@@ -58,6 +64,7 @@ def pack_snapshot(state: FleetState, tenants, epoch: int) -> bytes:
                      ).astype(np.float32)             # (3, t)
     manifest = {
         "epoch": int(epoch),
+        "map_version": int(map_version),
         "tenants": tenants,
         "count_dtype": str(counts.dtype),
         "crc_counts": _crc(counts),
@@ -70,10 +77,13 @@ def pack_snapshot(state: FleetState, tenants, epoch: int) -> bytes:
     return buf.getvalue()
 
 
-def unpack_snapshot(blob: bytes) -> tuple[int, dict[int, AceState]]:
-    """(epoch, tenant → AceState).  Raises :class:`SnapshotCorrupt` on
-    any framing/CRC mismatch — transport corruption stops HERE, before
-    any state is constructed."""
+def unpack_snapshot(blob: bytes) \
+        -> tuple[int, dict[int, AceState], int]:
+    """(epoch, tenant → AceState, map_version).  Raises
+    :class:`SnapshotCorrupt` on any framing/CRC mismatch — transport
+    corruption stops HERE, before any state is constructed.  Blobs
+    packed before version fencing carry ``map_version`` 0 (every real
+    map publishes at version >= 0, so legacy blobs sort oldest)."""
     try:
         with np.load(io.BytesIO(blob)) as z:
             manifest = json.loads(bytes(z["manifest"]).decode())
@@ -92,7 +102,8 @@ def unpack_snapshot(blob: bytes) -> tuple[int, dict[int, AceState]]:
             counts=counts[i], n=np.float32(stats[0, i]),
             welford_mean=np.float32(stats[1, i]),
             welford_m2=np.float32(stats[2, i]))
-    return int(manifest["epoch"]), states
+    return (int(manifest["epoch"]), states,
+            int(manifest.get("map_version", 0)))
 
 
 def snapshot_healthy(ace: AceState) -> bool:
@@ -118,6 +129,17 @@ class GossipBus:
     publish time — the store is a mailbox, not an archive);
     ``published_bytes`` accounts the control-plane traffic so the bench
     and docs can put a number on gossip cost per epoch.
+
+    **Version fencing** (split-brain narrow slice): a host revived with
+    a stale shard map — a resumed VM, a restored backup, a zombie that
+    slept through its own death — holds an OLD ``map_version`` and an
+    old epoch counter, and its next publish would regress the latest
+    pointer over state the cluster has since moved past.  Every publish
+    therefore carries the publisher's map version, and a per-host fence
+    key records the high-water ``(map_version, epoch)`` ever published:
+    a publish that does not advance it is a counted no-op
+    (``stale_publishes``), and ``latest`` refuses blobs below the
+    fenced version even if one was raced into the store.
     """
 
     def __init__(self, store, host: str, keep: int = 2):
@@ -126,33 +148,63 @@ class GossipBus:
         self._keep = max(int(keep), 1)
         self.published_bytes = 0
         self.published_epochs = 0
+        self.stale_publishes = 0   # fenced-off (rejected) publish calls
 
-    def publish(self, epoch: int, state: FleetState, tenants) -> int:
+    def _fence(self, host: str) -> tuple[int, int]:
+        """High-water (map_version, epoch) published by ``host`` — read
+        from the STORE, not memory: a revived host builds a fresh bus
+        and must still see its own pre-death high-water mark."""
+        raw = self._store.get(f"gossip/{host}/fence")
+        if raw is None:
+            return (-1, -1)
+        ver, _, ep = str(raw).partition(":")
+        return (int(ver), int(ep))
+
+    def publish(self, epoch: int, state: FleetState, tenants,
+                map_version: int = 0) -> int:
         """Publish owned tenants' sketches for ``epoch``; returns blob
-        bytes (the per-epoch gossip bill)."""
-        blob = pack_snapshot(state, tenants, epoch)
+        bytes (the per-epoch gossip bill), or 0 when the publish is
+        FENCED: ``(map_version, epoch)`` must strictly advance the
+        host's high-water mark, so a stale revived host can neither
+        overwrite newer snapshots nor regress the latest pointer."""
+        fence = self._fence(self._host)
+        if (int(map_version), int(epoch)) <= fence:
+            self.stale_publishes += 1
+            return 0
+        blob = pack_snapshot(state, tenants, epoch,
+                             map_version=map_version)
         self._store.set_bytes(f"gossip/{self._host}/{epoch}", blob)
         # pointer flips LAST — readers never chase a half-written blob
         self._store.set(f"gossip/{self._host}/latest", str(epoch))
+        self._store.set(f"gossip/{self._host}/fence",
+                        f"{int(map_version)}:{int(epoch)}")
         self._store.delete(f"gossip/{self._host}/{epoch - self._keep}")
         self.published_bytes += len(blob)
         self.published_epochs += 1
         return len(blob)
 
-    def latest(self, host: str) -> tuple[int, dict[int, AceState]] | None:
-        """The newest intact snapshot a peer published, or None.  A
-        corrupt newest blob falls back to the previous kept epoch —
-        same newest-intact-first discipline as ``restore_latest``."""
+    def latest(self, host: str) \
+            -> tuple[int, dict[int, AceState], int] | None:
+        """The newest intact NON-STALE snapshot a peer published, or
+        None.  A corrupt newest blob falls back to the previous kept
+        epoch — same newest-intact-first discipline as
+        ``restore_latest``; a blob stamped with a map version below the
+        host's fence is refused the same way (it can only exist through
+        a write race with a stale publisher)."""
         ptr = self._store.get(f"gossip/{host}/latest")
         if ptr is None:
             return None
+        fence_ver = self._fence(host)[0]
         epoch = int(ptr)
         for e in range(epoch, epoch - self._keep, -1):
             blob = self._store.get_bytes(f"gossip/{host}/{e}")
             if blob is None:
                 continue
             try:
-                return unpack_snapshot(blob)
+                got = unpack_snapshot(blob)
             except SnapshotCorrupt:
                 continue
+            if got[2] < fence_ver:
+                continue
+            return got
         return None

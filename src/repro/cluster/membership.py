@@ -40,7 +40,15 @@ class MembershipConfig:
 
 class HeartbeatWriter:
     """Bumps ``hb/<host>`` at most once per interval (cheap to call
-    every chunk — the hot loop never needs its own timer)."""
+    every chunk — the hot loop never needs its own timer).
+
+    The written value is ``"seq:map_version"`` — the shard-map regime
+    the writer currently believes in rides every beat, so the detector
+    can refuse to count liveness from a host revived with a STALE map
+    (a rewound zombie's beats would otherwise look like fresh change).
+    ``version`` is owned by the node and updated whenever it applies a
+    newer map; until the zombie catches up to the current map its
+    beats do not reset anyone's failure timer."""
 
     def __init__(self, store, host: str, cfg: MembershipConfig,
                  clock=time.monotonic):
@@ -50,10 +58,11 @@ class HeartbeatWriter:
         self._clock = clock
         self._seq = 0
         self._last = None
+        self.version = 0          # current shard-map version (fencing)
 
     def beat(self) -> None:
         self._seq += 1
-        self._store.set(self._key, str(self._seq))
+        self._store.set(self._key, f"{self._seq}:{int(self.version)}")
         self._last = self._clock()
 
     def maybe_beat(self) -> bool:
@@ -77,8 +86,23 @@ class FailureDetector:
         self._store = store
         self._cfg = cfg
         self._clock = clock
-        # host -> (last_value | None, local time of last change/first ask)
-        self._seen: dict[str, tuple[str | None, float]] = {}
+        # host -> (last_value | None, local time of last change/first
+        #          ask, highest map_version ever seen from the host)
+        self._seen: dict[str, tuple[str | None, float, int]] = {}
+
+    @staticmethod
+    def _version_of(value) -> int:
+        """map_version carried by a heartbeat value; legacy bare-seq
+        beats (no ':') and unreadable values count as version 0."""
+        if value is None:
+            return 0
+        _, sep, ver = str(value).partition(":")
+        if not sep:
+            return 0
+        try:
+            return int(ver)
+        except ValueError:
+            return 0
 
     def poll(self, hosts) -> list[str]:
         now = self._clock()
@@ -86,10 +110,21 @@ class FailureDetector:
         for host in hosts:
             value = self._store.get(f"hb/{host}")
             prev = self._seen.get(host)
-            if prev is None or value != prev[0]:
-                self._seen[host] = (value, now)
+            if prev is None:
+                self._seen[host] = (value, now, self._version_of(value))
                 continue
-            if now - prev[1] > self._cfg.failure_timeout:
+            pval, ptime, pver = prev
+            if value != pval:
+                ver = self._version_of(value)
+                if ver >= pver:
+                    self._seen[host] = (value, now, ver)
+                    continue
+                # STALE-VERSION beat (revived zombie with an old map):
+                # record the value so repeats don't look like change,
+                # but do NOT reset the failure clock — the host is not
+                # live in any regime that matters until it catches up.
+                self._seen[host] = (value, ptime, pver)
+            if now - self._seen[host][1] > self._cfg.failure_timeout:
                 dead.append(host)
         return dead
 

@@ -113,6 +113,7 @@ class ClusterNode:
         self._mask = jnp.asarray(self.map.tenant_mask(cfg.host_id))
         self.heartbeat = HeartbeatWriter(store, cfg.host_id,
                                          cfg.membership, clock)
+        self.heartbeat.version = self.map.version
         self.detector = FailureDetector(store, cfg.membership, clock)
         self.gossip = GossipBus(store, cfg.host_id, keep=cfg.gossip_keep)
         self.chunk_idx = 0
@@ -164,11 +165,13 @@ class ClusterNode:
     def _epoch_boundary(self) -> None:
         self.epoch += 1
         host_state = jax.device_get(self.state)
-        self.gossip.publish(self.epoch, host_state, self.owned())
+        self.gossip.publish(self.epoch, host_state, self.owned(),
+                            map_version=self.map.version)
         if (self.cfg.ckpt_root
                 and self.epoch % self.cfg.ckpt_every_epochs == 0):
             ckpt.save(self._ckpt_dir(self.cfg.host_id), self.epoch,
-                      self.state, keep=self.cfg.ckpt_keep)
+                      self.state, keep=self.cfg.ckpt_keep,
+                      extra={"map_version": self.map.version})
 
     # -- control plane -----------------------------------------------------
 
@@ -243,6 +246,8 @@ class ClusterNode:
         prev = self.map
         old_owned = set(prev.owned_by(self.cfg.host_id))
         self.map = m
+        self.heartbeat.version = m.version   # beats now carry the new
+        #                                      regime (version fencing)
         for host in set(prev.hosts) - set(m.hosts):
             self.detector.forget(host)
         gained = sorted(set(self.owned()) - old_owned)
@@ -260,11 +265,15 @@ class ClusterNode:
     def _adopt(self, tenants, prev_host: str) -> None:
         """Install ``tenants``' sketches from ``prev_host``'s last
         gossiped snapshot and/or newest intact checkpoint — per tenant,
-        the intact candidate that has absorbed the most stream (max n)
-        wins; candidates failing ``resilience.health_check`` are
-        refused (never merged, never installed).  With no intact
-        candidate the tenant cold-starts (zero row + fresh warmup) —
-        degraded, still serving."""
+        the intact candidate from the NEWEST shard-map regime wins, ties
+        broken by most stream absorbed (max n); candidates failing
+        ``resilience.health_check`` are refused (never merged, never
+        installed).  Version outranks n deliberately: a stale revived
+        host can carry a LARGER n from a divergent zombie timeline, so
+        volume is not a fencing token — the map version is (the zombie
+        can only hold an old one).  With no intact candidate the tenant
+        cold-starts (zero row + fresh warmup) — degraded, still
+        serving."""
         snap = self.gossip.latest(prev_host)
         peer_ckpt = self._restore_peer_ckpt(prev_host)
         for t in tenants:
@@ -272,16 +281,16 @@ class ClusterNode:
             if snap is not None and t in snap[1]:
                 ace = snap[1][t]
                 if snapshot_healthy(ace):
-                    cands.append(("gossip", snap[0], ace))
+                    cands.append(("gossip", snap[0], ace, snap[2]))
             if peer_ckpt is not None:
-                epoch, fleet = peer_ckpt
+                epoch, fleet, ver = peer_ckpt
                 ace = AceState(counts=np.asarray(fleet.counts[t]),
                                n=np.float32(fleet.n[t]),
                                welford_mean=np.float32(
                                    fleet.welford_mean[t]),
                                welford_m2=np.float32(fleet.welford_m2[t]))
                 if snapshot_healthy(ace):
-                    cands.append(("checkpoint", epoch, ace))
+                    cands.append(("checkpoint", epoch, ace, ver))
             record = {"tenant": t, "from_host": prev_host,
                       "at_epoch": self.epoch, "at_chunk": self.chunk_idx,
                       "map_version": self.map.version}
@@ -289,8 +298,8 @@ class ClusterNode:
                 self.adoptions.append({**record, "source": "cold",
                                        "source_epoch": None, "n": 0.0})
                 continue
-            source, src_epoch, ace = max(cands,
-                                         key=lambda c: float(c[2].n))
+            source, src_epoch, ace, _ = max(
+                cands, key=lambda c: (int(c[3]), float(c[2].n)))
             self.state = fl.set_tenant(self.state, t, AceState(
                 counts=jnp.asarray(ace.counts).astype(
                     self.state.counts.dtype),
@@ -302,11 +311,12 @@ class ClusterNode:
                                    "n": float(ace.n)})
 
     def _restore_peer_ckpt(self, host: str):
-        """(epoch, host-side FleetState) from ``host``'s newest INTACT
-        checkpoint (PR 7's CRC path: torn/flipped steps are skipped,
-        numeric step order — satellite-fixed — picks true-newest), or
-        None.  Checkpoints live on a shared filesystem root; a
-        deployment without one simply leans on gossip alone."""
+        """(epoch, host-side FleetState, map_version) from ``host``'s
+        newest INTACT checkpoint (PR 7's CRC path: torn/flipped steps
+        are skipped, numeric step order — satellite-fixed — picks
+        true-newest), or None.  Checkpoints live on a shared filesystem
+        root; a deployment without one simply leans on gossip alone.
+        Pre-fencing checkpoints carry map_version 0 (sort oldest)."""
         if not self.cfg.ckpt_root:
             return None
         mgr = ckpt.CheckpointManager(self._ckpt_dir(host),
@@ -315,7 +325,8 @@ class ClusterNode:
         tree, manifest = mgr.restore_latest(like)
         if tree is None:
             return None
-        return int(manifest["step"]), jax.device_get(tree)
+        ver = int((manifest.get("extra") or {}).get("map_version", 0))
+        return int(manifest["step"]), jax.device_get(tree), ver
 
     def _ckpt_dir(self, host: str) -> str:
         import os

@@ -49,6 +49,12 @@ class AceState(NamedTuple):
             When present, ``counts`` stores ``min(count, dtype max)`` and
             the exact logical count of a promoted bucket is
             ``counts + esc`` (see repro.core.quantize).
+    qhist:  (repro.quantile.NUM_BINS,) float32 collision-rate histogram
+            for ``threshold_mode="quantile"`` admission, or None (the
+            default — μ−ασ sketches carry no extra leaves, same contract
+            as ``esc``).  Observed by the admit entry points, not the
+            insert primitives (see repro.quantile.sketch for why the
+            observe mask differs from the admit mask).
     """
 
     counts: jax.Array
@@ -56,6 +62,7 @@ class AceState(NamedTuple):
     welford_mean: jax.Array   # streaming mean of RATES score/n (stationary)
     welford_m2: jax.Array
     esc: Optional[qz.EscTable] = None
+    qhist: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,7 +297,8 @@ def insert_buckets(state: AceState, buckets: jax.Array,
         cfg.welford_min_n)
 
     return AceState(counts=new_counts, n=tot,
-                    welford_mean=new_mean, welford_m2=new_m2, esc=new_esc)
+                    welford_mean=new_mean, welford_m2=new_m2, esc=new_esc,
+                    qhist=state.qhist)
 
 
 def masked_batch_welford(state: AceState, scores: jax.Array,
@@ -369,7 +377,8 @@ def insert_buckets_masked(state: AceState, buckets: jax.Array,
     tot, new_mean, new_m2 = masked_batch_welford(
         state, scores, mask.astype(jnp.float32), cfg.welford_min_n)
     return AceState(counts=new_counts, n=tot,
-                    welford_mean=new_mean, welford_m2=new_m2, esc=new_esc)
+                    welford_mean=new_mean, welford_m2=new_m2, esc=new_esc,
+                    qhist=state.qhist)
 
 
 def delete_buckets(state: AceState, buckets: jax.Array,
@@ -409,6 +418,7 @@ def merge(a: AceState, b: AceState) -> AceState:
     logical planes, add, and requantize (narrow + fresh escalation
     table).  Excess that no longer fits the escalation capacity is
     accumulated into ``lost`` (plus both inputs' prior losses).
+    Quantile histograms merge by exact addition (CRDT, like counts).
     """
     delta = b.welford_mean - a.welford_mean
     tot = a.n + b.n
@@ -427,12 +437,17 @@ def merge(a: AceState, b: AceState) -> AceState:
         esc = esc._replace(lost=esc.lost + a.esc.lost + b.esc.lost)
     else:
         counts, esc = a.counts + b.counts, None
+    if (a.qhist is None) != (b.qhist is None):
+        raise ValueError("cannot merge a quantile-tracking sketch with a "
+                         "non-tracking one")
+    qhist = None if a.qhist is None else a.qhist + b.qhist
     return AceState(
         counts=counts,
         n=tot,
         welford_mean=a.welford_mean + delta * b.n / safe,
         welford_m2=a.welford_m2 + b.welford_m2 + delta**2 * a.n * b.n / safe,
         esc=esc,
+        qhist=qhist,
     )
 
 
@@ -502,21 +517,43 @@ def sigma_welford(state: AceState) -> jax.Array:
 
 def admit_threshold(state: AceState, alpha: float,
                     warmup_items: float,
-                    table_mask: jax.Array | None = None) -> jax.Array:
+                    table_mask: jax.Array | None = None,
+                    threshold_mode: str = "mu_sigma",
+                    q: float = 0.01) -> jax.Array:
     """Score-space admission threshold: admit iff  score >= threshold.
 
-    The μ−ασ rule lives in rate space (rate = score/n); multiplying both
-    sides by max(n, 1) > 0 moves it to score space so the decision is a
-    single compare against ONE device scalar — which is what the fused
-    admit kernel consumes.  During warmup (n < warmup_items) the
-    threshold is −inf: everything is admitted.  Pure device scalar ops —
-    no host sync.
+    Two modes, dispatched at trace time (``threshold_mode`` is a Python
+    string, so each mode is its own cached executable and the default
+    μ−ασ program is byte-identical to before the mode existed):
 
-    ``table_mask`` keeps the threshold consistent with masked scores:
-    masked μ over the same healthy subset the scores average over (the
-    Welford σ stream is a scalar over batch means — table-independent,
-    so it needs no masking).
+    * ``"mu_sigma"`` — the μ−ασ rule in rate space (rate = score/n);
+      multiplying both sides by max(n, 1) > 0 moves it to score space so
+      the decision is a single compare against ONE device scalar — which
+      is what the fused admit kernel consumes.
+    * ``"quantile"`` — flag the worst q%: the q-quantile of the
+      collision-rate histogram ``state.qhist`` (repro.quantile), moved
+      to score space by the same max(n, 1) multiply — still ONE device
+      scalar, so the kernels never change.  Calibrated for heavy-tailed
+      traffic where a single α miscalibrates FPR.
+
+    During warmup (n < warmup_items) the threshold is −inf: everything
+    is admitted.  Pure device scalar ops — no host sync.
+
+    ``table_mask`` keeps the μ−ασ threshold consistent with masked
+    scores: masked μ over the same healthy subset the scores average
+    over (the Welford σ stream is a scalar over batch means —
+    table-independent, so it needs no masking; the quantile histogram
+    aggregates over the table MEAN, also table-independent).
     """
+    if threshold_mode == "quantile":
+        from repro.quantile import sketch as qsk
+        if state.qhist is None:
+            raise ValueError("threshold_mode='quantile' needs a sketch "
+                             "with an attached qhist leaf "
+                             "(see repro.quantile.sketch.init_hist)")
+        return qsk.quantile_threshold(state.qhist, state.n, q, warmup_items)
+    if threshold_mode != "mu_sigma":
+        raise ValueError(f"unknown threshold_mode {threshold_mode!r}")
     t = (mean_rate(state, table_mask=table_mask)
          - alpha * sigma_welford(state)) * jnp.maximum(state.n, 1.0)
     return jnp.where(state.n >= warmup_items, t, -jnp.inf)

@@ -118,6 +118,13 @@ class AceDataFilter:
                                  # table and its gather bandwidth 2–4×
     esc_capacity: int = 0        # > 0: exact overflow promotion
                                  # (repro.core.quantize)
+    threshold_mode: str = "mu_sigma"   # "mu_sigma" | "quantile" — admit
+                                 # rule (repro.quantile); quantile mode
+                                 # targets a per-stream false-positive
+                                 # RATE q instead of a σ-multiple, which
+                                 # μ−ασ cannot hold on heavy-tailed
+                                 # score distributions
+    quantile_q: float = 0.01     # target flag rate for quantile mode
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -129,7 +136,11 @@ class AceDataFilter:
                          esc_capacity=self.esc_capacity)
 
     def init(self):
-        return sk.init(self.ace_cfg), sk.make_params(self.ace_cfg)
+        state = sk.init(self.ace_cfg)
+        if self.threshold_mode == "quantile":
+            from repro.quantile import sketch as qsk
+            state = state._replace(qhist=qsk.init_hist())
+        return state, sk.make_params(self.ace_cfg)
 
     def features(self, embeds: jax.Array) -> jax.Array:
         """(B, S, D) token/patch/frame embeddings -> (B, D+1) features
@@ -181,11 +192,24 @@ class AceDataFilter:
         scores = sk.lookup(state, buckets,             # same bucket ids
                            table_mask=table_mask)
         thresh = sk.admit_threshold(state, self.alpha, self.warmup_items,
-                                    table_mask=table_mask)
+                                    table_mask=table_mask,
+                                    threshold_mode=self.threshold_mode,
+                                    q=self.quantile_q)
         keep = jnp.logical_and(scores >= thresh, finite)
         margin = jnp.where(finite, scores - thresh, -jnp.inf)
         ins = finite if self.insert_all else keep
         new_state = sk.insert_buckets_masked(state, buckets, ins, cfg)
+        if self.threshold_mode == "quantile":
+            # Calibration stream: EVERY finite-scored item feeds the rate
+            # histogram — observing only admitted items would freeze the
+            # rejected tail out of the empirical CDF and the Q_q threshold
+            # would self-reinforce upward (classic quantile-feedback bug).
+            from repro.quantile import sketch as qsk
+            rates = scores / jnp.maximum(state.n, 1.0)
+            new_state = new_state._replace(qhist=qsk.observe_rates(
+                new_state.qhist, rates,
+                qsk.calib_mask(finite.astype(jnp.float32), state.n,
+                               self.warmup_items)))
         return new_state, keep, margin
 
     def __call__(self, state, w, embeds, mask):

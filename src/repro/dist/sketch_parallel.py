@@ -452,13 +452,18 @@ def table_sharded_mean_mu(mesh, cfg: AceConfig, state: AceState,
 
 
 def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
-                         table_axis: str = "model") -> AceState:
+                         table_axis: str = "model",
+                         quantile: bool = False) -> AceState:
     """NamedSharding pytree for a named sketch layout (validated).
 
     The one place the "replicated"/"table_sharded" layout names resolve
     to placements — the guardrail, the stream runner, and any other
     stateful host wrapper share it instead of re-growing the same
-    if/elif (+ divisibility validation) each."""
+    if/elif (+ divisibility validation) each.  ``quantile=True`` states
+    carry the (NUM_BINS,) rate histogram leaf; it is tiny and read as a
+    whole by the quantile threshold, so it replicates under every
+    layout (the sharding tree must mirror the state tree — a None here
+    against a present ``qhist`` leaf is a placement error)."""
     if layout == "table_sharded":
         if cfg.esc_capacity > 0:
             raise NotImplementedError(
@@ -466,20 +471,24 @@ def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
                 "replicated layout; the table-sharded flat offsets do "
                 "not carry the escalation table")
         table_shard_info(cfg, mesh, table_axis)
-        return table_sharded_shardings(mesh, table_axis)
-    if layout == "replicated":
+        tree = table_sharded_shardings(mesh, table_axis)
+    elif layout == "replicated":
         tree = sketch_shardings(mesh)
         if cfg.esc_capacity > 0:
             from repro.core.quantize import EscTable
             rep = NamedSharding(mesh, P())
             tree = tree._replace(esc=EscTable(rep, rep, rep))
-        return tree
-    raise ValueError(f"unknown sketch layout {layout!r} "
-                     "(want 'replicated' or 'table_sharded')")
+    else:
+        raise ValueError(f"unknown sketch layout {layout!r} "
+                         "(want 'replicated' or 'table_sharded')")
+    if quantile:
+        tree = tree._replace(qhist=NamedSharding(mesh, P()))
+    return tree
 
 
 def window_shardings_for_layout(cfg: AceConfig, mesh, num_epochs: int,
-                                layout: str, table_axis: str = "model"):
+                                layout: str, table_axis: str = "model",
+                                quantile: bool = False):
     """NamedSharding pytree for an epoch-ring ``WindowedAceState``.
 
     The window analogue of ``shardings_for_layout`` (same validated
@@ -499,13 +508,19 @@ def window_shardings_for_layout(cfg: AceConfig, mesh, num_epochs: int,
     elif layout != "replicated":
         raise ValueError(f"unknown sketch layout {layout!r} "
                          "(want 'replicated' or 'table_sharded')")
-    return WindowedAceState(*(NamedSharding(mesh, ps)
+    tree = WindowedAceState(*(NamedSharding(mesh, ps)
                               for ps in window_pspecs(layout, table_axis)))
+    if quantile:
+        # (E, NUM_BINS) per-epoch rate histograms: tiny, combined by a
+        # full-ring weighted sum at threshold time — replicate.
+        tree = tree._replace(qhist=NamedSharding(mesh, P()))
+    return tree
 
 
 def fleet_shardings_for_layout(cfg: AceConfig, mesh, num_tenants: int,
                                layout: str, table_axis: str = "model",
-                               tenant_axis: str = "data"):
+                               tenant_axis: str = "data",
+                               quantile: bool = False):
     """NamedSharding pytree for a multi-tenant ``FleetState`` (validated).
 
     The fleet analogue of ``shardings_for_layout``: resolves the four
@@ -534,7 +549,16 @@ def fleet_shardings_for_layout(cfg: AceConfig, mesh, num_tenants: int,
                 "replicated)")
     if layout in ("table_sharded", "tenant_table_sharded"):
         table_shard_info(cfg, mesh, table_axis)
-    return FleetState(*(NamedSharding(mesh, ps) for ps in specs))
+    tree = FleetState(*(NamedSharding(mesh, ps) for ps in specs))
+    if quantile:
+        # (T, NUM_BINS) per-tenant rate histograms follow the (T,) stat
+        # vectors: tenant axis shards every leaf under the tenant
+        # layouts (tenants never couple), replicated otherwise.
+        qspec = (P(tenant_axis) if layout in ("tenant_sharded",
+                                              "tenant_table_sharded")
+                 else P())
+        tree = tree._replace(qhist=NamedSharding(mesh, qspec))
+    return tree
 
 
 def score_window_table_sharded(counts: jax.Array, weights: jax.Array,

@@ -49,6 +49,11 @@ class FleetDataFilter:
                                 # table is the dominant HBM resident at
                                 # production T — int16/int8 cut it 2–4×
                                 # (promotion stays flat-sketch only)
+    threshold_mode: str = "mu_sigma"   # "mu_sigma" | "quantile": quantile
+                                # mode holds each TENANT's flag rate at q
+                                # from its own rate histogram — per-tenant
+                                # calibration, like every fleet statistic
+    quantile_q: float = 0.01    # target per-tenant flag rate
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -66,7 +71,9 @@ class FleetDataFilter:
 
     def init(self):
         from repro.core import sketch as sk
-        return fl.init(self.fleet_cfg), sk.make_params(self.ace_cfg)
+        return (fl.init(self.fleet_cfg,
+                        quantile=self.threshold_mode == "quantile"),
+                sk.make_params(self.ace_cfg))
 
     def features(self, embeds: jax.Array) -> jax.Array:
         """(B, S, D) embeddings -> (B, D+1) unit-mean + bias features —
@@ -106,7 +113,8 @@ class FleetDataFilter:
                                  table_mask=table_mask)
         thresh = fl.admit_thresholds(
             state, self.alpha, self.warmup_items,
-            table_mask=table_mask)[tenant_ids]
+            table_mask=table_mask, threshold_mode=self.threshold_mode,
+            q=self.quantile_q)[tenant_ids]
         keep = jnp.logical_and(scores >= thresh, finite)
         margin = jnp.where(finite, scores - thresh, -jnp.inf)
         ins = finite if self.insert_all else keep
@@ -115,6 +123,15 @@ class FleetDataFilter:
             keep = jnp.logical_and(keep, owned)
             ins = jnp.logical_and(ins, owned)
         new_state = fl.insert_masked(state, tenant_ids, buckets, ins, cfg)
+        if self.threshold_mode == "quantile":
+            # every finite-scored item feeds its OWN tenant's rate
+            # histogram (not just admitted ones — see AceDataFilter.step)
+            from repro.quantile import sketch as qsk
+            rates = scores / jnp.maximum(state.n, 1.0)[tenant_ids]
+            new_state = new_state._replace(qhist=qsk.observe_rates_fleet(
+                new_state.qhist, rates, tenant_ids,
+                qsk.calib_mask(finite.astype(jnp.float32),
+                               state.n[tenant_ids], self.warmup_items)))
         return new_state, keep, margin
 
     def __call__(self, state, w, embeds, mask, tenant_ids):

@@ -49,7 +49,7 @@ jit/scan/donation-safe; the tenant axis never forces a host sync.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, NamedTuple
+from typing import Optional, Sequence, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +90,10 @@ class FleetState(NamedTuple):
     n: jax.Array             # (T,) float32
     welford_mean: jax.Array  # (T,) float32
     welford_m2: jax.Array    # (T,) float32
+    qhist: Optional[jax.Array] = None  # (T, quantile.NUM_BINS) float32
+    #                          per-tenant rate histograms for
+    #                          threshold_mode="quantile"; None (default)
+    #                          keeps every existing pytree contract
 
     @property
     def num_tenants(self) -> int:
@@ -128,8 +132,13 @@ class FleetConfig:
         return self.num_tenants * self.ace.memory_bytes()
 
 
-def init(cfg: FleetConfig) -> FleetState:
+def init(cfg: FleetConfig, quantile: bool = False) -> FleetState:
     ace = cfg.ace
+    if quantile:
+        from repro.quantile import sketch as qsk
+        qhist = qsk.init_hist(cfg.num_tenants)
+    else:
+        qhist = None
     return FleetState(
         counts=jnp.zeros(
             (cfg.num_tenants, ace.num_tables, ace.num_buckets),
@@ -137,6 +146,7 @@ def init(cfg: FleetConfig) -> FleetState:
         n=jnp.zeros((cfg.num_tenants,), jnp.float32),
         welford_mean=jnp.zeros((cfg.num_tenants,), jnp.float32),
         welford_m2=jnp.zeros((cfg.num_tenants,), jnp.float32),
+        qhist=qhist,
     )
 
 
@@ -144,16 +154,21 @@ def tenant_view(state: FleetState, t) -> AceState:
     """Tenant t's sketch as a plain ``AceState`` (static or traced t)."""
     return AceState(counts=state.counts[t], n=state.n[t],
                     welford_mean=state.welford_mean[t],
-                    welford_m2=state.welford_m2[t])
+                    welford_m2=state.welford_m2[t],
+                    qhist=None if state.qhist is None else state.qhist[t])
 
 
 def set_tenant(state: FleetState, t: int, ace: AceState) -> FleetState:
     """Write one tenant's sketch back into the fleet (static index)."""
+    qhist = state.qhist
+    if qhist is not None and ace.qhist is not None:
+        qhist = qhist.at[t].set(ace.qhist)
     return FleetState(
         counts=state.counts.at[t].set(ace.counts),
         n=state.n.at[t].set(ace.n),
         welford_mean=state.welford_mean.at[t].set(ace.welford_mean),
         welford_m2=state.welford_m2.at[t].set(ace.welford_m2),
+        qhist=qhist,
     )
 
 
@@ -192,22 +207,29 @@ def merge_fleet(a: FleetState, b: FleetState) -> FleetState:
     delta = b.welford_mean - a.welford_mean                    # (T,)
     tot = a.n + b.n
     safe = jnp.maximum(tot, 1.0)
+    if (a.qhist is None) != (b.qhist is None):
+        raise ValueError("cannot merge a quantile-tracking fleet with a "
+                         "non-tracking one")
     return FleetState(
         counts=counts,
         n=tot,
         welford_mean=a.welford_mean + delta * b.n / safe,
         welford_m2=(a.welford_m2 + b.welford_m2
                     + delta**2 * a.n * b.n / safe),
+        qhist=None if a.qhist is None else a.qhist + b.qhist,
     )
 
 
 def from_states(states: Sequence[AceState]) -> FleetState:
     """Stack existing single-tenant sketches into a fleet."""
+    qhists = [s.qhist for s in states]
     return FleetState(
         counts=jnp.stack([s.counts for s in states]),
         n=jnp.stack([s.n for s in states]),
         welford_mean=jnp.stack([s.welford_mean for s in states]),
         welford_m2=jnp.stack([s.welford_m2 for s in states]),
+        qhist=(jnp.stack(qhists)
+               if all(h is not None for h in qhists) else None),
     )
 
 
@@ -336,7 +358,8 @@ def insert_masked(state: FleetState, tenant_ids: jax.Array,
         state, tenant_ids, scores, mask.astype(jnp.float32),
         cfg.welford_min_n)
     return FleetState(counts=new_counts, n=tot,
-                      welford_mean=new_mean, welford_m2=new_m2)
+                      welford_mean=new_mean, welford_m2=new_m2,
+                      qhist=state.qhist)
 
 
 # ---------------------------------------------------------------------------
@@ -376,17 +399,33 @@ def sigma_welford_fleet(state: FleetState) -> jax.Array:
 
 def admit_thresholds(state: FleetState, alpha: float,
                      warmup_items: float,
-                     table_mask: jax.Array | None = None) -> jax.Array:
+                     table_mask: jax.Array | None = None,
+                     threshold_mode: str = "mu_sigma",
+                     q: float = 0.01) -> jax.Array:
     """(T,) per-tenant score-space admission thresholds.
 
     ``sketch.admit_threshold`` vectorised over the tenant axis — same
-    formula sequence (rate − ασ, moved to score space by max(n, 1),
-    −inf during each tenant's OWN warmup), so each component is bitwise
-    the single-tenant threshold.  Route to items with
+    formula sequence per mode (μ−ασ: rate − ασ moved to score space by
+    max(n, 1); quantile: each tenant's OWN q-quantile from its row of
+    ``state.qhist`` — THE heavy-tailed fleet fix, since one α
+    miscalibrates FPR across tenants with different score-distribution
+    shapes while the per-tenant quantile holds FPR ≈ q for every shape
+    — with −inf during each tenant's OWN warmup), so each component is
+    bitwise the single-tenant threshold.  Route to items with
     ``admit_thresholds(...)[tenant_ids]``.  ``table_mask`` (T, L) keeps
-    each tenant's threshold consistent with its masked scores (the σ
-    stream is per tenant but table-independent — no masking needed).
+    each tenant's μ−ασ threshold consistent with its masked scores (the
+    σ stream is per tenant but table-independent — no masking needed).
     """
+    if threshold_mode == "quantile":
+        from repro.quantile import sketch as qsk
+        if state.qhist is None:
+            raise ValueError("threshold_mode='quantile' needs a fleet "
+                             "initialised with quantile=True")
+        rates = jax.vmap(lambda h: qsk.hist_quantile(h, q))(state.qhist)
+        t = rates * jnp.maximum(state.n, 1.0)
+        return jnp.where(state.n >= warmup_items, t, -jnp.inf)
+    if threshold_mode != "mu_sigma":
+        raise ValueError(f"unknown threshold_mode {threshold_mode!r}")
     t = (mean_rate_fleet(state, table_mask=table_mask)
          - alpha * sigma_welford_fleet(state)) \
         * jnp.maximum(state.n, 1.0)

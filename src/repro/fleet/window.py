@@ -34,7 +34,7 @@ leaves tenant b bitwise untouched.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -57,6 +57,10 @@ class WindowedFleetState(NamedTuple):
     ssq: jax.Array           # (T,) float32
     cursor: jax.Array        # (T,) int32
     tick: jax.Array          # (T,) int32
+    qhist: Optional[jax.Array] = None  # (T, E, quantile.NUM_BINS) f32
+    #                          per-tenant per-epoch rate histograms for
+    #                          threshold_mode="quantile"; None (default)
+    #                          keeps every existing pytree contract
 
     @property
     def num_tenants(self) -> int:
@@ -67,29 +71,32 @@ class WindowedFleetState(NamedTuple):
         return self.counts.shape[1]
 
 
-def init_fleet_window(cfg: WindowConfig,
-                      num_tenants: int) -> WindowedFleetState:
+def init_fleet_window(cfg: WindowConfig, num_tenants: int,
+                      quantile: bool = False) -> WindowedFleetState:
     if num_tenants < 1:
         raise ValueError(f"num_tenants must be >= 1, got {num_tenants}")
     from repro.fleet.state import check_flat_addressable
     check_flat_addressable(num_tenants * cfg.num_epochs
                            * cfg.ace.num_tables, cfg.ace.num_buckets,
                            "init_fleet_window")
-    one = ring.init_window(cfg)
+    one = ring.init_window(cfg, quantile=quantile)
     return WindowedFleetState(*(
-        jnp.broadcast_to(leaf, (num_tenants,) + leaf.shape)
+        None if leaf is None
+        else jnp.broadcast_to(leaf, (num_tenants,) + leaf.shape)
         for leaf in one))
 
 
 def tenant_window_view(state: WindowedFleetState, t) -> WindowedAceState:
     """Tenant t's ring as a plain ``WindowedAceState`` (static/traced t)."""
-    return WindowedAceState(*(leaf[t] for leaf in state))
+    return WindowedAceState(*(
+        None if leaf is None else leaf[t] for leaf in state))
 
 
 def set_tenant_window(state: WindowedFleetState, t: int,
                       one: WindowedAceState) -> WindowedFleetState:
     return WindowedFleetState(*(
-        leaf.at[t].set(lf) for leaf, lf in zip(state, one)))
+        leaf if leaf is None else leaf.at[t].set(lf)
+        for leaf, lf in zip(state, one)))
 
 
 # ---------------------------------------------------------------------------
@@ -137,19 +144,40 @@ def window_fleet_scores(state: WindowedFleetState, tenant_ids: jax.Array,
 
 def window_admit_thresholds(state: WindowedFleetState, gamma: float,
                             alpha: float, warmup_items: float,
-                            table_mask: jax.Array | None = None
-                            ) -> jax.Array:
-    """(T,) per-tenant windowed μ−ασ thresholds —
+                            table_mask: jax.Array | None = None,
+                            threshold_mode: str = "mu_sigma",
+                            q: float = 0.01) -> jax.Array:
+    """(T,) per-tenant windowed admission thresholds —
     ``ring.admit_threshold_windowed`` vmapped over the tenant axis (the
-    per-tenant component is the identical elementwise formula).
+    per-tenant component is the identical elementwise formula; the
+    ``threshold_mode``/``q`` knobs dispatch inside it at trace time).
     ``table_mask`` (T, L) vmaps alongside the state so each tenant's
     threshold averages over its own healthy tables."""
     if table_mask is None:
         return jax.vmap(lambda s: ring.admit_threshold_windowed(
-            s, gamma, alpha, warmup_items))(WindowedAceState(*state))
+            s, gamma, alpha, warmup_items,
+            threshold_mode=threshold_mode, q=q))(WindowedAceState(*state))
     return jax.vmap(lambda s, m: ring.admit_threshold_windowed(
-        s, gamma, alpha, warmup_items, table_mask=m))(
+        s, gamma, alpha, warmup_items, table_mask=m,
+        threshold_mode=threshold_mode, q=q))(
         WindowedAceState(*state), table_mask)
+
+
+def observe_current_fleet(state: WindowedFleetState, rates: jax.Array,
+                          tenant_ids: jax.Array,
+                          maskf: jax.Array) -> WindowedFleetState:
+    """Fold a mixed-tenant batch of windowed rates into each item's
+    tenant's LIVE epoch histogram row — ONE flat scatter at
+    ``tid·E·NUM_BINS + cursor[tid]·NUM_BINS + bin`` (the same routing
+    trick as the live-epoch count scatter).  ``maskf`` is the OBSERVE
+    mask (finite rows), not the admit mask."""
+    from repro.quantile import sketch as qsk
+    T, E, nb = state.qhist.shape
+    offs = (tenant_ids.astype(jnp.int32) * (E * nb)
+            + state.cursor[tenant_ids] * nb + qsk.bin_index(rates))
+    flat = state.qhist.reshape(T * E * nb)
+    qhist = flat.at[offs].add(maskf.astype(jnp.float32)).reshape(T, E, nb)
+    return state._replace(qhist=qhist)
 
 
 # ---------------------------------------------------------------------------
@@ -256,35 +284,40 @@ def rotate_fleet(state: WindowedFleetState,
                  gamma: float = 1.0) -> WindowedFleetState:
     """Rotate EVERY tenant's ring once.
 
-    Fleet-native (NOT a vmapped ``ring.rotate``): vmap traces the body
-    into one XLA computation, where the tail update
-    ``γ·(tail + live − γ^{E−1}·expired)`` may fuse a multiply-subtract
-    into an FMA and drift the decayed tail by 1 ulp off the eager
-    single-ring op sequence — this version issues the IDENTICAL op
-    sequence on (T, ...)-leading arrays, keeping the fleet-of-1 and
-    per-tenant differential contracts bitwise.
+    Fleet-native (NOT a vmapped ``ring.rotate``), mirroring the flat
+    ring's tensordot-recompute tail fold: each tenant's tail is
+    recomputed from its updated ring as one per-tenant-weighted
+    contraction  tail'_t = Σ_e γ^age'_te · C'_te  — an einsum whose
+    batched dot_general lowers bitwise-identically to the single-ring
+    tensordot across eager/jit/cond/scan/vmap (verified empirically on
+    this backend; the old incremental γ·(tail + live − γ^{E−1}·expired)
+    fold FMA-drifted up to 1 ulp in traced contexts for γ<1, which
+    forced the windowed fleet contract tests to pin γ=1 — see
+    ``ring.rotate``).  Keeps the fleet-of-1 and per-tenant differential
+    contracts bitwise at EVERY γ.
     """
     T, E, L, nbuckets = state.counts.shape
     tidx = jnp.arange(T, dtype=jnp.int32)
     new_cursor = jnp.mod(state.cursor + 1, E)
-    live = state.counts[tidx, state.cursor]            # (T, L, 2^K)
-    expired = state.counts[tidx, new_cursor]
-    w_exp = jnp.float32(gamma) ** jnp.float32(E - 1)
-    # identical op sequence as ring.rotate — including its γ<1 caveat:
-    # traced contexts may FMA the subtract-of-product, so the decayed
-    # tail is bitwise only within one execution context (γ=1 is exact
-    # everywhere); see the comment there
-    tail = jnp.float32(gamma) * (
-        state.tail + live.astype(jnp.float32)
-        - w_exp * expired.astype(jnp.float32))
     rows = tidx * E + new_cursor                       # (T,)
     zero_slab = jnp.zeros((L, nbuckets), state.counts.dtype)
     counts = state.counts.reshape(T * E, L, nbuckets) \
         .at[rows].set(zero_slab).reshape(state.counts.shape)
+    # per-tenant epoch weights at the NEW cursor: (T, E); the zeroed
+    # new-live slab contributes nothing to the contraction
+    w = jax.vmap(lambda c: ring.epoch_weights(c, E, gamma))(new_cursor)
+    tail = jnp.einsum("te,telb->tlb", w, counts.astype(jnp.float32))
     zero = jnp.zeros((T,), jnp.float32)
 
     def clear(leaf):
         return leaf.reshape(T * E).at[rows].set(zero).reshape(T, E)
+
+    qhist = state.qhist
+    if qhist is not None:
+        nb = qhist.shape[2]
+        qhist = qhist.reshape(T * E, nb) \
+            .at[rows].set(jnp.zeros((nb,), jnp.float32)) \
+            .reshape(T, E, nb)
 
     return WindowedFleetState(
         counts=counts,
@@ -295,6 +328,7 @@ def rotate_fleet(state: WindowedFleetState,
         ssq=jnp.sum(tail * tail, axis=(1, 2)),
         cursor=new_cursor,
         tick=state.tick,
+        qhist=qhist,
     )
 
 
@@ -334,6 +368,9 @@ def maybe_rotate_fleet(state: WindowedFleetState, rotate_every: int,
                                  jnp.mod(state.tick, rotate_every) == 0))
     out = []
     for leaf_new, leaf_old in zip(rotated, state):
+        if leaf_old is None:
+            out.append(None)
+            continue
         sel = should.reshape((-1,) + (1,) * (leaf_old.ndim - 1))
         out.append(jnp.where(sel, leaf_new, leaf_old))
     return WindowedFleetState(*out)

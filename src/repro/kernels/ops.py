@@ -155,11 +155,28 @@ def ace_fleet_score(fstate, q: jax.Array, tenant_ids: jax.Array,
     return _fl.ace_fleet_score(fstate.counts, q, tenant_ids, w, cfg.srp)
 
 
+def _observe_maskf(scores: jax.Array, item_mask: jax.Array | None,
+                   n: jax.Array, warmup_items: float) -> jax.Array:
+    """Calibration mask for quantile-mode rate observation: every
+    finite-scored item (item_mask is the guardrail's finite mask; None
+    means the whole batch) — NOT just admitted ones, or the rejected
+    tail would freeze out of the histogram and the Q_q threshold would
+    self-reinforce — gated by the half-warmup cold-start floor
+    (``n`` is the pre-insert count the rates were normalized by; see
+    repro.quantile.sketch.calib_mask)."""
+    from repro.quantile import sketch as qsk
+    maskf = (jnp.ones(scores.shape, jnp.float32) if item_mask is None
+             else item_mask.astype(jnp.float32))
+    return qsk.calib_mask(maskf, n, warmup_items)
+
+
 def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
                     w: jax.Array, cfg: AceConfig, *, alpha: float,
                     warmup_items: float,
                     table_mask: jax.Array | None = None,
-                    item_mask: jax.Array | None = None):
+                    item_mask: jax.Array | None = None,
+                    threshold_mode: str = "mu_sigma",
+                    quantile_q: float = 0.01):
     """Kernel-path multi-tenant admission: ONE hash, no host syncs.
 
     The fleet analogue of ``ace_admit``: the single hash runs through
@@ -179,11 +196,20 @@ def ace_fleet_admit(fstate, q: jax.Array, tenant_ids: jax.Array,
     scores = _fls.fleet_scores(fstate, tenant_ids, buckets,
                                table_mask=table_mask)
     admit = scores >= _fls.admit_thresholds(
-        fstate, alpha, warmup_items, table_mask=table_mask)[tenant_ids]
+        fstate, alpha, warmup_items, table_mask=table_mask,
+        threshold_mode=threshold_mode,
+        q=quantile_q)[tenant_ids]
     if item_mask is not None:
         # quarantined rows neither admit nor insert
         admit = jnp.logical_and(admit, item_mask)
     new_state = _fls.insert_masked(fstate, tenant_ids, buckets, admit, cfg)
+    if threshold_mode == "quantile":
+        from repro.quantile import sketch as qsk
+        rates = scores / jnp.maximum(fstate.n, 1.0)[tenant_ids]
+        new_state = new_state._replace(qhist=qsk.observe_rates_fleet(
+            new_state.qhist, rates, tenant_ids,
+            _observe_maskf(scores, item_mask, fstate.n[tenant_ids],
+                           warmup_items)))
     return new_state, admit
 
 
@@ -192,7 +218,9 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
                            alpha: float, warmup_items: float,
                            rotate_every: int = 0,
                            table_mask: jax.Array | None = None,
-                           item_mask: jax.Array | None = None):
+                           item_mask: jax.Array | None = None,
+                           threshold_mode: str = "mu_sigma",
+                           quantile_q: float = 0.01):
     """Kernel-path fleet×window admission: ONE Pallas launch for the hot
     combination that used to cost a hash launch plus four jnp HBM passes.
 
@@ -209,8 +237,25 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
     from repro.fleet import window as fw
     from repro.kernels import ace_fleet_window_admit as _fwa
     from repro.window import ring
+    # quantile mode still hands the kernel ONE score-space scalar per
+    # tenant (thr_t) — the fused executable is byte-identical across
+    # threshold modes; only this jnp prologue (and the histogram
+    # observation below) differ between the cached programs
     thr_t = fw.window_admit_thresholds(state, gamma, alpha, warmup_items,
-                                       table_mask=table_mask)
+                                       table_mask=table_mask,
+                                       threshold_mode=threshold_mode,
+                                       q=quantile_q)
+
+    def _observe(new_state, scores):
+        # live-epoch rate observation, routed per tenant; MUST run
+        # before the rotation clocks (rotation retires the epoch row)
+        n_w = jax.vmap(lambda s: ring.combined_n(s, gamma))(
+            ring.WindowedAceState(*state))
+        rates = scores / jnp.maximum(n_w, 1.0)[tenant_ids]
+        return fw.observe_current_fleet(
+            new_state, rates, tenant_ids,
+            _observe_maskf(scores, item_mask, n_w[tenant_ids],
+                           warmup_items))
     if resolve_hash_mode(cfg.srp) == "srht" or table_mask is not None:
         # SRHT hash, or a degraded fleet: one kernel hash, the rest of
         # the admission through the shared jnp helpers.  The masked path
@@ -231,6 +276,8 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
         new_state = fw.insert_current_fleet(
             state, tenant_ids, buckets, admit, cfg, gamma=gamma,
             pre_sums=pre)
+        if threshold_mode == "quantile":
+            new_state = _observe(new_state, scores)
         new_state = fw.maybe_rotate_fleet(new_state, rotate_every, gamma,
                                           tenant_ids=tenant_ids)
         return new_state, admit
@@ -253,6 +300,8 @@ def ace_fleet_window_admit(state, q: jax.Array, tenant_ids: jax.Array,
     new_state = fw._apply_insert_stats(
         state, new_ring, tenant_ids, admit, cfg, gamma,
         tail_sums, live_pre, live_post)
+    if threshold_mode == "quantile":
+        new_state = _observe(new_state, _scores)
     new_state = fw.maybe_rotate_fleet(new_state, rotate_every, gamma,
                                       tenant_ids=tenant_ids)
     return new_state, admit
@@ -286,7 +335,9 @@ def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
                        *, gamma: float, alpha: float, warmup_items: float,
                        rotate_every: int = 0,
                        table_mask: jax.Array | None = None,
-                       item_mask: jax.Array | None = None):
+                       item_mask: jax.Array | None = None,
+                       threshold_mode: str = "mu_sigma",
+                       quantile_q: float = 0.01):
     """Kernel-path windowed admission: ONE hash, no host syncs.
 
     The windowed analogue of ``ace_admit``: the single hash runs through
@@ -315,12 +366,21 @@ def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
         scores = ring.score_live(mt, ml, cfg.num_tables,
                                  table_mask=table_mask)
     admit = scores >= ring.admit_threshold_windowed(
-        wstate, gamma, alpha, warmup_items, table_mask=table_mask)
+        wstate, gamma, alpha, warmup_items, table_mask=table_mask,
+        threshold_mode=threshold_mode, q=quantile_q)
     if item_mask is not None:
         admit = jnp.logical_and(admit, item_mask)
     new_state = ring.insert_current(wstate, buckets, admit, cfg,
                                     gamma=gamma,
                                     pre_sums=(tail_sums, live_sums))
+    if threshold_mode == "quantile":
+        # observe BEFORE the clock ticks — rotation retires the live
+        # epoch's histogram row along with its counts
+        n_w = ring.combined_n(wstate, gamma)
+        rates = scores / jnp.maximum(n_w, 1.0)
+        new_state = ring.observe_current(
+            new_state, rates,
+            _observe_maskf(scores, item_mask, n_w, warmup_items))
     new_state = ring.maybe_rotate(new_state, rotate_every, gamma)
     return new_state, admit
 
@@ -328,7 +388,9 @@ def ace_admit_windowed(wstate, q: jax.Array, w: jax.Array, cfg: AceConfig,
 def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
               *, alpha: float, warmup_items: float,
               table_mask: jax.Array | None = None,
-              item_mask: jax.Array | None = None):
+              item_mask: jax.Array | None = None,
+              threshold_mode: str = "mu_sigma",
+              quantile_q: float = 0.01):
     """Fused guardrail admission: ONE hash, no host syncs.
 
     The μ−ασ threshold is computed on-device from the state scalars
@@ -339,8 +401,20 @@ def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
     helpers.  Both fold the Welford stream from the one set of bucket
     ids — no re-hash.  Returns (new_state, admit_mask (B,) bool).
     """
+    # quantile mode still hands the fused kernel ONE score-space device
+    # scalar — the kernel program is byte-identical across modes
     thresh = _sk.admit_threshold(state, alpha, warmup_items,
-                                 table_mask=table_mask)
+                                 table_mask=table_mask,
+                                 threshold_mode=threshold_mode,
+                                 q=quantile_q)
+
+    def _observe(new_state, scores):
+        from repro.quantile import sketch as qsk
+        rates = scores / jnp.maximum(state.n, 1.0)
+        return new_state._replace(qhist=qsk.observe_rates(
+            new_state.qhist, rates,
+            _observe_maskf(scores, item_mask, state.n, warmup_items)))
+
     if (resolve_hash_mode(cfg.srp) == "srht" or state.esc is not None
             or table_mask is not None):
         # SRHT hash kernel, a quantized plane (whose saturating scatter
@@ -353,6 +427,8 @@ def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
         if item_mask is not None:
             admit = jnp.logical_and(admit, item_mask)
         new_state = _sk.insert_buckets_masked(state, buckets, admit, cfg)
+        if threshold_mode == "quantile":
+            new_state = _observe(new_state, scores)
         return new_state, admit
 
     new_counts, _scores, admit, buckets = _a.ace_admit_fused(
@@ -365,5 +441,8 @@ def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
     tot, new_mean, new_m2 = _sk.masked_batch_welford(
         state, post, admit.astype(jnp.float32), cfg.welford_min_n)
     new_state = AceState(counts=new_counts, n=tot,
-                         welford_mean=new_mean, welford_m2=new_m2)
+                         welford_mean=new_mean, welford_m2=new_m2,
+                         esc=state.esc, qhist=state.qhist)
+    if threshold_mode == "quantile":
+        new_state = _observe(new_state, _scores)
     return new_state, admit

@@ -1,0 +1,13 @@
+"""Quantile-calibrated admission: streaming quantile sketches over
+collision rates + Compressed-Counting frequency-moment drift statistics.
+
+See :mod:`repro.quantile.sketch` for the fixed-shape histogram quantile
+sketch (the ``threshold_mode="quantile"`` backend of every admit path)
+and :mod:`repro.quantile.moments` for the α-th frequency-moment skew
+index surfaced in the stream summaries.
+"""
+from repro.quantile.moments import falpha_index  # noqa: F401
+from repro.quantile.sketch import (  # noqa: F401
+    NUM_BINS, RATE_MIN, bin_edges, bin_index, hist_quantile, init_hist,
+    merge_hists, observe_rates, observe_rates_fleet,
+    quantile_threshold)

@@ -1,0 +1,56 @@
+"""α-th frequency-moment skew index over the ACE count planes.
+
+Compressed Counting (Ping Li, arXiv 1205.2632) shows the α-th frequency
+moment  F_α = Σ_b A[b]^α  for α near 1 is a far sharper detector of
+distribution skew/drift than second-moment statistics: dF_α/dα at α=1
+is the (negative) entropy of the bucket distribution, so small moves of
+α around 1 read out entropy-like concentration changes that a variance
+(our Welford σ stream) smears.  CC itself estimates F_α from
+skewed-stable projections when the frequency vector cannot be stored —
+here each ACE table IS a materialized 2^K-bucket frequency vector of
+the (hashed) stream, so we compute F_α directly per table and average
+the L independent tables, which is the zero-variance limit of the CC
+estimator on this representation.
+
+The surfaced statistic is the scale-free NORMALIZED index
+
+    I_α = mean_j  F_α(A_j) / (n^α · m^{1−α}),     m = 2^K
+
+which is exactly 1 for a perfectly uniform plane (every bucket n/m) and
+grows with concentration (all mass in one bucket gives m^{α−1} ≫ 1 for
+α > 1).  Dividing out n^α makes it stationary across stream growth —
+the same trick as scoring in rate space — so a moving I_α is a drift
+signal, not a volume signal.  It is computed once per stream chunk
+(O(L·2^K), never on the per-item path) and surfaced as ``falpha`` in
+``ChunkSummary``/``FleetChunkSummary``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def falpha_index(counts: jax.Array, n: jax.Array,
+                 alpha: float = 1.25,
+                 table_mask: jax.Array | None = None) -> jax.Array:
+    """Normalized α-th frequency-moment index of count planes.
+
+    ``counts`` is (..., L, M) (flat: (L, M); fleet: (T, L, M); any
+    float-convertible dtype — quantized planes pass their densified
+    view), ``n`` broadcasts against the leading axes.  Returns (...,)
+    float32.  Negative counters (corruption) clamp to 0 so the
+    fractional power is defined; ``table_mask`` (L,) restricts the
+    table mean to healthy planes (the repro.resilience convention —
+    ``None`` keeps the healthy program untouched).
+    """
+    c = jnp.maximum(counts.astype(jnp.float32), 0.0)
+    m = c.shape[-1]
+    f_alpha = jnp.sum(c ** jnp.float32(alpha), axis=-1)       # (..., L)
+    denom = (jnp.maximum(jnp.asarray(n, jnp.float32), 1.0) ** alpha
+             * jnp.float32(m ** (1.0 - alpha)))
+    per_table = f_alpha / denom[..., None]
+    if table_mask is None:
+        return jnp.mean(per_table, axis=-1)
+    maskf = table_mask.astype(jnp.float32)        # (L,) or (T, L)
+    nh = jnp.maximum(jnp.sum(maskf, axis=-1), 1.0)
+    return jnp.sum(per_table * maskf, axis=-1) / nh

@@ -1,0 +1,176 @@
+"""Fixed-shape streaming quantile sketch over collision rates.
+
+The μ−ασ admission rule assumes roughly Gaussian per-tenant score
+distributions; heavy-tailed real traffic miscalibrates FPR across
+tenants (a single α over-flags the light-tailed tenants and
+under-flags the heavy-tailed ones).  This module gives the direct
+"flag the worst q%" semantics instead: a per-tenant per-epoch
+histogram of observed collision RATES (score/n ∈ [0, 1] — the same
+stationary quantity the Welford σ stream folds), from which the
+q-quantile is read as an interpolated inverse CDF and moved to score
+space by one multiply — so the fused admit kernels keep consuming ONE
+score-space device scalar per tenant and never change.
+
+Design constraints (why a log-binned additive histogram and not P²/KLL
+proper):
+
+* **Fixed shape, donation-safe**: the state is one ``(NUM_BINS,)``
+  float32 vector per tenant per epoch; insertion is a single masked
+  scatter-add per batch; no data-dependent host control flow anywhere —
+  it rides the same donated ``lax.scan`` as the count planes.  P² is
+  inherently sequential per item (scan-hostile); KLL compactions are
+  data-dependent.
+* **Exact mergeability**: merge = elementwise addition, which is
+  commutative/associative (exactly so for the unit-weight integer-valued
+  histograms the streams build, f32 being exact below 2^24) and composes
+  with the window ring's γ-decay: the combined-window histogram is the
+  γ^age-weighted sum of the per-epoch histograms — the same
+  ``epoch_weights`` tensordot the decayed count view uses.  Rotation
+  resets one epoch's histogram row; nothing else moves.
+* **Resolution where anomalies live**: rates concentrate near 0 for
+  rare items, so bins 1..NUM_BINS−2 are geometric over
+  [RATE_MIN, 1) (relative value error ≤ ratio−1 ≈ 11.6% per bin at the
+  default 128 bins), bin 0 is the underflow bin [0, RATE_MIN) and the
+  last bin catches rate ≥ 1.  The returned quantile is within one bin
+  of the exact empirical quantile — the rank of the estimate's bin
+  brackets the target rank (property-tested in tests/test_quantile.py).
+
+Calibration semantics: the histogram observes EVERY finite-scored item
+(the sanitize mask, NOT the admit mask) — observing only admitted items
+would freeze the rejected tail out of the histogram and the threshold
+would creep (a self-reinforcing feedback loop).  Observing the full
+traffic keeps the q-quantile an unbiased estimate of the traffic
+distribution, so per-tenant FPR ≈ q by construction, independent of the
+distribution's shape.  The ONE exception is the cold start
+(:func:`calib_mask`): rates measured against a near-empty sketch sit at
+~0 regardless of the item, and on a CUMULATIVE histogram that early
+underflow-bin mass permanently pins every quantile q below the warmup
+fraction — so observation is gated at the same half-warmup floor the
+Welford σ stream uses (``welford_min_n``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+NUM_BINS: int = 128
+RATE_MIN: float = 1e-6
+# bins 1..126 are geometric over [RATE_MIN, 1): 127 inner edges.
+_N_INNER = NUM_BINS - 1
+_RATIO = float((1.0 / RATE_MIN) ** (1.0 / (_N_INNER - 1)))
+_INV_LOG_RATIO = float(1.0 / np.log(_RATIO))
+
+
+def _edges_np() -> np.ndarray:
+    inner = RATE_MIN * _RATIO ** np.arange(_N_INNER, dtype=np.float64)
+    inner[-1] = 1.0  # close the geometric ladder exactly at 1
+    return np.concatenate([[0.0], inner, [1.5]]).astype(np.float32)
+
+
+# host-side constant (NOT jnp at module scope: this module may first be
+# imported from inside a jit trace, where jnp ops stage as tracers)
+_EDGES_NP = _edges_np()
+
+
+def bin_edges() -> jax.Array:
+    """The (NUM_BINS+1,) float32 edge vector: [0, RATE_MIN .. 1, 1.5]."""
+    return jnp.asarray(_EDGES_NP)
+
+
+def init_hist(*lead: int) -> jax.Array:
+    """A zero histogram with optional leading axes, e.g.
+    ``init_hist()`` -> (NUM_BINS,), ``init_hist(E)`` -> (E, NUM_BINS),
+    ``init_hist(T, E)`` -> (T, E, NUM_BINS).  Always float32."""
+    return jnp.zeros(tuple(lead) + (NUM_BINS,), jnp.float32)
+
+
+def bin_index(rates: jax.Array) -> jax.Array:
+    """Map rates (...,) -> int32 bin ids (...,) — pure vector math."""
+    r = rates.astype(jnp.float32)
+    safe = jnp.maximum(r, jnp.float32(RATE_MIN))
+    k = jnp.floor(jnp.log(safe * jnp.float32(1.0 / RATE_MIN))
+                  * jnp.float32(_INV_LOG_RATIO)).astype(jnp.int32) + 1
+    return jnp.where(r < RATE_MIN, 0,
+                     jnp.clip(k, 1, NUM_BINS - 1)).astype(jnp.int32)
+
+
+def observe_rates(hist: jax.Array, rates: jax.Array,
+                  maskf: jax.Array) -> jax.Array:
+    """Fold a batch of rates into one (NUM_BINS,) histogram.
+
+    ``maskf`` is the 0/1 float32 OBSERVE mask (finite rows — see module
+    docstring); masked-out items add exact float 0.0 weight, so the
+    fixed-shape scatter equals the dense insert of the masked subset.
+    """
+    return hist.at[bin_index(rates)].add(maskf.astype(jnp.float32))
+
+
+def observe_rates_fleet(hist: jax.Array, rates: jax.Array,
+                        tenant_ids: jax.Array,
+                        maskf: jax.Array) -> jax.Array:
+    """Fold a mixed-tenant batch into a (T, NUM_BINS) histogram stack —
+    ONE flat scatter at tenant·NUM_BINS + bin (the same row-offset
+    routing trick as ``fleet_table_gather``)."""
+    T = hist.shape[0]
+    flat = hist.reshape(T * NUM_BINS)
+    offs = tenant_ids.astype(jnp.int32) * NUM_BINS + bin_index(rates)
+    return flat.at[offs].add(maskf.astype(jnp.float32)).reshape(T, NUM_BINS)
+
+
+def calib_mask(maskf: jax.Array, n: jax.Array,
+               warmup_items: float) -> jax.Array:
+    """Cold-start gate for the calibration stream: zero the observe mask
+    while the sketch holds fewer than ``warmup_items / 2`` items.
+
+    A rate measured against a near-empty sketch is ~0 whatever the item
+    looks like — it estimates the sketch's fill level, not the traffic.
+    Those observations land in the underflow bin, and because the flat
+    histograms are cumulative, a warmup worth of them outweighs the
+    q-quantile forever once q < warmup/stream (measured: Q_q pinned at
+    bin 0 and FPR == 0 over a whole benchmark run).  Gating at the same
+    half-warmup floor as the Welford σ stream (``welford_min_n``) means
+    that by the time the threshold arms (n ≥ warmup) the histogram holds
+    only rates from a usefully-filled sketch.  ``n`` is the PRE-insert
+    count the rates were normalized by — scalar, or per-item for fleet
+    callers (``state.n[tenant_ids]``); broadcasts against ``maskf``.
+    """
+    armed = jnp.asarray(n, jnp.float32) >= jnp.float32(
+        0.5 * float(warmup_items))
+    return maskf * armed.astype(jnp.float32)
+
+
+def merge_hists(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two histograms over disjoint data (CRDT-style addition)."""
+    return a + b
+
+
+def hist_quantile(hist: jax.Array, q: float) -> jax.Array:
+    """The q-quantile rate from one (NUM_BINS,) histogram — interpolated
+    inverse CDF, all fixed-shape device ops (cumsum + searchsorted +
+    two gathers).  An empty histogram returns 0.0 (callers gate on
+    warmup anyway).  ``hist`` may carry γ-decay weights — any
+    nonnegative weighting is a valid CDF."""
+    cdf = jnp.cumsum(hist.astype(jnp.float32))
+    total = cdf[-1]
+    target = jnp.float32(q) * total
+    idx = jnp.clip(jnp.searchsorted(cdf, target, side="left"),
+                   0, NUM_BINS - 1)
+    prev = jnp.where(idx > 0, cdf[jnp.maximum(idx - 1, 0)], 0.0)
+    inbin = cdf[idx] - prev
+    frac = jnp.clip((target - prev) / jnp.maximum(inbin, 1e-30), 0.0, 1.0)
+    edges = jnp.asarray(_EDGES_NP)
+    lo = edges[idx]
+    hi = edges[idx + 1]
+    return jnp.where(total > 0, lo + frac * (hi - lo), 0.0)
+
+
+def quantile_threshold(hist: jax.Array, n: jax.Array, q: float,
+                       warmup_items: float) -> jax.Array:
+    """Score-space admission threshold from a rate histogram: admit iff
+    score >= Q_q(rates) · max(n, 1).  Same shape contract as the μ−ασ
+    ``admit_threshold`` — ONE device scalar, −inf during warmup — so the
+    fused admit kernels consume it unchanged."""
+    t = hist_quantile(hist, q) * jnp.maximum(n, 1.0)
+    return jnp.where(n >= warmup_items, t, -jnp.inf)

@@ -46,6 +46,16 @@ class GuardrailConfig:
     # flat (window_epochs == 1, num_tenants == 1) guardrails only.
     count_dtype: str = "int32"  # "float32" | "int32" | "int16" | "int8"
     esc_capacity: int = 0
+    # Admission threshold rule (repro.quantile): "mu_sigma" is the
+    # classic μ−ασ score threshold; "quantile" targets a FLAG RATE —
+    # admit iff score ≥ Q_q of the running per-tenant rate histogram —
+    # which stays calibrated on heavy-tailed traffic where μ−ασ
+    # over-flags (power-law tails inflate σ late) or under-flags
+    # (early σ underestimates the tail).  Threshold-mode dispatch is
+    # trace-time Python: mu_sigma guardrails trace zero quantile code
+    # and their executables stay byte-identical to the pre-PR ones.
+    threshold_mode: str = "mu_sigma"
+    quantile_q: float = 0.01    # target flag rate for quantile mode
     # Quarantine fail policy (repro.resilience): requests whose features
     # are non-finite are sanitized OUT of the sketch (never scored
     # against real counts, never inserted, counted in
@@ -117,6 +127,11 @@ class Guardrail:
                                  esc_capacity=gcfg.esc_capacity)
         self.windowed = gcfg.window_epochs > 1
         self.multi_tenant = gcfg.num_tenants > 1
+        if gcfg.threshold_mode not in ("mu_sigma", "quantile"):
+            raise ValueError(f"unknown threshold_mode "
+                             f"{gcfg.threshold_mode!r} — expected "
+                             "'mu_sigma' or 'quantile'")
+        quantile = gcfg.threshold_mode == "quantile"
         if self.multi_tenant:
             from repro.fleet import state as fl
             from repro.fleet import window as fw
@@ -132,10 +147,12 @@ class Guardrail:
                 self.state = fw.init_fleet_window(ring.WindowConfig(
                     ace=self.ace_cfg, num_epochs=gcfg.window_epochs,
                     decay=gcfg.window_decay,
-                    rotate_every=gcfg.rotate_every), gcfg.num_tenants)
+                    rotate_every=gcfg.rotate_every), gcfg.num_tenants,
+                    quantile=quantile)
             else:
                 self.state = fl.init(fl.FleetConfig(
-                    ace=self.ace_cfg, num_tenants=gcfg.num_tenants))
+                    ace=self.ace_cfg, num_tenants=gcfg.num_tenants),
+                    quantile=quantile)
         elif self.windowed:
             from repro.window import ring
             if gcfg.rotate_every <= 0:
@@ -154,9 +171,12 @@ class Guardrail:
             self.state = ring.init_window(ring.WindowConfig(
                 ace=self.ace_cfg, num_epochs=gcfg.window_epochs,
                 decay=gcfg.window_decay,
-                rotate_every=gcfg.rotate_every))
+                rotate_every=gcfg.rotate_every), quantile=quantile)
         else:
             self.state = sk.init(self.ace_cfg)
+            if quantile:
+                from repro.quantile import sketch as qsk
+                self.state = self.state._replace(qhist=qsk.init_hist())
         self.w = sk.make_params(self.ace_cfg)
         if use_kernels and mesh is not None:
             raise ValueError("use_kernels admission is single-device; "
@@ -193,6 +213,7 @@ class Guardrail:
         # instead of copying (L, 2^K) every batch.
         self._admit = jax.jit(self._admit_impl, donate_argnums=0)
         if mesh is not None:
+            quantile = gcfg.threshold_mode == "quantile"
             if self.multi_tenant:
                 if self.windowed:
                     raise NotImplementedError(
@@ -202,17 +223,18 @@ class Guardrail:
                     fleet_shardings_for_layout
                 shardings = fleet_shardings_for_layout(
                     self.ace_cfg, mesh, gcfg.num_tenants, sketch_layout,
-                    table_axis)
+                    table_axis, quantile=quantile)
             elif self.windowed:
                 from repro.dist.sketch_parallel import \
                     window_shardings_for_layout
                 shardings = window_shardings_for_layout(
                     self.ace_cfg, mesh, gcfg.window_epochs, sketch_layout,
-                    table_axis)
+                    table_axis, quantile=quantile)
             else:
                 from repro.dist.sketch_parallel import shardings_for_layout
                 shardings = shardings_for_layout(
-                    self.ace_cfg, mesh, sketch_layout, table_axis)
+                    self.ace_cfg, mesh, sketch_layout, table_axis,
+                    quantile=quantile)
             self.state = jax.device_put(self.state, shardings)
 
     def _features(self, embeds: jax.Array) -> jax.Array:
@@ -283,7 +305,9 @@ class Guardrail:
                         alpha=self.gcfg.alpha,
                         warmup_items=self.gcfg.warmup_items,
                         rotate_every=self.gcfg.rotate_every,
-                        table_mask=table_mask, item_mask=finite)
+                        table_mask=table_mask, item_mask=finite,
+                        threshold_mode=self.gcfg.threshold_mode,
+                        quantile_q=self.gcfg.quantile_q)
                 buckets = hash_buckets(feat, w, cfg.srp)
                 pre = fw.window_table_sums_fleet(state, tenant_ids,
                                                  buckets)
@@ -299,12 +323,29 @@ class Guardrail:
                         table_mask=table_mask)
                 admit = scores >= fw.window_admit_thresholds(
                     state, self.gcfg.window_decay, self.gcfg.alpha,
-                    self.gcfg.warmup_items,
-                    table_mask=table_mask)[tenant_ids]
+                    self.gcfg.warmup_items, table_mask=table_mask,
+                    threshold_mode=self.gcfg.threshold_mode,
+                    q=self.gcfg.quantile_q)[tenant_ids]
                 admit = jnp.logical_and(admit, finite)
                 new_state = fw.insert_current_fleet(
                     state, tenant_ids, buckets, admit, cfg,
                     gamma=self.gcfg.window_decay, pre_sums=pre)
+                if self.gcfg.threshold_mode == "quantile":
+                    # every finite-scored item feeds its tenant's LIVE
+                    # epoch histogram, BEFORE the clocks tick (rotation
+                    # retires the epoch row); admitted-only observation
+                    # would freeze the rejected tail out of Q_q
+                    from repro.quantile import sketch as qsk
+                    n_w = jax.vmap(
+                        lambda s: ring.combined_n(
+                            s, self.gcfg.window_decay))(
+                        ring.WindowedAceState(*state))
+                    rates = scores / jnp.maximum(n_w, 1.0)[tenant_ids]
+                    new_state = fw.observe_current_fleet(
+                        new_state, rates, tenant_ids,
+                        qsk.calib_mask(finite.astype(jnp.float32),
+                                       n_w[tenant_ids],
+                                       self.gcfg.warmup_items))
                 new_state = fw.maybe_rotate_fleet(
                     new_state, self.gcfg.rotate_every,
                     self.gcfg.window_decay, tenant_ids=tenant_ids)
@@ -315,16 +356,29 @@ class Guardrail:
                     state, feat, tenant_ids, w, cfg,
                     alpha=self.gcfg.alpha,
                     warmup_items=self.gcfg.warmup_items,
-                    table_mask=table_mask, item_mask=finite)
+                    table_mask=table_mask, item_mask=finite,
+                    threshold_mode=self.gcfg.threshold_mode,
+                    quantile_q=self.gcfg.quantile_q)
             buckets = hash_buckets(feat, w, cfg.srp)   # the ONE hash
             scores = fl.fleet_scores(state, tenant_ids, buckets,
                                      table_mask=table_mask)
             admit = scores >= fl.admit_thresholds(
                 state, self.gcfg.alpha, self.gcfg.warmup_items,
-                table_mask=table_mask)[tenant_ids]
+                table_mask=table_mask,
+                threshold_mode=self.gcfg.threshold_mode,
+                q=self.gcfg.quantile_q)[tenant_ids]
             admit = jnp.logical_and(admit, finite)
             new_state = fl.insert_masked(state, tenant_ids, buckets,
                                          admit, cfg)
+            if self.gcfg.threshold_mode == "quantile":
+                from repro.quantile import sketch as qsk
+                rates = scores / jnp.maximum(state.n, 1.0)[tenant_ids]
+                new_state = new_state._replace(
+                    qhist=qsk.observe_rates_fleet(
+                        new_state.qhist, rates, tenant_ids,
+                        qsk.calib_mask(finite.astype(jnp.float32),
+                                       state.n[tenant_ids],
+                                       self.gcfg.warmup_items)))
             return new_state, admit
         if self.windowed:
             from repro.window import ring
@@ -335,7 +389,9 @@ class Guardrail:
                     alpha=self.gcfg.alpha,
                     warmup_items=self.gcfg.warmup_items,
                     rotate_every=self.gcfg.rotate_every,
-                    table_mask=table_mask, item_mask=finite)
+                    table_mask=table_mask, item_mask=finite,
+                    threshold_mode=self.gcfg.threshold_mode,
+                    quantile_q=self.gcfg.quantile_q)
             buckets = hash_buckets(feat, w, cfg.srp)   # the ONE hash
             # tail + live gathers (the live one is the flat path's own)
             tail_sums, live_sums = ring.window_table_sums(state, buckets)
@@ -351,12 +407,23 @@ class Guardrail:
                                          table_mask=table_mask)
             admit = scores >= ring.admit_threshold_windowed(
                 state, self.gcfg.window_decay, self.gcfg.alpha,
-                self.gcfg.warmup_items, table_mask=table_mask)
+                self.gcfg.warmup_items, table_mask=table_mask,
+                threshold_mode=self.gcfg.threshold_mode,
+                q=self.gcfg.quantile_q)
             admit = jnp.logical_and(admit, finite)
             new_state = ring.insert_current(
                 state, buckets, admit, cfg,
                 gamma=self.gcfg.window_decay,
                 pre_sums=(tail_sums, live_sums))
+            if self.gcfg.threshold_mode == "quantile":
+                # observe BEFORE the clock below retires the live epoch
+                from repro.quantile import sketch as qsk
+                n_w = ring.combined_n(state, self.gcfg.window_decay)
+                rates = scores / jnp.maximum(n_w, 1.0)
+                new_state = ring.observe_current(
+                    new_state, rates,
+                    qsk.calib_mask(finite.astype(jnp.float32), n_w,
+                                   self.gcfg.warmup_items))
             # eager epoch clock: the admit call that fills an epoch
             # rotates the ring on its way out (device-side cond)
             new_state = ring.maybe_rotate(new_state,
@@ -369,15 +436,26 @@ class Guardrail:
                                   alpha=self.gcfg.alpha,
                                   warmup_items=self.gcfg.warmup_items,
                                   table_mask=table_mask,
-                                  item_mask=finite)
+                                  item_mask=finite,
+                                  threshold_mode=self.gcfg.threshold_mode,
+                                  quantile_q=self.gcfg.quantile_q)
         buckets = hash_buckets(feat, w, cfg.srp)       # the ONE hash
         scores = sk.lookup(state, buckets,             # same bucket ids
                            table_mask=table_mask)
         admit = scores >= sk.admit_threshold(
             state, self.gcfg.alpha, self.gcfg.warmup_items,
-            table_mask=table_mask)
+            table_mask=table_mask,
+            threshold_mode=self.gcfg.threshold_mode,
+            q=self.gcfg.quantile_q)
         admit = jnp.logical_and(admit, finite)
         new_state = sk.insert_buckets_masked(state, buckets, admit, cfg)
+        if self.gcfg.threshold_mode == "quantile":
+            from repro.quantile import sketch as qsk
+            rates = scores / jnp.maximum(state.n, 1.0)
+            new_state = new_state._replace(qhist=qsk.observe_rates(
+                new_state.qhist, rates,
+                qsk.calib_mask(finite.astype(jnp.float32), state.n,
+                               self.gcfg.warmup_items)))
         return new_state, admit
 
     def admit(self, embeds: jax.Array,

@@ -154,14 +154,23 @@ class FrontEnd:
         make their deadline even on the NEXT batch are shed first, so
         device capacity is never spent on already-lost requests."""
         now = self.clock()
-        est = self.est_service
-        while self._q:
-            ticket, _ = self._q[0]
-            if now + est > ticket.deadline:
-                self._q.popleft()
-                self._shed(ticket, "deadline")
-            else:
-                break
+        # Cold start: until ONE batch has actually been measured there is
+        # no service estimate — est_service's 0.0 placeholder is not a
+        # measurement, and shedding against it turns every queued-past-
+        # deadline request into a "deadline" drop before the front end
+        # has served anything (the very first pump is also the jit trace,
+        # so tickets routinely age past short deadlines while the
+        # executable builds).  Admit optimistically: serve the batch, let
+        # the first real sample arm the shed path.
+        if self._est_service is not None:
+            est = self._est_service
+            while self._q:
+                ticket, _ = self._q[0]
+                if now + est > ticket.deadline:
+                    self._q.popleft()
+                    self._shed(ticket, "deadline")
+                else:
+                    break
         if not self._q or not (force or self.ready()):
             return 0
         take = min(self.cfg.batch_size, len(self._q))

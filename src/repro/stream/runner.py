@@ -77,6 +77,13 @@ class ChunkSummary(NamedTuple):
                  anomalies, never inserted).
     degraded:    () bool — True when the chunk was scored with a health
                  mask (some tables excluded — repro.resilience).
+    falpha:      () float32 — normalized α-th frequency-moment index of
+                 the post-chunk count planes (repro.quantile.moments,
+                 α = 1.25): 1.0 for a uniform plane, grows with bucket
+                 concentration, stationary in n — a Compressed-Counting
+                 style drift statistic the host can watch chunk-over-
+                 chunk without pulling the (L, 2^K) table.  Windowed
+                 states report it over the γ-combined ring.
     """
 
     kept_frac: jax.Array
@@ -87,6 +94,7 @@ class ChunkSummary(NamedTuple):
     n: jax.Array
     quarantined: jax.Array
     degraded: jax.Array
+    falpha: jax.Array
 
 
 class FleetChunkSummary(NamedTuple):
@@ -105,6 +113,8 @@ class FleetChunkSummary(NamedTuple):
     misrouted:        () int32 — items routed to tenants outside the
                       replica's ownership mask (repro.cluster): scored
                       but never kept/inserted.  0 when no tenant_mask.
+    falpha:           (T,) float32 — each tenant's frequency-moment
+                      drift index (see ``ChunkSummary.falpha``).
     """
 
     kept_frac: jax.Array
@@ -118,6 +128,7 @@ class FleetChunkSummary(NamedTuple):
     quarantined: jax.Array
     degraded: jax.Array
     misrouted: jax.Array
+    falpha: jax.Array
 
 
 class StreamRunner:
@@ -168,22 +179,25 @@ class StreamRunner:
         self.trace_count = 0          # incremented at TRACE time only
         self._shardings = None
         if mesh is not None:
+            quantile = (getattr(filt, "threshold_mode", "mu_sigma")
+                        == "quantile")
             if self.is_fleet:
                 from repro.dist.sketch_parallel import \
                     fleet_shardings_for_layout
                 self._shardings = fleet_shardings_for_layout(
                     filt.ace_cfg, mesh, filt.num_tenants, sketch_layout,
-                    table_axis)
+                    table_axis, quantile=quantile)
             elif hasattr(filt, "num_epochs"):
                 from repro.dist.sketch_parallel import \
                     window_shardings_for_layout
                 self._shardings = window_shardings_for_layout(
                     filt.ace_cfg, mesh, filt.num_epochs, sketch_layout,
-                    table_axis)
+                    table_axis, quantile=quantile)
             else:
                 from repro.dist.sketch_parallel import shardings_for_layout
                 self._shardings = shardings_for_layout(
-                    filt.ace_cfg, mesh, sketch_layout, table_axis)
+                    filt.ace_cfg, mesh, sketch_layout, table_axis,
+                    quantile=quantile)
         # The incoming state is dead the moment consume() rebinds it —
         # donate it so the (L, 2^K) counts update in place every chunk.
         self._consume = jax.jit(self._consume_impl, donate_argnums=0)
@@ -202,11 +216,14 @@ class StreamRunner:
         """Pin the scan carry to the requested repro.dist layout so GSPMD
         keeps the collectives inside the scan body (no-op off-mesh).
         Works for both the flat ``AceState`` and the epoch-ring
-        ``WindowedAceState`` (the shardings pytree mirrors the carry)."""
+        ``WindowedAceState`` (the shardings pytree mirrors the carry —
+        absent optional leaves pair None-with-None and pass through)."""
         if self._shardings is None:
             return state
-        return type(state)(*(jax.lax.with_sharding_constraint(leaf, sh)
-                             for leaf, sh in zip(state, self._shardings)))
+        return type(state)(*(
+            leaf if (leaf is None or sh is None)
+            else jax.lax.with_sharding_constraint(leaf, sh)
+            for leaf, sh in zip(state, self._shardings)))
 
     def _consume_impl(self, state: AceState, w: jax.Array,
                       feats: jax.Array, tenant_ids=None,
@@ -277,8 +294,25 @@ class StreamRunner:
             state, (keeps, margins) = jax.lax.scan(step, state, feats)
         keepf = keeps.astype(jnp.float32)                     # (T, B)
         k = min(self.topk, T * B)
-        # top-k most anomalous = smallest margins, coordinates on device
-        neg, idx = jax.lax.top_k(-margins.reshape(-1), k)
+        # top-k most anomalous = smallest margins — but quarantined rows
+        # carry margin = −inf by the sanitize contract (a SENTINEL, not
+        # a measurement: their features never touched the sketch), so
+        # raw top-k would let garbage rows displace every GENUINE
+        # anomaly from the report during a corruption burst.  Substitute
+        # +inf so they sort dead last, like warmup rows; the raw margins
+        # still feed the ``quarantined`` count below.
+        ranked = jnp.where(jnp.isneginf(margins), jnp.inf, margins)
+        neg, idx = jax.lax.top_k(-ranked.reshape(-1), k)
+        # drift statistic: one O(L·2^K) pass over the post-chunk planes
+        from repro.quantile import falpha_index
+        if hasattr(self.filt, "num_epochs"):
+            from repro.window import ring
+            falpha = falpha_index(ring.decayed_counts(state, gamma),
+                                  ring.combined_n(state, gamma),
+                                  table_mask=table_mask)
+        else:
+            falpha = falpha_index(state.counts, state.n,
+                                  table_mask=table_mask)
         summary = ChunkSummary(
             kept_frac=jnp.mean(keepf),
             anom_counts=jnp.sum(1 - keeps.astype(jnp.int32), axis=1),
@@ -292,7 +326,8 @@ class StreamRunner:
             # are +inf, real margins finite) — count them without
             # changing the filter step protocol
             quarantined=jnp.sum(jnp.isneginf(margins)).astype(jnp.int32),
-            degraded=jnp.asarray(table_mask is not None))
+            degraded=jnp.asarray(table_mask is not None),
+            falpha=falpha)
         if self.return_masks:
             return state, summary, keeps
         return state, summary
@@ -302,10 +337,14 @@ class StreamRunner:
         """Per-tenant summary rows from the scan outputs — all device
         reductions, one transfer with the rest of the summary."""
         from repro.fleet.state import per_tenant_counts
+        from repro.quantile import falpha_index
         nt = self.filt.num_tenants
         keepf = keeps.astype(jnp.float32)
         k = min(self.topk, T * B)
-        neg, idx = jax.lax.top_k(-margins.reshape(-1), k)
+        # quarantined (−inf margin) rows sort LAST, not first — the
+        # flat-path rationale above applies per mixed batch too
+        ranked = jnp.where(jnp.isneginf(margins), jnp.inf, margins)
+        neg, idx = jax.lax.top_k(-ranked.reshape(-1), k)
         tids_flat = tenant_ids.reshape(-1)
         if tenant_mask is None:
             misrouted = jnp.zeros((), jnp.int32)
@@ -325,7 +364,9 @@ class StreamRunner:
             n=state.n,
             quarantined=jnp.sum(jnp.isneginf(margins)).astype(jnp.int32),
             degraded=jnp.asarray(table_mask is not None),
-            misrouted=misrouted)
+            misrouted=misrouted,
+            falpha=falpha_index(state.counts, state.n,
+                                table_mask=table_mask))
         if self.return_masks:
             return state, summary, keeps
         return state, summary

@@ -51,6 +51,12 @@ class TrainConfig:
                                      # stream drift instead of freezing
     filter_window_decay: float = 1.0  # γ epoch decay (1.0 = hard window)
     filter_rotate_every: int = 0     # filter steps (batches) per epoch
+    filter_threshold_mode: str = "mu_sigma"  # "mu_sigma" | "quantile":
+                                     # quantile mode pins the filter's
+                                     # flag rate at filter_quantile_q
+                                     # regardless of the embedding score
+                                     # distribution's tails (repro.quantile)
+    filter_quantile_q: float = 0.01  # target flag rate for quantile mode
     use_grad_monitor: bool = True    # ACE monitor on gradient stats
     grad_compression: bool = False   # int8 + error feedback
     monitor_feature_dim: int = 32
@@ -101,8 +107,12 @@ def make_data_filter(tcfg: TrainConfig, d_model: int):
         return WindowedAceFilter(
             d_model=d_model, num_epochs=tcfg.filter_window_epochs,
             decay=tcfg.filter_window_decay,
-            rotate_every=tcfg.filter_rotate_every)
-    return AceDataFilter(d_model=d_model)
+            rotate_every=tcfg.filter_rotate_every,
+            threshold_mode=tcfg.filter_threshold_mode,
+            quantile_q=tcfg.filter_quantile_q)
+    return AceDataFilter(d_model=d_model,
+                         threshold_mode=tcfg.filter_threshold_mode,
+                         quantile_q=tcfg.filter_quantile_q)
 
 
 def init_train_state(arch: Arch, tcfg: TrainConfig, key) -> TrainState:
@@ -177,11 +187,21 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
         count, so flat and windowed filter states coexist."""
         if sketch_layout is None or st is None:
             return st
+        from jax.sharding import PartitionSpec
+        # Tiny rate histogram (quantile threshold mode) replicates under
+        # every layout.  Constrained explicitly — a positional zip over
+        # the fixed-arity pspec tuples would silently TRUNCATE it out of
+        # the rebuilt NamedTuple (back to the None default).
+        qhist = st.qhist
+        if qhist is not None:
+            qhist = jax.lax.with_sharding_constraint(qhist,
+                                                     PartitionSpec())
         if "tail" in st._fields:   # windowed epoch ring
             from repro.dist.mesh import window_pspecs
             pspecs = window_pspecs(sketch_layout)
-            return type(st)(*(jax.lax.with_sharding_constraint(leaf, ps)
-                              for leaf, ps in zip(st, pspecs)))
+            core = (jax.lax.with_sharding_constraint(leaf, ps)
+                    for leaf, ps in zip(st, pspecs))
+            return type(st)(*core, qhist=qhist)
         pspecs = sketch_pspecs(sketch_layout)
         core = [jax.lax.with_sharding_constraint(leaf, ps)
                 for leaf, ps in zip(
@@ -193,10 +213,9 @@ def make_train_step(arch: Arch, tcfg: TrainConfig, grad_pspecs=None,
                 raise NotImplementedError(
                     "quantized filter sketches only support the "
                     "replicated layout")
-            from jax.sharding import PartitionSpec
             esc = type(esc)(*(jax.lax.with_sharding_constraint(
                 leaf, PartitionSpec()) for leaf in esc))
-        return type(st)(*core, esc=esc)
+        return type(st)(*core, esc=esc, qhist=qhist)
 
     def loss_fn(params, batch):
         return arch.loss(params, batch, remat=tcfg.remat,

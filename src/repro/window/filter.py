@@ -48,6 +48,11 @@ class WindowedAceFilter:
     num_epochs: int = 4
     decay: float = 1.0          # γ; 1.0 = hard window
     rotate_every: int = 0       # steps per epoch (driver-enforced clock)
+    threshold_mode: str = "mu_sigma"   # "mu_sigma" | "quantile": quantile
+                                # mode thresholds at Q_q of the WINDOWED
+                                # rate histogram (same γ-weighted epoch
+                                # combine as every other window statistic)
+    quantile_q: float = 0.01    # target flag rate for quantile mode
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -68,7 +73,8 @@ class WindowedAceFilter:
         from repro.core import sketch as sk
         # init_window routes through WindowConfig, which VALIDATES the
         # (num_epochs, decay, rotate_every) triple up front
-        return (ring.init_window(self.window_cfg),
+        return (ring.init_window(self.window_cfg,
+                                 quantile=self.threshold_mode == "quantile"),
                 sk.make_params(self.ace_cfg))
 
     def features(self, embeds: jax.Array) -> jax.Array:
@@ -104,7 +110,8 @@ class WindowedAceFilter:
                                  table_mask=table_mask)
         thresh = ring.admit_threshold_windowed(
             state, self.decay, self.alpha, self.warmup_items,
-            table_mask=table_mask)
+            table_mask=table_mask, threshold_mode=self.threshold_mode,
+            q=self.quantile_q)
         keep = jnp.logical_and(scores >= thresh, finite)
         margin = jnp.where(finite, scores - thresh, -jnp.inf)
         ins = finite if self.insert_all else keep
@@ -112,6 +119,17 @@ class WindowedAceFilter:
         new_state = ring.insert_current(
             state, buckets, ins, cfg, gamma=self.decay,
             pre_sums=(tail_sums, live_sums))
+        if self.threshold_mode == "quantile":
+            # every finite-scored item feeds the live epoch's rate
+            # histogram (NOT just admitted ones — see AceDataFilter.step);
+            # rotation retires the epoch's observations with its counts
+            from repro.quantile import sketch as qsk
+            n_w = ring.combined_n(state, self.decay)
+            rates = scores / jnp.maximum(n_w, 1.0)
+            new_state = ring.observe_current(
+                new_state, rates,
+                qsk.calib_mask(finite.astype(jnp.float32), n_w,
+                               self.warmup_items))
         return new_state, keep, margin
 
     def __call__(self, state, w, embeds, mask):

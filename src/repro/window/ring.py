@@ -84,7 +84,7 @@ tunable at constant memory by trading E against rotate_every.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +105,10 @@ class WindowedAceState(NamedTuple):
     ssq: jax.Array           # () float32 — ‖tail + C_cursor‖²
     cursor: jax.Array        # ()  int32 — live epoch index
     tick: jax.Array          # ()  int32 — insert steps since init
+    qhist: Optional[jax.Array] = None  # (E, quantile.NUM_BINS) float32
+    #                          per-epoch collision-rate histograms for
+    #                          threshold_mode="quantile"; None (default)
+    #                          keeps every existing pytree contract
 
     @property
     def num_epochs(self) -> int:
@@ -150,13 +154,19 @@ class WindowConfig:
         return self.num_epochs * ace.memory_bytes() + tail
 
 
-def init(cfg: AceConfig, num_epochs: int) -> WindowedAceState:
+def init(cfg: AceConfig, num_epochs: int,
+         quantile: bool = False) -> WindowedAceState:
     if num_epochs < 1:
         raise ValueError(f"num_epochs must be >= 1, got {num_epochs}")
     if cfg.esc_capacity > 0:
         raise NotImplementedError(
             "overflow promotion (esc_capacity > 0) is flat-sketch only; "
             "window rings take narrow count dtypes without promotion")
+    if quantile:
+        from repro.quantile import sketch as qsk
+        qhist = qsk.init_hist(num_epochs)
+    else:
+        qhist = None
     return WindowedAceState(
         counts=jnp.zeros((num_epochs, cfg.num_tables, cfg.num_buckets),
                          dtype=jnp.dtype(cfg.counter_dtype)),
@@ -167,11 +177,12 @@ def init(cfg: AceConfig, num_epochs: int) -> WindowedAceState:
         ssq=jnp.zeros((), jnp.float32),
         cursor=jnp.zeros((), jnp.int32),
         tick=jnp.zeros((), jnp.int32),
+        qhist=qhist,
     )
 
 
-def init_window(cfg: WindowConfig) -> WindowedAceState:
-    return init(cfg.ace, cfg.num_epochs)
+def init_window(cfg: WindowConfig, quantile: bool = False) -> WindowedAceState:
+    return init(cfg.ace, cfg.num_epochs, quantile=quantile)
 
 
 # ---------------------------------------------------------------------------
@@ -180,43 +191,46 @@ def init_window(cfg: WindowConfig) -> WindowedAceState:
 
 def rotate(state: WindowedAceState, gamma: float = 1.0) -> WindowedAceState:
     """Advance the ring: the oldest epoch expires and becomes the new
-    live epoch (zeroed counts AND zeroed moments), and the tail absorbs
-    the outgoing live epoch while shedding the expired one:
+    live epoch (zeroed counts AND zeroed moments), and the tail is
+    RECOMPUTED from the updated ring as one weighted tensordot:
 
-        tail' = γ · (tail + C_live − γ^{E−1} · C_expired)
+        tail' = Σ_e γ^age'_e · C'_e      (the zeroed new-live slab
+                                          contributes nothing)
 
-    (for γ=1 that is plain count addition/subtraction — exact
-    integers).  ``ssq`` is recomputed from the new tail (the new live
-    epoch is empty, so ‖C_w‖² = ‖tail'‖²), which also flushes any
-    incremental float error in the γ<1 ssq stream once per epoch.  This
-    is the ONE place the window does O(L·2^K) work — once per
-    ``rotate_every`` steps, never on the per-item path, and nothing
-    here syncs to the host.  Applied E times this returns the ring to
-    the all-zero init with the cursor back where it started
+    The incremental fold this replaced — γ·(tail + C_live −
+    γ^{E−1}·C_expired) — was algebraically identical but NOT bitwise
+    stable for γ<1: when traced into a larger program (the maybe_rotate
+    cond, a vmapped fleet, a scan body) XLA CPU fuses the
+    subtract-of-product into an FMA, rounding the decayed tail up to
+    1 ulp (up to ~700 ulp after the γ multiply) differently than the
+    eager op-by-op sequence (an optimization_barrier did not stop it —
+    measured), which forced the strict bitwise windowed contracts to
+    pin γ=1.  A single dot_general lowers identically across
+    eager/jit/cond/scan/vmap (and the fleet-native einsum matches the
+    vmapped form bitwise — both verified empirically on this backend),
+    so γ<1 is now bitwise across execution contexts, and the recompute
+    additionally flushes any incremental float error in the tail once
+    per epoch instead of letting it γ-decay.  Same O(L·2^K) cost class
+    as the old fold — once per ``rotate_every`` steps, never on the
+    per-item path, and nothing here syncs to the host.  ``ssq`` is
+    recomputed from the new tail (the new live epoch is empty, so
+    ‖C_w‖² = ‖tail'‖²).  Applied E times this returns the ring to the
+    all-zero init with the cursor back where it started
     (property-tested).
     """
     E = state.num_epochs
     new_cursor = jnp.mod(state.cursor + 1, E)
-    live = jax.lax.dynamic_index_in_dim(
-        state.counts, state.cursor, axis=0, keepdims=False)
-    expired = jax.lax.dynamic_index_in_dim(
-        state.counts, new_cursor, axis=0, keepdims=False)
-    w_exp = jnp.float32(gamma) ** jnp.float32(E - 1)
-    # γ<1 caveat: when this is traced into a larger program (the
-    # maybe_rotate cond, a jitted driver) XLA CPU fuses the
-    # subtract-of-product into an FMA, which rounds the decayed tail up
-    # to 1 ulp differently than the eager op-by-op sequence (an
-    # optimization_barrier on the product does NOT stop it — measured).
-    # γ=1 is exact in every context (the products are exact integers);
-    # the γ<1 tail/ssq caches are therefore float-tolerance across
-    # execution contexts, the repo-wide contract for decayed views.
-    tail = jnp.float32(gamma) * (
-        state.tail + live.astype(jnp.float32)
-        - w_exp * expired.astype(jnp.float32))
     zero_slab = jnp.zeros(state.counts.shape[1:], state.counts.dtype)
     counts = jax.lax.dynamic_update_index_in_dim(
         state.counts, zero_slab, new_cursor, axis=0)
+    w = epoch_weights(new_cursor, E, gamma)
+    tail = jnp.tensordot(w, counts.astype(jnp.float32), axes=1)
     zero1 = jnp.zeros((1,), jnp.float32)
+    qhist = state.qhist
+    if qhist is not None:
+        qhist = jax.lax.dynamic_update_index_in_dim(
+            qhist, jnp.zeros((qhist.shape[1],), jnp.float32),
+            new_cursor, axis=0)
     return WindowedAceState(
         counts=counts,
         n=jax.lax.dynamic_update_slice(state.n, zero1, (new_cursor,)),
@@ -228,6 +242,7 @@ def rotate(state: WindowedAceState, gamma: float = 1.0) -> WindowedAceState:
         ssq=jnp.sum(tail * tail),
         cursor=new_cursor,
         tick=state.tick,
+        qhist=qhist,
     )
 
 
@@ -511,6 +526,35 @@ def combined_n(state: WindowedAceState, gamma: float) -> jax.Array:
     return jnp.sum(w * state.n)
 
 
+def combined_qhist(state: WindowedAceState, gamma: float) -> jax.Array:
+    """γ-weighted combined-window rate histogram:
+    H_w = Σ_e γ^age · H_e   (NUM_BINS,) f32 — the same ``epoch_weights``
+    tensordot as ``decayed_counts``, exact at γ=1 (integer-valued unit
+    weights), and a valid weighted CDF for any γ ∈ (0, 1].  Rotation
+    composes for free: the expired epoch's histogram row is zeroed, so
+    its rates leave the window quantile exactly when its counts leave
+    the score."""
+    if state.qhist is None:
+        raise ValueError("window has no qhist leaf (threshold_mode="
+                         "'quantile' needs init_window(..., quantile=True))")
+    w = epoch_weights(state.cursor, state.num_epochs, gamma)
+    return jnp.tensordot(w, state.qhist, axes=1)
+
+
+def observe_current(state: WindowedAceState, rates: jax.Array,
+                    maskf: jax.Array) -> WindowedAceState:
+    """Fold a batch of windowed rates into the LIVE epoch's histogram
+    row — one flat scatter at cursor·NUM_BINS + bin (the ring analogue
+    of ``quantile.observe_rates``; fixed-shape, scan/donation safe).
+    ``maskf`` is the OBSERVE mask (finite rows), not the admit mask."""
+    from repro.quantile import sketch as qsk
+    E, nb = state.qhist.shape
+    offs = state.cursor * nb + qsk.bin_index(rates)
+    flat = state.qhist.reshape(E * nb)
+    qhist = flat.at[offs].add(maskf.astype(jnp.float32)).reshape(E, nb)
+    return state._replace(qhist=qhist)
+
+
 def mean_mu_windowed(state: WindowedAceState, gamma: float,
                      table_mask: jax.Array | None = None) -> jax.Array:
     """γ-generalised Eq. 11 closed form:  μ_w = ‖C_w‖² / (n_w · L).
@@ -574,20 +618,34 @@ def combined_moments(state: WindowedAceState, gamma: float):
 
 def admit_threshold_windowed(state: WindowedAceState, gamma: float,
                              alpha: float, warmup_items: float,
-                             table_mask: jax.Array | None = None
-                             ) -> jax.Array:
-    """Score-space admission threshold from WINDOW-combined moments.
+                             table_mask: jax.Array | None = None,
+                             threshold_mode: str = "mu_sigma",
+                             q: float = 0.01) -> jax.Array:
+    """Score-space admission threshold from WINDOW-combined statistics.
 
-    Mirrors ``sketch.admit_threshold`` operation-for-operation (rate =
-    μ_w/n_w, t = (rate − α·σ_w)·max(n_w, 1), −inf during warmup) with
-    every statistic swapped for its window-combined counterpart, so the
-    E=1 window thresholds bitwise like the plain sketch.  Because
-    expired epochs leave both μ_w and σ_w, the threshold TRACKS the
+    ``"mu_sigma"`` mirrors ``sketch.admit_threshold``
+    operation-for-operation (rate = μ_w/n_w, t = (rate − α·σ_w)·
+    max(n_w, 1), −inf during warmup) with every statistic swapped for
+    its window-combined counterpart, so the E=1 window thresholds
+    bitwise like the plain sketch.  ``"quantile"`` reads the q-quantile
+    of the γ-weighted combined-window rate histogram
+    (``combined_qhist``) and scales by the same max(n_w, 1) — the E=1
+    quantile window is bitwise the flat quantile path (γ⁰ = 1 weight is
+    exact).  Both modes are trace-time Python dispatch (one cached
+    executable per mode) and return ONE device scalar.  Because expired
+    epochs leave the combined statistics, the threshold TRACKS the
     stream: after a distribution shift the stale regime ages out of the
     window instead of pinning the threshold forever.  Pure device
     scalar ops — no host sync.
     """
     n_w = combined_n(state, gamma)
+    if threshold_mode == "quantile":
+        from repro.quantile import sketch as qsk
+        t = qsk.hist_quantile(combined_qhist(state, gamma), q) \
+            * jnp.maximum(n_w, 1.0)
+        return jnp.where(n_w >= warmup_items, t, -jnp.inf)
+    if threshold_mode != "mu_sigma":
+        raise ValueError(f"unknown threshold_mode {threshold_mode!r}")
     rate = mean_mu_windowed(state, gamma, table_mask=table_mask) \
         / jnp.maximum(n_w, 1.0)
     t = (rate - alpha * sigma_windowed(state, gamma)) \

@@ -137,7 +137,7 @@ class TestMembership:
         assert not hb.maybe_beat()          # same instant: rate-limited
         clock.advance(0.25)
         assert hb.maybe_beat()
-        assert store.get("hb/h0") == "2"
+        assert store.get("hb/h0") == "2:0"   # seq:map_version stamp
 
     def test_detector_death_and_grace(self):
         clock, store, cfg = self._pair()
@@ -173,6 +173,51 @@ class TestMembership:
         assert delays == [0.1, 0.2, 0.4, 0.5, None]
         pol.reset()
         assert pol.next_delay() == 0.1
+
+    def test_stale_version_beats_do_not_reset_liveness(self):
+        """S4 (heartbeat fence): a zombie revived with an OLD shard map
+        keeps bumping fresh sequence numbers, but those value changes
+        must not count as liveness until it catches up to the current
+        map version — otherwise a rewound host blocks its own
+        replacement forever."""
+        clock, store, cfg = self._pair()
+        hb = HeartbeatWriter(store, "h1", cfg, clock)
+        det = FailureDetector(store, cfg, clock)
+        hb.version = 3
+        hb.beat()
+        assert det.poll(["h1"]) == []          # first observation
+        clock.advance(0.5)
+        hb.beat()
+        assert det.poll(["h1"]) == []          # genuine change
+        # zombie rewind: fresh process state, old map regime
+        zombie = HeartbeatWriter(store, "h1", cfg, clock)
+        zombie.version = 1
+        died = None
+        for i in range(4):
+            clock.advance(0.4)
+            zombie.beat()                      # value churns every poll
+            if det.poll(["h1"]) == ["h1"]:
+                died = i
+                break
+        assert died is not None                # churn never reset the clock
+        # catching up to the current regime re-arms liveness
+        zombie.version = 3
+        clock.advance(0.4)
+        zombie.beat()
+        assert det.poll(["h1"]) == []
+
+    def test_legacy_bare_seq_heartbeats_still_parse(self):
+        """Pre-fencing heartbeat values (bare sequence numbers) read as
+        version 0 — mixed-version clusters keep detecting liveness."""
+        clock, store, cfg = self._pair()
+        det = FailureDetector(store, cfg, clock)
+        store.set("hb/h1", "1")
+        assert det.poll(["h1"]) == []
+        clock.advance(0.5)
+        store.set("hb/h1", "2")
+        assert det.poll(["h1"]) == []
+        clock.advance(1.1)
+        assert det.poll(["h1"]) == ["h1"]
 
 
 # ---------------------------------------------------------------------------
@@ -214,9 +259,9 @@ class TestGossip:
 
     def test_pack_unpack_roundtrip_bitwise(self):
         host = self._state()
-        blob = pack_snapshot(host, [1, 3], epoch=5)
-        epoch, states = unpack_snapshot(blob)
-        assert epoch == 5 and set(states) == {1, 3}
+        blob = pack_snapshot(host, [1, 3], epoch=5, map_version=7)
+        epoch, states, ver = unpack_snapshot(blob)
+        assert epoch == 5 and ver == 7 and set(states) == {1, 3}
         for t in (1, 3):
             assert np.array_equal(states[t].counts, host.counts[t])
             assert states[t].n == np.float32(host.n[t])
@@ -226,7 +271,7 @@ class TestGossip:
 
     def test_narrow_dtype_preserved(self):
         host = self._state("int8")
-        _, states = unpack_snapshot(pack_snapshot(host, [0], epoch=1))
+        _, states, _ = unpack_snapshot(pack_snapshot(host, [0], epoch=1))
         assert states[0].counts.dtype == np.int8
 
     def test_truncated_blob_rejected(self):
@@ -253,7 +298,7 @@ class TestGossip:
         blob = pack_snapshot(
             jax.device_get(fl.set_tenant(jnp_fleet(host), 0, bad)),
             [0], epoch=2)
-        _, states = unpack_snapshot(blob)       # CRC passes: no error
+        _, states, _ = unpack_snapshot(blob)    # CRC passes: no error
         assert not snapshot_healthy(states[0])  # health gate refuses
 
     def test_bus_publish_fetch_and_retention(self):
@@ -266,8 +311,8 @@ class TestGossip:
         got = bus.latest("h0")
         assert got is not None and got[0] == 4
         # only `keep` epochs stay resident
-        blobs = [k for k in store.keys("gossip/h0/") if not
-                 k.endswith("latest")]
+        blobs = [k for k in store.keys("gossip/h0/")
+                 if not k.endswith(("latest", "fence"))]
         assert sorted(blobs) == ["gossip/h0/3", "gossip/h0/4"]
 
     def test_bus_corrupt_newest_falls_back(self):
@@ -278,11 +323,61 @@ class TestGossip:
         bus.publish(2, host, [0, 1])
         store.set_bytes("gossip/h0/2",
                         b"garbage" + os.urandom(64))
-        epoch, states = bus.latest("h0")
+        epoch, states, _ = bus.latest("h0")
         assert epoch == 1 and set(states) == {0}
 
     def test_bus_unknown_host(self):
         assert GossipBus(MemStore(), "h0").latest("nobody") is None
+
+    def test_stale_version_publish_fenced(self):
+        """S4: a revived host holding an OLD shard map cannot overwrite
+        newer snapshots — its publish is a counted no-op, and a fresh
+        bus instance (the revived process) still sees the fence because
+        the high-water mark lives in the STORE."""
+        store = MemStore()
+        host = self._state()
+        bus = GossipBus(store, "h0", keep=4)
+        bus.publish(1, host, [0], map_version=2)
+        bus.publish(2, host, [0, 1], map_version=2)
+        zombie = GossipBus(store, "h0", keep=4)   # revived process
+        assert zombie.publish(3, host, [0], map_version=1) == 0
+        assert zombie.stale_publishes == 1
+        assert zombie.published_epochs == 0
+        got = bus.latest("h0")
+        assert got is not None
+        assert got[0] == 2 and got[2] == 2        # pointer never regressed
+
+    def test_epoch_regression_same_version_fenced(self):
+        """A rewound epoch counter under the SAME map version (restored
+        backup) must not regress the latest pointer either."""
+        store = MemStore()
+        host = self._state()
+        bus = GossipBus(store, "h0", keep=4)
+        bus.publish(3, host, [0, 1], map_version=1)
+        zombie = GossipBus(store, "h0", keep=4)
+        assert zombie.publish(2, host, [0], map_version=1) == 0
+        assert zombie.publish(3, host, [0], map_version=1) == 0
+        assert zombie.stale_publishes == 2
+        # a genuinely newer epoch still publishes
+        assert zombie.publish(4, host, [0, 1], map_version=1) > 0
+        assert bus.latest("h0")[0] == 4
+
+    def test_raced_stale_blob_skipped_by_latest(self):
+        """Even a stale blob RACED into the store (write interleaving
+        the fence check) is refused at read time: ``latest`` skips any
+        blob stamped below the host's fenced map version."""
+        store = MemStore()
+        host = self._state()
+        bus = GossipBus(store, "h0", keep=4)
+        bus.publish(1, host, [0], map_version=1)
+        bus.publish(2, host, [0, 1], map_version=3)
+        # zombie raced its blob in and flipped the pointer directly
+        store.set_bytes("gossip/h0/3",
+                        pack_snapshot(host, [1], epoch=3, map_version=1))
+        store.set("gossip/h0/latest", "3")
+        got = bus.latest("h0")
+        assert got is not None
+        assert got[0] == 2 and got[2] == 3        # fenced-intact blob wins
 
 
 def jnp_fleet(host_state):
@@ -502,6 +597,50 @@ class TestNodeFailover:
         assert not n1.try_rejoin(RejoinPolicy(max_attempts=2),
                                  sleep=lambda d: None)
 
+    def test_adoption_prefers_newer_map_version_over_larger_n(
+            self, tmp_path):
+        """S4: the shard-map version outranks stream volume in adoption
+        preference.  A zombie-timeline checkpoint that absorbed MORE
+        stream but was stamped under an older map regime must lose to
+        newer-regime gossip — n is not a fencing token (a divergent
+        zombie can inflate it), the map version is."""
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n1, 1)
+        early = jax.device_get(n1.state)        # less stream, real line
+        _run_epochs(n1, 2, seed0=50)            # zombie keeps ingesting
+        zombie = jax.device_get(n1.state)
+        ckpt.save(n0._ckpt_dir("h1"), 99, n1.state,
+                  extra={"map_version": 0}, keep=8)
+        # the real timeline republished the early state under map v2
+        GossipBus(store, "h1").publish(9, early, n1.owned(),
+                                       map_version=2)
+        self._kill_and_detect(clock, n0)
+        assert n0.adoptions
+        host0 = jax.device_get(n0.state)
+        for rec in n0.adoptions:
+            assert rec["source"] == "gossip"
+            t = rec["tenant"]
+            assert float(zombie.n[t]) > float(early.n[t])  # real conflict
+            assert float(host0.n[t]) == float(early.n[t])
+
+    def test_revived_stale_host_not_adopted_from(self, tmp_path):
+        """S4 end-to-end: a zombie h1 (rewound epoch counter, old map)
+        republishing after the regime moved on neither regresses the
+        pointer nor pollutes what survivors adopt."""
+        store, clock, n0, n1 = self._two_nodes(tmp_path)
+        _run_epochs(n1, 2)
+        live = jax.device_get(n1.state)
+        GossipBus(store, "h1").publish(5, live, n1.owned(),
+                                       map_version=3)
+        zbus = GossipBus(store, "h1")           # revived process
+        empty = jax.device_get(fl.init(n1.filt.fleet_cfg))
+        assert zbus.publish(1, empty, n1.owned(), map_version=0) == 0
+        assert zbus.stale_publishes == 1
+        got = n0.gossip.latest("h1")
+        assert got[0] == 5 and got[2] == 3
+        for t in n1.owned():
+            assert float(got[1][t].n) == float(live.n[t])
+
     def test_dead_coordinator_replaced(self, tmp_path):
         """h0 (the coordinator) dies: h1 must publish the successor map
         itself — the lowest LIVE host acts, not the configured one."""
@@ -577,6 +716,27 @@ class TestFrontEnd:
         assert late.status == "shed" and late.reason == "deadline"
         assert late.admitted is False            # fail_closed tenant
         assert ok.status == "served"
+        assert fe.metrics()["shed_deadline"] == 1
+
+    def test_cold_start_never_sheds_by_deadline(self):
+        """S2: with ZERO measured service samples the deadline shed
+        path must not fire — not even for requests already past their
+        deadline (the first pump is also the jit trace, so tickets
+        routinely age out while the executable builds).  The first real
+        measurement arms the shed path."""
+        clock = FakeClock()
+        _, fe = self._mk(clock)
+        t = fe.submit(self._embed(), tenant=1, deadline=0.001)
+        clock.advance(10.0)               # way past deadline, 0 samples
+        assert fe.est_service == 0.0      # placeholder, not a sample
+        assert fe.pump(force=True) == 1   # served, NOT shed
+        assert t.status == "served"
+        assert fe.metrics()["shed_deadline"] == 0
+        # one sample now exists: the shed path is armed
+        late = fe.submit(self._embed(1), tenant=0, deadline=0.001)
+        clock.advance(1.0)
+        fe.pump(force=True)
+        assert late.status == "shed" and late.reason == "deadline"
         assert fe.metrics()["shed_deadline"] == 1
 
     def test_partial_batch_after_max_wait(self):

@@ -147,7 +147,7 @@ else:
     wait_key(store, "ready0")
     assert store.get("k1") == "v1"
     assert store.get("missing/key") is None
-    epoch, states = GossipBus(store, "h1").latest("h0")
+    epoch, states, _ = GossipBus(store, "h1").latest("h0")
     assert epoch == 1 and set(states) == {0, 1, 2, 3}
     assert states[0].counts.dtype == np.int8
     assert float(sum(states[t].n for t in range(4))) == 4.0 * B

@@ -629,7 +629,7 @@ class TestOpsDispatch:
             st_j = fw.insert_current_fleet(st_j, tids, buckets, mask_j,
                                            cfg, gamma=1.0, pre_sums=pre)
             assert bool(jnp.all(mask_k == mask_j))
-        for a, b in zip(st_k, st_j):
+        for a, b in zip(jax.tree.leaves(st_k), jax.tree.leaves(st_j)):
             assert bool(jnp.array_equal(a, b))
 
     def test_ops_window_score_matches_ring_reference(self):

@@ -1,0 +1,296 @@
+"""Property suite for the quantile threshold stack (repro.quantile).
+
+The admission quantile is a log-binned additive rate histogram, so its
+correctness story is algebraic, not statistical: merge is EXACT addition
+(a commutative/associative monoid on the integer-valued f32 histograms
+the streams build), the windowed view is the same γ^age epoch combine as
+every other ring statistic, and the inverse-CDF read-out is within one
+bin of the exact empirical quantile on ANY input ordering or shape —
+including the adversarial ones (sorted, constant, heavy-tailed,
+sub-RATE_MIN underflow) where streaming quantile structures classically
+degrade.  Each of those claims is asserted here against brute-force
+numpy oracles rebuilt from the raw rate draws, plus the E=1 contract
+that a single-epoch windowed quantile filter is bitwise the flat one.
+
+Strategies draw sizes/seeds/kind selectors as integers and derive the
+actual rate streams from a seeded ``np.random.default_rng`` — the same
+idiom as tests/test_sketch_properties.py, and the subset of hypothesis
+the hermetic-container shim in conftest.py supports.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.sketch import AceConfig            # noqa: E402
+from repro.quantile import sketch as qsk           # noqa: E402
+from repro.quantile.moments import falpha_index    # noqa: E402
+from repro.quantile.sketch import (                # noqa: E402
+    NUM_BINS, RATE_MIN, _RATIO, bin_edges, bin_index, hist_quantile,
+    init_hist, merge_hists, observe_rates, observe_rates_fleet,
+    quantile_threshold)
+from repro.window import ring                      # noqa: E402
+
+_EDGES = np.asarray(bin_edges())
+
+
+def _rates(rng: np.random.Generator, n: int, kind: int) -> np.ndarray:
+    """Adversarial rate streams, all float32 in [0, 1.2]."""
+    if kind == 0:                                   # uniform
+        r = rng.uniform(0.0, 1.0, n)
+    elif kind == 1:                                 # constant (all ties)
+        r = np.full(n, rng.uniform(0.0, 1.0))
+    elif kind == 2:                                 # pre-sorted
+        r = np.sort(rng.uniform(0.0, 1.0, n))
+    elif kind == 3:                                 # heavy-tailed Pareto
+        r = np.minimum(rng.pareto(1.1, n) * 1e-3, 1.2)
+    else:                                           # lognormal spanning
+        r = np.minimum(rng.lognormal(-8.0, 4.0, n), 1.2)  # the underflow bin
+    return r.astype(np.float32)
+
+
+def _np_hist(rates: np.ndarray) -> np.ndarray:
+    """Oracle histogram: scatter the module's own bin ids with np.add.at
+    (tests the masked-scatter/ring mechanics, not the binning float)."""
+    h = np.zeros(NUM_BINS, np.float32)
+    np.add.at(h, np.asarray(bin_index(jnp.asarray(rates))), 1.0)
+    return h
+
+
+def _np_bin(x: float) -> int:
+    """Edge-based oracle bin of a raw value."""
+    return int(np.clip(np.searchsorted(_EDGES, x, side="right") - 1,
+                       0, NUM_BINS - 1))
+
+
+class TestMergeMonoid:
+    """merge = exact addition on unit-weight f32 histograms."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), na=st.integers(1, 200),
+           nb=st.integers(1, 200), nc=st.integers(1, 200),
+           kind=st.integers(0, 4))
+    def test_merge_commutative_associative_bitwise(self, seed, na, nb,
+                                                   nc, kind):
+        rng = np.random.default_rng(seed)
+        hs = [observe_rates(init_hist(), jnp.asarray(_rates(rng, n, kind)),
+                            jnp.ones(n, jnp.float32))
+              for n in (na, nb, nc)]
+        a, b, c = hs
+        assert np.array_equal(merge_hists(a, b), merge_hists(b, a))
+        assert np.array_equal(merge_hists(merge_hists(a, b), c),
+                              merge_hists(a, merge_hists(b, c)))
+        # insertion-order invariance: one stream == merge of its splits
+        rng = np.random.default_rng(seed)
+        allr = np.concatenate([_rates(rng, n, kind) for n in (na, nb, nc)])
+        whole = observe_rates(init_hist(), jnp.asarray(allr),
+                              jnp.ones(allr.size, jnp.float32))
+        assert np.array_equal(whole,
+                              merge_hists(merge_hists(a, b), c))
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300),
+           kind=st.integers(0, 4))
+    def test_masked_scatter_equals_dense_subset(self, seed, n, kind):
+        rng = np.random.default_rng(seed)
+        r = _rates(rng, n, kind)
+        mask = (rng.uniform(size=n) < 0.6).astype(np.float32)
+        fixed = observe_rates(init_hist(), jnp.asarray(r),
+                              jnp.asarray(mask))
+        sub = r[mask > 0]
+        dense = observe_rates(init_hist(), jnp.asarray(sub),
+                              jnp.ones(sub.size, jnp.float32))
+        assert np.array_equal(fixed, dense)
+        assert float(jnp.sum(fixed)) == float(mask.sum())
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300),
+           T=st.integers(1, 5))
+    def test_fleet_scatter_equals_per_tenant_flat(self, seed, n, T):
+        rng = np.random.default_rng(seed)
+        r = _rates(rng, n, 0)
+        tids = rng.integers(0, T, n).astype(np.int32)
+        mask = (rng.uniform(size=n) < 0.8).astype(np.float32)
+        fleet = observe_rates_fleet(init_hist(T), jnp.asarray(r),
+                                    jnp.asarray(tids), jnp.asarray(mask))
+        for t in range(T):
+            sel = tids == t
+            flat = observe_rates(init_hist(), jnp.asarray(r[sel]),
+                                 jnp.asarray(mask[sel]))
+            assert np.array_equal(np.asarray(fleet)[t], flat)
+
+
+class TestWindowedCombine:
+    """rotate-then-merge ≡ the γ^age-weighted windowed combine."""
+
+    def _cfg(self):
+        return AceConfig(dim=6, num_bits=5, num_tables=4, seed=3)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), E=st.integers(2, 4),
+           n_batches=st.integers(2, 8), gi=st.integers(50, 100))
+    def test_rotate_then_merge_equals_windowed_combine(self, seed, E,
+                                                       n_batches, gi):
+        gamma = gi / 100.0
+        rng = np.random.default_rng(seed)
+        state = ring.init(self._cfg(), E, quantile=True)
+        ref = [np.zeros(NUM_BINS, np.float32) for _ in range(E)]
+        cursor = 0
+        for _ in range(n_batches):
+            B = int(rng.integers(4, 32))
+            r = _rates(rng, B, int(rng.integers(0, 5)))
+            mask = (rng.uniform(size=B) < 0.9).astype(np.float32)
+            state = ring.observe_current(state, jnp.asarray(r),
+                                         jnp.asarray(mask))
+            h = np.zeros(NUM_BINS, np.float32)
+            np.add.at(h, np.asarray(bin_index(jnp.asarray(r))), mask)
+            ref[cursor] += h
+            if rng.integers(0, 2):                  # rotate half the time
+                state = ring.rotate(state, gamma)
+                cursor = (cursor + 1) % E
+                ref[cursor] = np.zeros(NUM_BINS, np.float32)
+        expect = sum(gamma ** ((cursor - e) % E) * ref[e]
+                     for e in range(E))
+        got = np.asarray(ring.combined_qhist(state, gamma))
+        if gamma == 1.0:                            # unit weights: exact
+            assert np.array_equal(got, expect.astype(np.float32))
+        else:
+            np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+        # per-epoch rows themselves are exact regardless of γ (decay is
+        # query-time weighting; rotation only ever zeroes a row)
+        perm = [(cursor - a) % E for a in range(E)]    # rows by age
+        assert np.array_equal(np.asarray(state.qhist)[perm],
+                              np.stack([ref[e] for e in perm]))
+
+    def test_full_ring_of_rotations_returns_to_zero(self):
+        state = ring.init(self._cfg(), 3, quantile=True)
+        r = jnp.asarray(np.linspace(0.0, 0.9, 16, dtype=np.float32))
+        state = ring.observe_current(state, r, jnp.ones(16, jnp.float32))
+        for _ in range(3):
+            state = ring.rotate(state, 0.7)
+        assert np.array_equal(np.asarray(state.qhist),
+                              np.zeros((3, NUM_BINS), np.float32))
+
+
+class TestQuantileAccuracy:
+    """Inverse-CDF read-out is within one log bin of the exact empirical
+    quantile on every adversarial stream shape."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(20, 400),
+           qi=st.integers(1, 99), kind=st.integers(0, 4))
+    def test_one_bin_rank_bracket_vs_exact(self, seed, n, qi, kind):
+        q = qi / 100.0
+        rng = np.random.default_rng(seed)
+        r = _rates(rng, n, kind)
+        hist = observe_rates(init_hist(), jnp.asarray(r),
+                             jnp.ones(n, jnp.float32))
+        v = float(hist_quantile(hist, q))
+        exact = float(np.quantile(r, q, method="inverted_cdf"))
+        # the estimate's bin and the exact quantile's bin differ by ≤ 1
+        # (equal up to the f32 rounding of the rank target q·N)
+        iv, ie = _np_bin(v), _np_bin(exact)
+        assert abs(iv - ie) <= 1, (v, exact, iv, ie)
+        # value form of the same bound: within two geometric bin ratios
+        # when both live on the geometric ladder [RATE_MIN, 1]
+        if RATE_MIN <= exact <= 1.0 and v >= RATE_MIN:
+            ratio = v / exact
+            assert _RATIO ** -2 * 0.999 <= ratio <= _RATIO ** 2 * 1.001
+        elif exact < RATE_MIN:                      # underflow bin
+            assert v <= _EDGES[2]                   # ≤ one bin above it
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(20, 300),
+           kind=st.integers(0, 4))
+    def test_quantile_monotone_in_q(self, seed, n, kind):
+        rng = np.random.default_rng(seed)
+        hist = observe_rates(init_hist(),
+                             jnp.asarray(_rates(rng, n, kind)),
+                             jnp.ones(n, jnp.float32))
+        qs = [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99]
+        vals = [float(hist_quantile(hist, q)) for q in qs]
+        assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+    def test_empty_hist_is_zero_and_threshold_warmup_gates(self):
+        assert float(hist_quantile(init_hist(), 0.5)) == 0.0
+        hist = observe_rates(init_hist(),
+                             jnp.asarray([0.1, 0.2, 0.3], jnp.float32),
+                             jnp.ones(3, jnp.float32))
+        assert np.isneginf(float(quantile_threshold(
+            hist, jnp.float32(3.0), 0.5, warmup_items=10.0)))
+        t = float(quantile_threshold(hist, jnp.float32(3.0), 0.5,
+                                     warmup_items=2.0))
+        assert t == pytest.approx(float(hist_quantile(hist, 0.5)) * 3.0)
+
+
+class TestE1GuardrailEqualsFlat:
+    """A single-epoch windowed quantile filter is BITWISE the flat
+    quantile filter — same keeps, same margins, same histogram."""
+
+    def test_e1_windowed_quantile_filter_bitwise_flat(self):
+        from repro.data.pipeline import AceDataFilter
+        from repro.window.filter import WindowedAceFilter
+        kw = dict(d_model=16, num_bits=6, num_tables=8, alpha=3.0,
+                  warmup_items=32.0, threshold_mode="quantile",
+                  quantile_q=0.05)
+        flat = AceDataFilter(**kw)
+        wind = WindowedAceFilter(**kw, num_epochs=1, decay=1.0)
+        fs, w = flat.init()
+        ws, w2 = wind.init()
+        assert np.array_equal(np.asarray(w), np.asarray(w2))
+        rng = np.random.default_rng(11)
+        for _ in range(6):
+            emb = jnp.asarray(rng.normal(size=(16, 4, 16)), jnp.float32)
+            feat = flat.features(emb)
+            fs, fkeep, fmargin = flat.step(fs, w, feat)
+            ws, wkeep, wmargin = wind.step(ws, w, feat)
+            assert np.array_equal(np.asarray(fkeep), np.asarray(wkeep))
+            assert np.array_equal(np.asarray(fmargin),
+                                  np.asarray(wmargin))
+        assert np.array_equal(np.asarray(fs.qhist),
+                              np.asarray(ws.qhist)[0])
+        # every finite row observes EXCEPT the cold-start steps: the
+        # half-warmup calib_mask floor (16 items here) skips step 1
+        assert float(jnp.sum(fs.qhist)) == 5 * 16
+
+
+class TestFalphaIndex:
+    """Normalized α-th frequency-moment drift index (repro.quantile
+    .moments): 1 on uniform planes, maximal on point masses, stationary
+    in stream volume."""
+
+    def test_uniform_plane_is_one(self):
+        counts = jnp.full((4, 32), 5, jnp.int32)       # n/m = 5 each
+        out = falpha_index(counts, jnp.float32(5 * 32), alpha=1.25)
+        assert float(out) == pytest.approx(1.0, rel=1e-5)
+
+    def test_point_mass_is_m_to_alpha_minus_one(self):
+        m, alpha = 32, 1.25
+        counts = jnp.zeros((2, m), jnp.int32).at[:, 0].set(64)
+        out = falpha_index(counts, jnp.float32(64), alpha=alpha)
+        assert float(out) == pytest.approx(m ** (alpha - 1.0), rel=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.integers(2, 16))
+    def test_stationary_under_volume_scaling(self, seed, scale):
+        rng = np.random.default_rng(seed)
+        base = rng.integers(0, 20, size=(3, 64)).astype(np.int64)
+        n = float(base[0].sum())
+        a = falpha_index(jnp.asarray(base), jnp.float32(n))
+        b = falpha_index(jnp.asarray(base * scale),
+                         jnp.float32(n * scale))
+        np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+    def test_table_mask_restricts_mean(self):
+        counts = jnp.stack([jnp.full((16,), 4, jnp.int32),
+                            jnp.zeros((16,), jnp.int32).at[0].set(64)])
+        mask = jnp.asarray([1.0, 0.0], jnp.float32)
+        out = falpha_index(counts, jnp.float32(64), alpha=1.25,
+                           table_mask=mask)
+        assert float(out) == pytest.approx(1.0, rel=1e-5)

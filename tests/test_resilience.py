@@ -405,9 +405,12 @@ class TestRunnerResilience:
         h = jax.device_get(summ)
         assert int(h.quarantined) == 2 and not bool(h.degraded)
         assert float(h.n) == 30.0
-        # quarantined rows surface first in the top-k (margin = −inf)
-        assert {(int(h.topk_step[i]), int(h.topk_item[i]))
-                for i in range(2)} == {(1, 2), (3, 5)}
+        # S3: quarantined rows (margin = −inf) are junk, not "maximally
+        # anomalous" — they must NOT hijack top-k slots from genuine
+        # rows (the ranking maps −inf to +inf, the least-anomalous end)
+        got = {(int(h.topk_step[i]), int(h.topk_item[i]))
+               for i in range(4)}
+        assert not (got & {(1, 2), (3, 5)})
         mask = jnp.ones(8, jnp.float32).at[0].set(0.0)
         state, summ2 = r.consume(
             state, w,

@@ -112,6 +112,66 @@ class TestStreamRunner:
         assert (np.diff(s.topk_margin) >= 0).all()   # most anomalous first
         assert runner.trace_count == 1
 
+    def test_quarantine_never_displaces_genuine_anomalies(self):
+        """S3 regression: quarantined non-finite rows ride the transfer
+        with margin = −inf, which is also the most-anomalous extreme of
+        the top-k ordering — a dirty batch must NOT mask a genuine
+        burst.  The ranking maps −inf to +inf so junk sorts last."""
+        filt = self._filter()
+        runner = StreamRunner(filt, chunk_T=4, topk=4)
+        state, w = runner.init()
+        rng = np.random.default_rng(3)
+        for _ in range(2):                    # arm the filter (64 items)
+            feats = jnp.stack([filt.features(_embeds(rng))
+                               for _ in range(4)])
+            state, summary = runner.consume(state, w, feats)
+        # mixed chunk: step 1 is a genuine out-of-cone burst; NaN rows
+        # land in OTHER steps and would out-sort it under raw margins
+        embeds = [_embeds(rng) for _ in range(4)]
+        embeds[1] = _embeds(rng, mu=-6.0)
+        feats = np.array(jnp.stack([filt.features(e) for e in embeds]))
+        feats[0, 2] = np.nan
+        feats[3, 6] = np.nan
+        state, summary = runner.consume(state, w, jnp.asarray(feats))
+        s = jax.device_get(summary)
+        assert int(s.quarantined) == 2
+        got = {(int(s.topk_step[i]), int(s.topk_item[i]))
+               for i in range(4)}
+        assert not (got & {(0, 2), (3, 6)})   # junk never in top-k
+        assert (s.topk_step == 1).all()       # the burst owns the top-k
+        assert np.isfinite(s.topk_margin).all()
+        assert runner.trace_count == 1
+
+    def test_fleet_quarantine_never_displaces_genuine_anomalies(self):
+        """S3, fleet path: same contract through ``_fleet_summary`` —
+        mixed-tenant chunk, NaN rows in one tenant's traffic, burst in
+        another's."""
+        from repro.fleet.filter import FleetDataFilter
+        filt = FleetDataFilter(d_model=16, num_tenants=2,
+                               warmup_items=32.0, alpha=3.0)
+        runner = StreamRunner(filt, chunk_T=4, topk=4)
+        state, w = runner.init()
+        rng = np.random.default_rng(4)
+        tids = jnp.asarray(np.tile([0, 1], 4 * 4).reshape(4, 8), jnp.int32)
+        for _ in range(3):                    # arm both tenants
+            feats = jnp.stack([filt.features(_embeds(rng))
+                               for _ in range(4)])
+            state, summary = runner.consume(state, w, feats, tids)
+        embeds = [_embeds(rng) for _ in range(4)]
+        embeds[2] = _embeds(rng, mu=-6.0)     # burst step
+        feats = np.array(jnp.stack([filt.features(e) for e in embeds]))
+        feats[0, 1] = np.nan
+        feats[1, 4] = np.nan
+        state, summary = runner.consume(state, w, jnp.asarray(feats), tids)
+        s = jax.device_get(summary)
+        assert int(s.quarantined) == 2
+        got = {(int(s.topk_step[i]), int(s.topk_item[i]))
+               for i in range(4)}
+        assert not (got & {(0, 1), (1, 4)})
+        assert (s.topk_step == 2).all()
+        assert np.isfinite(s.topk_margin).all()
+        assert runner.trace_count == 1
+
     @pytest.mark.slow
     def test_sharded_layouts_match_single_device(self):
         """Same scan program under repro.dist placements (jit/SPMD mode):

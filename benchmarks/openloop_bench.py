@@ -115,7 +115,9 @@ def _frontend_capacity(g, fcfg, T, n_req: int) -> float:
     fe = FrontEnd(g, fcfg)
     t0 = time.perf_counter()
     for k in range(n_req):
-        fe.submit(pool[k % len(pool)], tenant=k % T, deadline=60.0)
+        # absolute deadline far beyond the run length — nothing sheds
+        fe.submit(pool[k % len(pool)], tenant=k % T,
+                  deadline=time.perf_counter() + 60.0)
         if fe.ready():
             fe.pump()
     fe.drain()
@@ -149,11 +151,14 @@ def _open_loop(g, fcfg, T, rate: float, n_req: int, seed: int):
                 ahead = arrivals[k] - (clk() - t0)
                 if ahead > 0.0005:
                     time.sleep(min(ahead, 0.002))
-        # remaining slack measured from the scheduled arrival: negative
-        # slack = already hopeless on submit, shed at the next pump
-        slack = fcfg.default_deadline - max(0.0, clk() - t0 - arrivals[k])
-        tickets.append((fe.submit(pool[k % len(pool)], tenant=k % T,
-                                  deadline=slack), arrivals[k]))
+        # absolute deadline anchored at the SCHEDULED arrival: a request
+        # delayed by driver backlog has already burned its slack (the
+        # coordinated-omission rule — submit lag must not extend the
+        # deadline), and one already past it sheds at the next pump
+        tickets.append((fe.submit(
+            pool[k % len(pool)], tenant=k % T,
+            deadline=t0 + arrivals[k] + fcfg.default_deadline),
+            arrivals[k]))
         if fe.ready():
             fe.pump()
     t_end = clk()

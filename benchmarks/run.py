@@ -24,10 +24,10 @@ def main() -> None:
                     help="run a single benchmark module by name")
     args = ap.parse_args()
 
-    from benchmarks import (dist_throughput, fig1_discriminative,
-                            fig3_5_variance, fleet_throughput,
-                            guardrail_latency, memory_table,
-                            openloop_bench, quantile_bench,
+    from benchmarks import (attribution_bench, dist_throughput,
+                            fig1_discriminative, fig3_5_variance,
+                            fleet_throughput, guardrail_latency,
+                            memory_table, openloop_bench, quantile_bench,
                             stream_throughput, table3_5_comparison,
                             throughput, window_throughput)
     try:
@@ -62,6 +62,8 @@ def main() -> None:
         "openloop": lambda: openloop_bench.run(
             csv_rows, smoke=args.quick),
         "quantile": lambda: quantile_bench.run(
+            csv_rows, smoke=args.quick),
+        "attrib": lambda: attribution_bench.run(
             csv_rows, smoke=args.quick),
     }
     if roofline_report is not None:

@@ -1,0 +1,22 @@
+"""Heavy-hitter attribution tier — signed count-sketch + dyadic findHH.
+
+See ``repro.attribution.sketch`` for the full story; this package is the
+layer every "why did it flag" feature builds on (per-chunk offending
+coordinates/tenants in the stream summaries, the drift post-mortem
+example, the Pallas ``attr_estimate`` kernel).
+"""
+from repro.attribution.sketch import (AttrConfig, chunk_energy,
+                                      chunk_planes, drift_vector, estimate,
+                                      estimate_level, find_hh, init_plane,
+                                      l2estimate, level_tables,
+                                      observe_flat, observe_fleet,
+                                      observe_fleet_window, observe_window,
+                                      sketch_vector, tenant_drift_l2)
+
+__all__ = [
+    "AttrConfig", "chunk_energy", "chunk_planes", "drift_vector",
+    "estimate", "estimate_level", "find_hh", "init_plane", "l2estimate",
+    "level_tables", "observe_flat", "observe_fleet",
+    "observe_fleet_window", "observe_window", "sketch_vector",
+    "tenant_drift_l2",
+]

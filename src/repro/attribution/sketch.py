@@ -1,0 +1,378 @@
+"""Heavy-hitter attribution: signed count-sketch + dyadic drill-down.
+
+The ACE tier *flags* anomalies; this tier says *what drives them*.  The
+paper's LSH-as-sampling view (ACE §2: counts of hashed buckets estimate
+collision-weighted frequency mass) extends directly to the classic
+signed count-sketch (Charikar–Chen–Farach-Colton): per row r a bucket
+hash h_r(i) and a ±1 sign s_r(i), with
+
+    sketch[r, h_r(i)] += s_r(i) · v_i,
+    v̂_i = median_r( s_r(i) · sketch[r, h_r(i)] ).
+
+Both hash families are drawn from the SAME SRP stack the ACE tables use
+(``repro.core.srp``): hashing the one-hot vector e_i through an SRP bank
+reduces to the sign pattern of projection-matrix ROW i, so the bucket
+column of coordinate i is ``pack_buckets`` of row i's sign bits and the
+±1 sign is a 1-bit SRP bank of its own.  No new hash machinery — the
+attribution tier inherits the seeded, persisted-state hash contract of
+the sketch tier.
+
+Dyadic drill-down (the count-sketch ``findHH`` recursion): one signed
+plane per level of a static binary tree over the (padded) coordinate
+space.  Node k at depth d covers coords [k·2^(NL−d), (k+1)·2^(NL−d));
+children of k are 2k and 2k+1; depth NL nodes ARE coordinates.  The
+recursive descent is lowered to ONE ``lax.scan`` over the static depth
+axis with a fixed-width beam (:func:`find_hh`) — fixed shapes end to
+end, no data-dependent recursion on the host hot path, so the whole
+drill-down rides inside the stream runner's single jitted program.
+
+Plane layout (the ``attr`` state leaf): ``(2, NL, R, C)`` float32 —
+channel 0 accumulates ALL finite traffic's per-coordinate energy
+Σ w·x_i², channel 1 only the flagged anomalies' — windowed states carry
+``(E, 2, NL, R, C)`` rings (live row at the cursor, zeroed at rotation,
+exactly like the count ring) and fleets ``(T, ...)`` stacks.  The drift
+vector channel1/n_anom − channel0/n_all concentrates exactly where
+anomalous traffic differs from the background, and ``find_hh`` over its
+sketch names those coordinates without ever materialising a dense
+per-coordinate delta off-device.
+
+Estimator error (Charikar et al., Thm.): with R rows of width C, each
+point estimate errs by at most ‖v‖₂·√(8/C) with probability ≥ 1 − δ for
+R = O(log 1/δ) — the median over R rows is what buys the exponential
+confidence; :func:`_median_lastaxis` is the single shared median used by
+the jnp path, the kernel contract and the oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import srp
+from repro.core.srp import SrpConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AttrConfig:
+    """Static configuration of one attribution hierarchy.
+
+    Attributes:
+      dim:  number of attributable coordinates (the filter's feature dim).
+      rows: R — independent signed rows (median over R; odd R gives the
+        crisp order-statistic median, even R the midpoint).
+      bits: bucket-space log2 — each row is ``1 << bits`` wide.
+      seed: PRNG seed the per-level SRP banks derive from.
+    """
+
+    dim: int
+    rows: int = 5
+    bits: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.dim < 1:
+            raise ValueError(f"dim must be >= 1, got {self.dim}")
+        if self.rows < 1:
+            raise ValueError(f"rows must be >= 1, got {self.rows}")
+        if not 1 <= self.bits <= 20:
+            raise ValueError(f"bits must be in [1, 20], got {self.bits}")
+
+    @property
+    def width(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def num_levels(self) -> int:
+        """NL — dyadic tree depth: ceil(log2(dim)), at least 1."""
+        return max(1, (self.dim - 1).bit_length())
+
+    @property
+    def padded_dim(self) -> int:
+        """2^NL — the padded leaf space (coords >= dim are never valid)."""
+        return 1 << self.num_levels
+
+    def plane_shape(self) -> tuple:
+        """The flat-state ``attr`` leaf: (2 channels, NL, R, C)."""
+        return (2, self.num_levels, self.rows, self.width)
+
+    def memory_bytes(self) -> int:
+        return 2 * self.num_levels * self.rows * self.width * 4
+
+
+# ---------------------------------------------------------------------------
+# Hash tables — derived from the SRP stack, host-side, cached per config.
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _level_tables_np(cfg: AttrConfig):
+    """Per-level node hash tables: cols (NL, 2^NL, R) int32 in [0, C),
+    signs (NL, 2^NL, R) float32 ±1.
+
+    Level ℓ hosts the depth-(ℓ+1) nodes; all levels share the padded
+    node-id space so one stacked table serves every depth.  The bucket
+    column of node k is ``pack_buckets`` of the sign bits of projection
+    ROW k (one-hot input ⇒ the SRP matmul degenerates to a row read);
+    the ±1 sign is an independent 1-bit SRP bank.  Computed once on the
+    host per config (NumPy constants closed into the jitted programs).
+    """
+    nl, d2, r = cfg.num_levels, cfg.padded_dim, cfg.rows
+    cols = np.empty((nl, d2, r), np.int32)
+    sgns = np.empty((nl, d2, r), np.float32)
+    # ensure_compile_time_eval: the derivation runs through jnp (the SRP
+    # stack), but its output is a host constant closed into the jitted
+    # consumers — first touch may happen INSIDE a trace (lru-cached
+    # thereafter), and the jnp ops must not become tracers there
+    with jax.ensure_compile_time_eval():
+        for lvl in range(nl):
+            ccfg = SrpConfig(dim=d2, num_bits=cfg.bits, num_tables=r,
+                             seed=cfg.seed * 7919 + 2 * lvl + 1)
+            w = np.asarray(srp.make_projections(ccfg))
+            bits = (w >= 0).astype(np.int32)[:, :ccfg.num_projections]
+            cols[lvl] = np.asarray(srp.pack_buckets(jnp.asarray(bits),
+                                                    ccfg))
+            scfg = SrpConfig(dim=d2, num_bits=1, num_tables=r,
+                             seed=cfg.seed * 7919 + 2 * lvl + 2)
+            ws = np.asarray(srp.make_projections(scfg))
+            sgns[lvl] = 2.0 * (ws >= 0).astype(np.float32)[:, :r] - 1.0
+    return cols, sgns
+
+
+@lru_cache(maxsize=None)
+def _coord_tables_np(cfg: AttrConfig):
+    """Coordinate-granular scatter tables: off (NL, dim, R) int32 flat
+    element offsets into a ``(NL·R·C,)`` plane view, sg (NL, dim, R)
+    float32 signs.  Coordinate i lives in node ``i >> (NL−1−ℓ)`` at
+    level ℓ, so sketching a dense (dim,) vector into the WHOLE hierarchy
+    is one flat scatter-add (:func:`sketch_vector`)."""
+    cols, sgns = _level_tables_np(cfg)
+    nl, r, c, d = cfg.num_levels, cfg.rows, cfg.width, cfg.dim
+    off = np.empty((nl, d, r), np.int32)
+    sg = np.empty((nl, d, r), np.float32)
+    coords = np.arange(d)
+    for lvl in range(nl):
+        node = coords >> (nl - 1 - lvl)
+        off[lvl] = (lvl * r + np.arange(r)[None, :]) * c + cols[lvl][node]
+        sg[lvl] = sgns[lvl][node]
+    return off, sg
+
+
+def level_tables(cfg: AttrConfig):
+    """(cols, signs) node tables as jnp constants — see _level_tables_np."""
+    cols, sgns = _level_tables_np(cfg)
+    return jnp.asarray(cols), jnp.asarray(sgns)
+
+
+def init_plane(cfg: AttrConfig) -> jax.Array:
+    """Zero flat-state attribution plane: (2, NL, R, C) float32."""
+    return jnp.zeros(cfg.plane_shape(), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Sketching: dense vectors -> signed hierarchies; chunk observation.
+# ---------------------------------------------------------------------------
+
+def _median_lastaxis(x: jax.Array) -> jax.Array:
+    """THE median every estimate path shares (jnp, kernel contract,
+    oracle): sort the last axis; odd R takes the middle order statistic,
+    even R the midpoint of the two middles."""
+    r = x.shape[-1]
+    s = jnp.sort(x, axis=-1)
+    if r % 2:
+        return s[..., r // 2]
+    return 0.5 * (s[..., r // 2 - 1] + s[..., r // 2])
+
+
+def sketch_vector(cfg: AttrConfig, v: jax.Array) -> jax.Array:
+    """Sketch one dense (dim,) value vector into its full (NL, R, C)
+    dyadic signed hierarchy — ONE fixed-shape flat scatter-add
+    (O(NL·dim·R) adds, no per-level loop in the lowered program)."""
+    off, sg = _coord_tables_np(cfg)
+    nl, r, c = cfg.num_levels, cfg.rows, cfg.width
+    vals = (v.astype(jnp.float32)[None, :, None] * jnp.asarray(sg))
+    flat = jnp.zeros((nl * r * c,), jnp.float32) \
+        .at[jnp.asarray(off.reshape(-1))].add(vals.reshape(-1))
+    return flat.reshape(nl, r, c)
+
+
+def chunk_energy(feat: jax.Array, margins: jax.Array, num_tenants: int,
+                 tenant_ids: jax.Array | None = None):
+    """Per-tenant per-coordinate energy split of one chunk.
+
+    ``feat`` (N, dim) sanitized features (quarantined rows pre-zeroed by
+    the filter contract), ``margins`` (N,) float32 under the runner's
+    sentinel protocol: −inf = quarantined (excluded from BOTH channels),
+    +inf = warmup (background only), finite < 0 = flagged anomaly.
+    Returns (e_all (T, dim), e_anom (T, dim), n_all (T,), n_anom (T,)).
+
+    The flat path calls with ``num_tenants=1`` / ``tenant_ids=None`` —
+    the IDENTICAL segment-sum program with T=1, which is what makes
+    fleet-of-1 attribution bitwise the single-tenant path.
+    """
+    n = feat.shape[0]
+    tids = (jnp.zeros((n,), jnp.int32) if tenant_ids is None
+            else tenant_ids.reshape(-1).astype(jnp.int32))
+    allf = (~jnp.isneginf(margins)).astype(jnp.float32)
+    anomf = allf * (margins < 0.0).astype(jnp.float32)
+    sq = feat.astype(jnp.float32) ** 2
+    e_all = jnp.zeros((num_tenants, feat.shape[1]), jnp.float32) \
+        .at[tids].add(sq * allf[:, None])
+    e_anom = jnp.zeros_like(e_all).at[tids].add(sq * anomf[:, None])
+    n_all = jnp.zeros((num_tenants,), jnp.float32).at[tids].add(allf)
+    n_anom = jnp.zeros_like(n_all).at[tids].add(anomf)
+    return e_all, e_anom, n_all, n_anom
+
+
+def chunk_planes(cfg: AttrConfig, e_all: jax.Array,
+                 e_anom: jax.Array) -> jax.Array:
+    """(T, dim) background + anomaly energies -> (T, 2, NL, R, C)
+    two-channel sketch contributions (one chunk's worth)."""
+    sk = jax.vmap(lambda v: sketch_vector(cfg, v))
+    return jnp.stack([sk(e_all), sk(e_anom)], axis=1)
+
+
+def drift_vector(e_all: jax.Array, e_anom: jax.Array, n_all: jax.Array,
+                 n_anom: jax.Array) -> jax.Array:
+    """Chunk-global drift: mean anomaly energy − mean background energy
+    per coordinate, (dim,).  Tenant rows are summed FIRST in both the
+    flat (T=1) and fleet paths — same reduction order, bitwise
+    fleet-of-1 parity."""
+    ea = jnp.sum(e_all, axis=0)
+    ex = jnp.sum(e_anom, axis=0)
+    na = jnp.sum(n_all)
+    nx = jnp.sum(n_anom)
+    return ex / jnp.maximum(nx, 1.0) - ea / jnp.maximum(na, 1.0)
+
+
+def tenant_drift_l2(e_all: jax.Array, e_anom: jax.Array, n_all: jax.Array,
+                    n_anom: jax.Array) -> jax.Array:
+    """(T,) exact per-tenant drift magnitudes ‖Δ_t‖₂ — the tenant axis
+    is dense state already, no sketch round-trip needed."""
+    d = e_anom / jnp.maximum(n_anom, 1.0)[:, None] \
+        - e_all / jnp.maximum(n_all, 1.0)[:, None]
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+# -- state-plane observation (one call per chunk, all fixed-shape) ----------
+
+def observe_flat(attr: jax.Array, planes: jax.Array) -> jax.Array:
+    """Flat state: attr (2, NL, R, C) += the chunk's T=1 planes row."""
+    return attr + planes[0]
+
+
+def observe_fleet(attr: jax.Array, planes: jax.Array) -> jax.Array:
+    """Fleet state: attr (T, 2, NL, R, C) += per-tenant chunk planes."""
+    return attr + planes
+
+
+def observe_window(attr: jax.Array, planes: jax.Array,
+                   cursor: jax.Array) -> jax.Array:
+    """Windowed state: live epoch row of attr (E, 2, NL, R, C) += the
+    chunk plane (2, NL, R, C); rotation zeroes the row like the counts."""
+    live = jax.lax.dynamic_index_in_dim(attr, cursor, 0, keepdims=False)
+    return jax.lax.dynamic_update_index_in_dim(attr, live + planes,
+                                               cursor, 0)
+
+
+def observe_fleet_window(attr: jax.Array, planes: jax.Array,
+                         cursor: jax.Array) -> jax.Array:
+    """Fleet×window: attr (T, E, 2, NL, R, C), planes (T, 2, NL, R, C),
+    cursor (T,) — each tenant's live row via one flat scatter-add."""
+    t, e = attr.shape[0], attr.shape[1]
+    flat = attr.reshape((t * e,) + attr.shape[2:])
+    rows = jnp.arange(t, dtype=jnp.int32) * e + cursor.astype(jnp.int32)
+    return flat.at[rows].add(planes).reshape(attr.shape)
+
+
+# ---------------------------------------------------------------------------
+# Estimation: point queries, L2, and the fixed-shape findHH drill-down.
+# ---------------------------------------------------------------------------
+
+def estimate_level(cfg: AttrConfig, plane: jax.Array, nodes: jax.Array,
+                   level: int) -> jax.Array:
+    """jnp-path median-of-rows point estimates of node ids at one STATIC
+    level: plane (NL, R, C) single-channel hierarchy, nodes (B,) int32
+    -> (B,) signed estimates."""
+    cols, sgns = level_tables(cfg)
+    c = cols[level][nodes]                                     # (B, R)
+    s = sgns[level][nodes]
+    g = plane[level][jnp.arange(cfg.rows, dtype=jnp.int32)[None, :], c]
+    return _median_lastaxis(g * s)
+
+
+def estimate(cfg: AttrConfig, plane: jax.Array, coords: jax.Array,
+             interpret: bool | None = None) -> jax.Array:
+    """Kernel-path batch point estimates of LEAF coordinates: plane
+    (NL, R, C), coords (B,) int32 in [0, dim) -> (B,) v̂ via the Pallas
+    signed gather + median kernel (``repro.kernels.attr_estimate``)."""
+    from repro.kernels import ops
+    cols, sgns = level_tables(cfg)
+    lvl = cfg.num_levels - 1
+    return ops.attr_estimate(plane[lvl], cols[lvl][coords],
+                             sgns[lvl][coords], interpret=interpret)
+
+
+def l2estimate(plane: jax.Array) -> jax.Array:
+    """Median-of-rows ‖v‖₂ estimate per level: (NL, R, C) -> (NL,).
+    Each row's L2 norm concentrates around the true sketched-vector norm
+    (the count-sketch is an AMS sketch per row); the leaf entry is the
+    hierarchy's headline estimate."""
+    return _median_lastaxis(jnp.sqrt(jnp.sum(plane * plane, axis=-1)))
+
+
+def find_hh(cfg: AttrConfig, plane: jax.Array, topk: int):
+    """Dyadic findHH drill-down, lowered to ONE ``lax.scan`` over the
+    static depth axis with a fixed beam — no data-dependent recursion.
+
+    ``plane`` (NL, R, C) is a single-channel signed hierarchy (typically
+    the sketch of a drift vector).  A beam of W = max(2·topk, 8)
+    candidate nodes descends: each step expands every candidate into its
+    two children, masks children that fall outside the tree or past
+    ``dim``, estimates |v̂| via the level's median gather, and keeps the
+    top W.  After the leaf level the beam is ranked once more and the
+    top ``topk`` coordinates returned as
+    (coords (topk,) int32, ests (topk,) float32 signed estimates,
+    valid (topk,) bool — False lanes are beam padding, not coords).
+    """
+    nl, r, d2 = cfg.num_levels, cfg.rows, cfg.padded_dim
+    topk = int(topk)
+    if topk < 1:
+        raise ValueError(f"topk must be >= 1, got {topk}")
+    beam = max(2 * topk, 8)
+    cols, sgns = level_tables(cfg)
+    riota = jnp.arange(r, dtype=jnp.int32)[None, :]
+    dim_m1 = jnp.int32(cfg.dim - 1)
+
+    def _est(level, nodes):
+        """Median estimates of ``nodes`` at a (possibly traced) level."""
+        c = jnp.take(cols, level, axis=0)[nodes]               # (M, R)
+        s = jnp.take(sgns, level, axis=0)[nodes]
+        row = jax.lax.dynamic_index_in_dim(plane, level, 0,
+                                           keepdims=False)     # (R, C)
+        return _median_lastaxis(row[riota, c] * s)
+
+    def body(carry, depth):
+        keys, valid = carry
+        children = jnp.concatenate([2 * keys, 2 * keys + 1])   # (2W,)
+        cvalid = jnp.concatenate([valid, valid])
+        cvalid &= children < jnp.left_shift(jnp.int32(1), depth)
+        # the node's FIRST covered coordinate k·2^(NL−d) must be < dim;
+        # tested as k <= (dim−1) >> (NL−d) so no shift can overflow
+        cvalid &= children <= jnp.right_shift(dim_m1, nl - depth)
+        cidx = jnp.clip(children, 0, d2 - 1)   # gather-safe ids
+        rank = jnp.where(cvalid, jnp.abs(_est(depth - 1, cidx)), -jnp.inf)
+        _, top = jax.lax.top_k(rank, beam)
+        return (cidx[top], cvalid[top]), None
+
+    keys = jnp.arange(beam, dtype=jnp.int32)
+    valid = keys < 2                           # depth-1 nodes: {0, 1}
+    if nl > 1:
+        (keys, valid), _ = jax.lax.scan(
+            body, (keys, valid), jnp.arange(2, nl + 1, dtype=jnp.int32))
+    valid &= keys < cfg.dim                    # leaf node == coordinate
+    est = estimate_level(cfg, plane, jnp.clip(keys, 0, d2 - 1), nl - 1)
+    rank = jnp.where(valid, jnp.abs(est), -jnp.inf)
+    _, top = jax.lax.top_k(rank, topk)
+    return keys[top], est[top], valid[top]

@@ -55,6 +55,14 @@ class AceState(NamedTuple):
             as ``esc``).  Observed by the admit entry points, not the
             insert primitives (see repro.quantile.sketch for why the
             observe mask differs from the admit mask).
+    attr:   (2, NL, R, C) float32 signed count-sketch attribution
+            hierarchy (repro.attribution; enabled by
+            ``AceConfig.attr_rows > 0``), or None (the default — same
+            no-extra-leaves contract as ``esc``/``qhist``).  Channel 0
+            accumulates all finite traffic's per-coordinate energy,
+            channel 1 the flagged anomalies'.  Observed chunk-wise by
+            the stream runner, not by the insert primitives (like
+            ``qhist``); the inserts only carry the leaf through.
     """
 
     counts: jax.Array
@@ -63,6 +71,7 @@ class AceState(NamedTuple):
     welford_m2: jax.Array
     esc: Optional[qz.EscTable] = None
     qhist: Optional[jax.Array] = None
+    attr: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,11 +95,27 @@ class AceConfig:
                                 # before excess is dropped (and counted).
                                 # 0 = plain counters (narrow dtypes then
                                 # wrap past saturation, like any int add).
+    attr_rows: int = 0          # > 0 attaches the signed count-sketch
+                                # attribution hierarchy (repro.attribution)
+                                # with that many median rows; 0 (default)
+                                # carries no attr leaf — every existing
+                                # pytree contract is unchanged.
+    attr_bits: int = 8          # attribution bucket-space log2 (width
+                                # 2^attr_bits per row); only read when
+                                # attr_rows > 0.
 
     def __post_init__(self):
         if self.esc_capacity < 0:
             raise ValueError("esc_capacity must be >= 0, got "
                              f"{self.esc_capacity}")
+        if self.attr_rows < 0:
+            raise ValueError("attr_rows must be >= 0, got "
+                             f"{self.attr_rows}")
+        if self.attr_rows > 0:
+            # delegate range validation (dim/rows/bits) to AttrConfig
+            from repro.attribution import AttrConfig
+            AttrConfig(dim=self.dim, rows=self.attr_rows,
+                       bits=self.attr_bits, seed=self.seed)
         if self.esc_capacity > 0:
             if not qz.is_narrow(self.counter_dtype):
                 raise ValueError(
@@ -122,15 +147,31 @@ class AceConfig:
         """True when the sketch carries an overflow escalation table."""
         return self.esc_capacity > 0
 
+    @property
+    def attr(self):
+        """The attribution hierarchy config, or None when disabled."""
+        if self.attr_rows <= 0:
+            return None
+        from repro.attribution import AttrConfig
+        return AttrConfig(dim=self.dim, rows=self.attr_rows,
+                          bits=self.attr_bits, seed=self.seed)
+
     def memory_bytes(self) -> int:
         """The paper's headline number: L × 2^K × sizeof(counter)
-        (plus the escalation side table when promotion is enabled)."""
+        (plus the escalation side table when promotion is enabled, plus
+        the attribution hierarchy when attr_rows > 0)."""
         itemsize = jnp.dtype(self.counter_dtype).itemsize
         base = self.num_tables * self.num_buckets * itemsize
-        return base + self.esc_capacity * 8 + (4 if self.quantized else 0)
+        base += self.esc_capacity * 8 + (4 if self.quantized else 0)
+        acfg = self.attr
+        return base + (acfg.memory_bytes() if acfg is not None else 0)
 
 
 def init(cfg: AceConfig) -> AceState:
+    attr = None
+    if cfg.attr_rows > 0:
+        from repro.attribution import init_plane
+        attr = init_plane(cfg.attr)
     return AceState(
         counts=jnp.zeros((cfg.num_tables, cfg.num_buckets),
                          dtype=jnp.dtype(cfg.counter_dtype)),
@@ -138,6 +179,7 @@ def init(cfg: AceConfig) -> AceState:
         welford_mean=jnp.zeros((), jnp.float32),
         welford_m2=jnp.zeros((), jnp.float32),
         esc=qz.init_esc(cfg.esc_capacity) if cfg.quantized else None,
+        attr=attr,
     )
 
 
@@ -298,7 +340,7 @@ def insert_buckets(state: AceState, buckets: jax.Array,
 
     return AceState(counts=new_counts, n=tot,
                     welford_mean=new_mean, welford_m2=new_m2, esc=new_esc,
-                    qhist=state.qhist)
+                    qhist=state.qhist, attr=state.attr)
 
 
 def masked_batch_welford(state: AceState, scores: jax.Array,
@@ -378,7 +420,7 @@ def insert_buckets_masked(state: AceState, buckets: jax.Array,
         state, scores, mask.astype(jnp.float32), cfg.welford_min_n)
     return AceState(counts=new_counts, n=tot,
                     welford_mean=new_mean, welford_m2=new_m2, esc=new_esc,
-                    qhist=state.qhist)
+                    qhist=state.qhist, attr=state.attr)
 
 
 def delete_buckets(state: AceState, buckets: jax.Array,
@@ -418,7 +460,8 @@ def merge(a: AceState, b: AceState) -> AceState:
     logical planes, add, and requantize (narrow + fresh escalation
     table).  Excess that no longer fits the escalation capacity is
     accumulated into ``lost`` (plus both inputs' prior losses).
-    Quantile histograms merge by exact addition (CRDT, like counts).
+    Quantile histograms merge by exact addition (CRDT, like counts),
+    and so do attribution planes (the signed count-sketch is linear).
     """
     delta = b.welford_mean - a.welford_mean
     tot = a.n + b.n
@@ -441,6 +484,10 @@ def merge(a: AceState, b: AceState) -> AceState:
         raise ValueError("cannot merge a quantile-tracking sketch with a "
                          "non-tracking one")
     qhist = None if a.qhist is None else a.qhist + b.qhist
+    if (a.attr is None) != (b.attr is None):
+        raise ValueError("cannot merge an attribution-tracking sketch "
+                         "with a non-tracking one")
+    attr = None if a.attr is None else a.attr + b.attr
     return AceState(
         counts=counts,
         n=tot,
@@ -448,6 +495,7 @@ def merge(a: AceState, b: AceState) -> AceState:
         welford_m2=a.welford_m2 + b.welford_m2 + delta**2 * a.n * b.n / safe,
         esc=esc,
         qhist=qhist,
+        attr=attr,
     )
 
 

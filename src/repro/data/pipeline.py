@@ -125,6 +125,9 @@ class AceDataFilter:
                                  # μ−ασ cannot hold on heavy-tailed
                                  # score distributions
     quantile_q: float = 0.01     # target flag rate for quantile mode
+    attr_rows: int = 0           # > 0: heavy-hitter attribution planes
+                                 # (repro.attribution) ride the state
+    attr_bits: int = 8           # log2 columns per attribution row
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -133,7 +136,9 @@ class AceDataFilter:
                          welford_min_n=self.warmup_items / 2,
                          hash_mode=self.hash_mode,
                          counter_dtype=self.count_dtype,
-                         esc_capacity=self.esc_capacity)
+                         esc_capacity=self.esc_capacity,
+                         attr_rows=self.attr_rows,
+                         attr_bits=self.attr_bits)
 
     def init(self):
         state = sk.init(self.ace_cfg)

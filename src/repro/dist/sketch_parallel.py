@@ -453,7 +453,8 @@ def table_sharded_mean_mu(mesh, cfg: AceConfig, state: AceState,
 
 def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
                          table_axis: str = "model",
-                         quantile: bool = False) -> AceState:
+                         quantile: bool = False,
+                         attr: bool = False) -> AceState:
     """NamedSharding pytree for a named sketch layout (validated).
 
     The one place the "replicated"/"table_sharded" layout names resolve
@@ -463,7 +464,10 @@ def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
     carry the (NUM_BINS,) rate histogram leaf; it is tiny and read as a
     whole by the quantile threshold, so it replicates under every
     layout (the sharding tree must mirror the state tree — a None here
-    against a present ``qhist`` leaf is a placement error)."""
+    against a present ``qhist`` leaf is a placement error).
+    ``attr=True`` states carry the (2, NL, R, C) attribution plane —
+    KBs, read whole by the findHH gathers, so it replicates under every
+    layout exactly like the histogram."""
     if layout == "table_sharded":
         if cfg.esc_capacity > 0:
             raise NotImplementedError(
@@ -483,12 +487,15 @@ def shardings_for_layout(cfg: AceConfig, mesh, layout: str,
                          "(want 'replicated' or 'table_sharded')")
     if quantile:
         tree = tree._replace(qhist=NamedSharding(mesh, P()))
+    if attr:
+        tree = tree._replace(attr=NamedSharding(mesh, P()))
     return tree
 
 
 def window_shardings_for_layout(cfg: AceConfig, mesh, num_epochs: int,
                                 layout: str, table_axis: str = "model",
-                                quantile: bool = False):
+                                quantile: bool = False,
+                                attr: bool = False):
     """NamedSharding pytree for an epoch-ring ``WindowedAceState``.
 
     The window analogue of ``shardings_for_layout`` (same validated
@@ -514,13 +521,18 @@ def window_shardings_for_layout(cfg: AceConfig, mesh, num_epochs: int,
         # (E, NUM_BINS) per-epoch rate histograms: tiny, combined by a
         # full-ring weighted sum at threshold time — replicate.
         tree = tree._replace(qhist=NamedSharding(mesh, P()))
+    if attr:
+        # (E, 2, NL, R, C) per-epoch attribution planes: KB-scale,
+        # cursor-indexed as whole rows — replicate like the histograms.
+        tree = tree._replace(attr=NamedSharding(mesh, P()))
     return tree
 
 
 def fleet_shardings_for_layout(cfg: AceConfig, mesh, num_tenants: int,
                                layout: str, table_axis: str = "model",
                                tenant_axis: str = "data",
-                               quantile: bool = False):
+                               quantile: bool = False,
+                               attr: bool = False):
     """NamedSharding pytree for a multi-tenant ``FleetState`` (validated).
 
     The fleet analogue of ``shardings_for_layout``: resolves the four
@@ -558,6 +570,14 @@ def fleet_shardings_for_layout(cfg: AceConfig, mesh, num_tenants: int,
                                               "tenant_table_sharded")
                  else P())
         tree = tree._replace(qhist=NamedSharding(mesh, qspec))
+    if attr:
+        # (T, 2, NL, R, C) per-tenant attribution planes shard their
+        # tenant axis wherever the stat vectors do (tenants never
+        # couple), replicated otherwise — same rule as the histograms.
+        aspec = (P(tenant_axis) if layout in ("tenant_sharded",
+                                              "tenant_table_sharded")
+                 else P())
+        tree = tree._replace(attr=NamedSharding(mesh, aspec))
     return tree
 
 

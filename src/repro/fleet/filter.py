@@ -54,6 +54,8 @@ class FleetDataFilter:
                                 # from its own rate histogram — per-tenant
                                 # calibration, like every fleet statistic
     quantile_q: float = 0.01    # target per-tenant flag rate
+    attr_rows: int = 0          # > 0: per-tenant attribution planes
+    attr_bits: int = 8          # log2 columns per attribution row
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -63,7 +65,9 @@ class FleetDataFilter:
                          num_tables=self.num_tables, seed=29,
                          welford_min_n=self.warmup_items / 2,
                          hash_mode=self.hash_mode,
-                         counter_dtype=self.count_dtype)
+                         counter_dtype=self.count_dtype,
+                         attr_rows=self.attr_rows,
+                         attr_bits=self.attr_bits)
 
     @property
     def fleet_cfg(self) -> FleetConfig:

@@ -94,6 +94,10 @@ class FleetState(NamedTuple):
     #                          per-tenant rate histograms for
     #                          threshold_mode="quantile"; None (default)
     #                          keeps every existing pytree contract
+    attr: Optional[jax.Array] = None  # (T, 2, NL, R, C) float32 per-tenant
+    #                          signed count-sketch attribution planes
+    #                          (repro.attribution); None (default) keeps
+    #                          every existing pytree contract
 
     @property
     def num_tenants(self) -> int:
@@ -139,6 +143,9 @@ def init(cfg: FleetConfig, quantile: bool = False) -> FleetState:
         qhist = qsk.init_hist(cfg.num_tenants)
     else:
         qhist = None
+    acfg = ace.attr
+    attr = (jnp.zeros((cfg.num_tenants,) + acfg.plane_shape(), jnp.float32)
+            if acfg is not None else None)
     return FleetState(
         counts=jnp.zeros(
             (cfg.num_tenants, ace.num_tables, ace.num_buckets),
@@ -147,6 +154,7 @@ def init(cfg: FleetConfig, quantile: bool = False) -> FleetState:
         welford_mean=jnp.zeros((cfg.num_tenants,), jnp.float32),
         welford_m2=jnp.zeros((cfg.num_tenants,), jnp.float32),
         qhist=qhist,
+        attr=attr,
     )
 
 
@@ -155,7 +163,8 @@ def tenant_view(state: FleetState, t) -> AceState:
     return AceState(counts=state.counts[t], n=state.n[t],
                     welford_mean=state.welford_mean[t],
                     welford_m2=state.welford_m2[t],
-                    qhist=None if state.qhist is None else state.qhist[t])
+                    qhist=None if state.qhist is None else state.qhist[t],
+                    attr=None if state.attr is None else state.attr[t])
 
 
 def set_tenant(state: FleetState, t: int, ace: AceState) -> FleetState:
@@ -163,12 +172,16 @@ def set_tenant(state: FleetState, t: int, ace: AceState) -> FleetState:
     qhist = state.qhist
     if qhist is not None and ace.qhist is not None:
         qhist = qhist.at[t].set(ace.qhist)
+    attr = state.attr
+    if attr is not None and ace.attr is not None:
+        attr = attr.at[t].set(ace.attr)
     return FleetState(
         counts=state.counts.at[t].set(ace.counts),
         n=state.n.at[t].set(ace.n),
         welford_mean=state.welford_mean.at[t].set(ace.welford_mean),
         welford_m2=state.welford_m2.at[t].set(ace.welford_m2),
         qhist=qhist,
+        attr=attr,
     )
 
 
@@ -210,6 +223,9 @@ def merge_fleet(a: FleetState, b: FleetState) -> FleetState:
     if (a.qhist is None) != (b.qhist is None):
         raise ValueError("cannot merge a quantile-tracking fleet with a "
                          "non-tracking one")
+    if (a.attr is None) != (b.attr is None):
+        raise ValueError("cannot merge an attribution-tracking fleet with "
+                         "a non-tracking one")
     return FleetState(
         counts=counts,
         n=tot,
@@ -217,12 +233,15 @@ def merge_fleet(a: FleetState, b: FleetState) -> FleetState:
         welford_m2=(a.welford_m2 + b.welford_m2
                     + delta**2 * a.n * b.n / safe),
         qhist=None if a.qhist is None else a.qhist + b.qhist,
+        # count-sketch planes are linear — disjoint-data merge is a sum
+        attr=None if a.attr is None else a.attr + b.attr,
     )
 
 
 def from_states(states: Sequence[AceState]) -> FleetState:
     """Stack existing single-tenant sketches into a fleet."""
     qhists = [s.qhist for s in states]
+    attrs = [s.attr for s in states]
     return FleetState(
         counts=jnp.stack([s.counts for s in states]),
         n=jnp.stack([s.n for s in states]),
@@ -230,6 +249,8 @@ def from_states(states: Sequence[AceState]) -> FleetState:
         welford_m2=jnp.stack([s.welford_m2 for s in states]),
         qhist=(jnp.stack(qhists)
                if all(h is not None for h in qhists) else None),
+        attr=(jnp.stack(attrs)
+              if all(p is not None for p in attrs) else None),
     )
 
 
@@ -359,7 +380,7 @@ def insert_masked(state: FleetState, tenant_ids: jax.Array,
         cfg.welford_min_n)
     return FleetState(counts=new_counts, n=tot,
                       welford_mean=new_mean, welford_m2=new_m2,
-                      qhist=state.qhist)
+                      qhist=state.qhist, attr=state.attr)
 
 
 # ---------------------------------------------------------------------------

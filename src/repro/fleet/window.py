@@ -61,6 +61,12 @@ class WindowedFleetState(NamedTuple):
     #                          per-tenant per-epoch rate histograms for
     #                          threshold_mode="quantile"; None (default)
     #                          keeps every existing pytree contract
+    attr: Optional[jax.Array] = None  # (T, E, 2, NL, R, C) f32 per-tenant
+    #                          per-epoch attribution planes — POSITION
+    #                          matters: leaf order mirrors
+    #                          WindowedAceState exactly (the
+    #                          ``WindowedAceState(*state)`` splats below
+    #                          and in kernels/ops.py rely on it)
 
     @property
     def num_tenants(self) -> int:
@@ -319,6 +325,13 @@ def rotate_fleet(state: WindowedFleetState,
             .at[rows].set(jnp.zeros((nb,), jnp.float32)) \
             .reshape(T, E, nb)
 
+    attr = state.attr
+    if attr is not None:
+        pshape = attr.shape[2:]
+        attr = attr.reshape((T * E,) + pshape) \
+            .at[rows].set(jnp.zeros(pshape, jnp.float32)) \
+            .reshape(state.attr.shape)
+
     return WindowedFleetState(
         counts=counts,
         n=clear(state.n),
@@ -329,6 +342,7 @@ def rotate_fleet(state: WindowedFleetState,
         cursor=new_cursor,
         tick=state.tick,
         qhist=qhist,
+        attr=attr,
     )
 
 

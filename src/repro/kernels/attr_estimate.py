@@ -1,0 +1,72 @@
+"""Pallas kernel: signed count-sketch gather + median-of-rows estimate.
+
+One level of an attribution hierarchy (``repro.attribution``) is an
+(R, C) signed plane; a batch point query gathers plane[r, cols[b, r]],
+applies the ±1 sign, and takes the median over the R rows:
+
+    out[b] = median_r( signs[b, r] · plane[r, cols[b, r]] )
+
+The plane is VMEM-resident (R·C floats — a few hundred KB at the
+default R=5, C=256); queries stream in as (B, R) bucket columns + signs.
+Like ``ace_query`` the gather is a static per-row unroll of lane
+gathers; the median is an in-register sort over the static (small) R
+axis — odd R takes the middle order statistic, even R the midpoint,
+matching ``repro.attribution.sketch._median_lastaxis`` exactly (the
+shared contract the ``ref.py`` oracle pins).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
+
+
+def _kernel(cols_ref, signs_ref, plane_ref, out_ref, *, R: int):
+    g = []
+    for r in range(R):  # static unroll over sketch rows
+        row = plane_ref[r, :]
+        ids = cols_ref[:, r]
+        g.append(jnp.take(row, ids, axis=0).astype(jnp.float32)
+                 * signs_ref[:, r])
+    mat = jnp.stack(g, axis=-1)                         # (bm, R)
+    srt = jnp.sort(mat, axis=-1)
+    mid = R // 2
+    if R % 2:
+        out_ref[:] = srt[:, mid]
+    else:
+        out_ref[:] = 0.5 * (srt[:, mid - 1] + srt[:, mid])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm"))
+def attr_estimate(plane: jax.Array, cols: jax.Array, signs: jax.Array,
+                  interpret: bool | None = None,
+                  bm: int = 1024) -> jax.Array:
+    """plane (R, C) f32, cols (B, R) int32, signs (B, R) f32 ±1
+    -> (B,) float32 median-of-rows signed estimates."""
+    interpret = resolve_interpret(interpret)
+    R, C = plane.shape
+    B = cols.shape[0]
+    assert cols.shape == (B, R), (cols.shape, (B, R))
+    assert signs.shape == (B, R), (signs.shape, (B, R))
+    bm_ = min(bm, B)
+    Bp = ((B + bm_ - 1) // bm_) * bm_
+    cp = jnp.pad(cols, ((0, Bp - B), (0, 0)))
+    sp = jnp.pad(signs, ((0, Bp - B), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, R=R),
+        grid=(Bp // bm_,),
+        in_specs=[
+            pl.BlockSpec((bm_, R), lambda i: (i, 0)),
+            pl.BlockSpec((bm_, R), lambda i: (i, 0)),
+            pl.BlockSpec((R, C), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm_,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        interpret=interpret,
+    )(cp, sp, plane.astype(jnp.float32))
+    return out[:B]

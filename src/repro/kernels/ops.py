@@ -34,6 +34,7 @@ from repro.kernels import ace_query as _q
 from repro.kernels import ace_score_fused as _f
 from repro.kernels import ace_update as _u
 from repro.kernels import ace_window_combine as _wc
+from repro.kernels import attr_estimate as _ae
 from repro.kernels import srht_hash as _sh
 from repro.kernels import srp_hash as _h
 
@@ -58,6 +59,17 @@ def hash_dispatch(x: jax.Array, w: jax.Array, cfg: SrpConfig) -> jax.Array:
     if resolve_hash_mode(cfg) == "srht":
         return _sh.srht_hash(x, cfg)
     return _h.srp_hash(x, w, cfg)
+
+
+def attr_estimate(plane: jax.Array, cols: jax.Array, signs: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """Signed count-sketch point estimates via the Pallas gather+median
+    kernel: one (R, C) attribution-level plane, (B, R) bucket columns
+    and ±1 signs -> (B,) median-of-rows estimates.  The batch-query
+    entry point of ``repro.attribution.estimate`` (the fixed-shape
+    findHH beam uses the inline jnp gather — its 2W×R working set is
+    too small to amortise a kernel launch)."""
+    return _ae.attr_estimate(plane, cols, signs, interpret=interpret)
 
 
 def ace_update(state: AceState, buckets: jax.Array,
@@ -87,7 +99,8 @@ def ace_update(state: AceState, buckets: jax.Array,
     return AceState(
         counts=new_counts, n=tot,
         welford_mean=state.welford_mean + delta * b / safe,
-        welford_m2=state.welford_m2 + m2_b + delta**2 * n * b / safe)
+        welford_m2=state.welford_m2 + m2_b + delta**2 * n * b / safe,
+        qhist=state.qhist, attr=state.attr)
 
 
 def _mask_weights(table_mask: jax.Array) -> jax.Array:
@@ -442,7 +455,8 @@ def ace_admit(state: AceState, q: jax.Array, w: jax.Array, cfg: AceConfig,
         state, post, admit.astype(jnp.float32), cfg.welford_min_n)
     new_state = AceState(counts=new_counts, n=tot,
                          welford_mean=new_mean, welford_m2=new_m2,
-                         esc=state.esc, qhist=state.qhist)
+                         esc=state.esc, qhist=state.qhist,
+                         attr=state.attr)
     if threshold_mode == "quantile":
         new_state = _observe(new_state, _scores)
     return new_state, admit

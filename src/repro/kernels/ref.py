@@ -74,6 +74,24 @@ def ace_window_combine_ref(counts: jax.Array, buckets: jax.Array,
     return acc * jnp.float32(1.0 / L)
 
 
+def attr_estimate_ref(plane: jax.Array, cols: jax.Array,
+                      signs: jax.Array) -> jax.Array:
+    """Signed count-sketch point estimates: plane (R, C), cols (B, R)
+    int32, signs (B, R) ±1 -> (B,) median_r(signs·plane[r, cols[:, r]]).
+
+    Mirrors ``attr_estimate``'s median convention exactly (sort over the
+    static R axis; odd R → middle order statistic, even R → midpoint of
+    the two middles — the shared ``repro.attribution`` contract)."""
+    R = plane.shape[0]
+    g = plane[jnp.arange(R, dtype=jnp.int32)[None, :], cols] \
+        .astype(jnp.float32) * signs
+    srt = jnp.sort(g, axis=-1)
+    mid = R // 2
+    if R % 2:
+        return srt[:, mid]
+    return 0.5 * (srt[:, mid - 1] + srt[:, mid])
+
+
 def ace_fleet_score_ref(counts: jax.Array, q: jax.Array,
                         tenant_ids: jax.Array, w: jax.Array,
                         cfg: SrpConfig) -> jax.Array:

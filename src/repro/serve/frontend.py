@@ -101,10 +101,22 @@ class FrontEnd:
     def submit(self, embed: np.ndarray, tenant: int = 0,
                deadline: float | None = None) -> Ticket:
         """Enqueue one (S, D) request.  Never blocks: a full queue sheds
-        immediately (the bounded-queue contract)."""
+        immediately (the bounded-queue contract).
+
+        ``deadline`` is ABSOLUTE on the front-end clock (the documented
+        ``Ticket.deadline`` contract); ``None`` derives one as submit
+        time + ``cfg.default_deadline`` slack.  (This used to silently
+        treat the argument as relative slack — callers anchoring
+        deadlines to scheduled arrival times, e.g. the coordinated-
+        omission-corrected open-loop bench, got their deadlines
+        re-anchored to the submit call instead, deferring every
+        deadline by the submit lag exactly when the system was
+        overloaded.)"""
         now = self.clock()
-        slack = self.cfg.default_deadline if deadline is None else deadline
-        t = Ticket(tenant=int(tenant), deadline=now + slack, t_submit=now)
+        t = Ticket(tenant=int(tenant),
+                   deadline=(now + self.cfg.default_deadline
+                             if deadline is None else float(deadline)),
+                   t_submit=now)
         self.submitted += 1
         if len(self._q) >= self.cfg.max_queue:
             self._shed(t, "queue_full")

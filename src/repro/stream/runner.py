@@ -83,7 +83,25 @@ class ChunkSummary(NamedTuple):
                  concentration, stationary in n — a Compressed-Counting
                  style drift statistic the host can watch chunk-over-
                  chunk without pulling the (L, 2^K) table.  Windowed
-                 states report it over the γ-combined ring.
+                 states report it over the γ-combined ring.  Quantized
+                 planes with an escalation table report it over the
+                 EXACT densified logical counts (raw saturated narrow
+                 planes would understate concentration right when the
+                 heavy buckets matter most).
+    topk_valid:  (k,) bool — True where the topk row is a GENUINE
+                 flagged anomaly (finite negative margin).  False rows
+                 are report padding: +inf warmup sentinels, non-
+                 anomalous fill when the chunk had fewer than k
+                 anomalies, or a fully-quarantined chunk.  Hosts must
+                 mask on this instead of consuming topk_* raw.
+    hh_coord/hh_est/hh_valid: (topk,) heavy-hitter attribution — the
+                 coordinates driving this chunk's anomalies, named by
+                 the dyadic findHH drill-down over the signed sketch of
+                 the chunk's drift vector (anomaly-mean − background-
+                 mean energy per coordinate, repro.attribution), with
+                 their signed estimated drift energies.  ``hh_valid``
+                 masks beam padding.  None unless the filter enables
+                 attribution (``attr_rows > 0``).
     """
 
     kept_frac: jax.Array
@@ -95,6 +113,10 @@ class ChunkSummary(NamedTuple):
     quarantined: jax.Array
     degraded: jax.Array
     falpha: jax.Array
+    topk_valid: jax.Array = None
+    hh_coord: jax.Array = None
+    hh_est: jax.Array = None
+    hh_valid: jax.Array = None
 
 
 class FleetChunkSummary(NamedTuple):
@@ -115,6 +137,15 @@ class FleetChunkSummary(NamedTuple):
                       but never kept/inserted.  0 when no tenant_mask.
     falpha:           (T,) float32 — each tenant's frequency-moment
                       drift index (see ``ChunkSummary.falpha``).
+    topk_valid:       (k,) bool — genuine-anomaly mask over the topk_*
+                      rows (see ``ChunkSummary.topk_valid``).
+    hh_coord/hh_est/hh_valid: (topk,) chunk-global heavy-hitter
+                      coordinates (see ``ChunkSummary``); None unless
+                      the filter enables attribution.
+    hh_tenant/hh_tenant_est: (min(topk, T),) the tenants whose anomaly
+                      traffic drifted hardest this chunk (exact dense
+                      per-tenant drift L2, descending) and those
+                      magnitudes; None unless attribution is enabled.
     """
 
     kept_frac: jax.Array
@@ -129,6 +160,12 @@ class FleetChunkSummary(NamedTuple):
     degraded: jax.Array
     misrouted: jax.Array
     falpha: jax.Array
+    topk_valid: jax.Array = None
+    hh_coord: jax.Array = None
+    hh_est: jax.Array = None
+    hh_valid: jax.Array = None
+    hh_tenant: jax.Array = None
+    hh_tenant_est: jax.Array = None
 
 
 class StreamRunner:
@@ -177,27 +214,34 @@ class StreamRunner:
                 f"multiple of chunk_T={self.chunk_T} so epoch boundaries "
                 "land deterministically inside or between chunks")
         self.trace_count = 0          # incremented at TRACE time only
+        # Heavy-hitter attribution: non-None when the filter carries
+        # attr planes (attr_rows > 0) — the consume program then also
+        # observes per-chunk energy sketches and drills down for the
+        # summary's hh_* fields (same single program, same 1 D2H).
+        self.attr_cfg = (filt.ace_cfg.attr
+                         if hasattr(filt, "ace_cfg") else None)
         self._shardings = None
         if mesh is not None:
             quantile = (getattr(filt, "threshold_mode", "mu_sigma")
                         == "quantile")
+            attr = self.attr_cfg is not None
             if self.is_fleet:
                 from repro.dist.sketch_parallel import \
                     fleet_shardings_for_layout
                 self._shardings = fleet_shardings_for_layout(
                     filt.ace_cfg, mesh, filt.num_tenants, sketch_layout,
-                    table_axis, quantile=quantile)
+                    table_axis, quantile=quantile, attr=attr)
             elif hasattr(filt, "num_epochs"):
                 from repro.dist.sketch_parallel import \
                     window_shardings_for_layout
                 self._shardings = window_shardings_for_layout(
                     filt.ace_cfg, mesh, filt.num_epochs, sketch_layout,
-                    table_axis, quantile=quantile)
+                    table_axis, quantile=quantile, attr=attr)
             else:
                 from repro.dist.sketch_parallel import shardings_for_layout
                 self._shardings = shardings_for_layout(
                     filt.ace_cfg, mesh, sketch_layout, table_axis,
-                    quantile=quantile)
+                    quantile=quantile, attr=attr)
         # The incoming state is dead the moment consume() rebinds it —
         # donate it so the (L, 2^K) counts update in place every chunk.
         self._consume = jax.jit(self._consume_impl, donate_argnums=0)
@@ -246,8 +290,8 @@ class StreamRunner:
             state, (keeps, margins) = jax.lax.scan(
                 fstep, state, (feats, tenant_ids))
             return self._fleet_summary(state, keeps, margins,
-                                       tenant_ids, T, B, table_mask,
-                                       tenant_mask)
+                                       tenant_ids, feats, T, B,
+                                       table_mask, tenant_mask)
 
         def step(carry, feat):
             new_state, keep, margin = self.filt.step(
@@ -303,6 +347,7 @@ class StreamRunner:
         # still feed the ``quarantined`` count below.
         ranked = jnp.where(jnp.isneginf(margins), jnp.inf, margins)
         neg, idx = jax.lax.top_k(-ranked.reshape(-1), k)
+        topk_margin = -neg
         # drift statistic: one O(L·2^K) pass over the post-chunk planes
         from repro.quantile import falpha_index
         if hasattr(self.filt, "num_epochs"):
@@ -310,15 +355,32 @@ class StreamRunner:
             falpha = falpha_index(ring.decayed_counts(state, gamma),
                                   ring.combined_n(state, gamma),
                                   table_mask=table_mask)
+        elif state.esc is not None:
+            # quantized planes with overflow promotion: the moment index
+            # must see the EXACT logical counts — a saturated narrow
+            # plane clips precisely the heavy buckets the α-moment
+            # weights hardest, so falpha over raw int8/int16 counts
+            # diverges from the true statistic right at the saturation
+            # boundary (differential-tested vs the wide dtypes)
+            from repro.core import quantize as qz
+            falpha = falpha_index(qz.densify(state.counts, state.esc),
+                                  state.n, table_mask=table_mask)
         else:
             falpha = falpha_index(state.counts, state.n,
                                   table_mask=table_mask)
+        # heavy-hitter attribution: sketch the chunk's energy split into
+        # the state planes + drill down on the chunk drift vector — all
+        # fixed-shape device work inside the same jitted program
+        hh = None
+        if self.attr_cfg is not None:
+            state, hh, _ = self._attr_observe(state, feats,
+                                              margins.reshape(-1))
         summary = ChunkSummary(
             kept_frac=jnp.mean(keepf),
             anom_counts=jnp.sum(1 - keeps.astype(jnp.int32), axis=1),
             topk_step=(idx // B).astype(jnp.int32),
             topk_item=(idx % B).astype(jnp.int32),
-            topk_margin=-neg,
+            topk_margin=topk_margin,
             # windowed carries hold per-epoch (E,) counts — report the
             # ring total so the summary shape is layout-independent
             n=state.n if state.n.ndim == 0 else jnp.sum(state.n),
@@ -327,13 +389,56 @@ class StreamRunner:
             # changing the filter step protocol
             quarantined=jnp.sum(jnp.isneginf(margins)).astype(jnp.int32),
             degraded=jnp.asarray(table_mask is not None),
-            falpha=falpha)
+            falpha=falpha,
+            # a topk row is real only if a GENUINE anomaly filled it:
+            # finite (not +inf warmup / not a quarantine sentinel routed
+            # to +inf by the ranking substitution) AND negative (flagged)
+            topk_valid=jnp.isfinite(topk_margin) & (topk_margin < 0.0),
+            hh_coord=None if hh is None else hh[0],
+            hh_est=None if hh is None else hh[1],
+            hh_valid=None if hh is None else hh[2])
         if self.return_masks:
             return state, summary, keeps
         return state, summary
 
-    def _fleet_summary(self, state, keeps, margins, tenant_ids, T, B,
-                       table_mask=None, tenant_mask=None):
+    def _attr_observe(self, state, feats, margins_flat,
+                      tenant_ids=None):
+        """Fold one chunk's energy split into the state's attribution
+        planes and drill down on the chunk drift vector.
+
+        The flat path runs the IDENTICAL T=1 segment-sum program the
+        fleet path runs per tenant (``tenant_ids=None`` ⇒ all-zero ids
+        inside ``chunk_energy``), which makes fleet-of-1 attribution
+        bitwise the single-tenant path.  Returns (state, (hh_coord,
+        hh_est, hh_valid)) plus the raw energy split for the fleet
+        summary's per-tenant rows."""
+        from repro import attribution as at
+        acfg = self.attr_cfg
+        d = feats.shape[-1]
+        feat = feats.reshape(-1, d)
+        # quarantined rows carry non-finite features — margin −inf
+        # already excludes them from both channels, but inf·0 = nan
+        # would poison the scatter, so zero them first (same sanitize
+        # the filter step applies)
+        finite = jnp.all(jnp.isfinite(feat), axis=-1)
+        feat = jnp.where(finite[:, None], feat, 0.0)
+        nt = self.filt.num_tenants if self.is_fleet else 1
+        e_all, e_anom, n_all, n_anom = at.chunk_energy(
+            feat, margins_flat, nt, tenant_ids)
+        planes = at.chunk_planes(acfg, e_all, e_anom)
+        if self.is_fleet:
+            attr = at.observe_fleet(state.attr, planes)
+        elif hasattr(self.filt, "num_epochs"):
+            attr = at.observe_window(state.attr, planes[0], state.cursor)
+        else:
+            attr = at.observe_flat(state.attr, planes)
+        state = state._replace(attr=attr)
+        drift = at.drift_vector(e_all, e_anom, n_all, n_anom)
+        hh = at.find_hh(acfg, at.sketch_vector(acfg, drift), self.topk)
+        return state, hh, (e_all, e_anom, n_all, n_anom)
+
+    def _fleet_summary(self, state, keeps, margins, tenant_ids, feats,
+                       T, B, table_mask=None, tenant_mask=None):
         """Per-tenant summary rows from the scan outputs — all device
         reductions, one transfer with the rest of the summary."""
         from repro.fleet.state import per_tenant_counts
@@ -345,18 +450,27 @@ class StreamRunner:
         # flat-path rationale above applies per mixed batch too
         ranked = jnp.where(jnp.isneginf(margins), jnp.inf, margins)
         neg, idx = jax.lax.top_k(-ranked.reshape(-1), k)
+        topk_margin = -neg
         tids_flat = tenant_ids.reshape(-1)
         if tenant_mask is None:
             misrouted = jnp.zeros((), jnp.int32)
         else:
             misrouted = jnp.sum(
                 (tenant_mask[tids_flat] <= 0).astype(jnp.int32))
+        hh = split = None
+        if self.attr_cfg is not None:
+            from repro import attribution as at
+            state, hh, split = self._attr_observe(
+                state, feats, margins.reshape(-1), tids_flat)
+            tl2 = at.tenant_drift_l2(*split)                     # (T,)
+            kt = min(self.topk, nt)
+            hh_tenant_est, hh_tenant = jax.lax.top_k(tl2, kt)
         summary = FleetChunkSummary(
             kept_frac=jnp.mean(keepf),
             anom_counts=jnp.sum(1 - keeps.astype(jnp.int32), axis=1),
             topk_step=(idx // B).astype(jnp.int32),
             topk_item=(idx % B).astype(jnp.int32),
-            topk_margin=-neg,
+            topk_margin=topk_margin,
             per_tenant_items=per_tenant_counts(
                 tids_flat, jnp.ones_like(tids_flat), nt),
             per_tenant_kept=per_tenant_counts(
@@ -366,7 +480,14 @@ class StreamRunner:
             degraded=jnp.asarray(table_mask is not None),
             misrouted=misrouted,
             falpha=falpha_index(state.counts, state.n,
-                                table_mask=table_mask))
+                                table_mask=table_mask),
+            topk_valid=jnp.isfinite(topk_margin) & (topk_margin < 0.0),
+            hh_coord=None if hh is None else hh[0],
+            hh_est=None if hh is None else hh[1],
+            hh_valid=None if hh is None else hh[2],
+            hh_tenant=(None if hh is None
+                       else hh_tenant.astype(jnp.int32)),
+            hh_tenant_est=None if hh is None else hh_tenant_est)
         if self.return_masks:
             return state, summary, keeps
         return state, summary

@@ -53,6 +53,8 @@ class WindowedAceFilter:
                                 # rate histogram (same γ-weighted epoch
                                 # combine as every other window statistic)
     quantile_q: float = 0.01    # target flag rate for quantile mode
+    attr_rows: int = 0          # > 0: per-epoch attribution planes
+    attr_bits: int = 8          # log2 columns per attribution row
 
     @property
     def ace_cfg(self) -> AceConfig:
@@ -61,7 +63,9 @@ class WindowedAceFilter:
         return AceConfig(dim=self.d_model + 1, num_bits=self.num_bits,
                          num_tables=self.num_tables, seed=29,
                          welford_min_n=self.warmup_items / 2,
-                         hash_mode=self.hash_mode)
+                         hash_mode=self.hash_mode,
+                         attr_rows=self.attr_rows,
+                         attr_bits=self.attr_bits)
 
     @property
     def window_cfg(self) -> WindowConfig:

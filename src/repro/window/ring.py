@@ -109,6 +109,10 @@ class WindowedAceState(NamedTuple):
     #                          per-epoch collision-rate histograms for
     #                          threshold_mode="quantile"; None (default)
     #                          keeps every existing pytree contract
+    attr: Optional[jax.Array] = None  # (E, 2, NL, R, C) float32 per-epoch
+    #                          signed count-sketch attribution planes
+    #                          (repro.attribution); None (default) keeps
+    #                          every existing pytree contract
 
     @property
     def num_epochs(self) -> int:
@@ -167,6 +171,9 @@ def init(cfg: AceConfig, num_epochs: int,
         qhist = qsk.init_hist(num_epochs)
     else:
         qhist = None
+    acfg = cfg.attr
+    attr = (jnp.zeros((num_epochs,) + acfg.plane_shape(), jnp.float32)
+            if acfg is not None else None)
     return WindowedAceState(
         counts=jnp.zeros((num_epochs, cfg.num_tables, cfg.num_buckets),
                          dtype=jnp.dtype(cfg.counter_dtype)),
@@ -178,6 +185,7 @@ def init(cfg: AceConfig, num_epochs: int,
         cursor=jnp.zeros((), jnp.int32),
         tick=jnp.zeros((), jnp.int32),
         qhist=qhist,
+        attr=attr,
     )
 
 
@@ -231,6 +239,11 @@ def rotate(state: WindowedAceState, gamma: float = 1.0) -> WindowedAceState:
         qhist = jax.lax.dynamic_update_index_in_dim(
             qhist, jnp.zeros((qhist.shape[1],), jnp.float32),
             new_cursor, axis=0)
+    attr = state.attr
+    if attr is not None:
+        attr = jax.lax.dynamic_update_index_in_dim(
+            attr, jnp.zeros(attr.shape[1:], jnp.float32),
+            new_cursor, axis=0)
     return WindowedAceState(
         counts=counts,
         n=jax.lax.dynamic_update_slice(state.n, zero1, (new_cursor,)),
@@ -243,6 +256,7 @@ def rotate(state: WindowedAceState, gamma: float = 1.0) -> WindowedAceState:
         cursor=new_cursor,
         tick=state.tick,
         qhist=qhist,
+        attr=attr,
     )
 
 

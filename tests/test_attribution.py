@@ -1,0 +1,379 @@
+"""Heavy-hitter attribution tier tests (repro.attribution).
+
+Covers the full tentpole surface:
+
+* count-sketch recovery — planted heavy coordinates are ALL named by
+  the dyadic ``find_hh`` drill-down, point estimates respect the
+  Charikar ‖v‖₂·√(8/C) bound, non-power-of-two dims never leak padded
+  coordinates;
+* the Pallas ``attr_estimate`` kernel against its ``ref.py`` oracle
+  (odd AND even R — the two median conventions) and the jnp
+  ``estimate_level`` path;
+* state wiring — merge linearity (count sketches are linear), window
+  rotation zeroing, cursor-row-only observation for window and
+  fleet×window states;
+* runner integration — attribution rides the ONE jitted consume
+  program (trace_count == 1), fleet-of-1 is bitwise the flat path,
+  an all-quarantined chunk reports ``topk_valid`` all-False (the
+  garbage-rows bugfix) without poisoning the attribution planes;
+* the falpha saturation bugfix — quantized int8 planes with overflow
+  promotion report the SAME moment index as int32 planes (densified),
+  where the raw narrow plane provably diverges.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import assert_allclose_dtype
+from repro import attribution as at
+from repro.attribution import AttrConfig
+from repro.core import sketch as sk
+from repro.core.sketch import AceConfig
+from repro.data.pipeline import AceDataFilter
+from repro.fleet.filter import FleetDataFilter
+from repro.kernels import ops
+from repro.kernels.ref import attr_estimate_ref
+from repro.stream import StreamRunner
+from repro.window import ring
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# Count-sketch recovery
+# ---------------------------------------------------------------------------
+
+class TestCountSketchRecovery:
+    def test_point_estimates_within_theory_bound(self):
+        """Each leaf estimate errs ≤ ‖v‖₂·√(8/C) (Charikar bound; the
+        median over R=5 rows makes per-coordinate failure unlikely
+        enough that we assert the bound over ALL coordinates)."""
+        cfg = AttrConfig(dim=64, rows=5, bits=8)
+        rng = np.random.default_rng(0)
+        v = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        plane = at.sketch_vector(cfg, v)
+        est = at.estimate_level(cfg, plane, jnp.arange(64, dtype=jnp.int32),
+                                cfg.num_levels - 1)
+        bound = float(jnp.linalg.norm(v)) * np.sqrt(8.0 / cfg.width)
+        err = np.abs(np.asarray(est) - np.asarray(v))
+        assert err.max() <= bound, (err.max(), bound)
+
+    def test_find_hh_names_all_planted_heavies(self):
+        """The acceptance criterion in miniature: every planted heavy
+        coordinate is named, signs preserved, valid lanes only."""
+        cfg = AttrConfig(dim=64, rows=5, bits=8)
+        rng = np.random.default_rng(1)
+        planted = {3: 10.0, 17: -12.0, 41: 9.0}
+        v = rng.normal(size=(64,)).astype(np.float32) * 0.1
+        for c, m in planted.items():
+            v[c] = m
+        coords, ests, valid = at.find_hh(cfg, at.sketch_vector(
+            cfg, jnp.asarray(v)), topk=3)
+        coords, ests, valid = map(np.asarray, (coords, ests, valid))
+        assert valid.all()
+        assert set(coords.tolist()) == set(planted)
+        for c, e in zip(coords, ests):
+            assert np.sign(e) == np.sign(planted[int(c)]), (c, e)
+            assert abs(e - planted[int(c)]) <= 2.0, (c, e)
+
+    def test_find_hh_non_power_of_two_dim(self):
+        """dim=37 pads to 64 leaves; padded coordinates must never
+        surface as valid heavy hitters."""
+        cfg = AttrConfig(dim=37, rows=5, bits=7)
+        rng = np.random.default_rng(2)
+        v = rng.normal(size=(37,)).astype(np.float32) * 0.05
+        v[36] = 8.0                       # heavy at the LAST real coord
+        v[5] = -7.0
+        coords, _, valid = at.find_hh(cfg, at.sketch_vector(
+            cfg, jnp.asarray(v)), topk=4)
+        coords, valid = np.asarray(coords), np.asarray(valid)
+        assert (coords[valid] < 37).all(), coords
+        assert {36, 5} <= set(coords[valid].tolist())
+
+    def test_l2estimate_tracks_norm(self):
+        cfg = AttrConfig(dim=64, rows=5, bits=8)
+        rng = np.random.default_rng(3)
+        v = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+        l2 = at.l2estimate(at.sketch_vector(cfg, v))
+        assert l2.shape == (cfg.num_levels,)
+        true = float(jnp.linalg.norm(v))
+        # every level sketches the same mass; the leaf is the headline
+        assert abs(float(l2[-1]) - true) <= 0.3 * true
+
+    def test_sketch_linearity(self):
+        """sketch(a + b) == sketch(a) + sketch(b) — the property merge
+        and the two-channel accumulation rest on."""
+        cfg = AttrConfig(dim=32, rows=4, bits=6)
+        rng = np.random.default_rng(4)
+        a = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+        assert_allclose_dtype(at.sketch_vector(cfg, a + b),
+                              at.sketch_vector(cfg, a)
+                              + at.sketch_vector(cfg, b))
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle vs jnp path
+# ---------------------------------------------------------------------------
+
+class TestAttrEstimateKernel:
+    @pytest.mark.parametrize("R", [1, 2, 3, 4, 5, 8])
+    @pytest.mark.parametrize("B", [1, 7, 64])
+    def test_kernel_matches_oracle(self, R, B):
+        """Pallas gather+median ≡ the numpy-style oracle for odd R
+        (middle order statistic) AND even R (midpoint)."""
+        C = 64
+        rng = np.random.default_rng(R * 100 + B)
+        plane = jnp.asarray(rng.normal(size=(R, C)), jnp.float32)
+        cols = jnp.asarray(rng.integers(0, C, size=(B, R)), jnp.int32)
+        signs = jnp.asarray(rng.choice([-1.0, 1.0], size=(B, R)),
+                            jnp.float32)
+        got = ops.attr_estimate(plane, cols, signs, interpret=True)
+        want = attr_estimate_ref(plane, cols, signs)
+        assert got.shape == (B,)
+        assert_allclose_dtype(got, want)
+
+    def test_estimate_dispatch_matches_jnp_level_path(self):
+        """cfg-table estimates: the kernel batch entry point
+        (attribution.estimate) ≡ estimate_level at the leaf level."""
+        cfg = AttrConfig(dim=48, rows=5, bits=7)
+        rng = np.random.default_rng(9)
+        v = jnp.asarray(rng.normal(size=(48,)), jnp.float32)
+        plane = at.sketch_vector(cfg, v)
+        coords = jnp.asarray(rng.integers(0, 48, size=(16,)), jnp.int32)
+        got = at.estimate(cfg, plane, coords, interpret=True)
+        want = at.estimate_level(cfg, plane, coords, cfg.num_levels - 1)
+        assert_allclose_dtype(got, want)
+
+
+# ---------------------------------------------------------------------------
+# State wiring
+# ---------------------------------------------------------------------------
+
+_ACFG = AceConfig(dim=13, num_bits=5, num_tables=6, attr_rows=3,
+                  attr_bits=5)
+
+
+class TestStateWiring:
+    def test_flat_merge_adds_attr_planes(self):
+        """Count sketches are linear: merged state attr == sum."""
+        rng = np.random.default_rng(10)
+        a = sk.init(_ACFG)._replace(attr=jnp.asarray(
+            rng.normal(size=_ACFG.attr.plane_shape()), jnp.float32))
+        b = sk.init(_ACFG)._replace(attr=jnp.asarray(
+            rng.normal(size=_ACFG.attr.plane_shape()), jnp.float32))
+        m = sk.merge(a, b)
+        assert_allclose_dtype(m.attr, a.attr + b.attr)
+        with pytest.raises(ValueError):
+            sk.merge(a, b._replace(attr=None))
+
+    def test_window_rotate_zeroes_only_new_live_row(self):
+        E = 4
+        st = ring.init(_ACFG, E)
+        filled = st._replace(attr=jnp.ones_like(st.attr))
+        rot = ring.rotate(filled)
+        new_cursor = int(rot.cursor)
+        attr = np.asarray(rot.attr)
+        assert (attr[new_cursor] == 0).all()
+        for e in range(E):
+            if e != new_cursor:
+                assert (attr[e] == 1).all(), e
+
+    def test_observe_window_touches_cursor_row_only(self):
+        E = 3
+        st = ring.init(_ACFG, E)
+        plane = jnp.ones(_ACFG.attr.plane_shape(), jnp.float32)
+        out = at.observe_window(st.attr, plane, jnp.int32(1))
+        out = np.asarray(out)
+        assert (out[1] == 1).all()
+        assert (out[0] == 0).all() and (out[2] == 0).all()
+
+    def test_observe_fleet_window_per_tenant_cursors(self):
+        acfg = _ACFG.attr
+        T, E = 3, 4
+        attr = jnp.zeros((T, E) + acfg.plane_shape(), jnp.float32)
+        planes = jnp.stack([jnp.full(acfg.plane_shape(), float(t + 1))
+                            for t in range(T)])
+        cursor = jnp.asarray([0, 2, 3], jnp.int32)
+        out = np.asarray(at.observe_fleet_window(attr, planes, cursor))
+        for t, c in enumerate([0, 2, 3]):
+            assert (out[t, c] == t + 1).all()
+            mask = np.ones(E, bool)
+            mask[c] = False
+            assert (out[t, mask] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Runner integration
+# ---------------------------------------------------------------------------
+
+def _stream(rng, CT, B, d, mu=2.0, scale=0.3):
+    return jnp.asarray(rng.normal(size=(CT, B, d + 1)) * scale + mu,
+                       jnp.float32)
+
+
+class TestRunnerAttribution:
+    D, CT, B = 16, 4, 8
+
+    def _flat(self):
+        return AceDataFilter(d_model=self.D, num_bits=5, num_tables=8,
+                             warmup_items=16.0, alpha=3.0, attr_rows=5,
+                             attr_bits=6)
+
+    def test_single_program_and_summary_fields(self):
+        filt = self._flat()
+        runner = StreamRunner(filt, chunk_T=self.CT, topk=4)
+        state, w = runner.init()
+        assert state.attr is not None
+        rng = np.random.default_rng(20)
+        for _ in range(3):
+            feats = _stream(rng, self.CT, self.B, self.D)
+            state, summary = runner.consume(state, w, feats)
+        assert runner.trace_count == 1
+        s = jax.device_get(summary)
+        assert s.hh_coord.shape == (4,) and s.hh_est.shape == (4,)
+        assert s.hh_valid.shape == (4,) and s.topk_valid.shape == (4,)
+        assert (np.asarray(s.hh_coord) < self.D + 1).all()
+        # background traffic observed → channel 0 accumulated energy
+        assert float(jnp.sum(jnp.abs(state.attr[0]))) > 0.0
+
+    def test_fleet_of_one_bitwise_flat(self):
+        """Acceptance criterion: attribution for a fleet of 1 ≡ the
+        single-tenant path, bitwise — hh outputs AND the attr planes."""
+        flat = self._flat()
+        fleet = FleetDataFilter(d_model=self.D, num_tenants=1,
+                                num_bits=5, num_tables=8,
+                                warmup_items=16.0, alpha=3.0,
+                                attr_rows=5, attr_bits=6)
+        r1 = StreamRunner(flat, chunk_T=self.CT, topk=4)
+        rf = StreamRunner(fleet, chunk_T=self.CT, topk=4)
+        s1, w1 = r1.init()
+        sf, wf = rf.init()
+        tids = jnp.zeros((self.CT, self.B), jnp.int32)
+        rng = np.random.default_rng(21)
+        for i in range(3):
+            feats = _stream(rng, self.CT, self.B, self.D,
+                            mu=2.0 if i < 2 else -5.0)
+            s1, sum1 = r1.consume(s1, w1, feats)
+            sf, sumf = rf.consume(sf, wf, feats, tids)
+            np.testing.assert_array_equal(np.asarray(sum1.hh_coord),
+                                          np.asarray(sumf.hh_coord))
+            np.testing.assert_array_equal(np.asarray(sum1.hh_est),
+                                          np.asarray(sumf.hh_est))
+            np.testing.assert_array_equal(np.asarray(sum1.hh_valid),
+                                          np.asarray(sumf.hh_valid))
+        np.testing.assert_array_equal(np.asarray(s1.attr),
+                                      np.asarray(sf.attr[0]))
+
+    def test_all_quarantined_chunk_topk_valid_false(self):
+        """The garbage-rows bugfix: a fully-quarantined chunk must
+        report topk_valid all-False (hosts mask on it instead of
+        consuming padding), count every row quarantined, and leave the
+        sketch AND attribution planes untouched."""
+        filt = self._flat()
+        runner = StreamRunner(filt, chunk_T=self.CT, topk=4)
+        state, w = runner.init()
+        rng = np.random.default_rng(22)
+        for _ in range(2):                       # arm the filter
+            state, _ = runner.consume(
+                state, w, _stream(rng, self.CT, self.B, self.D))
+        n_before = float(state.n)
+        attr_before = np.asarray(state.attr)
+        dirty = jnp.full((self.CT, self.B, self.D + 1), jnp.nan,
+                         jnp.float32)
+        state, summary = runner.consume(state, w, dirty)
+        s = jax.device_get(summary)
+        assert not s.topk_valid.any(), s.topk_valid
+        assert int(s.quarantined) == self.CT * self.B
+        assert float(state.n) == n_before
+        # −inf margins exclude quarantined rows from BOTH channels:
+        # the chunk contributes zero energy, planes bitwise unchanged
+        np.testing.assert_array_equal(np.asarray(state.attr), attr_before)
+        assert runner.trace_count == 1
+
+    def test_partially_anomalous_chunk_topk_valid_mask(self):
+        """topk_valid is True exactly on genuinely-flagged rows: a
+        chunk with one poisoned step flags B rows; with topk > B the
+        remaining lanes are padding and must read False."""
+        filt = self._flat()
+        runner = StreamRunner(filt, chunk_T=self.CT, topk=self.B + 4)
+        state, w = runner.init()
+        rng = np.random.default_rng(23)
+        for _ in range(2):
+            state, _ = runner.consume(
+                state, w, _stream(rng, self.CT, self.B, self.D))
+        feats = np.array(_stream(rng, self.CT, self.B, self.D))
+        feats[2] = np.asarray(_stream(rng, 1, self.B, self.D,
+                                      mu=-6.0))[0]
+        state, summary = runner.consume(state, w, jnp.asarray(feats))
+        s = jax.device_get(summary)
+        nvalid = int(s.topk_valid.sum())
+        assert 0 < nvalid <= self.B
+        # valid lanes lead (most-anomalous-first ordering)
+        assert s.topk_valid[:nvalid].all()
+        assert not s.topk_valid[nvalid:].any()
+        assert (s.topk_step[s.topk_valid] == 2).all()
+
+    def test_windowed_runner_attr_rides_ring(self):
+        from repro.window.filter import WindowedAceFilter
+        filt = WindowedAceFilter(d_model=self.D, num_bits=5,
+                                 num_tables=8, warmup_items=16.0,
+                                 alpha=3.0, num_epochs=3, rotate_every=2,
+                                 attr_rows=4, attr_bits=6)
+        runner = StreamRunner(filt, chunk_T=self.CT, topk=4)
+        state, w = runner.init()
+        assert state.attr.shape[0] == 3
+        rng = np.random.default_rng(24)
+        for _ in range(3):
+            state, summary = runner.consume(
+                state, w, _stream(rng, self.CT, self.B, self.D))
+        assert runner.trace_count == 1
+        assert jax.device_get(summary).hh_coord.shape == (4,)
+        # rotation zeroed expired epochs; the live row carries energy
+        live = int(state.cursor)
+        assert float(jnp.sum(jnp.abs(state.attr[live]))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# falpha over quantized planes (saturation bugfix)
+# ---------------------------------------------------------------------------
+
+class TestFalphaQuantizedDensified:
+    def test_int8_esc_matches_int32_past_saturation(self):
+        """Differential acceptance test: the SAME concentrated stream
+        through an int8+escalation filter and an int32 filter must
+        report the SAME falpha once buckets saturate — and the raw
+        narrow plane must provably understate it (the bug)."""
+        from repro.core import quantize as qz
+        from repro.quantile import falpha_index
+        D, CT, B = 12, 4, 16
+        mk = dict(d_model=D, num_bits=4, num_tables=4,
+                  warmup_items=1e9, alpha=3.0)
+        f8 = AceDataFilter(count_dtype="int8", esc_capacity=64, **mk)
+        f32 = AceDataFilter(**mk)
+        r8 = StreamRunner(f8, chunk_T=CT)
+        r32 = StreamRunner(f32, chunk_T=CT)
+        s8, w8 = r8.init()
+        s32, w32 = r32.init()
+        rng = np.random.default_rng(30)
+        # near-identical items hammer the same buckets: 10 chunks ×
+        # 64 items ≫ int8 max 127 per bucket
+        base = rng.normal(size=(1, 1, D + 1)).astype(np.float32)
+        for _ in range(10):
+            feats = jnp.asarray(
+                base + 0.01 * rng.normal(size=(CT, B, D + 1)),
+                jnp.float32)
+            s8, sum8 = r8.consume(s8, w8, feats)
+            s32, sum32 = r32.consume(s32, w32, feats)
+        assert int(jnp.max(s32.counts)) > 127, "stream failed to saturate"
+        dense = qz.densify(s8.counts, s8.esc)
+        np.testing.assert_array_equal(np.asarray(dense),
+                                      np.asarray(s32.counts))
+        assert_allclose_dtype(sum8.falpha, sum32.falpha)
+        # the raw narrow plane diverges at the saturation boundary —
+        # this is what the summary used to report
+        raw = float(falpha_index(s8.counts, s8.n))
+        assert raw < float(sum32.falpha), (raw, float(sum32.falpha))

@@ -701,6 +701,29 @@ class TestFrontEnd:
         assert fe.served == 6
         assert fe.metrics()["shed_queue_full"] == 14
 
+    def test_submit_deadline_is_absolute(self):
+        """Regression: ``submit(deadline=...)`` is ABSOLUTE on the
+        front-end clock (the documented Ticket.deadline contract).  The
+        old code treated the argument as relative slack — a deadline
+        already in the past came out as a comfortable future one,
+        deferring shedding by exactly the caller's submit lag (the
+        coordinated-omission failure mode the open-loop bench anchors
+        deadlines to scheduled arrivals to avoid)."""
+        clock = FakeClock(t=100.0)
+        _, fe = self._mk(clock)
+        t = fe.submit(self._embed(), tenant=0, deadline=100.5)
+        assert t.deadline == 100.5           # stored verbatim, not now+x
+        # None still derives submit-time + default slack
+        d = fe.submit(self._embed(2), tenant=0)
+        assert d.deadline == clock.t + fe.cfg.default_deadline
+        fe.pump(force=True)                  # arms the service estimate
+        assert t.status == "served"
+        # a deadline already in the past stays in the past — and sheds
+        past = fe.submit(self._embed(1), tenant=1, deadline=99.0)
+        assert past.deadline == 99.0 < clock.t
+        fe.pump(force=True)
+        assert past.status == "shed" and past.reason == "deadline"
+
     def test_deadline_shed_before_serving(self):
         clock = FakeClock()
         _, fe = self._mk(clock)
@@ -709,8 +732,10 @@ class TestFrontEnd:
             fe.submit(self._embed(i), tenant=0)
         fe.pump()
         est = fe.est_service
-        late = fe.submit(self._embed(9), tenant=1, deadline=0.001)
-        ok = fe.submit(self._embed(10), tenant=0, deadline=60.0)
+        late = fe.submit(self._embed(9), tenant=1,
+                         deadline=clock.t + 0.001)
+        ok = fe.submit(self._embed(10), tenant=0,
+                       deadline=clock.t + 60.0)
         clock.advance(0.002 + est)               # late is now hopeless
         fe.pump(force=True)
         assert late.status == "shed" and late.reason == "deadline"
@@ -726,14 +751,15 @@ class TestFrontEnd:
         measurement arms the shed path."""
         clock = FakeClock()
         _, fe = self._mk(clock)
-        t = fe.submit(self._embed(), tenant=1, deadline=0.001)
+        t = fe.submit(self._embed(), tenant=1, deadline=clock.t + 0.001)
         clock.advance(10.0)               # way past deadline, 0 samples
         assert fe.est_service == 0.0      # placeholder, not a sample
         assert fe.pump(force=True) == 1   # served, NOT shed
         assert t.status == "served"
         assert fe.metrics()["shed_deadline"] == 0
         # one sample now exists: the shed path is armed
-        late = fe.submit(self._embed(1), tenant=0, deadline=0.001)
+        late = fe.submit(self._embed(1), tenant=0,
+                         deadline=clock.t + 0.001)
         clock.advance(1.0)
         fe.pump(force=True)
         assert late.status == "shed" and late.reason == "deadline"
@@ -742,7 +768,7 @@ class TestFrontEnd:
     def test_partial_batch_after_max_wait(self):
         clock = FakeClock()
         _, fe = self._mk(clock, max_wait=0.005)
-        t = fe.submit(self._embed(), tenant=0, deadline=60.0)
+        t = fe.submit(self._embed(), tenant=0, deadline=clock.t + 60.0)
         assert not fe.ready()
         clock.advance(0.006)
         assert fe.ready()
@@ -753,7 +779,7 @@ class TestFrontEnd:
         clock = FakeClock()
         g, fe = self._mk(clock)
         for i in range(5):                       # 1 full + 1 partial batch
-            fe.submit(self._embed(i), tenant=0, deadline=60.0)
+            fe.submit(self._embed(i), tenant=0, deadline=clock.t + 60.0)
         fe.drain()
         assert fe.pad_rows == 3
         assert int(g.quarantined) == fe.pad_rows  # pads, nothing else
@@ -761,7 +787,7 @@ class TestFrontEnd:
     def test_latency_accounting(self):
         clock = FakeClock()
         _, fe = self._mk(clock)
-        t = fe.submit(self._embed(), tenant=0, deadline=60.0)
+        t = fe.submit(self._embed(), tenant=0, deadline=clock.t + 60.0)
         clock.advance(0.004)
         fe.pump(force=True)
         assert t.latency is not None and t.latency >= 0.004

@@ -1,0 +1,171 @@
+"""Property suite for the quantile histogram's tail edges.
+
+ISSUE-10 satellite: ``hist_quantile``/``quantile_threshold`` are the
+admission path for every ``threshold_mode="quantile"`` filter, and their
+edge behaviour (q near 1 with overflow-bin mass, empty histograms,
+q-monotonicity under arbitrary nonnegative weightings) had no dedicated
+coverage.  Runs under real ``hypothesis`` when the environment has it
+(the conftest shim otherwise), AND against a seeded deterministic
+corpus that exercises the same checks in every environment.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.quantile.sketch import (NUM_BINS, bin_edges, hist_quantile,
+                                   quantile_threshold)
+
+# Real hypothesis when installed; otherwise the deterministic shim from
+# tests/conftest.py (keyword @given + st.integers only — so properties
+# are stated over drawn seeds/scaled ints, the suite-wide idiom).
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+# ---------------------------------------------------------------------------
+# corpus: either hypothesis strategies or a seeded deterministic sweep
+# ---------------------------------------------------------------------------
+
+def _rand_hist(rng) -> np.ndarray:
+    """A random nonnegative histogram: dense, sparse, or spiky; with or
+    without underflow/overflow mass; sometimes float γ-decay weights."""
+    kind = rng.integers(0, 4)
+    h = rng.integers(0, 64, size=NUM_BINS).astype(np.float32)
+    if kind == 1:                                   # sparse
+        h *= (rng.random(NUM_BINS) < 0.1).astype(np.float32)
+    elif kind == 2:                                 # one spike
+        h[:] = 0.0
+        h[rng.integers(0, NUM_BINS)] = float(rng.integers(1, 1000))
+    elif kind == 3:                                 # γ-decayed weights
+        h *= rng.random(NUM_BINS).astype(np.float32)
+    return h
+
+
+def _corpus(n=64, seed=1234):
+    rng = np.random.default_rng(seed)
+    return [(_rand_hist(rng), float(rng.random()), float(rng.random()))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the properties (shared by both drivers)
+# ---------------------------------------------------------------------------
+
+def check_monotone_in_q(hist: np.ndarray, qa: float, qb: float):
+    """Q_q is non-decreasing in q for ANY nonnegative weighting."""
+    lo, hi = sorted((qa, qb))
+    vlo = float(hist_quantile(jnp.asarray(hist), lo))
+    vhi = float(hist_quantile(jnp.asarray(hist), hi))
+    assert vlo <= vhi + 1e-6, (lo, hi, vlo, vhi)
+
+
+def check_bounded_by_edges(hist: np.ndarray, q: float):
+    """Any quantile of a non-empty histogram lands inside the edge
+    ladder [0, 1.5] — never NaN, never negative, never past the
+    overflow bin's upper edge."""
+    v = float(hist_quantile(jnp.asarray(hist), q))
+    assert np.isfinite(v)
+    assert 0.0 <= v <= float(bin_edges()[-1]) + 1e-6, (q, v)
+
+
+def check_overflow_tail(hist: np.ndarray):
+    """q → 1.0 with overflow-bin mass must return a rate from the
+    overflow bin [1, 1.5] (a threshold ≥ every representable real rate)
+    — NOT a value from the interior ladder.  Guards the exact tail the
+    heavy-hitter streams exercise: saturating rates ≥ 1 land in the
+    last bin and a q≈1 threshold must chase them there."""
+    h = hist.copy()
+    h[NUM_BINS - 1] = max(h[NUM_BINS - 1], 7.0)    # force overflow mass
+    v = float(hist_quantile(jnp.asarray(h), 1.0))
+    edges = np.asarray(bin_edges())
+    assert edges[NUM_BINS - 1] <= v <= edges[NUM_BINS] + 1e-6, v
+    # ...and without ANY overflow mass, q=1.0 stays on the real ladder
+    h[NUM_BINS - 1] = 0.0
+    if h.sum() > 0:
+        v2 = float(hist_quantile(jnp.asarray(h), 1.0))
+        assert v2 <= edges[NUM_BINS - 1] + 1e-6, v2
+
+
+def check_empty_guard(q: float):
+    """An all-zero histogram returns exactly 0.0 (no 0/0 NaN), and the
+    score-space threshold stays −inf through warmup."""
+    z = jnp.zeros((NUM_BINS,), jnp.float32)
+    assert float(hist_quantile(z, q)) == 0.0
+    t = quantile_threshold(z, jnp.float32(0.0), q, warmup_items=64.0)
+    assert float(t) == -np.inf
+    # armed (past warmup) but still-empty histogram: threshold 0, not NaN
+    t2 = quantile_threshold(z, jnp.float32(128.0), q, warmup_items=64.0)
+    assert float(t2) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+# q drawn as parts-per-million so the shim's integer-only strategy
+# covers the full closed interval [0, 1] including both endpoints
+_QI = st.integers(min_value=0, max_value=1_000_000)
+_SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestQuantilePropsHypothesis:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=_SEED, qa=_QI, qb=_QI)
+    def test_monotone_in_q(self, seed, qa, qb):
+        h = _rand_hist(np.random.default_rng(seed))
+        check_monotone_in_q(h, qa / 1e6, qb / 1e6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=_SEED, q=_QI)
+    def test_bounded_by_edges(self, seed, q):
+        check_bounded_by_edges(_rand_hist(np.random.default_rng(seed)),
+                               q / 1e6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=_SEED)
+    def test_overflow_tail(self, seed):
+        check_overflow_tail(_rand_hist(np.random.default_rng(seed)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(q=_QI)
+    def test_empty_guard(self, q):
+        check_empty_guard(q / 1e6)
+
+
+class TestQuantilePropsCorpus:
+    """Seeded deterministic corpus — runs in EVERY environment (the
+    hypothesis class above is the richer generator when available)."""
+
+    @pytest.mark.parametrize("i", range(0, 64, 8))
+    def test_monotone_in_q(self, i):
+        for h, qa, qb in _corpus()[i:i + 8]:
+            check_monotone_in_q(h, qa, qb)
+
+    @pytest.mark.parametrize("i", range(0, 64, 8))
+    def test_bounded_by_edges(self, i):
+        for h, q, _ in _corpus()[i:i + 8]:
+            check_bounded_by_edges(h, q)
+
+    def test_overflow_tail(self):
+        for h, _, _ in _corpus(32, seed=77):
+            check_overflow_tail(h)
+
+    def test_empty_guard(self):
+        for q in (0.0, 0.01, 0.5, 0.99, 1.0):
+            check_empty_guard(q)
+
+    def test_exact_tail_pins(self):
+        """Hand-pinned tail cases (no randomness): all mass in the
+        overflow bin ⇒ every q lands in [1, 1.5]; all mass in the
+        underflow bin ⇒ every q lands in [0, RATE_MIN]."""
+        edges = np.asarray(bin_edges())
+        over = np.zeros(NUM_BINS, np.float32)
+        over[-1] = 5.0
+        under = np.zeros(NUM_BINS, np.float32)
+        under[0] = 5.0
+        for q in (0.01, 0.5, 0.999, 1.0):
+            vo = float(hist_quantile(jnp.asarray(over), q))
+            assert edges[NUM_BINS - 1] <= vo <= edges[NUM_BINS] + 1e-6
+            vu = float(hist_quantile(jnp.asarray(under), q))
+            assert 0.0 <= vu <= edges[1] + 1e-9
